@@ -1,0 +1,108 @@
+//! END-TO-END VALIDATION (DESIGN.md / EXPERIMENTS.md):
+//! train a DTM through the full three-layer stack — Rust coordinator →
+//! PJRT-executed HLO (L2 JAX programs wrapping the L1 Pallas Gibbs kernel) —
+//! on the synthetic fashion workload, for a few hundred gradient steps,
+//! logging the quality curve (proxy-FID), the per-layer mixing observable
+//! r_yy[K], ACP penalties, and finally the paper's headline energy
+//! comparison for the trained model.
+//!
+//! Run: `cargo run --release --example e2e_train [-- --epochs N]`
+//! (pass `--backend rust` to run without artifacts).
+
+use anyhow::Result;
+
+use thermo_dtm::data::{fashion_dataset, FashionConfig};
+use thermo_dtm::energy::{self, DeviceParams};
+use thermo_dtm::graph;
+use thermo_dtm::model::Dtm;
+use thermo_dtm::runtime::Runtime;
+use thermo_dtm::train::acp::AcpParams;
+use thermo_dtm::train::sampler::{HloSampler, LayerSampler, RustSampler};
+use thermo_dtm::train::trainer::{TrainConfig, Trainer};
+use thermo_dtm::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let epochs = args.usize_opt("epochs", 12)?;
+    let t_steps = args.usize_opt("t-steps", 4)?;
+    let k_train = args.usize_opt("k-train", 30)?;
+    let backend = args.str_opt("backend", "hlo");
+    let cfg_name = "dtm_m32";
+
+    let sampler: Box<dyn LayerSampler> = if backend == "hlo" {
+        let rt = Runtime::open(Runtime::default_dir())?;
+        println!("backend: HLO via PJRT ({})", rt.platform());
+        Box::new(HloSampler::new(rt.dtm_exec(cfg_name)?, 7))
+    } else {
+        println!("backend: pure-Rust Gibbs");
+        Box::new(RustSampler::new(graph::build(cfg_name, 32, "G12", 256, 7)?, 32, 7))
+    };
+    let top = sampler.topology().clone();
+
+    let ds = fashion_dataset(&FashionConfig::default(), 400, 3);
+    let dtm = Dtm::init(cfg_name, &top, t_steps, 3.0, 1);
+    println!(
+        "model: T={t_steps} layers x ({} nodes, {} edges) = {} parameters",
+        top.n_nodes(),
+        top.n_edges(),
+        dtm.n_params()
+    );
+
+    let cfg = TrainConfig {
+        epochs,
+        batches_per_epoch: 4,
+        k_train,
+        burn: k_train / 3,
+        lr: 0.02,
+        acp: Some(AcpParams::default()),
+        fixed_lambda: 0.0,
+        eval_every: 2,
+        eval_samples: 128,
+        k_eval: 2 * k_train,
+        seed: 0,
+    };
+    // Gradient steps = epochs * batches * T layers.
+    println!(
+        "training: {} gradient steps ({} epochs x 4 batches x {} layers), K_train={}",
+        epochs * 4 * t_steps,
+        epochs,
+        t_steps,
+        k_train
+    );
+    let t0 = std::time::Instant::now();
+    let mut tr = Trainer::new(sampler, dtm, cfg, ds.images.clone())?;
+    tr.run(&ds.images)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\nepoch  grad_norm  max_ryy  max_lambda   pfid");
+    for r in &tr.log {
+        println!(
+            "{:>5}  {:>9.4}  {:>7.3}  {:>10.5}  {}",
+            r.epoch,
+            r.grad_norm,
+            r.ryy.iter().cloned().fold(0.0, f64::max),
+            r.lambdas.iter().cloned().fold(0.0, f64::max),
+            r.pfid.map(|x| format!("{x:.3}")).unwrap_or_else(|| "-".into())
+        );
+    }
+    let first = tr.log.iter().find_map(|r| r.pfid);
+    let last = tr.final_pfid();
+    println!("\nwall clock: {wall:.1}s");
+    if let (Some(a), Some(b)) = (first, last) {
+        println!("proxy-FID: {a:.2} -> {b:.2} ({})", if b < a { "improved" } else { "no improvement" });
+    }
+
+    // Paper headline accounting for this trained model.
+    let k_inf = 2 * k_train;
+    let pe = energy::denoising_energy(&DeviceParams::default(), "G12", 32, 256, t_steps, k_inf)?;
+    let gpu_vae = energy::gpu::energy_per_sample(7.0e4);
+    println!(
+        "energy: DTCA {:.3e} J/sample vs GPU-VAE {:.3e} J/sample -> {:.0}x",
+        pe.total,
+        gpu_vae,
+        gpu_vae / pe.total
+    );
+    tr.dtm.save(std::path::Path::new("results/e2e_dtm.json"))?;
+    println!("checkpoint: results/e2e_dtm.json");
+    Ok(())
+}

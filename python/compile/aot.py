@@ -1,0 +1,220 @@
+"""AOT lowering: JAX programs -> HLO *text* artifacts + manifest.json.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the image's xla_extension
+0.5.1 (behind the rust ``xla`` crate) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once via ``make artifacts``; Python is never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import baselines as bl
+from . import configs
+from . import model
+from . import topology as topo_mod
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # CRITICAL: print with large constants included. The default printer
+    # elides them as `{...}`, which the deployment XLA 0.5.1 text parser
+    # silently materializes as ZEROS — every baked array (color masks,
+    # projection matrices) would vanish. See EXPERIMENTS.md "bridge bugs".
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # New metadata attributes (source_end_line etc.) are rejected by the old
+    # parser; drop metadata entirely — it is not needed at runtime.
+    opts.print_metadata = False
+    text = comp.get_hlo_module().to_string(opts)
+    if "{...}" in text:
+        raise RuntimeError("HLO printer elided constants despite options")
+    return text
+
+
+def measured_flops(lowered) -> float:
+    """XLA:CPU cost analysis of the compiled module (best-effort)."""
+    try:
+        cost = lowered.compile().cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        return float(cost.get("flops", -1.0))
+    except Exception:
+        return -1.0
+
+
+def write_artifact(out_dir: str, name: str, lowered) -> dict:
+    path = f"{name}.hlo.txt"
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+    return {"file": path, "flops": measured_flops(lowered)}
+
+
+def lower_dtm(out_dir: str, cfg: configs.DtmConfig) -> dict:
+    top = topo_mod.build(cfg.name, cfg.grid, cfg.pattern, cfg.n_data, cfg.seed)
+    topo_file = f"topology_{cfg.name}.json"
+    with open(os.path.join(out_dir, topo_file), "w") as f:
+        f.write(top.to_json())
+    args = model.example_args(top, cfg.batch)
+    entry = {
+        "topology": topo_file,
+        "grid": cfg.grid,
+        "pattern": cfg.pattern,
+        "n_nodes": top.n_nodes,
+        "n_data": cfg.n_data,
+        "n_edges": top.n_edges,
+        "degree": top.degree,
+        "batch": cfg.batch,
+        "chunk": cfg.chunk,
+        "programs": {},
+    }
+    for variant in ("sample", "stats", "trace"):
+        prog = model.make_layer_program(top, cfg.batch, cfg.chunk, variant)
+        lowered = jax.jit(prog).lower(*args)
+        info = write_artifact(out_dir, f"{cfg.name}_{variant}", lowered)
+        entry["programs"][variant] = info
+    return entry
+
+
+def lower_baselines(out_dir: str) -> dict:
+    b = configs.BASELINE_BATCH
+    dim = configs.BASELINE_DATA_DIM
+    sd = jax.ShapeDtypeStruct
+    f32, u32 = jnp.float32, jnp.uint32
+    out = {}
+
+    def train_args(n_params):
+        return (sd((n_params,), f32), sd((n_params,), f32), sd((n_params,), f32),
+                sd((1,), f32), sd((b, dim), f32), sd((2,), u32))
+
+    vae = bl.VaeSpec(data_dim=dim)
+    out["vae"] = {
+        "n_params": vae.n_params, "batch": b, "data_dim": dim,
+        "latent": vae.latent, "sample_flops": vae.sample_flops(),
+        "train": write_artifact(out_dir, "vae_train", jax.jit(
+            bl.make_vae_train(vae, b)).lower(*train_args(vae.n_params))),
+        "sample": write_artifact(out_dir, "vae_sample", jax.jit(
+            bl.make_vae_sample(vae, b)).lower(
+                sd((vae.n_params,), f32), sd((2,), u32))),
+    }
+
+    gan = bl.GanSpec(data_dim=dim)
+    out["gan"] = {
+        "n_params": gan.n_params, "n_gen_params": gan.gen.n_params,
+        "batch": b, "data_dim": dim, "latent": gan.latent,
+        "sample_flops": gan.sample_flops(),
+        "train": write_artifact(out_dir, "gan_train", jax.jit(
+            bl.make_gan_train(gan, b)).lower(*train_args(gan.n_params))),
+        "sample": write_artifact(out_dir, "gan_sample", jax.jit(
+            bl.make_gan_sample(gan, b)).lower(
+                sd((gan.n_params,), f32), sd((2,), u32))),
+    }
+
+    # A 768-dim GAN for the Fig. 6 hybrid comparison (3x16x16 color images).
+    gan768 = bl.GanSpec(data_dim=768, gen_hidden=256, disc_hidden=128, latent=32)
+    b768 = b
+
+    def train768(n_params):
+        return (sd((n_params,), f32), sd((n_params,), f32), sd((n_params,), f32),
+                sd((1,), f32), sd((b768, 768), f32), sd((2,), u32))
+
+    out["gan768"] = {
+        "n_params": gan768.n_params, "n_gen_params": gan768.gen.n_params,
+        "batch": b768, "data_dim": 768, "latent": gan768.latent,
+        "sample_flops": gan768.sample_flops(),
+        "train": write_artifact(out_dir, "gan768_train", jax.jit(
+            bl.make_gan_train(gan768, b768)).lower(*train768(gan768.n_params))),
+        "sample": write_artifact(out_dir, "gan768_sample", jax.jit(
+            bl.make_gan_sample(gan768, b768)).lower(
+                sd((gan768.n_params,), f32), sd((2,), u32))),
+    }
+
+    ddpm = bl.DdpmSpec(data_dim=dim)
+    out["ddpm"] = {
+        "n_params": ddpm.n_params, "batch": b, "data_dim": dim,
+        "steps": ddpm.steps, "sample_flops": ddpm.sample_flops(),
+        "train": write_artifact(out_dir, "ddpm_train", jax.jit(
+            bl.make_ddpm_train(ddpm, b)).lower(*train_args(ddpm.n_params))),
+        "sample": write_artifact(out_dir, "ddpm_sample", jax.jit(
+            bl.make_ddpm_sample(ddpm, b)).lower(
+                sd((ddpm.n_params,), f32), sd((2,), u32))),
+    }
+    return out
+
+
+def lower_hybrid(out_dir: str) -> dict:
+    b = configs.BASELINE_BATCH
+    hy = bl.HybridSpec()
+    sd = jax.ShapeDtypeStruct
+    f32, u32 = jnp.float32, jnp.uint32
+    npar = hy.n_params
+    ncrit = hy.critic.n_params
+    nft = ncrit + hy.dec.n_params
+    return {
+        "n_params": npar,
+        "n_enc_params": hy.enc.n_params,
+        "n_dec_params": hy.dec.n_params,
+        "n_critic_params": ncrit,
+        "batch": b, "data_dim": hy.data_dim, "latent": hy.latent,
+        "decode_flops": hy.dec.flops_per_example(),
+        "ae_train": write_artifact(out_dir, "ae_train", jax.jit(
+            bl.make_ae_train(hy, b)).lower(
+                sd((npar,), f32), sd((npar,), f32), sd((npar,), f32),
+                sd((1,), f32), sd((b, hy.data_dim), f32), sd((2,), u32))),
+        "ae_encode": write_artifact(out_dir, "ae_encode", jax.jit(
+            bl.make_ae_encode(hy, b)).lower(
+                sd((npar,), f32), sd((b, hy.data_dim), f32), sd((2,), u32))),
+        "ae_decode": write_artifact(out_dir, "ae_decode", jax.jit(
+            bl.make_ae_decode(hy, b)).lower(
+                sd((npar,), f32), sd((b, hy.latent), f32))),
+        "dec_ft": write_artifact(out_dir, "dec_ft", jax.jit(
+            bl.make_decoder_ft(hy, b)).lower(
+                sd((npar,), f32), sd((ncrit,), f32),
+                sd((nft,), f32), sd((nft,), f32), sd((1,), f32),
+                sd((b, hy.latent), f32), sd((b, hy.data_dim), f32))),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: dtm,baselines,hybrid")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else {"dtm", "baselines", "hybrid"}
+
+    manifest = {"version": 1, "dtm": {}, "baselines": {}, "hybrid": {}}
+    if "dtm" in only:
+        for cfg in configs.DTM_CONFIGS:
+            print(f"lowering DTM config {cfg.name} "
+                  f"(L={cfg.grid} {cfg.pattern} n_data={cfg.n_data})")
+            manifest["dtm"][cfg.name] = lower_dtm(args.out, cfg)
+    if "baselines" in only:
+        print("lowering GPU baselines (VAE / GAN / DDPM)")
+        manifest["baselines"] = lower_baselines(args.out)
+    if "hybrid" in only:
+        print("lowering hybrid HTDML (autoencoder + critic)")
+        manifest["hybrid"] = lower_hybrid(args.out)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest.json written to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,428 @@
+"""L2: GPU-baseline generative models (paper Fig. 1 / Table III / Fig. 6).
+
+The paper compares the DTCA against conventional algorithm/hardware pairings:
+a VAE, a GAN and a DDPM running on an NVIDIA A100. We implement all three as
+small JAX models and AOT-compile both their *training step* and their
+*sampler* to HLO so the Rust coordinator can train and evaluate them with
+Python off the request path. Their energy cost on GPU is modelled analytically
+(App. F): FLOPs/sample divided by the A100 spec — the paper's own
+"theoretical efficiency" column of Table III.
+
+For the hybrid HTDML experiment (Fig. 6 / App. J) we additionally provide a
+binarizing autoencoder (sigmoid + straight-through estimator), whose binary
+latent space hosts a DTM, and a critic + decoder fine-tune step implementing
+the App. J GAN-style polish.
+
+All parameters travel as a single flat f32 vector; shapes are baked here and
+recorded in the manifest so Rust can initialize/persist them without
+re-deriving the layouts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ----------------------------------------------------------------------------
+# Flat-parameter MLP machinery
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MlpSpec:
+    """A stack of dense layers; params flattened as [W0, b0, W1, b1, ...]."""
+    sizes: tuple[int, ...]
+
+    @property
+    def shapes(self):
+        out = []
+        for i in range(len(self.sizes) - 1):
+            out.append((self.sizes[i], self.sizes[i + 1]))
+            out.append((self.sizes[i + 1],))
+        return out
+
+    @property
+    def n_params(self):
+        return sum(int(np.prod(s)) for s in self.shapes)
+
+    def flops_per_example(self):
+        """2*M*N per matmul — the App. F accounting unit."""
+        return sum(2 * a * b for a, b in zip(self.sizes[:-1], self.sizes[1:]))
+
+
+def unflatten(spec: MlpSpec, flat):
+    out, off = [], 0
+    for shp in spec.shapes:
+        size = int(np.prod(shp))
+        out.append(flat[off:off + size].reshape(shp))
+        off += size
+    return out
+
+
+def mlp_apply(spec: MlpSpec, flat, x, act=jax.nn.relu, final=None):
+    ps = unflatten(spec, flat)
+    for i in range(0, len(ps), 2):
+        x = x @ ps[i] + ps[i + 1]
+        last = i == len(ps) - 2
+        x = (final(x) if final is not None else x) if last else act(x)
+    return x
+
+
+def init_flat(spec: MlpSpec, key):
+    parts = []
+    ks = jax.random.split(key, len(spec.shapes))
+    for k, shp in zip(ks, spec.shapes):
+        if len(shp) == 2:
+            scale = jnp.sqrt(2.0 / shp[0])
+            parts.append(scale * jax.random.normal(k, shp).reshape(-1))
+        else:
+            parts.append(jnp.zeros(shp).reshape(-1))
+    return jnp.concatenate(parts)
+
+
+def adam_update(p, g, m, v, step, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    t = step + 1.0
+    mh = m / (1 - b1 ** t)
+    vh = v / (1 - b2 ** t)
+    return p - lr * mh / (jnp.sqrt(vh) + eps), m, v
+
+
+def _key(raw):
+    return jax.random.wrap_key_data(raw.astype(jnp.uint32), impl="threefry2x32")
+
+
+# ----------------------------------------------------------------------------
+# VAE (Kingma & Welling) on flattened binary images in {-1, +1}
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class VaeSpec:
+    data_dim: int = 256
+    hidden: int = 128
+    latent: int = 16
+
+    @property
+    def enc(self):
+        return MlpSpec((self.data_dim, self.hidden, 2 * self.latent))
+
+    @property
+    def dec(self):
+        return MlpSpec((self.latent, self.hidden, self.data_dim))
+
+    @property
+    def n_params(self):
+        return self.enc.n_params + self.dec.n_params
+
+    def sample_flops(self):
+        # Decoder only at inference (App. F counts generation cost).
+        return self.dec.flops_per_example()
+
+
+def vae_loss(spec: VaeSpec, flat, batch, key):
+    enc_n = spec.enc.n_params
+    ef, df = flat[:enc_n], flat[enc_n:]
+    x01 = (batch + 1.0) / 2.0
+    stats = mlp_apply(spec.enc, ef, batch)
+    mu, logvar = stats[:, :spec.latent], stats[:, spec.latent:]
+    eps = jax.random.normal(key, mu.shape)
+    z = mu + jnp.exp(0.5 * logvar) * eps
+    logits = mlp_apply(spec.dec, df, z)
+    bce = jnp.sum(jnp.maximum(logits, 0) - logits * x01 +
+                  jnp.log1p(jnp.exp(-jnp.abs(logits))), axis=1)
+    kl = 0.5 * jnp.sum(mu ** 2 + jnp.exp(logvar) - 1.0 - logvar, axis=1)
+    return jnp.mean(bce + kl)
+
+
+def make_vae_train(spec: VaeSpec, batch: int):
+    def step(flat, m, v, opt_step, data, key_raw):
+        k = _key(key_raw)
+        loss, g = jax.value_and_grad(vae_loss, argnums=1)(spec, flat, data, k)
+        flat2, m2, v2 = adam_update(flat, g, m, v, opt_step[0])
+        return flat2, m2, v2, jnp.reshape(loss, (1,))
+    return step
+
+
+def make_vae_sample(spec: VaeSpec, batch: int):
+    def sample(flat, key_raw):
+        k = _key(key_raw)
+        enc_n = spec.enc.n_params
+        z = jax.random.normal(k, (batch, spec.latent))
+        logits = mlp_apply(spec.dec, flat[enc_n:], z)
+        p = jax.nn.sigmoid(logits)
+        u = jax.random.uniform(jax.random.fold_in(k, 1), p.shape)
+        return jnp.where(u < p, 1.0, -1.0)
+    return sample
+
+
+# ----------------------------------------------------------------------------
+# GAN (non-saturating) — generator is the Fig. 6 comparison axis
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GanSpec:
+    data_dim: int = 256
+    gen_hidden: int = 128
+    disc_hidden: int = 128
+    latent: int = 16
+
+    @property
+    def gen(self):
+        return MlpSpec((self.latent, self.gen_hidden, self.data_dim))
+
+    @property
+    def disc(self):
+        return MlpSpec((self.data_dim, self.disc_hidden, 1))
+
+    @property
+    def n_params(self):
+        return self.gen.n_params + self.disc.n_params
+
+    def sample_flops(self):
+        return self.gen.flops_per_example()
+
+
+def make_gan_train(spec: GanSpec, batch: int):
+    gn = spec.gen.n_params
+
+    def gen_images(gf, key):
+        z = jax.random.normal(key, (batch, spec.latent))
+        return jnp.tanh(mlp_apply(spec.gen, gf, z))
+
+    def disc_logit(df, x):
+        return mlp_apply(spec.disc, df, x)[:, 0]
+
+    def d_loss(df, gf, data, key):
+        fake = gen_images(gf, key)
+        lr_ = disc_logit(df, data)
+        lf = disc_logit(df, fake)
+        return jnp.mean(jax.nn.softplus(-lr_)) + jnp.mean(jax.nn.softplus(lf))
+
+    def g_loss(gf, df, key):
+        fake = gen_images(gf, key)
+        return jnp.mean(jax.nn.softplus(-disc_logit(df, fake)))
+
+    def step(flat, m, v, opt_step, data, key_raw):
+        k = _key(key_raw)
+        kd, kg = jax.random.split(k)
+        gf, df = flat[:gn], flat[gn:]
+        gm_, gv_ = m[:gn], v[:gn]
+        dm_, dv_ = m[gn:], v[gn:]
+        dl, dg = jax.value_and_grad(d_loss)(df, gf, data, kd)
+        df2, dm2, dv2 = adam_update(df, dg, dm_, dv_, opt_step[0], lr=2e-4)
+        gl, gg = jax.value_and_grad(g_loss)(gf, df2, kg)
+        gf2, gm2, gv2 = adam_update(gf, gg, gm_, gv_, opt_step[0], lr=2e-4)
+        flat2 = jnp.concatenate([gf2, df2])
+        m2 = jnp.concatenate([gm2, dm2])
+        v2 = jnp.concatenate([gv2, dv2])
+        return flat2, m2, v2, jnp.stack([dl, gl])
+    return step
+
+
+def make_gan_sample(spec: GanSpec, batch: int):
+    gn = spec.gen.n_params
+
+    def sample(flat, key_raw):
+        k = _key(key_raw)
+        z = jax.random.normal(k, (batch, spec.latent))
+        x = jnp.tanh(mlp_apply(spec.gen, flat[:gn], z))
+        return jnp.where(x > 0, 1.0, -1.0)
+    return sample
+
+
+# ----------------------------------------------------------------------------
+# DDPM (Ho et al.) — continuous Gaussian diffusion over {-1,+1} data
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DdpmSpec:
+    data_dim: int = 256
+    hidden: int = 256
+    t_emb: int = 32
+    steps: int = 50
+
+    @property
+    def net(self):
+        return MlpSpec((self.data_dim + self.t_emb, self.hidden, self.data_dim))
+
+    @property
+    def n_params(self):
+        return self.net.n_params
+
+    def sample_flops(self):
+        # The UNet runs once per diffusion step (App. F: "it also must be run
+        # dozens to thousands of times to generate a single sample").
+        return self.steps * self.net.flops_per_example()
+
+
+def _ddpm_schedule(spec: DdpmSpec):
+    betas = jnp.linspace(1e-4, 0.2, spec.steps)
+    alphas = 1.0 - betas
+    abar = jnp.cumprod(alphas)
+    return betas, alphas, abar
+
+
+def _time_embed(spec: DdpmSpec, t):
+    half = spec.t_emb // 2
+    freqs = jnp.exp(jnp.linspace(0.0, 4.0, half))
+    ang = t[:, None] * freqs[None, :] / spec.steps
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+def make_ddpm_train(spec: DdpmSpec, batch: int):
+    _, _, abar = _ddpm_schedule(spec)
+
+    def loss_fn(flat, data, key):
+        kt, kn = jax.random.split(key)
+        t = jax.random.randint(kt, (batch,), 0, spec.steps)
+        eps = jax.random.normal(kn, data.shape)
+        a = abar[t][:, None]
+        xt = jnp.sqrt(a) * data + jnp.sqrt(1 - a) * eps
+        inp = jnp.concatenate([xt, _time_embed(spec, t.astype(jnp.float32))], axis=1)
+        pred = mlp_apply(spec.net, flat, inp)
+        return jnp.mean((pred - eps) ** 2)
+
+    def step(flat, m, v, opt_step, data, key_raw):
+        k = _key(key_raw)
+        loss, g = jax.value_and_grad(loss_fn)(flat, data, k)
+        flat2, m2, v2 = adam_update(flat, g, m, v, opt_step[0])
+        return flat2, m2, v2, jnp.reshape(loss, (1,))
+    return step
+
+
+def make_ddpm_sample(spec: DdpmSpec, batch: int):
+    betas, alphas, abar = _ddpm_schedule(spec)
+
+    def sample(flat, key_raw):
+        k = _key(key_raw)
+        x0 = jax.random.normal(k, (batch, spec.data_dim))
+
+        def body(x, i):
+            t = spec.steps - 1 - i
+            tf = jnp.full((batch,), t, dtype=jnp.float32)
+            inp = jnp.concatenate([x, _time_embed(spec, tf)], axis=1)
+            eps = mlp_apply(spec.net, flat, inp)
+            a, ab, b = alphas[t], abar[t], betas[t]
+            mean = (x - b / jnp.sqrt(1 - ab) * eps) / jnp.sqrt(a)
+            z = jax.random.normal(jax.random.fold_in(k, i), x.shape)
+            x = mean + jnp.where(t > 0, jnp.sqrt(b), 0.0) * z
+            return x, None
+
+        x, _ = jax.lax.scan(body, x0, jnp.arange(spec.steps))
+        return jnp.where(x > 0, 1.0, -1.0)
+    return sample
+
+
+# ----------------------------------------------------------------------------
+# Hybrid HTDML: binarizing autoencoder + critic (Fig. 6 / App. J)
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HybridSpec:
+    data_dim: int = 768      # 3 x 16 x 16 synthetic color images
+    # Small decoder: Fig. 6's thesis is that the DTM carries most of the
+    # expressivity, so the deterministic inference path stays tiny.
+    hidden: int = 48
+    latent: int = 64         # binary DTM code length
+    critic_hidden: int = 64
+
+    @property
+    def enc(self):
+        return MlpSpec((self.data_dim, self.hidden, self.latent))
+
+    @property
+    def dec(self):
+        return MlpSpec((self.latent, self.hidden, self.data_dim))
+
+    @property
+    def critic(self):
+        return MlpSpec((self.data_dim, self.critic_hidden, 1))
+
+    @property
+    def n_params(self):
+        return self.enc.n_params + self.dec.n_params
+
+
+def _st_binarize(p, key):
+    """Stochastic binarization with a straight-through gradient (App. J)."""
+    u = jax.random.uniform(key, p.shape)
+    hard = jnp.where(u < p, 1.0, -1.0)
+    soft = 2.0 * p - 1.0
+    return soft + jax.lax.stop_gradient(hard - soft)
+
+
+def make_ae_train(spec: HybridSpec, batch: int):
+    en = spec.enc.n_params
+
+    def loss_fn(flat, data, key):
+        p = jax.nn.sigmoid(mlp_apply(spec.enc, flat[:en], data))
+        z = _st_binarize(p, key)
+        recon = mlp_apply(spec.dec, flat[en:], z)
+        mse = jnp.mean((recon - data) ** 2)
+        # Binarization pressure: push probabilities away from 1/2.
+        binar = jnp.mean(p * (1.0 - p))
+        return mse + 0.25 * binar
+
+    def step(flat, m, v, opt_step, data, key_raw):
+        k = _key(key_raw)
+        loss, g = jax.value_and_grad(loss_fn)(flat, data, k)
+        flat2, m2, v2 = adam_update(flat, g, m, v, opt_step[0])
+        return flat2, m2, v2, jnp.reshape(loss, (1,))
+    return step
+
+
+def make_ae_encode(spec: HybridSpec, batch: int):
+    en = spec.enc.n_params
+
+    def encode(flat, data, key_raw):
+        k = _key(key_raw)
+        p = jax.nn.sigmoid(mlp_apply(spec.enc, flat[:en], data))
+        u = jax.random.uniform(k, p.shape)
+        return jnp.where(u < p, 1.0, -1.0)
+    return encode
+
+
+def make_ae_decode(spec: HybridSpec, batch: int):
+    en = spec.enc.n_params
+
+    def decode(flat, z):
+        return mlp_apply(spec.dec, flat[en:], z)
+    return decode
+
+
+def make_decoder_ft(spec: HybridSpec, batch: int):
+    """App. J step 3: GAN fine-tune of the decoder against a critic, with the
+    DTM (run by Rust) providing the binary latents ``z``."""
+    en = spec.enc.n_params
+    dn = spec.dec.n_params
+
+    def d_logit(cf, x):
+        return mlp_apply(spec.critic, cf, x)[:, 0]
+
+    def c_loss(cf, dec_f, z, data):
+        fake = mlp_apply(spec.dec, dec_f, z)
+        return (jnp.mean(jax.nn.softplus(-d_logit(cf, data))) +
+                jnp.mean(jax.nn.softplus(d_logit(cf, fake))))
+
+    def g_loss(dec_f, cf, z):
+        fake = mlp_apply(spec.dec, dec_f, z)
+        return jnp.mean(jax.nn.softplus(-d_logit(cf, fake)))
+
+    def step(ae_flat, critic_flat, m, v, opt_step, z, data):
+        dec_f = ae_flat[en:en + dn]
+        cm, cv_ = m[:spec.critic.n_params], v[:spec.critic.n_params]
+        dm, dv = m[spec.critic.n_params:], v[spec.critic.n_params:]
+        cl, cg = jax.value_and_grad(c_loss)(critic_flat, dec_f, z, data)
+        cf2, cm2, cv2 = adam_update(critic_flat, cg, cm, cv_, opt_step[0], lr=2e-4)
+        gl, gg = jax.value_and_grad(g_loss)(dec_f, cf2, z)
+        dec2, dm2, dv2 = adam_update(dec_f, gg, dm, dv, opt_step[0], lr=1e-4)
+        ae2 = jnp.concatenate([ae_flat[:en], dec2])
+        m2 = jnp.concatenate([cm2, dm2])
+        v2 = jnp.concatenate([cv2, dv2])
+        return ae2, cf2, m2, v2, jnp.stack([cl, gl])
+    return step

@@ -1,0 +1,48 @@
+"""Artifact configuration registry.
+
+Every entry here produces AOT artifacts under ``artifacts/`` and is loaded by
+the Rust runtime through ``manifest.json``. Paper-scale numbers (L=70 grids,
+K≈250–1000, T=8, 28x28 data) are used for *energy accounting* (analytic,
+App. E); the configs below are the CPU-scale instances that actually run.
+
+DTM config fields:
+  grid    — L (the chip is an L x L cell array)
+  pattern — Table-II connectivity (G8..G24)
+  n_data  — visible nodes (16x16 images -> 256; hybrid latent code -> 64)
+  batch   — chains sampled in parallel per executable call
+  chunk   — Gibbs iterations per executable call (K is assembled from chunks
+            by the Rust coordinator, keeping K runtime-flexible)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DtmConfig:
+    name: str
+    grid: int
+    pattern: str
+    n_data: int
+    batch: int = 32
+    chunk: int = 10
+    seed: int = 7
+
+
+# The workhorse config (dtm_m32) plus the sweeps needed by Fig. 5(c)
+# (width scaling at fixed data dim; connectivity scaling at fixed width),
+# a tiny exact-enumeration config for integration tests, and the
+# hybrid-latent config for Fig. 6.
+DTM_CONFIGS: list[DtmConfig] = [
+    DtmConfig("dtm_m32", grid=32, pattern="G12", n_data=256),
+    DtmConfig("dtm_w24", grid=24, pattern="G12", n_data=256),
+    DtmConfig("dtm_w40", grid=40, pattern="G12", n_data=256),
+    DtmConfig("dtm_g8", grid=32, pattern="G8", n_data=256),
+    DtmConfig("dtm_g16", grid=32, pattern="G16", n_data=256),
+    DtmConfig("dtm_lat64", grid=16, pattern="G8", n_data=64),
+    DtmConfig("dtm_tiny", grid=4, pattern="G8", n_data=8, batch=64),
+]
+
+BASELINE_BATCH = 64
+BASELINE_DATA_DIM = 256

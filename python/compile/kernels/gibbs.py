@@ -1,0 +1,123 @@
+"""L1: the chromatic Gibbs half-sweep as a Pallas kernel.
+
+This is the compute hot-spot of the DTCA: one synchronous update of one color
+class of a sparse Boltzmann machine (paper Eq. 11),
+
+    P(s_i = +1 | nb(i)) = sigmoid( 2 beta ( sum_j W[j,i] s[b,j]
+                                            + h[i] + gm[i] * xt[b,i] ) )
+
+with the *update mask* selecting which nodes commit (color class minus
+clamped nodes). Clamped nodes and the off-color class pass through.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the DTCA's per-cell
+neighbor wires become one row of a sparse-in-dense coupling matrix ``W``
+([N, N], zero off the Table-II edges), and the whole-color-class update is a
+single ``s @ W`` pass through the MXU systolic array — the TPU analogue of
+the chip updating every cell of a color class in one clock. ``W`` stays
+VMEM-resident across the sweep (N <= ~1.6k -> <= ~10 MB f32), playing the
+role of the chip's distributed weight memory; the batch dimension is tiled
+across the Pallas grid the way independent chips would be tiled on a board.
+
+Why dense-matmul and not a gather: the deployment XLA (0.5.1, behind the
+rust `xla` crate) miscompiles every gather variant inside a scanned loop
+after the HLO-text round-trip (see DESIGN.md and rust/tests/integration.rs);
+matmul forms are verified bit-stable across both toolchains, and on a real
+TPU they are the idiomatic mapping anyway.
+
+``interpret=True`` is mandatory on this CPU-only image: real-TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute. The kernel is
+still written with real BlockSpecs so the HBM<->VMEM schedule is explicit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _halfsweep_kernel(s_ref, w_ref, h_ref, gm_ref, xt_ref, umask_ref, u_ref,
+                      beta_ref, o_ref):
+    """One batch-tile of the half-sweep. Shapes inside the kernel:
+
+    s_ref:     [Bt, N]  current spins (+/-1)
+    w_ref:     [N, N]   symmetric coupling matrix (zero diagonal / non-edges)
+    h_ref:     [N]      biases
+    gm_ref:    [N]      forward-process coupling Gamma/(2 beta) (0 on latents)
+    xt_ref:    [Bt, N]  previous-denoising-step values (the clamped x^t row)
+    umask_ref: [N]      1.0 where this call may update (color & not clamped)
+    u_ref:     [Bt, N]  uniforms for the Bernoulli draws
+    beta_ref:  [1]      inverse temperature
+    o_ref:     [Bt, N]  updated spins
+    """
+    s = s_ref[...]
+    # The MXU pass: every node's neighbor sum for this color class at once.
+    field = s @ w_ref[...]
+    field = field + h_ref[...][None, :] + gm_ref[...][None, :] * xt_ref[...]
+    p = jax.nn.sigmoid(2.0 * beta_ref[0] * field)
+    new = jnp.where(u_ref[...] < p, 1.0, -1.0).astype(s.dtype)
+    o_ref[...] = jnp.where(umask_ref[...][None, :] > 0.0, new, s)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def halfsweep(s, w, h, gm, xt, umask, u, beta, *, block_b: int = 8,
+              interpret: bool = True):
+    """Pallas chromatic Gibbs half-sweep over a batch of chains.
+
+    Args:
+      s:     [B, N] f32 spins in {-1, +1}.
+      w:     [N, N] f32 symmetric coupling matrix (zero on non-edges).
+      h:     [N] f32 biases.
+      gm:    [N] f32 coupling to the conditioning row ``xt``.
+      xt:    [B, N] f32 conditioning row (x^t of the denoising step).
+      umask: [N] f32 update mask (1 = may update this call).
+      u:     [B, N] f32 uniforms in [0, 1).
+      beta:  [1] f32 inverse temperature.
+      block_b: batch tile size (each tile is one grid step).
+      interpret: run the kernel in interpret mode (required on CPU).
+
+    Returns: [B, N] f32 updated spins.
+    """
+    b, n = s.shape
+    bt = min(block_b, b)
+    if b % bt != 0:
+        raise ValueError(f"batch {b} not divisible by tile {bt}")
+    grid = (b // bt,)
+    row = lambda i: (i, 0)          # batch-tiled operands
+    fixed = lambda i: (0, 0)        # whole-array operands (VMEM resident)
+    fixed1 = lambda i: (0,)
+    return pl.pallas_call(
+        _halfsweep_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, n), row),      # s
+            pl.BlockSpec((n, n), fixed),     # w
+            pl.BlockSpec((n,), fixed1),      # h
+            pl.BlockSpec((n,), fixed1),      # gm
+            pl.BlockSpec((bt, n), row),      # xt
+            pl.BlockSpec((n,), fixed1),      # umask
+            pl.BlockSpec((bt, n), row),      # u
+            pl.BlockSpec((1,), fixed1),      # beta
+        ],
+        out_specs=pl.BlockSpec((bt, n), row),
+        out_shape=jax.ShapeDtypeStruct((b, n), s.dtype),
+        interpret=interpret,
+    )(s, w, h, gm, xt, umask, u, beta)
+
+
+def vmem_footprint_bytes(b: int, n: int, block_b: int = 8) -> int:
+    """Estimated VMEM working set of one grid step (for DESIGN/EXPERIMENTS
+    roofline notes): batch tile rows + the full coupling matrix."""
+    bt = min(block_b, b)
+    f32 = 4
+    tile_rows = 4 * bt * n * f32          # s, xt, u, o
+    coupling = n * n * f32                # w
+    vectors = 3 * n * f32 + f32           # h, gm, umask, beta
+    return tile_rows + coupling + vectors
+
+
+def mxu_flops_per_halfsweep(b: int, n: int) -> int:
+    """MXU work of one half-sweep: the s @ W pass."""
+    return 2 * b * n * n

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the L1 Gibbs half-sweep kernel.
+
+Used by pytest (hypothesis sweeps shapes/dtypes and asserts bit-exact
+agreement with the Pallas kernel) and by the L2 model as the reference
+implementation when building tiny exact-enumeration tests.
+
+All functions use the dense coupling-matrix formulation (W [N, N], zero on
+non-edges and the diagonal) — see kernels/gibbs.py for why.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def halfsweep_ref(s, w, h, gm, xt, umask, u, beta):
+    """Reference chromatic Gibbs half-sweep; same contract as gibbs.halfsweep."""
+    field = s @ w + h[None, :] + gm[None, :] * xt
+    p = jax.nn.sigmoid(2.0 * beta[0] * field)
+    new = jnp.where(u < p, 1.0, -1.0).astype(s.dtype)
+    return jnp.where(umask[None, :] > 0.0, new, s)
+
+
+def conditional_prob_plus(s, w, h, gm, xt, beta):
+    """P(s_i = +1 | rest) for every (batch, node) — the paper's Eq. 11."""
+    field = s @ w + h[None, :] + gm[None, :] * xt
+    return jax.nn.sigmoid(2.0 * beta[0] * field)
+
+
+def energy(s, w, h, gm, xt, beta):
+    """Boltzmann energy  -beta( sum_<ij> J_ij s_i s_j + sum_i (h_i + gm_i xt_i) s_i ).
+
+    ``w`` is the symmetric dense matrix in which each undirected edge appears
+    twice (W[i,j] and W[j,i]), hence the factor 1/2 on the pair term.
+    """
+    pair = 0.5 * jnp.einsum("bi,ij,bj->b", s, w, s)
+    fields = ((h[None, :] + gm[None, :] * xt) * s).sum(axis=1)
+    return -beta[0] * (pair + fields)

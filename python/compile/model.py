@@ -1,0 +1,165 @@
+"""L2: DTM layer programs — chunked chromatic Gibbs sampling in JAX.
+
+One *denoising layer* of a DTM is a latent-variable Boltzmann machine (paper
+Eq. 8) whose conditional P(x^{t-1}, z^{t-1} | x^t) is sampled by chromatic
+Gibbs iteration. This module builds the three AOT programs the Rust
+coordinator executes per layer:
+
+  * ``sample`` — run ``chunk`` full Gibbs iterations, return the final state.
+  * ``stats``  — additionally return the sufficient statistics of the Eq. 14
+    Monte-Carlo gradient: the full second-moment matrix E[s_i s_j] (the Rust
+    side reads out the Table-II edge entries) and per-chain node means E[s_i]
+    (the latter feed the total-correlation penalty gradients, Eqs. H1/H3/H4).
+  * ``trace``  — additionally emit a low-dimensional random projection of the
+    state at every iteration (the autocorrelation observable of App. G).
+
+K (the total iteration count) is *runtime-flexible*: programs are compiled
+for a fixed small ``chunk`` and the Rust side chains calls, feeding the final
+state back in. This keeps the artifact set small while letting training,
+inference and mixing-diagnostics pick any K.
+
+Weights travel as the symmetric dense coupling matrix W [N, N] (zero off the
+Table-II edges): the deployment XLA (0.5.1) miscompiles gathers inside
+scanned loops after the HLO-text round-trip, while matmul forms are verified
+bit-stable — and map to the MXU on real hardware. Statistics are emitted as
+stacked scan outputs and reduced *outside* the loop for the same reason.
+
+Sign conventions: Boltzmann energy E = -beta (sum J s s' + sum h s); the
+forward-process coupling enters the conditional as gm_i = Gamma_t / (2 beta)
+on data nodes (see Eq. D1 / B15 and rust/src/model/forward.rs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import gibbs
+from .kernels import ref
+from . import topology as topo_mod
+
+
+def _typed_key(raw):
+    """Accept a raw uint32[2] key (what Rust passes) and wrap it."""
+    return jax.random.wrap_key_data(raw.astype(jnp.uint32), impl="threefry2x32")
+
+
+def make_layer_program(top: topo_mod.Topology, batch: int, chunk: int,
+                       variant: str, *, proj_dim: int = 8, block_b: int = 8,
+                       use_pallas: bool = True):
+    """Build the jittable layer program for one (topology, batch, chunk).
+
+    Returns a function with signature
+        f(s0, w, h, gm, xt, cmask, cval, key, beta) -> outputs
+    where
+        s0:    [B, N] f32  initial spins (+/-1); clamps are imposed inside
+        w:     [N, N] f32  symmetric dense coupling matrix
+        h:     [N]    f32  biases
+        gm:    [N]    f32  forward coupling Gamma/(2 beta) (0 on latents)
+        xt:    [B, N] f32  conditioning row x^t (0 on latents)
+        cmask: [N]    f32  1 = node clamped for the whole program
+        cval:  [B, N] f32  values for clamped nodes
+        key:   [2]    u32  threefry key
+        beta:  [1]    f32  inverse temperature
+    and outputs
+        sample: s_final [B, N]
+        stats:  (s_final, corr [N, N], mean_b [B, N])
+        trace:  (s_final, proj [chunk, B, P])
+    """
+    if variant not in ("sample", "stats", "trace"):
+        raise ValueError(variant)
+    n = top.n_nodes
+    color_a = jnp.asarray(top.color_mask(0))
+    color_b = jnp.asarray(top.color_mask(1))
+    # Fixed random projection for the mixing observable (App. G: "much
+    # simpler embeddings, such as random linear projections, behave
+    # similarly well").
+    rng = np.random.Generator(np.random.Philox(hash(top.name) % (2**31)))
+    proj_c = jnp.asarray(
+        rng.standard_normal((n, proj_dim)).astype(np.float32) / np.sqrt(n))
+
+    half = gibbs.halfsweep if use_pallas else (
+        lambda s, w, h, gm, xt, um, u, beta, **_: ref.halfsweep_ref(
+            s, w, h, gm, xt, um, u, beta))
+
+    def program(s0, w, h, gm, xt, cmask, cval, key, beta):
+        b = s0.shape[0]
+        s = cmask[None, :] * cval + (1.0 - cmask[None, :]) * s0
+        um_a = color_a * (1.0 - cmask)
+        um_b = color_b * (1.0 - cmask)
+        tkey = _typed_key(key)
+
+        # The chunk is UNROLLED (python loop, no lax.scan): the deployment
+        # XLA (0.5.1, behind the rust `xla` crate) mis-wires while-loop
+        # bodies of this size after the HLO-text round-trip (stacked scan
+        # outputs come back as their init buffers, gathers corrupt, carried
+        # accumulators alias). Unrolling keeps the module loop-free; chunk
+        # is small (default 10) so the op count stays modest, and the Rust
+        # side chains chunks to reach any K.
+        states = []
+        for k in range(chunk):
+            ka, kb = jax.random.split(jax.random.fold_in(tkey, k))
+            ua = jax.random.uniform(ka, (b, n), dtype=s.dtype)
+            s = half(s, w, h, gm, xt, um_a, ua, beta, block_b=block_b)
+            ub = jax.random.uniform(kb, (b, n), dtype=s.dtype)
+            s = half(s, w, h, gm, xt, um_b, ub, beta, block_b=block_b)
+            if variant in ("stats", "trace"):
+                states.append(s)
+
+        if variant == "stats":
+            stacked = jnp.stack(states)                 # [chunk, B, N]
+            flat = stacked.reshape(chunk * b, n)
+            corr = flat.T @ flat / (chunk * b)
+            mean_b = stacked.mean(axis=0)
+            return s, corr, mean_b
+        if variant == "trace":
+            proj = jnp.stack([st @ proj_c for st in states])  # [chunk, B, P]
+            return s, proj
+        return s
+
+    return program
+
+
+def example_args(top: topo_mod.Topology, batch: int):
+    """ShapeDtypeStructs for lowering a layer program."""
+    n = top.n_nodes
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+    return (
+        sd((batch, n), f32),   # s0
+        sd((n, n), f32),       # w (dense)
+        sd((n,), f32),         # h
+        sd((n,), f32),         # gm
+        sd((batch, n), f32),   # xt
+        sd((n,), f32),         # cmask
+        sd((batch, n), f32),   # cval
+        sd((2,), jnp.uint32),  # key
+        sd((1,), f32),         # beta
+    )
+
+
+# ----------------------------------------------------------------------------
+# Test oracles (not lowered): exact enumeration for tiny graphs.
+# ----------------------------------------------------------------------------
+
+def exact_marginals(top: topo_mod.Topology, w_dense, h, gm, xt_row, beta):
+    """Exact single-chain node marginals E[s_i] by enumerating all 2^N states.
+
+    Only usable for N <= ~20; pytest uses it to validate that the chunked
+    Gibbs programs converge to the true Boltzmann distribution.
+    """
+    n = top.n_nodes
+    if n > 20:
+        raise ValueError("enumeration oracle limited to N<=20")
+    states = np.array(
+        [[1.0 if (m >> i) & 1 else -1.0 for i in range(n)] for m in range(2 ** n)],
+        dtype=np.float32)
+    xt = jnp.tile(jnp.asarray(xt_row)[None, :], (states.shape[0], 1))
+    e = ref.energy(jnp.asarray(states), jnp.asarray(w_dense),
+                   jnp.asarray(h), jnp.asarray(gm), xt, jnp.asarray(beta))
+    logp = -np.asarray(e)
+    logp -= logp.max()
+    p = np.exp(logp)
+    p /= p.sum()
+    return (p[:, None] * states).sum(axis=0)

@@ -1,0 +1,147 @@
+"""Baseline model tests: the VAE/GAN/DDPM/hybrid programs train and sample."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import baselines as bl
+
+
+def toy_data(batch, dim, seed=0):
+    """Two-mode binary data: half the batch mostly +1, half mostly -1."""
+    rng = np.random.default_rng(seed)
+    base = np.ones((batch, dim), np.float32)
+    base[batch // 2:] = -1.0
+    flip = rng.random((batch, dim)) < 0.1
+    return np.where(flip, -base, base).astype(np.float32)
+
+
+def key(a, b=0):
+    return np.array([a, b], np.uint32)
+
+
+def test_mlp_flatten_roundtrip():
+    spec = bl.MlpSpec((8, 16, 4))
+    flat = bl.init_flat(spec, jax.random.PRNGKey(0))
+    assert flat.shape == (spec.n_params,)
+    parts = bl.unflatten(spec, flat)
+    assert [p.shape for p in parts] == [(8, 16), (16,), (16, 4), (4,)]
+    assert spec.flops_per_example() == 2 * (8 * 16 + 16 * 4)
+
+
+def test_vae_train_reduces_loss():
+    spec = bl.VaeSpec(data_dim=64, hidden=32, latent=8)
+    b = 32
+    step = jax.jit(bl.make_vae_train(spec, b))
+    flat = np.asarray(bl.init_flat(
+        bl.MlpSpec((1,) * 0 or (1, spec.n_params)), jax.random.PRNGKey(0)
+    ))[:0]  # placeholder removed below
+    flat = np.asarray(jnp.concatenate([
+        bl.init_flat(spec.enc, jax.random.PRNGKey(0)),
+        bl.init_flat(spec.dec, jax.random.PRNGKey(1))]))
+    m = np.zeros_like(flat)
+    v = np.zeros_like(flat)
+    data = toy_data(b, 64)
+    losses = []
+    for i in range(60):
+        flat, m, v, loss = step(flat, m, v, np.array([i], np.float32),
+                                data, key(i))
+        losses.append(float(loss[0]))
+    assert losses[-1] < losses[0] * 0.8
+
+
+def test_vae_sample_shape_and_binary():
+    spec = bl.VaeSpec(data_dim=64, hidden=32, latent=8)
+    b = 16
+    flat = jnp.concatenate([bl.init_flat(spec.enc, jax.random.PRNGKey(0)),
+                            bl.init_flat(spec.dec, jax.random.PRNGKey(1))])
+    out = np.asarray(jax.jit(bl.make_vae_sample(spec, b))(flat, key(3)))
+    assert out.shape == (b, 64)
+    assert set(np.unique(out)).issubset({-1.0, 1.0})
+
+
+def test_gan_train_step_runs_and_updates():
+    spec = bl.GanSpec(data_dim=64, gen_hidden=32, disc_hidden=32, latent=8)
+    b = 32
+    step = jax.jit(bl.make_gan_train(spec, b))
+    flat = jnp.concatenate([bl.init_flat(spec.gen, jax.random.PRNGKey(0)),
+                            bl.init_flat(spec.disc, jax.random.PRNGKey(1))])
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    data = toy_data(b, 64)
+    f2, m2, v2, losses = step(flat, m, v, np.array([0.0], np.float32),
+                              data, key(0))
+    assert not np.allclose(np.asarray(f2), np.asarray(flat))
+    assert np.all(np.isfinite(np.asarray(losses)))
+    out = np.asarray(jax.jit(bl.make_gan_sample(spec, 8))(f2, key(1)))
+    assert out.shape == (8, 64)
+    assert set(np.unique(out)).issubset({-1.0, 1.0})
+
+
+def test_ddpm_train_reduces_loss_and_samples():
+    spec = bl.DdpmSpec(data_dim=32, hidden=64, steps=10)
+    b = 64
+    step = jax.jit(bl.make_ddpm_train(spec, b))
+    flat = bl.init_flat(spec.net, jax.random.PRNGKey(0))
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    data = toy_data(b, 32)
+    losses = []
+    for i in range(80):
+        flat, m, v, loss = step(flat, m, v, np.array([i], np.float32),
+                                data, key(i))
+        losses.append(float(loss[0]))
+    assert np.mean(losses[-10:]) < np.mean(losses[:10])
+    out = np.asarray(jax.jit(bl.make_ddpm_sample(spec, 8))(flat, key(5)))
+    assert out.shape == (8, 32)
+    assert set(np.unique(out)).issubset({-1.0, 1.0})
+
+
+def test_ddpm_sample_flops_scale_with_steps():
+    s10 = bl.DdpmSpec(data_dim=32, hidden=64, steps=10)
+    s50 = bl.DdpmSpec(data_dim=32, hidden=64, steps=50)
+    assert s50.sample_flops() == 5 * s10.sample_flops()
+
+
+def test_ae_train_and_roundtrip():
+    spec = bl.HybridSpec(data_dim=48, hidden=32, latent=16, critic_hidden=16)
+    b = 32
+    step = jax.jit(bl.make_ae_train(spec, b))
+    flat = jnp.concatenate([bl.init_flat(spec.enc, jax.random.PRNGKey(0)),
+                            bl.init_flat(spec.dec, jax.random.PRNGKey(1))])
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    rng = np.random.default_rng(0)
+    data = rng.normal(0, 1, (b, 48)).astype(np.float32)
+    losses = []
+    for i in range(80):
+        flat, m, v, loss = step(flat, m, v, np.array([i], np.float32),
+                                data, key(i))
+        losses.append(float(loss[0]))
+    assert losses[-1] < losses[0]
+    z = np.asarray(jax.jit(bl.make_ae_encode(spec, b))(flat, data, key(1)))
+    assert set(np.unique(z)).issubset({-1.0, 1.0})
+    recon = np.asarray(jax.jit(bl.make_ae_decode(spec, b))(flat, z))
+    assert recon.shape == (b, 48)
+
+
+def test_decoder_ft_step_runs():
+    spec = bl.HybridSpec(data_dim=48, hidden=32, latent=16, critic_hidden=16)
+    b = 16
+    ae = jnp.concatenate([bl.init_flat(spec.enc, jax.random.PRNGKey(0)),
+                          bl.init_flat(spec.dec, jax.random.PRNGKey(1))])
+    critic = bl.init_flat(spec.critic, jax.random.PRNGKey(2))
+    nft = spec.critic.n_params + spec.dec.n_params
+    m = jnp.zeros(nft)
+    v = jnp.zeros(nft)
+    rng = np.random.default_rng(0)
+    z = np.where(rng.random((b, 16)) < 0.5, 1.0, -1.0).astype(np.float32)
+    data = rng.normal(0, 1, (b, 48)).astype(np.float32)
+    step = jax.jit(bl.make_decoder_ft(spec, b))
+    ae2, c2, m2, v2, losses = step(ae, critic, m, v,
+                                   np.array([0.0], np.float32), z, data)
+    # Encoder untouched, decoder updated.
+    en = spec.enc.n_params
+    np.testing.assert_array_equal(np.asarray(ae2)[:en], np.asarray(ae)[:en])
+    assert not np.allclose(np.asarray(ae2)[en:], np.asarray(ae)[en:])
+    assert np.all(np.isfinite(np.asarray(losses)))

@@ -1,0 +1,133 @@
+"""L1 kernel vs pure-jnp oracle: the CORE correctness signal.
+
+Hypothesis sweeps the kernel over topologies, batch sizes, tile sizes and
+temperatures and asserts bit-exact agreement with ref.py, plus the
+physical invariants of a chromatic Gibbs half-sweep.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import topology
+from compile.kernels import gibbs, ref
+
+
+def make_case(grid, pattern, batch, seed, beta):
+    top = topology.build("t", grid, pattern, max(1, grid * grid // 4), seed=seed)
+    rng = np.random.default_rng(seed)
+    n = top.n_nodes
+    s = np.where(rng.random((batch, n)) < 0.5, 1.0, -1.0).astype(np.float32)
+    w = topology.dense_weights(
+        top, rng.normal(0, 0.5, top.n_edges).astype(np.float32))
+    h = rng.normal(0, 0.2, n).astype(np.float32)
+    gm = top.data_mask() * rng.uniform(0.1, 2.0)
+    xt = np.where(rng.random((batch, n)) < 0.5, 1.0, -1.0).astype(np.float32)
+    u = rng.random((batch, n)).astype(np.float32)
+    b = np.array([beta], np.float32)
+    return top, s, w.astype(np.float32), h, gm.astype(np.float32), xt, u, b
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    grid=st.sampled_from([4, 6, 8, 12]),
+    pattern=st.sampled_from(["G8", "G12", "G16"]),
+    batch=st.sampled_from([1, 2, 4, 8]),
+    color=st.integers(0, 1),
+    seed=st.integers(0, 10_000),
+    beta=st.floats(0.1, 3.0),
+    block_b=st.sampled_from([1, 2, 4, 8]),
+)
+def test_kernel_matches_ref(grid, pattern, batch, color, seed, beta, block_b):
+    top, s, w, h, gm, xt, u, b = make_case(grid, pattern, batch, seed, beta)
+    um = top.color_mask(color)
+    args = tuple(map(jnp.asarray, (s, w, h, gm, xt, um, u, b)))
+    got = gibbs.halfsweep(*args, block_b=min(block_b, batch))
+    want = ref.halfsweep_ref(*args)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), color=st.integers(0, 1))
+def test_off_color_nodes_untouched(seed, color):
+    top, s, w, h, gm, xt, u, b = make_case(8, "G8", 4, seed, 1.0)
+    um = top.color_mask(color)
+    out = np.asarray(gibbs.halfsweep(
+        jnp.asarray(s), jnp.asarray(w), jnp.asarray(h), jnp.asarray(gm),
+        jnp.asarray(xt), jnp.asarray(um), jnp.asarray(u), jnp.asarray(b)))
+    frozen = um < 0.5
+    np.testing.assert_array_equal(out[:, frozen], s[:, frozen])
+    assert np.all(np.abs(out) == 1.0)
+
+
+def test_zero_beta_is_fair_coin():
+    """At beta=0 every updated node is Bernoulli(1/2) regardless of field."""
+    top, s, w, h, gm, xt, u, _ = make_case(8, "G8", 4, 0, 1.0)
+    b = np.array([0.0], np.float32)
+    um = top.color_mask(0)
+    out = np.asarray(gibbs.halfsweep(
+        jnp.asarray(s), jnp.asarray(w), jnp.asarray(h), jnp.asarray(gm),
+        jnp.asarray(xt), jnp.asarray(um), jnp.asarray(u), jnp.asarray(b)))
+    upd = um > 0.5
+    expect = np.where(u < 0.5, 1.0, -1.0)
+    np.testing.assert_array_equal(out[:, upd], expect[:, upd])
+
+
+def test_strong_field_deterministic():
+    """A huge aligned field saturates the sigmoid: nodes copy the field sign."""
+    top = topology.build("t", 8, "G8", 16, seed=0)
+    n = top.n_nodes
+    batch = 4
+    s = -np.ones((batch, n), np.float32)
+    w = np.zeros((n, n), np.float32)
+    h = np.full(n, 50.0, np.float32)       # overwhelming +1 bias
+    gm = np.zeros(n, np.float32)
+    xt = np.zeros((batch, n), np.float32)
+    u = np.full((batch, n), 0.999, np.float32)   # worst-case uniforms
+    um = top.color_mask(1)
+    out = np.asarray(gibbs.halfsweep(
+        jnp.asarray(s), jnp.asarray(w), jnp.asarray(h), jnp.asarray(gm),
+        jnp.asarray(xt), jnp.asarray(um), jnp.asarray(u),
+        jnp.asarray(np.array([1.0], np.float32))))
+    upd = um > 0.5
+    assert np.all(out[:, upd] == 1.0)
+    assert np.all(out[:, ~upd] == -1.0)
+
+
+def test_conditional_prob_agrees_with_update_rule():
+    """Empirical flip frequency tracks ref.conditional_prob_plus (Eq. 11)."""
+    top, s, w, h, gm, xt, _, b = make_case(6, "G8", 1, 3, 1.0)
+    p = np.asarray(ref.conditional_prob_plus(
+        jnp.asarray(s), jnp.asarray(w), jnp.asarray(h), jnp.asarray(gm),
+        jnp.asarray(xt), jnp.asarray(b)))[0]
+    um = top.color_mask(0)
+    rng = np.random.default_rng(0)
+    trials = 4000
+    count = np.zeros(top.n_nodes)
+    for _ in range(trials):
+        u = rng.random((1, top.n_nodes)).astype(np.float32)
+        out = np.asarray(ref.halfsweep_ref(
+            jnp.asarray(s), jnp.asarray(w), jnp.asarray(h), jnp.asarray(gm),
+            jnp.asarray(xt), jnp.asarray(um), jnp.asarray(u), jnp.asarray(b)))[0]
+        count += out == 1.0
+    upd = um > 0.5
+    np.testing.assert_allclose(count[upd] / trials, p[upd], atol=0.04)
+
+
+def test_dense_weights_symmetric_zero_diag():
+    top = topology.build("t", 8, "G12", 16, seed=1)
+    rng = np.random.default_rng(0)
+    we = rng.normal(size=top.n_edges).astype(np.float32)
+    w = topology.dense_weights(top, we)
+    assert w.shape == (64, 64)
+    np.testing.assert_array_equal(w, w.T)
+    assert np.all(np.diag(w) == 0.0)
+    # Non-zero exactly on the edges.
+    assert np.count_nonzero(w) == 2 * top.n_edges
+
+
+def test_vmem_footprint_reported():
+    fp = gibbs.vmem_footprint_bytes(32, 1024, block_b=8)
+    assert 0 < fp < 16 * 2 ** 20, "one tile must fit VMEM (~16MB)"
+    assert gibbs.mxu_flops_per_halfsweep(32, 1024) == 2 * 32 * 1024 * 1024

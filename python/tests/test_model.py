@@ -1,0 +1,172 @@
+"""L2 layer-program tests: clamp semantics, stats, trace, exact Boltzmann."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, topology
+
+
+def setup_case(grid=6, pattern="G8", n_data=9, batch=8, seed=0, w_scale=0.3):
+    top = topology.build("t", grid, pattern, n_data, seed=seed)
+    rng = np.random.default_rng(seed)
+    n = top.n_nodes
+    s0 = np.where(rng.random((batch, n)) < 0.5, 1.0, -1.0).astype(np.float32)
+    w = topology.dense_weights(
+        top, rng.normal(0, w_scale, top.n_edges).astype(np.float32))
+    h = rng.normal(0, 0.1, n).astype(np.float32)
+    gm = (top.data_mask() * 0.8).astype(np.float32)
+    xt = np.where(rng.random((batch, n)) < 0.5, 1.0, -1.0).astype(np.float32)
+    xt *= top.data_mask()[None, :]
+    return top, s0, w.astype(np.float32), h, gm, xt
+
+
+def run(prog, *args):
+    return jax.jit(prog)(*map(jnp.asarray, args))
+
+
+def test_clamped_nodes_keep_values():
+    top, s0, w, h, gm, xt = setup_case()
+    batch, n = s0.shape
+    cmask = top.data_mask()
+    cval = np.where(np.random.default_rng(1).random((batch, n)) < 0.5, 1.0,
+                    -1.0).astype(np.float32)
+    prog = model.make_layer_program(top, batch, 4, "sample")
+    s = np.asarray(run(prog, s0, w, h, gm, xt, cmask, cval,
+                       np.array([1, 2], np.uint32), np.array([1.0], np.float32)))
+    d = cmask > 0.5
+    np.testing.assert_array_equal(s[:, d], cval[:, d])
+    assert np.all(np.abs(s) == 1.0)
+
+
+def test_sample_deterministic_in_key():
+    top, s0, w, h, gm, xt = setup_case()
+    batch, n = s0.shape
+    zmask = np.zeros(n, np.float32)
+    zval = np.zeros((batch, n), np.float32)
+    prog = model.make_layer_program(top, batch, 3, "sample")
+    a = np.asarray(run(prog, s0, w, h, gm, xt, zmask, zval,
+                       np.array([5, 6], np.uint32), np.array([1.0], np.float32)))
+    b = np.asarray(run(prog, s0, w, h, gm, xt, zmask, zval,
+                       np.array([5, 6], np.uint32), np.array([1.0], np.float32)))
+    c = np.asarray(run(prog, s0, w, h, gm, xt, zmask, zval,
+                       np.array([5, 7], np.uint32), np.array([1.0], np.float32)))
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_stats_ranges_and_symmetry():
+    top, s0, w, h, gm, xt = setup_case()
+    batch, n = s0.shape
+    prog = model.make_layer_program(top, batch, 6, "stats")
+    s, corr, mean_b = (np.asarray(o) for o in run(
+        prog, s0, w, h, gm, xt, np.zeros(n, np.float32),
+        np.zeros((batch, n), np.float32), np.array([0, 1], np.uint32),
+        np.array([1.0], np.float32)))
+    assert corr.shape == (n, n)
+    assert mean_b.shape == (batch, n)
+    assert np.all(np.abs(corr) <= 1.0 + 1e-5)
+    np.testing.assert_allclose(corr, corr.T, atol=1e-6)
+    np.testing.assert_allclose(np.diag(corr), 1.0, atol=1e-6)  # s_i^2 = 1
+    assert np.all(np.abs(mean_b) <= 1.0 + 1e-6)
+    assert np.all(np.abs(s) == 1.0)
+
+
+def test_trace_shape_and_continuity():
+    top, s0, w, h, gm, xt = setup_case()
+    batch, n = s0.shape
+    chunk = 5
+    prog = model.make_layer_program(top, batch, chunk, "trace", proj_dim=8)
+    s, tr = (np.asarray(o) for o in run(
+        prog, s0, w, h, gm, xt, np.zeros(n, np.float32),
+        np.zeros((batch, n), np.float32), np.array([0, 1], np.uint32),
+        np.array([1.0], np.float32)))
+    assert tr.shape == (chunk, batch, 8)
+    assert np.all(np.isfinite(tr))
+    assert np.any(tr != 0.0)
+
+
+def test_chunk_chaining_produces_valid_states():
+    top, s0, w, h, gm, xt = setup_case(w_scale=0.05)
+    batch, n = s0.shape
+    zm, zv = np.zeros(n, np.float32), np.zeros((batch, n), np.float32)
+    beta = np.array([1.0], np.float32)
+    p4 = model.make_layer_program(top, batch, 4, "sample")
+    s = s0
+    for i in range(10):
+        s = np.asarray(run(p4, s, w, h, gm, xt, zm, zv,
+                           np.array([i, 0], np.uint32), beta))
+    assert np.all(np.abs(s) == 1.0)
+    assert np.all(np.abs(s.mean(axis=0)) <= 1.0)
+
+
+def test_exact_boltzmann_marginals_tiny_graph():
+    """The core statistical validation: chunked chromatic Gibbs converges to
+    the exact Boltzmann marginals of a 16-node machine (full enumeration)."""
+    top = topology.build("tiny", 4, "G8", 8, seed=2)
+    n = top.n_nodes
+    rng = np.random.default_rng(0)
+    w = topology.dense_weights(
+        top, rng.normal(0, 0.25, top.n_edges).astype(np.float32))
+    h = rng.normal(0, 0.2, n).astype(np.float32)
+    gm = (top.data_mask() * 0.5).astype(np.float32)
+    xt_row = (np.where(rng.random(n) < 0.5, 1.0, -1.0) *
+              top.data_mask()).astype(np.float32)
+    beta = np.array([1.0], np.float32)
+
+    exact = model.exact_marginals(top, w, h, gm, xt_row, beta)
+
+    batch = 64
+    s0 = np.where(rng.random((batch, n)) < 0.5, 1.0, -1.0).astype(np.float32)
+    xt = np.tile(xt_row[None, :], (batch, 1))
+    zm, zv = np.zeros(n, np.float32), np.zeros((batch, n), np.float32)
+    prog = jax.jit(model.make_layer_program(top, batch, 10, "stats"))
+    # Burn-in 5 chunks, then average node means over 20 chunks x 64 chains.
+    s = s0
+    means = []
+    for i in range(25):
+        s, _, mb = prog(*map(jnp.asarray, (s, w, h, gm, xt, zm, zv,
+                                           np.array([i, 9], np.uint32), beta)))
+        s = np.asarray(s)
+        if i >= 5:
+            means.append(np.asarray(mb).mean(axis=0))
+    emp = np.stack(means).mean(axis=0)
+    np.testing.assert_allclose(emp, np.asarray(exact), atol=0.06)
+
+
+def test_stats_corr_matches_direct_computation():
+    """corr must equal the time-x-batch second moment of the actual states:
+    validated indirectly — edge entries bounded and consistent with mean_b
+    on a frozen (fully clamped) machine."""
+    top, s0, w, h, gm, xt = setup_case()
+    batch, n = s0.shape
+    cmask = np.ones(n, np.float32)
+    rng = np.random.default_rng(2)
+    cval = np.where(rng.random((batch, n)) < 0.5, 1.0, -1.0).astype(np.float32)
+    prog = model.make_layer_program(top, batch, 3, "stats")
+    s, corr, mean_b = (np.asarray(o) for o in run(
+        prog, s0, w, h, gm, xt, cmask, cval, np.array([0, 1], np.uint32),
+        np.array([1.0], np.float32)))
+    # Fully clamped: states never move, so corr = cval^T cval / B and
+    # mean_b = cval exactly.
+    np.testing.assert_allclose(mean_b, cval, atol=1e-6)
+    expect = cval.T @ cval / batch
+    np.testing.assert_allclose(corr, expect, atol=1e-5)
+
+
+def test_example_args_match_program():
+    top = topology.build("t", 6, "G8", 9, seed=0)
+    args = model.example_args(top, 8)
+    prog = model.make_layer_program(top, 8, 2, "sample")
+    lowered = jax.jit(prog).lower(*args)   # must not raise
+    assert lowered is not None
+
+
+def test_exact_marginals_rejects_big_graphs():
+    top = topology.build("t", 6, "G8", 9, seed=0)
+    n = top.n_nodes
+    with pytest.raises(ValueError):
+        model.exact_marginals(top, np.zeros((n, n), np.float32),
+                              np.zeros(n, np.float32), np.zeros(n, np.float32),
+                              np.zeros(n, np.float32), np.array([1.0], np.float32))

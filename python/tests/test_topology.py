@@ -1,0 +1,106 @@
+"""Topology generator tests: Table-II patterns, bipartiteness, symmetry."""
+
+import numpy as np
+import pytest
+
+from compile import topology
+
+
+@pytest.mark.parametrize("pattern,deg", [
+    ("G8", 8), ("G12", 12), ("G16", 16), ("G20", 20), ("G24", 24)])
+def test_pattern_degree(pattern, deg):
+    top = topology.build("t", 32, pattern, 16, seed=0)
+    assert top.degree == deg
+    # Bulk nodes (far from the boundary) must realize the full degree.
+    L = top.grid
+    bulk = 16 * L + 16
+    assert (~top.pad[bulk]).sum() == deg
+
+
+@pytest.mark.parametrize("pattern", list(topology.PATTERNS))
+def test_bipartite_checkerboard(pattern):
+    top = topology.build("t", 16, pattern, 8, seed=0)
+    u, v = top.edges[:, 0], top.edges[:, 1]
+    assert np.all(top.color[u] != top.color[v])
+
+
+def test_adjacency_symmetric():
+    top = topology.build("t", 12, "G12", 10, seed=3)
+    nbr_sets = [set() for _ in range(top.n_nodes)]
+    for i in range(top.n_nodes):
+        for d in range(top.degree):
+            if not top.pad[i, d]:
+                nbr_sets[i].add(int(top.idx[i, d]))
+    for i in range(top.n_nodes):
+        for j in nbr_sets[i]:
+            assert i in nbr_sets[j], f"edge {i}->{j} not symmetric"
+
+
+def test_slot_edge_consistent():
+    top = topology.build("t", 10, "G8", 5, seed=0)
+    for i in range(top.n_nodes):
+        for d in range(top.degree):
+            if top.pad[i, d]:
+                assert top.slot_edge[i, d] == top.n_edges
+            else:
+                e = top.edges[top.slot_edge[i, d]]
+                assert sorted((i, int(top.idx[i, d]))) == sorted(e.tolist())
+
+
+def test_edge_count_matches_slots():
+    top = topology.build("t", 14, "G12", 20, seed=1)
+    # Each undirected edge occupies exactly two non-pad slots.
+    assert (~top.pad).sum() == 2 * top.n_edges
+
+
+def test_roles_deterministic_and_sorted():
+    a = topology.build("t", 16, "G8", 40, seed=9)
+    b = topology.build("t", 16, "G8", 40, seed=9)
+    c = topology.build("t", 16, "G8", 40, seed=10)
+    assert np.array_equal(a.data_nodes, b.data_nodes)
+    assert not np.array_equal(a.data_nodes, c.data_nodes)
+    assert np.all(np.diff(a.data_nodes) > 0)
+    assert len(set(a.data_nodes.tolist())) == 40
+
+
+def test_expand_edge_weights_pads_zero():
+    top = topology.build("t", 8, "G8", 4, seed=0)
+    w = np.arange(1, top.n_edges + 1, dtype=np.float32)
+    slots = topology.expand_edge_weights(top, w)
+    assert slots.shape == (top.n_nodes, top.degree)
+    assert np.all(slots[top.pad] == 0.0)
+    assert np.all(slots[~top.pad] != 0.0)
+
+
+def test_expand_weights_symmetric():
+    top = topology.build("t", 8, "G8", 4, seed=0)
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=top.n_edges).astype(np.float32)
+    slots = topology.expand_edge_weights(top, w)
+    for i in range(top.n_nodes):
+        for d in range(top.degree):
+            if not top.pad[i, d]:
+                j = int(top.idx[i, d])
+                dj = np.where(top.idx[j] == i)[0]
+                dj = [x for x in dj if not top.pad[j, x]]
+                assert any(slots[j, x] == slots[i, d] for x in dj)
+
+
+def test_json_roundtrip_fields():
+    import json
+    top = topology.build("cfg", 8, "G12", 12, seed=2)
+    obj = json.loads(top.to_json())
+    assert obj["n_nodes"] == 64
+    assert obj["degree"] == 12
+    assert len(obj["idx"]) == 64
+    assert len(obj["edges"]) == obj["n_edges"]
+    assert obj["data_nodes"] == top.data_nodes.tolist()
+
+
+def test_bad_inputs():
+    with pytest.raises(ValueError):
+        topology.build("t", 8, "G9", 4)
+    with pytest.raises(ValueError):
+        topology.build("t", 8, "G8", 0)
+    with pytest.raises(ValueError):
+        topology.build("t", 8, "G8", 65)

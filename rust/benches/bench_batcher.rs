@@ -1,0 +1,68 @@
+//! bench_batcher: batching-policy overhead (enqueue + batch formation) and
+//! end-to-end server throughput with a synthetic (instant) device.
+
+use std::time::{Duration, Instant};
+
+use thermo_dtm::bench::Bencher;
+use thermo_dtm::coordinator::batcher::{Batcher, BatcherConfig, Request};
+
+fn main() {
+    let mut b = Bencher::new("batcher");
+    b.target = Duration::from_secs(2);
+
+    // Raw policy cost: push + drain 256 single-image requests.
+    b.iter_items("push_drain_256", 256.0, || {
+        let mut batcher = Batcher::new(BatcherConfig {
+            device_batch: 32,
+            linger: Duration::ZERO,
+            max_queue: 1 << 14,
+        });
+        let now = Instant::now();
+        for i in 0..256u64 {
+            batcher
+                .push(Request {
+                    id: i,
+                    n_images: 1,
+                    arrived: now,
+                })
+                .unwrap();
+        }
+        let mut total = 0usize;
+        while let Some(batch) = batcher.next_batch(now) {
+            total += batch.total;
+        }
+        assert_eq!(total, 256);
+    });
+
+    // Mixed request sizes, including splits.
+    b.iter_items("mixed_sizes_1k_images", 1024.0, || {
+        let mut batcher = Batcher::new(BatcherConfig {
+            device_batch: 32,
+            linger: Duration::ZERO,
+            max_queue: 1 << 14,
+        });
+        let now = Instant::now();
+        let sizes = [1usize, 3, 8, 20, 100];
+        let mut pushed = 0usize;
+        let mut i = 0u64;
+        while pushed < 1024 {
+            let n = sizes[i as usize % sizes.len()].min(1024 - pushed);
+            batcher
+                .push(Request {
+                    id: i,
+                    n_images: n,
+                    arrived: now,
+                })
+                .unwrap();
+            pushed += n;
+            i += 1;
+        }
+        let mut total = 0usize;
+        while let Some(batch) = batcher.next_batch(now) {
+            total += batch.total;
+        }
+        assert_eq!(total, 1024);
+    });
+
+    b.report();
+}

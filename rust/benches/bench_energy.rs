@@ -1,0 +1,49 @@
+//! bench_energy: the App. E device model and the circuit Monte-Carlo — these
+//! back every energy number in the figures, so they must stay cheap.
+
+use thermo_dtm::bench::Bencher;
+use thermo_dtm::circuit::{self, Corner};
+use thermo_dtm::energy::{self, DeviceParams};
+
+fn main() {
+    let mut b = Bencher::new("energy");
+    b.target = std::time::Duration::from_secs(1);
+
+    let p = DeviceParams::default();
+    b.iter("cell_energy_G12", || {
+        let _ = energy::cell_energy(&p, "G12").unwrap();
+    });
+
+    b.iter("denoising_energy_paper_scale", || {
+        let _ = energy::denoising_energy(&p, "G12", 70, 834, 8, 250).unwrap();
+    });
+
+    b.iter_items("corner_mc_200", 200.0, || {
+        let _ = circuit::corner_monte_carlo(Corner::Typical, 200, 0);
+    });
+
+    let cell = RngWaveBench::default();
+    b.iter_items("rng_waveform_10k_steps", 10_000.0, || cell.run());
+
+    b.report();
+}
+
+struct RngWaveBench {
+    p: circuit::RngCellParams,
+}
+
+impl Default for RngWaveBench {
+    fn default() -> Self {
+        RngWaveBench {
+            p: circuit::RngCellParams::default(),
+        }
+    }
+}
+
+impl RngWaveBench {
+    fn run(&self) {
+        let mut rng = thermo_dtm::util::rng::Rng::new(1);
+        let w = circuit::simulate_waveform(&self.p, 0.0, 10_000, &mut rng);
+        std::hint::black_box(w.len());
+    }
+}

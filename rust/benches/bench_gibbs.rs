@@ -1,0 +1,58 @@
+//! bench_gibbs: the L1 hot path — node-updates/second of one full Gibbs
+//! iteration, HLO/PJRT (Pallas-derived) vs the pure-Rust reference, across
+//! grid sizes. Backs the Fig. 1-scale throughput claims in EXPERIMENTS.md.
+
+use thermo_dtm::bench::Bencher;
+use thermo_dtm::gibbs;
+use thermo_dtm::graph;
+use thermo_dtm::model::LayerParams;
+use thermo_dtm::runtime::Runtime;
+use thermo_dtm::train::sampler::{HloSampler, LayerSampler};
+use thermo_dtm::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new("gibbs_sweep");
+    b.target = std::time::Duration::from_secs(2);
+
+    // Pure-Rust sweeps over increasing grids.
+    for (l, pat) in [(16usize, "G8"), (32, "G12"), (40, "G12")] {
+        let top = graph::build("bench", l, pat, l * l / 4, 0).unwrap();
+        let mut rng = Rng::new(0);
+        let params = LayerParams::init(&top, &mut rng, 0.2);
+        let m = gibbs::Machine::new(&top, &params.w_edges, params.h.clone(),
+                                    vec![0.0; top.n_nodes()], 1.0);
+        let batch = 32;
+        let mut chains = gibbs::Chains::random(batch, top.n_nodes(), &mut rng);
+        let xt = vec![0.0f32; batch * top.n_nodes()];
+        let cmask = vec![0.0f32; top.n_nodes()];
+        let updates = (batch * top.n_nodes()) as f64;
+        b.iter_items(&format!("rust_L{l}_{pat}_B{batch}"), updates, || {
+            gibbs::sweep(&top, &m, &mut chains, &xt, &cmask, &mut rng);
+        });
+    }
+
+    // HLO hot path (chunk iterations per call; report per-iteration rate).
+    match Runtime::open(Runtime::default_dir()) {
+        Ok(rt) => {
+            for cfg in ["dtm_m32", "dtm_w40"] {
+                let Ok(exec) = rt.dtm_exec(cfg) else { continue };
+                let chunk = exec.chunk();
+                let top = exec.top.clone();
+                let n = top.n_nodes();
+                let batch = exec.batch();
+                let mut s = HloSampler::new(exec, 1);
+                let mut rng = Rng::new(0);
+                let params = LayerParams::init(&top, &mut rng, 0.2);
+                let gm = vec![0.0f32; n];
+                let xt = vec![0.0f32; batch * n];
+                let updates = (batch * n * chunk) as f64;
+                b.iter_items(&format!("hlo_{cfg}_B{batch}_chunk{chunk}"), updates, || {
+                    let _ = s.sample(&params, &gm, 1.0, &xt, None, chunk).unwrap();
+                });
+            }
+        }
+        Err(e) => println!("(skipping HLO benches: {e:#})"),
+    }
+
+    b.report();
+}

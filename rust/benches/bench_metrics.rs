@@ -1,0 +1,35 @@
+//! bench_metrics: proxy-FID and autocorrelation costs (they sit on the
+//! training/eval loop, so regressions here slow every figure).
+
+use thermo_dtm::bench::Bencher;
+use thermo_dtm::metrics::{self, FeatureNet};
+use thermo_dtm::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new("metrics");
+    b.target = std::time::Duration::from_secs(2);
+
+    let mut rng = Rng::new(0);
+    let n = 256usize;
+    let dim = 256usize;
+    let real: Vec<f32> = (0..n * dim).map(|_| rng.spin()).collect();
+    let fake: Vec<f32> = (0..n * dim).map(|_| rng.spin()).collect();
+    let feat = FeatureNet::new(dim, 0xF1D);
+
+    b.iter_items("pfid_256x256", n as f64, || {
+        let _ = metrics::pfid(&feat, &real, n, &fake, n).unwrap();
+    });
+
+    b.iter_items("features_256x256", n as f64, || {
+        let _ = feat.features(&real, n);
+    });
+
+    let chains: Vec<Vec<f64>> = (0..32)
+        .map(|_| (0..300).map(|_| rng.normal()).collect())
+        .collect();
+    b.iter("autocorr_32x300_lag100", || {
+        let _ = metrics::autocorrelation(&chains, 100);
+    });
+
+    b.report();
+}

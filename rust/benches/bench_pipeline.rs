@@ -1,0 +1,47 @@
+//! bench_pipeline: end-to-end reverse-process latency — one T-layer denoising
+//! pass per device batch (the Fig. 1 inference workload).
+
+use thermo_dtm::bench::Bencher;
+use thermo_dtm::coordinator::pipeline::generate_batch;
+use thermo_dtm::graph;
+use thermo_dtm::model::Dtm;
+use thermo_dtm::runtime::Runtime;
+use thermo_dtm::train::sampler::{HloSampler, RustSampler};
+use thermo_dtm::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new("pipeline");
+    b.target = std::time::Duration::from_secs(3);
+    let k = 20usize;
+
+    for t_steps in [2usize, 4, 8] {
+        let top = graph::build("bench", 32, "G12", 256, 7).unwrap();
+        let dtm = Dtm::init("bench", &top, t_steps, 3.0, 1);
+        let mut s = RustSampler::new(top, 32, 3);
+        let mut rng = Rng::new(0);
+        b.iter_items(&format!("rust_T{t_steps}_K{k}_B32"), 32.0, || {
+            let _ = generate_batch(&mut s, &dtm, k, &mut rng).unwrap();
+        });
+    }
+
+    match Runtime::open(Runtime::default_dir()) {
+        Ok(rt) => {
+            for t_steps in [2usize, 4] {
+                let exec = match rt.dtm_exec("dtm_m32") {
+                    Ok(e) => e,
+                    Err(_) => continue,
+                };
+                let top = exec.top.clone();
+                let dtm = Dtm::init("dtm_m32", &top, t_steps, 3.0, 1);
+                let mut s = HloSampler::new(exec, 3);
+                let mut rng = Rng::new(0);
+                b.iter_items(&format!("hlo_T{t_steps}_K{k}_B32"), 32.0, || {
+                    let _ = generate_batch(&mut s, &dtm, k, &mut rng).unwrap();
+                });
+            }
+        }
+        Err(e) => println!("(skipping HLO benches: {e:#})"),
+    }
+
+    b.report();
+}

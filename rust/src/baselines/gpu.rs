@@ -1,0 +1,120 @@
+//! GPU-baseline drivers: train and sample the VAE/GAN/DDPM artifacts through
+//! PJRT, with App. F energy accounting.
+//!
+//! Parameters travel as one flat f32 vector (the layout is baked into the
+//! L2 programs); Adam state lives in two more flat vectors and the update is
+//! part of the lowered train-step program, so the Rust side only shuttles
+//! buffers.
+
+use anyhow::{bail, Result};
+
+use crate::energy::gpu as gpu_energy;
+use crate::runtime::{Arg, BaselineEntry, Executable, Runtime, Tensor};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+pub struct GpuBaseline {
+    pub name: String,
+    pub entry: BaselineEntry,
+    train_exe: Arc<Executable>,
+    sample_exe: Arc<Executable>,
+    pub params: Tensor,
+    m: Tensor,
+    v: Tensor,
+    step: f32,
+    rng: Rng,
+}
+
+impl GpuBaseline {
+    /// Load a baseline by manifest name ("vae" | "gan" | "ddpm").
+    pub fn load(rt: &Runtime, name: &str, seed: u64) -> Result<GpuBaseline> {
+        let entry = rt.baseline(name)?.clone();
+        let train_exe = rt.load(&entry.train)?;
+        let sample_exe = rt.load(&entry.sample)?;
+        let mut rng = Rng::new(seed ^ 0x6B00);
+        // He-ish flat init; adequate for these small MLPs.
+        let params = Tensor::new(
+            vec![entry.n_params],
+            (0..entry.n_params)
+                .map(|_| 0.05 * rng.normal() as f32)
+                .collect(),
+        );
+        Ok(GpuBaseline {
+            name: name.to_string(),
+            m: Tensor::zeros(vec![entry.n_params]),
+            v: Tensor::zeros(vec![entry.n_params]),
+            step: 0.0,
+            train_exe,
+            sample_exe,
+            entry,
+            params,
+            rng,
+        })
+    }
+
+    /// One train step on a data batch [B, data_dim]; returns the loss(es).
+    pub fn train_step(&mut self, data: &Tensor) -> Result<Vec<f32>> {
+        if data.shape != vec![self.entry.batch, self.entry.data_dim] {
+            bail!(
+                "batch shape {:?} != [{}, {}]",
+                data.shape,
+                self.entry.batch,
+                self.entry.data_dim
+            );
+        }
+        let step_t = Tensor::scalar1(self.step);
+        let key = self.rng.next_key();
+        let out = self.train_exe.run(&[
+            Arg::T(&self.params),
+            Arg::T(&self.m),
+            Arg::T(&self.v),
+            Arg::T(&step_t),
+            Arg::T(data),
+            Arg::Key(key),
+        ])?;
+        if out.len() != 4 {
+            bail!("train program returned {} outputs", out.len());
+        }
+        let mut it = out.into_iter();
+        self.params = it.next().unwrap();
+        self.m = it.next().unwrap();
+        self.v = it.next().unwrap();
+        self.step += 1.0;
+        Ok(it.next().unwrap().data)
+    }
+
+    /// Sample a batch of images [B, data_dim].
+    pub fn sample(&mut self) -> Result<Tensor> {
+        let key = self.rng.next_key();
+        let mut out = self.sample_exe.run(&[Arg::T(&self.params), Arg::Key(key)])?;
+        if out.len() != 1 {
+            bail!("sample program returned {} outputs", out.len());
+        }
+        Ok(out.remove(0))
+    }
+
+    /// Generate >= n images, truncated to n rows.
+    pub fn sample_n(&mut self, n: usize) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(n * self.entry.data_dim);
+        while out.len() < n * self.entry.data_dim {
+            out.extend(self.sample()?.data);
+        }
+        out.truncate(n * self.entry.data_dim);
+        Ok(out)
+    }
+
+    /// App. F theoretical efficiency [J/sample] from analytic FLOPs.
+    pub fn energy_per_sample(&self) -> f64 {
+        gpu_energy::energy_per_sample(self.entry.sample_flops)
+    }
+
+    /// XLA cost-analysis FLOPs of the *whole sampling program* divided by the
+    /// batch — a second, measured FLOPs estimate (falls back to analytic).
+    pub fn measured_energy_per_sample(&self) -> f64 {
+        if self.sample_exe.flops > 0.0 {
+            gpu_energy::energy_per_sample(self.sample_exe.flops / self.entry.batch as f64)
+        } else {
+            self.energy_per_sample()
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Hybrid thermodynamic–deterministic pipeline (paper Sec. V / App. J /
+//! Fig. 6): a binarizing autoencoder embeds color images into a binary
+//! latent space; a DTM models that latent space; the decoder (optionally
+//! GAN-fine-tuned against a critic) maps DTM samples back to images.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{Arg, Executable, HybridEntry, Runtime, Tensor};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+pub struct HybridDriver {
+    pub entry: HybridEntry,
+    ae_train: Arc<Executable>,
+    ae_encode: Arc<Executable>,
+    ae_decode: Arc<Executable>,
+    dec_ft: Arc<Executable>,
+    pub ae_params: Tensor,
+    pub critic_params: Tensor,
+    m: Tensor,
+    v: Tensor,
+    ft_m: Tensor,
+    ft_v: Tensor,
+    step: f32,
+    ft_step: f32,
+    rng: Rng,
+}
+
+impl HybridDriver {
+    pub fn load(rt: &Runtime, seed: u64) -> Result<HybridDriver> {
+        let Some(entry) = rt.manifest.hybrid.clone() else {
+            bail!("no hybrid artifacts in manifest");
+        };
+        let mut rng = Rng::new(seed ^ 0x4B1D);
+        let np = entry.n_params;
+        let nft = entry.n_critic_params + entry.n_dec_params;
+        Ok(HybridDriver {
+            ae_train: rt.load(&entry.ae_train)?,
+            ae_encode: rt.load(&entry.ae_encode)?,
+            ae_decode: rt.load(&entry.ae_decode)?,
+            dec_ft: rt.load(&entry.dec_ft)?,
+            ae_params: Tensor::new(vec![np], (0..np).map(|_| 0.05 * rng.normal() as f32).collect()),
+            critic_params: Tensor::new(
+                vec![entry.n_critic_params],
+                (0..entry.n_critic_params)
+                    .map(|_| 0.05 * rng.normal() as f32)
+                    .collect(),
+            ),
+            m: Tensor::zeros(vec![np]),
+            v: Tensor::zeros(vec![np]),
+            ft_m: Tensor::zeros(vec![nft]),
+            ft_v: Tensor::zeros(vec![nft]),
+            step: 0.0,
+            ft_step: 0.0,
+            rng,
+            entry,
+        })
+    }
+
+    /// One autoencoder train step; returns the loss.
+    pub fn ae_train_step(&mut self, data: &Tensor) -> Result<f32> {
+        let step_t = Tensor::scalar1(self.step);
+        let key = self.rng.next_key();
+        let out = self.ae_train.run(&[
+            Arg::T(&self.ae_params),
+            Arg::T(&self.m),
+            Arg::T(&self.v),
+            Arg::T(&step_t),
+            Arg::T(data),
+            Arg::Key(key),
+        ])?;
+        let mut it = out.into_iter();
+        self.ae_params = it.next().unwrap();
+        self.m = it.next().unwrap();
+        self.v = it.next().unwrap();
+        self.step += 1.0;
+        Ok(it.next().unwrap().data[0])
+    }
+
+    /// Encode a data batch into binary latents [B, latent].
+    pub fn encode(&mut self, data: &Tensor) -> Result<Tensor> {
+        let key = self.rng.next_key();
+        let mut out = self
+            .ae_encode
+            .run(&[Arg::T(&self.ae_params), Arg::T(data), Arg::Key(key)])?;
+        Ok(out.remove(0))
+    }
+
+    /// Decode binary latents [B, latent] into images [B, data_dim].
+    pub fn decode(&mut self, z: &Tensor) -> Result<Tensor> {
+        let mut out = self.ae_decode.run(&[Arg::T(&self.ae_params), Arg::T(z)])?;
+        Ok(out.remove(0))
+    }
+
+    /// App. J step 3: one GAN fine-tune step of the decoder against the
+    /// critic, with DTM-produced latents `z` and real `data`.
+    pub fn decoder_ft_step(&mut self, z: &Tensor, data: &Tensor) -> Result<(f32, f32)> {
+        let step_t = Tensor::scalar1(self.ft_step);
+        let out = self.dec_ft.run(&[
+            Arg::T(&self.ae_params),
+            Arg::T(&self.critic_params),
+            Arg::T(&self.ft_m),
+            Arg::T(&self.ft_v),
+            Arg::T(&step_t),
+            Arg::T(z),
+            Arg::T(data),
+        ])?;
+        let mut it = out.into_iter();
+        self.ae_params = it.next().unwrap();
+        self.critic_params = it.next().unwrap();
+        self.ft_m = it.next().unwrap();
+        self.ft_v = it.next().unwrap();
+        self.ft_step += 1.0;
+        let losses = it.next().unwrap().data;
+        Ok((losses[0], losses[1]))
+    }
+
+    /// Deterministic-side parameter count at inference (decoder only) — the
+    /// Fig. 6 comparison axis.
+    pub fn inference_nn_params(&self) -> usize {
+        self.entry.n_dec_params
+    }
+}

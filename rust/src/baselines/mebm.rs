@@ -1,0 +1,128 @@
+//! Monolithic-EBM experiments (paper Sec. I, App. L).
+//!
+//! An MEBM is the T=1, full-noise degenerate DTM (`Dtm::init_mebm`): a single
+//! Boltzmann machine asked to model the data distribution outright. Training
+//! reuses the standard trainer with a *fixed* correlation penalty strength
+//! (App. L: "we added a fixed correlation penalty and varied the strength to
+//! control the allowed complexity of the energy landscape"), and the mixing
+//! time is extracted from the autocorrelation tail (Fig. 16).
+
+use anyhow::Result;
+
+use crate::metrics;
+use crate::model::{Dtm, LayerParams};
+use crate::train::sampler::LayerSampler;
+
+/// Autocorrelation + tail-fit mixing estimate for one machine.
+#[derive(Clone, Debug)]
+pub struct MixingReport {
+    pub autocorr: Vec<f64>,
+    /// Iterations to decorrelate (1/|ln sigma2|); None = too slow to measure
+    /// within the window (the blue/orange curves of Fig. 16).
+    pub tau_iters: Option<f64>,
+}
+
+/// Measure mixing of a free-running machine (no x^t conditioning for the
+/// MEBM: gm = 0): run `window` iterations, autocorrelate the App. G
+/// projection observable, and fit the exponential tail.
+pub fn measure_mixing<S: LayerSampler>(
+    sampler: &mut S,
+    params: &LayerParams,
+    beta: f32,
+    window: usize,
+) -> Result<MixingReport> {
+    let n = sampler.topology().n_nodes();
+    let b = sampler.batch();
+    let gm = vec![0.0f32; n];
+    let xt = vec![0.0f32; b * n];
+    let series = sampler.trace(params, &gm, beta, &xt, window)?;
+    // Drop a warm-up prefix.
+    let warm = window / 5;
+    let tail: Vec<Vec<f64>> = series.iter().map(|c| c[warm..].to_vec()).collect();
+    let max_lag = (window - warm) / 2;
+    let r = metrics::autocorrelation(&tail, max_lag);
+    // Fit only the decaying region (before r falls into sampling noise);
+    // for very fast mixers fall back to the first 1/e crossing.
+    let noise_floor = 0.05;
+    let cut = r
+        .iter()
+        .position(|&x| x < noise_floor)
+        .unwrap_or(max_lag)
+        .min(max_lag);
+    let tau = if cut >= 5 {
+        metrics::mixing_time_fit(&r, 1, cut, 1e-3)
+    } else {
+        None
+    }
+    .or_else(|| {
+        r.iter()
+            .position(|&x| x < std::f64::consts::E.recip())
+            .map(|k| k.max(1) as f64)
+    });
+    Ok(MixingReport {
+        autocorr: r,
+        tau_iters: tau,
+    })
+}
+
+/// Mixing time of a trained MEBM checkpoint (layer 0).
+pub fn mebm_mixing<S: LayerSampler>(
+    sampler: &mut S,
+    dtm: &Dtm,
+    window: usize,
+) -> Result<MixingReport> {
+    measure_mixing(sampler, &dtm.layers[0], dtm.beta, window)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph;
+    use crate::train::sampler::RustSampler;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn weak_weights_mix_fast() {
+        let top = graph::build("t", 8, "G8", 16, 0).unwrap();
+        let mut s = RustSampler::new(top.clone(), 8, 0);
+        let params = LayerParams::init(&top, &mut Rng::new(0), 0.02);
+        let rep = measure_mixing(&mut s, &params, 1.0, 400).unwrap();
+        assert!((rep.autocorr[0] - 1.0).abs() < 1e-9);
+        let tau = rep.tau_iters.expect("weakly coupled machine must have measurable tau");
+        assert!(tau < 30.0, "tau {tau} should be small for weak weights");
+    }
+
+    #[test]
+    fn strong_weights_mix_slower() {
+        // The mixing-expressivity tradeoff's mechanism: larger couplings =>
+        // longer decorrelation (Fig. 2 / 16).
+        let top = graph::build("t", 8, "G8", 16, 0).unwrap();
+        let weak = LayerParams {
+            w_edges: vec![0.05; top.n_edges()],
+            h: vec![0.0; top.n_nodes()],
+        };
+        let strong = LayerParams {
+            w_edges: vec![0.5; top.n_edges()],
+            h: vec![0.0; top.n_nodes()],
+        };
+        let mut s1 = RustSampler::new(top.clone(), 8, 1);
+        let mut s2 = RustSampler::new(top.clone(), 8, 1);
+        let r_weak = measure_mixing(&mut s1, &weak, 1.0, 600).unwrap();
+        let r_strong = measure_mixing(&mut s2, &strong, 1.0, 600).unwrap();
+        let tw = r_weak.tau_iters.unwrap_or(f64::INFINITY);
+        let ts = r_strong.tau_iters.unwrap_or(f64::INFINITY);
+        assert!(
+            ts > 1.5 * tw || ts.is_infinite(),
+            "strong {ts:?} !>> weak {tw:?}"
+        );
+    }
+
+    #[test]
+    fn mebm_is_single_layer() {
+        let top = graph::build("t", 6, "G8", 9, 0).unwrap();
+        let mebm = Dtm::init_mebm("t", &top, 0);
+        let mut s = RustSampler::new(top, 4, 2);
+        let rep = mebm_mixing(&mut s, &mebm, 200).unwrap();
+        assert!(!rep.autocorr.is_empty());
+    }
+}

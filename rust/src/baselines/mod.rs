@@ -1,0 +1,9 @@
+//! Baselines: the MEBM (monolithic EBM) and the GPU-side generative models
+//! (VAE / GAN / DDPM) plus the hybrid HTDML plumbing.
+
+pub mod gpu;
+pub mod hybrid;
+pub mod mebm;
+
+pub use gpu::GpuBaseline;
+pub use mebm::{measure_mixing, MixingReport};

@@ -1,0 +1,163 @@
+//! Micro-benchmark harness (criterion substitute for the offline build).
+//!
+//! Usage in a `harness = false` bench binary:
+//! ```ignore
+//! let mut b = bench::Bencher::new("gibbs_sweep");
+//! b.iter("rust_l32", || { ...work... });
+//! b.report();
+//! ```
+
+use std::time::{Duration, Instant};
+
+use crate::util;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    /// Optional throughput denominator (items per iteration).
+    pub items_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> f64 {
+        if self.mean_ns <= 0.0 {
+            0.0
+        } else {
+            self.items_per_iter * 1e9 / self.mean_ns
+        }
+    }
+}
+
+pub struct Bencher {
+    pub group: String,
+    pub warmup: Duration,
+    pub target: Duration,
+    pub max_iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new(group: &str) -> Bencher {
+        Bencher {
+            group: group.to_string(),
+            warmup: Duration::from_millis(300),
+            target: Duration::from_secs(2),
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn quick(group: &str) -> Bencher {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            target: Duration::from_millis(300),
+            max_iters: 2_000,
+            ..Bencher::new(group)
+        }
+    }
+
+    /// Benchmark `f`, attributing `items` work items per call (for
+    /// throughput reporting).
+    pub fn iter_items<F: FnMut()>(&mut self, name: &str, items: f64, mut f: F) -> &BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        let mut warm_iters = 0usize;
+        while w0.elapsed() < self.warmup && warm_iters < self.max_iters {
+            f();
+            warm_iters += 1;
+        }
+        // Measure.
+        let mut samples: Vec<f64> = Vec::new();
+        let t0 = Instant::now();
+        while t0.elapsed() < self.target && samples.len() < self.max_iters {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed().as_nanos() as f64);
+        }
+        if samples.is_empty() {
+            samples.push(0.0);
+        }
+        let res = BenchResult {
+            name: format!("{}/{}", self.group, name),
+            iters: samples.len(),
+            mean_ns: util::mean(&samples),
+            std_ns: util::std_dev(&samples),
+            p50_ns: util::percentile(&samples, 0.5),
+            p95_ns: util::percentile(&samples, 0.95),
+            items_per_iter: items,
+        };
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn iter<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchResult {
+        self.iter_items(name, 1.0, f)
+    }
+
+    pub fn report(&self) {
+        println!("\n== bench group: {} ==", self.group);
+        for r in &self.results {
+            let (v, unit) = human_ns(r.mean_ns);
+            let (p50, u50) = human_ns(r.p50_ns);
+            let (p95, u95) = human_ns(r.p95_ns);
+            print!(
+                "{:<44} {:>9.3} {}/iter (p50 {:.3} {}, p95 {:.3} {}, n={})",
+                r.name, v, unit, p50, u50, p95, u95, r.iters
+            );
+            if r.items_per_iter > 1.0 {
+                print!("  [{:.3e} items/s]", r.throughput());
+            }
+            println!();
+        }
+    }
+}
+
+pub fn human_ns(ns: f64) -> (f64, &'static str) {
+    if ns < 1e3 {
+        (ns, "ns")
+    } else if ns < 1e6 {
+        (ns / 1e3, "µs")
+    } else if ns < 1e9 {
+        (ns / 1e6, "ms")
+    } else {
+        (ns / 1e9, "s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher::quick("test");
+        b.target = Duration::from_millis(30);
+        let r = b.iter("spin", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p95_ns >= r.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e9,
+            std_ns: 0.0,
+            p50_ns: 1e9,
+            p95_ns: 1e9,
+            items_per_iter: 500.0,
+        };
+        assert!((r.throughput() - 500.0).abs() < 1e-9);
+        assert_eq!(human_ns(5e3).1, "µs");
+        assert_eq!(human_ns(2e7).1, "ms");
+    }
+}

@@ -1,0 +1,332 @@
+//! Subthreshold-CMOS RNG circuit simulator (paper Fig. 4, App. K).
+//!
+//! The paper's RNG is a digitizing comparator fed by a subthreshold Gaussian
+//! noise source with a control-voltage-shifted mean. We simulate it as an
+//! Ornstein–Uhlenbeck noise process driving a comparator:
+//!
+//! ```text
+//! dn = -n / tau_n dt + sigma sqrt(2 / tau_n) dW
+//! x(t) = 1  if  n(t) + g (V_in - V_0) > 0  else 0
+//! ```
+//!
+//! which reproduces the published characteristics used as calibration
+//! targets: a sigmoidal P(x=1) vs V_in operating curve (Fig. 4a), an
+//! approximately exponential output autocorrelation with tau_0 ≈ 100 ns
+//! (Fig. 4b), and ~350 aJ/bit.
+//!
+//! `corners` models fabrication variation (Fig. 4c): systematic NMOS/PMOS
+//! threshold skews per process corner plus random intra-die mismatch, mapped
+//! to (speed, energy/bit) through standard subthreshold current laws. The
+//! design asymmetry makes the slow-NMOS/fast-PMOS corner the worst, as in
+//! the paper.
+
+use crate::energy::V_THERMAL;
+use crate::metrics;
+use crate::util::rng::Rng;
+
+/// Physical parameters of the RNG cell.
+#[derive(Clone, Debug)]
+pub struct RngCellParams {
+    /// OU noise correlation time [s]. Output decorrelation tau_0 is of the
+    /// same order (calibrated to ~100 ns, Fig. 4b).
+    pub tau_noise: f64,
+    /// RMS noise amplitude at the comparator input [V].
+    pub sigma_noise: f64,
+    /// Comparator input gain (dimensionless; folds V_in into noise units).
+    pub gain: f64,
+    /// Offset voltage V_0 [V].
+    pub v_offset: f64,
+    /// Simulation timestep [s].
+    pub dt: f64,
+    /// Static power of the cell [W]; E_bit = power * tau_0.
+    pub power: f64,
+}
+
+impl Default for RngCellParams {
+    fn default() -> Self {
+        RngCellParams {
+            tau_noise: 100e-9,
+            sigma_noise: 4.0 * V_THERMAL,
+            gain: 1.0,
+            v_offset: 0.0,
+            dt: 5e-9,
+            power: 3.5e-9, // 3.5 nW -> 350 aJ per 100 ns bit
+        }
+    }
+}
+
+/// Simulate the binary output waveform for `steps` timesteps at input `v_in`.
+pub fn simulate_waveform(p: &RngCellParams, v_in: f64, steps: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut n = p.sigma_noise * rng.normal();
+    let a = (-p.dt / p.tau_noise).exp();
+    let b = p.sigma_noise * (1.0 - a * a).sqrt();
+    let shift = p.gain * (v_in - p.v_offset);
+    let mut out = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        n = a * n + b * rng.normal();
+        out.push(if n + shift > 0.0 { 1.0 } else { 0.0 });
+    }
+    out
+}
+
+/// Measured operating point: empirical P(x=1) at a given input voltage.
+pub fn measure_bias(p: &RngCellParams, v_in: f64, steps: usize, rng: &mut Rng) -> f64 {
+    let w = simulate_waveform(p, v_in, steps, rng);
+    w.iter().sum::<f64>() / w.len() as f64
+}
+
+/// The analytic operating curve: P(x=1) = Phi(g (V_in - V_0) / sigma),
+/// which is what the OU-comparator converges to; well-approximated by a
+/// sigmoid (Fig. 4a).
+pub fn analytic_bias(p: &RngCellParams, v_in: f64) -> f64 {
+    let z = p.gain * (v_in - p.v_offset) / p.sigma_noise;
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+/// Error function (Abramowitz–Stegun 7.1.26, |err| < 1.5e-7).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Fit of the operating curve to a logistic sigmoid: returns (v_half, slope)
+/// minimizing squared error on a voltage sweep (coarse grid search + refine).
+pub fn fit_sigmoid(vs: &[f64], ps: &[f64]) -> (f64, f64) {
+    let mut best = (0.0, 1.0);
+    let mut best_err = f64::INFINITY;
+    let vspan = vs.last().unwrap() - vs.first().unwrap();
+    for i in 0..60 {
+        let v0 = vs[0] + vspan * i as f64 / 59.0;
+        for j in 1..80 {
+            let k = 40.0 * j as f64 / vspan.max(1e-9) / 80.0;
+            let err: f64 = vs
+                .iter()
+                .zip(ps)
+                .map(|(&v, &p)| {
+                    let s = 1.0 / (1.0 + (-(v - v0) * k).exp());
+                    (s - p) * (s - p)
+                })
+                .sum();
+            if err < best_err {
+                best_err = err;
+                best = (v0, k);
+            }
+        }
+    }
+    best
+}
+
+/// Measure the output decorrelation time tau_0 (Fig. 4b): exponential fit of
+/// the waveform autocorrelation at the unbiased point.
+pub fn measure_tau0(p: &RngCellParams, steps: usize, rng: &mut Rng) -> Option<f64> {
+    let chains: Vec<Vec<f64>> = (0..4)
+        .map(|_| simulate_waveform(p, p.v_offset, steps, rng))
+        .collect();
+    let max_lag = (5.0 * p.tau_noise / p.dt) as usize;
+    let r = metrics::autocorrelation(&chains, max_lag);
+    let tau_steps = metrics::mixing_time_fit(&r, 2, max_lag, 1e-3)?;
+    Some(tau_steps * p.dt)
+}
+
+/// Energy per produced random bit: static power times the decorrelation time.
+pub fn energy_per_bit(p: &RngCellParams, tau0: f64) -> f64 {
+    p.power * tau0
+}
+
+// ---------------------------------------------------------------------------
+// Process-corner Monte-Carlo (Fig. 4c)
+// ---------------------------------------------------------------------------
+
+/// Named inter-wafer corners.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Corner {
+    Typical,
+    /// Slow NMOS, fast PMOS — the worst case for this (asymmetric) design.
+    SlowNFastP,
+    /// Fast NMOS, slow PMOS.
+    FastNSlowP,
+}
+
+impl Corner {
+    pub fn all() -> [Corner; 3] {
+        [Corner::Typical, Corner::SlowNFastP, Corner::FastNSlowP]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Corner::Typical => "typical",
+            Corner::SlowNFastP => "slow_nmos_fast_pmos",
+            Corner::FastNSlowP => "fast_nmos_slow_pmos",
+        }
+    }
+
+    /// Systematic threshold-voltage shifts (dVth_n, dVth_p) [V].
+    pub fn vth_shift(&self) -> (f64, f64) {
+        let s = 0.030; // 30 mV corner skew
+        match self {
+            Corner::Typical => (0.0, 0.0),
+            Corner::SlowNFastP => (s, -s),
+            Corner::FastNSlowP => (-s, s),
+        }
+    }
+}
+
+/// Per-instance Monte-Carlo result.
+#[derive(Clone, Copy, Debug)]
+pub struct CornerSample {
+    pub tau0_s: f64,
+    pub energy_j: f64,
+}
+
+/// PDK-style Monte-Carlo: draw `n` device instances at a corner; each gets
+/// intra-die mismatch dVth ~ N(0, sigma_mm). Subthreshold current scales as
+/// exp(-dVth / (n_f V_T)); the (asymmetric) design's speed tracks the NMOS
+/// branch while static power tracks both branches.
+pub fn corner_monte_carlo(corner: Corner, n: usize, seed: u64) -> Vec<CornerSample> {
+    let base = RngCellParams::default();
+    let n_f = 1.3; // subthreshold slope factor
+    let sigma_mm = 0.006; // 6 mV intra-die mismatch
+    let (dn_sys, dp_sys) = corner.vth_shift();
+    let mut rng = Rng::new(seed ^ corner_tag(corner));
+    (0..n)
+        .map(|_| {
+            let dvn = dn_sys + sigma_mm * rng.normal();
+            let dvp = dp_sys + sigma_mm * rng.normal();
+            let i_n = (-dvn / (n_f * V_THERMAL)).exp();
+            let i_p = (-dvp / (n_f * V_THERMAL)).exp();
+            // Speed limited by the NMOS pull-down (design asymmetry).
+            let tau0 = base.tau_noise / i_n;
+            // Static power from both branches.
+            let power = base.power * 0.5 * (i_n + i_p);
+            CornerSample {
+                tau0_s: tau0,
+                energy_j: power * tau0,
+            }
+        })
+        .collect()
+}
+
+fn corner_tag(c: Corner) -> u64 {
+    match c {
+        Corner::Typical => 0x11,
+        Corner::SlowNFastP => 0x22,
+        Corner::FastNSlowP => 0x33,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_known_values() {
+        assert!((erf(0.0)).abs() < 1e-6); // A&S 7.1.26 is a 1.5e-7 approximation
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-5);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-5);
+    }
+
+    #[test]
+    fn operating_curve_is_sigmoidal() {
+        // Fig. 4a: P(x=1) programmable, sigmoidal, 0.5 at the offset point.
+        let p = RngCellParams::default();
+        let mut rng = Rng::new(0);
+        let vs: Vec<f64> = (0..11).map(|i| (i as f64 - 5.0) * 2.0 * V_THERMAL).collect();
+        let ps: Vec<f64> = vs
+            .iter()
+            .map(|&v| measure_bias(&p, v, 40_000, &mut rng))
+            .collect();
+        // Monotone non-decreasing within noise, saturating at the ends.
+        assert!(ps[0] < 0.05 && ps[10] > 0.95);
+        let mid = measure_bias(&p, 0.0, 60_000, &mut rng);
+        assert!((mid - 0.5).abs() < 0.05, "unbiased point {mid}");
+        for w in ps.windows(2) {
+            assert!(w[1] > w[0] - 0.05);
+        }
+        // Sigmoid fit hugs the measured curve.
+        let (v0, k) = fit_sigmoid(&vs, &ps);
+        let rmse: f64 = (vs
+            .iter()
+            .zip(&ps)
+            .map(|(&v, &pm)| {
+                let s = 1.0 / (1.0 + (-(v - v0) * k).exp());
+                (s - pm) * (s - pm)
+            })
+            .sum::<f64>()
+            / vs.len() as f64)
+            .sqrt();
+        assert!(rmse < 0.05, "sigmoid fit rmse {rmse}");
+    }
+
+    #[test]
+    fn analytic_curve_matches_simulation() {
+        let p = RngCellParams::default();
+        let mut rng = Rng::new(3);
+        for v in [-0.05, -0.02, 0.0, 0.03] {
+            let sim = measure_bias(&p, v, 60_000, &mut rng);
+            let ana = analytic_bias(&p, v);
+            assert!((sim - ana).abs() < 0.05, "v={v}: sim {sim} vs ana {ana}");
+        }
+    }
+
+    #[test]
+    fn tau0_near_100ns() {
+        // Fig. 4b: tau_0 ≈ 100 ns.
+        let p = RngCellParams::default();
+        let mut rng = Rng::new(1);
+        let tau0 = measure_tau0(&p, 200_000, &mut rng).expect("fit failed");
+        assert!(
+            (40e-9..250e-9).contains(&tau0),
+            "tau0 {:.1} ns not near 100 ns",
+            tau0 * 1e9
+        );
+    }
+
+    #[test]
+    fn energy_per_bit_near_350aj() {
+        let p = RngCellParams::default();
+        let e = energy_per_bit(&p, 100e-9);
+        assert!((e - 350e-18).abs() / 350e-18 < 0.01);
+    }
+
+    #[test]
+    fn corners_cluster_and_order() {
+        // Fig. 4c: slow-NMOS/fast-PMOS is the worst corner (slowest AND most
+        // energy) due to the design asymmetry; corners form distinct
+        // clusters wider than intra-die mismatch.
+        let n = 200;
+        let typ = corner_monte_carlo(Corner::Typical, n, 0);
+        let snfp = corner_monte_carlo(Corner::SlowNFastP, n, 0);
+        let fnsp = corner_monte_carlo(Corner::FastNSlowP, n, 0);
+        let mean_tau = |v: &[CornerSample]| {
+            v.iter().map(|s| s.tau0_s).sum::<f64>() / v.len() as f64
+        };
+        let mean_e = |v: &[CornerSample]| {
+            v.iter().map(|s| s.energy_j).sum::<f64>() / v.len() as f64
+        };
+        assert!(mean_tau(&snfp) > mean_tau(&typ));
+        assert!(mean_tau(&typ) > mean_tau(&fnsp));
+        assert!(mean_e(&snfp) > mean_e(&typ), "slow-N/fast-P must be worst for energy");
+        // All samples positive and finite.
+        for s in typ.iter().chain(&snfp).chain(&fnsp) {
+            assert!(s.tau0_s > 0.0 && s.energy_j > 0.0);
+            assert!(s.tau0_s.is_finite() && s.energy_j.is_finite());
+        }
+    }
+
+    #[test]
+    fn corner_mc_deterministic() {
+        let a = corner_monte_carlo(Corner::Typical, 10, 5);
+        let b = corner_monte_carlo(Corner::Typical, 10, 5);
+        assert!(a
+            .iter()
+            .zip(&b)
+            .all(|(x, y)| x.tau0_s == y.tau0_s && x.energy_j == y.energy_j));
+    }
+}

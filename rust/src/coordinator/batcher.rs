@@ -1,0 +1,216 @@
+//! Dynamic request batcher (the vLLM-router-style L3 piece).
+//!
+//! Generation requests (each asking for some number of images) arrive
+//! asynchronously; the batcher coalesces them into device-sized batches,
+//! subject to a linger deadline, so the (single-device) denoising pipeline
+//! runs at high occupancy without starving small requests.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// One queued request.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub n_images: usize,
+    pub arrived: Instant,
+}
+
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Device batch size (the compiled executable's B).
+    pub device_batch: usize,
+    /// Max time a request may wait for batch-mates.
+    pub linger: Duration,
+    /// Max queued requests before back-pressure (push fails).
+    pub max_queue: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            device_batch: 32,
+            linger: Duration::from_millis(5),
+            max_queue: 1024,
+        }
+    }
+}
+
+/// A batch the device should run: request ids with per-request image counts
+/// summing to <= device_batch (large requests are split across batches).
+#[derive(Debug, PartialEq)]
+pub struct Batch {
+    pub parts: Vec<(u64, usize)>,
+    pub total: usize,
+}
+
+pub struct Batcher {
+    cfg: BatcherConfig,
+    queue: VecDeque<Request>,
+    /// Remaining images for a partially-scheduled head request.
+    head_remaining: Option<(u64, usize, Instant)>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        Batcher {
+            cfg,
+            queue: VecDeque::new(),
+            head_remaining: None,
+        }
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len() + usize::from(self.head_remaining.is_some())
+    }
+
+    /// Enqueue; Err(()) signals back-pressure.
+    pub fn push(&mut self, req: Request) -> Result<(), Request> {
+        if self.queue_len() >= self.cfg.max_queue {
+            return Err(req);
+        }
+        self.queue.push_back(req);
+        Ok(())
+    }
+
+    fn oldest_wait(&self, now: Instant) -> Option<Duration> {
+        let head = self
+            .head_remaining
+            .as_ref()
+            .map(|&(_, _, t)| t)
+            .or_else(|| self.queue.front().map(|r| r.arrived));
+        head.map(|t| now.duration_since(t))
+    }
+
+    /// Decide whether a batch should be dispatched now, and build it.
+    /// Dispatches when a full device batch is available OR the oldest
+    /// request has lingered past the deadline.
+    pub fn next_batch(&mut self, now: Instant) -> Option<Batch> {
+        let pending: usize = self.head_remaining.map(|(_, n, _)| n).unwrap_or(0)
+            + self.queue.iter().map(|r| r.n_images).sum::<usize>();
+        if pending == 0 {
+            return None;
+        }
+        let lingered = self
+            .oldest_wait(now)
+            .map(|w| w >= self.cfg.linger)
+            .unwrap_or(false);
+        if pending < self.cfg.device_batch && !lingered {
+            return None;
+        }
+        let mut parts = Vec::new();
+        let mut total = 0usize;
+        if let Some((id, n, arr)) = self.head_remaining.take() {
+            let take = n.min(self.cfg.device_batch);
+            parts.push((id, take));
+            total += take;
+            if take < n {
+                self.head_remaining = Some((id, n - take, arr));
+            }
+        }
+        while total < self.cfg.device_batch {
+            let Some(req) = self.queue.pop_front() else { break };
+            let take = req.n_images.min(self.cfg.device_batch - total);
+            parts.push((req.id, take));
+            total += take;
+            if take < req.n_images {
+                self.head_remaining = Some((req.id, req.n_images - take, req.arrived));
+                break;
+            }
+        }
+        Some(Batch { parts, total })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, n: usize, at: Instant) -> Request {
+        Request {
+            id,
+            n_images: n,
+            arrived: at,
+        }
+    }
+
+    #[test]
+    fn coalesces_small_requests_into_full_batch() {
+        let mut b = Batcher::new(BatcherConfig {
+            device_batch: 8,
+            linger: Duration::from_millis(100),
+            max_queue: 16,
+        });
+        let t0 = Instant::now();
+        for i in 0..4 {
+            b.push(req(i, 2, t0)).unwrap();
+        }
+        // 8 images available: dispatch immediately, before linger.
+        let batch = b.next_batch(t0).unwrap();
+        assert_eq!(batch.total, 8);
+        assert_eq!(batch.parts.len(), 4);
+        assert!(b.next_batch(t0).is_none());
+    }
+
+    #[test]
+    fn linger_flushes_partial_batch() {
+        let mut b = Batcher::new(BatcherConfig {
+            device_batch: 8,
+            linger: Duration::from_millis(5),
+            max_queue: 16,
+        });
+        let t0 = Instant::now();
+        b.push(req(1, 3, t0)).unwrap();
+        assert!(b.next_batch(t0).is_none(), "must wait for batch-mates");
+        let later = t0 + Duration::from_millis(6);
+        let batch = b.next_batch(later).unwrap();
+        assert_eq!(batch.total, 3);
+    }
+
+    #[test]
+    fn splits_large_request_across_batches() {
+        let mut b = Batcher::new(BatcherConfig {
+            device_batch: 8,
+            linger: Duration::ZERO,
+            max_queue: 16,
+        });
+        let t0 = Instant::now();
+        b.push(req(7, 20, t0)).unwrap();
+        let b1 = b.next_batch(t0).unwrap();
+        assert_eq!(b1.parts, vec![(7, 8)]);
+        let b2 = b.next_batch(t0).unwrap();
+        assert_eq!(b2.parts, vec![(7, 8)]);
+        let b3 = b.next_batch(t0).unwrap();
+        assert_eq!(b3.parts, vec![(7, 4)]);
+        assert!(b.next_batch(t0).is_none());
+    }
+
+    #[test]
+    fn back_pressure() {
+        let mut b = Batcher::new(BatcherConfig {
+            device_batch: 4,
+            linger: Duration::ZERO,
+            max_queue: 2,
+        });
+        let t0 = Instant::now();
+        b.push(req(1, 1, t0)).unwrap();
+        b.push(req(2, 1, t0)).unwrap();
+        assert!(b.push(req(3, 1, t0)).is_err());
+    }
+
+    #[test]
+    fn mixed_split_and_coalesce() {
+        let mut b = Batcher::new(BatcherConfig {
+            device_batch: 8,
+            linger: Duration::ZERO,
+            max_queue: 16,
+        });
+        let t0 = Instant::now();
+        b.push(req(1, 5, t0)).unwrap();
+        b.push(req(2, 5, t0)).unwrap();
+        let b1 = b.next_batch(t0).unwrap();
+        assert_eq!(b1.parts, vec![(1, 5), (2, 3)]);
+        let b2 = b.next_batch(t0).unwrap();
+        assert_eq!(b2.parts, vec![(2, 2)]);
+    }
+}

@@ -1,0 +1,9 @@
+//! L3 coordination: the denoising pipeline, request batching and serving.
+
+pub mod batcher;
+pub mod pipeline;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use pipeline::{generate_images, Pipeline};
+pub use server::{Server, ServerConfig, ServerStats};

@@ -1,0 +1,170 @@
+//! The denoising pipeline: chain T EBM layers to run the reverse process
+//! (paper Fig. 3b): start from uniform random bits at t = T, run each layer's
+//! Gibbs program conditioned on the previous step's output, and read the data
+//! nodes at t = 0.
+
+use anyhow::Result;
+
+use crate::model::{gather_data, scatter_data, Dtm};
+use crate::train::sampler::LayerSampler;
+use crate::util::rng::Rng;
+
+/// Generate one batch of images from pure noise. Returns data-node values
+/// [B, n_data]. `k` is the Gibbs iteration budget per layer (K_inference).
+pub fn generate_batch<S: LayerSampler>(
+    sampler: &mut S,
+    dtm: &Dtm,
+    k: usize,
+    rng: &mut Rng,
+) -> Result<Vec<f32>> {
+    let top = sampler.topology().clone();
+    let b = sampler.batch();
+    let nd = top.data_nodes.len();
+    // x^T: uniform random bits (the forward process stationary law).
+    let mut x: Vec<f32> = (0..b * nd).map(|_| rng.spin()).collect();
+    // Layers run in reverse: layer t denoises x^{t+1} -> x^t.
+    for t in (0..dtm.t_steps()).rev() {
+        let gm = dtm.gm_vec(&top, t);
+        let xt_full = scatter_data(&top, &x, b);
+        let s_final = sampler.sample(&dtm.layers[t], &gm, dtm.beta, &xt_full, None, k)?;
+        x = gather_data(&top, &s_final, b);
+    }
+    Ok(x)
+}
+
+/// Generate at least `n` images (multiple batches), truncated to n rows.
+pub fn generate_images<S: LayerSampler>(
+    sampler: &mut S,
+    dtm: &Dtm,
+    k: usize,
+    n: usize,
+    rng: &mut Rng,
+) -> Result<Vec<f32>> {
+    let nd = sampler.topology().data_nodes.len();
+    let mut out = Vec::with_capacity(n * nd);
+    while out.len() < n * nd {
+        out.extend(generate_batch(sampler, dtm, k, rng)?);
+    }
+    out.truncate(n * nd);
+    Ok(out)
+}
+
+/// Generate and also record each intermediate x^t (for Fig. 5a): returns
+/// states[t] = data rows at time t, t = T..0 inclusive (T+1 entries).
+pub fn generate_trajectory<S: LayerSampler>(
+    sampler: &mut S,
+    dtm: &Dtm,
+    k: usize,
+    rng: &mut Rng,
+) -> Result<Vec<Vec<f32>>> {
+    let top = sampler.topology().clone();
+    let b = sampler.batch();
+    let nd = top.data_nodes.len();
+    let mut x: Vec<f32> = (0..b * nd).map(|_| rng.spin()).collect();
+    let mut traj = vec![x.clone()];
+    for t in (0..dtm.t_steps()).rev() {
+        let gm = dtm.gm_vec(&top, t);
+        let xt_full = scatter_data(&top, &x, b);
+        let s_final = sampler.sample(&dtm.layers[t], &gm, dtm.beta, &xt_full, None, k)?;
+        x = gather_data(&top, &s_final, b);
+        traj.push(x.clone());
+    }
+    Ok(traj)
+}
+
+/// A pipeline bundles a sampler + model for repeated generation.
+pub struct Pipeline<S: LayerSampler> {
+    pub sampler: S,
+    pub dtm: Dtm,
+    pub k_inference: usize,
+    rng: Rng,
+}
+
+impl<S: LayerSampler> Pipeline<S> {
+    pub fn new(sampler: S, dtm: Dtm, k_inference: usize, seed: u64) -> Pipeline<S> {
+        Pipeline {
+            sampler,
+            dtm,
+            k_inference,
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.sampler.batch()
+    }
+
+    pub fn n_data(&self) -> usize {
+        self.sampler.topology().data_nodes.len()
+    }
+
+    pub fn generate(&mut self, n: usize) -> Result<Vec<f32>> {
+        generate_images(&mut self.sampler, &self.dtm, self.k_inference, n, &mut self.rng)
+    }
+
+    /// Total Gibbs iterations per generated batch (T * K) — the quantity the
+    /// App. E energy model charges for.
+    pub fn iterations_per_batch(&self) -> usize {
+        self.dtm.t_steps() * self.k_inference
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph;
+    use crate::model::Dtm;
+    use crate::train::sampler::RustSampler;
+
+    fn tiny() -> (crate::graph::Topology, Dtm) {
+        let top = graph::build("t", 4, "G8", 8, 0).unwrap();
+        let dtm = Dtm::init("t", &top, 3, 3.0, 1);
+        (top, dtm)
+    }
+
+    #[test]
+    fn generate_shapes_and_values() {
+        let (top, dtm) = tiny();
+        let mut s = RustSampler::new(top, 4, 0);
+        let mut rng = Rng::new(2);
+        let imgs = generate_images(&mut s, &dtm, 5, 10, &mut rng).unwrap();
+        assert_eq!(imgs.len(), 10 * 8);
+        assert!(imgs.iter().all(|&x| x == 1.0 || x == -1.0));
+    }
+
+    #[test]
+    fn trajectory_has_t_plus_one_stages() {
+        let (top, dtm) = tiny();
+        let mut s = RustSampler::new(top, 2, 0);
+        let mut rng = Rng::new(3);
+        let traj = generate_trajectory(&mut s, &dtm, 3, &mut rng).unwrap();
+        assert_eq!(traj.len(), 4);
+        assert!(traj.iter().all(|st| st.len() == 2 * 8));
+    }
+
+    #[test]
+    fn trained_bias_shifts_generations() {
+        // A model whose final layer strongly biases data nodes to +1 must
+        // generate mostly +1 images.
+        let (top, mut dtm) = tiny();
+        for &dn in top.data_nodes.iter() {
+            dtm.layers[0].h[dn as usize] = 4.0;
+        }
+        let mut s = RustSampler::new(top, 8, 0);
+        let mut rng = Rng::new(4);
+        let imgs = generate_images(&mut s, &dtm, 10, 16, &mut rng).unwrap();
+        let mean: f64 = imgs.iter().map(|&x| x as f64).sum::<f64>() / imgs.len() as f64;
+        assert!(mean > 0.8, "mean {mean}");
+    }
+
+    #[test]
+    fn pipeline_accounting() {
+        let (top, dtm) = tiny();
+        let s = RustSampler::new(top, 4, 0);
+        let mut p = Pipeline::new(s, dtm, 7, 0);
+        assert_eq!(p.iterations_per_batch(), 21);
+        assert_eq!(p.n_data(), 8);
+        let imgs = p.generate(4).unwrap();
+        assert_eq!(imgs.len(), 32);
+    }
+}

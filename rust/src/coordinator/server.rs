@@ -1,0 +1,285 @@
+//! The serving loop: a device thread owning the (non-Send) pipeline, fed by
+//! a channel of generation requests through the dynamic batcher.
+//!
+//! Architecture (PJRT wrappers are not `Send`, and physically there is one
+//! DTCA "chip"): client threads -> mpsc -> device thread
+//! [batcher -> pipeline.generate -> per-request slices] -> response channels.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::model::Dtm;
+use crate::train::sampler::LayerSampler;
+use crate::util::rng::Rng;
+
+use super::batcher::{Batcher, BatcherConfig, Request};
+use super::pipeline::generate_batch;
+
+/// A client-visible generation response.
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    pub images: Vec<f32>, // [n_images, n_data]
+    pub latency: Duration,
+}
+
+enum Msg {
+    Generate {
+        n_images: usize,
+        reply: mpsc::Sender<Response>,
+    },
+    Shutdown,
+}
+
+/// Aggregated serving metrics.
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub requests: usize,
+    pub images: usize,
+    pub batches: usize,
+    pub total_batch_fill: f64,
+    pub latencies_ms: Vec<f64>,
+}
+
+impl ServerStats {
+    pub fn mean_fill(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.total_batch_fill / self.batches as f64
+        }
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        crate::util::percentile(&self.latencies_ms, 0.5)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        crate::util::percentile(&self.latencies_ms, 0.99)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub batcher: BatcherConfig,
+    pub k_inference: usize,
+    pub seed: u64,
+}
+
+/// Handle for submitting requests; clonable across client threads.
+#[derive(Clone)]
+pub struct Client {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl Client {
+    /// Blocking generate.
+    pub fn generate(&self, n_images: usize) -> Result<Response> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Generate {
+                n_images,
+                reply: rtx,
+            })
+            .map_err(|_| anyhow::anyhow!("server down"))?;
+        Ok(rrx.recv()?)
+    }
+
+    /// Fire a request, returning the receiver (for concurrent load tests).
+    pub fn generate_async(&self, n_images: usize) -> Result<mpsc::Receiver<Response>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Msg::Generate {
+                n_images,
+                reply: rtx,
+            })
+            .map_err(|_| anyhow::anyhow!("server down"))?;
+        Ok(rrx)
+    }
+}
+
+pub struct Server {
+    tx: mpsc::Sender<Msg>,
+    join: Option<thread::JoinHandle<ServerStats>>,
+}
+
+impl Server {
+    /// Spawn the device thread. `make_sampler` runs *on* the device thread so
+    /// non-Send samplers (HLO/PJRT) work: it builds the sampler there.
+    pub fn spawn<S, F>(cfg: ServerConfig, dtm: Dtm, make_sampler: F) -> Server
+    where
+        S: LayerSampler,
+        F: FnOnce() -> Result<S> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let join = thread::spawn(move || device_loop(cfg, dtm, make_sampler, rx));
+        Server {
+            tx,
+            join: Some(join),
+        }
+    }
+
+    pub fn client(&self) -> Client {
+        Client {
+            tx: self.tx.clone(),
+        }
+    }
+
+    /// Stop and collect stats.
+    pub fn shutdown(mut self) -> ServerStats {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.join.take().unwrap().join().unwrap_or_default()
+    }
+}
+
+fn device_loop<S, F>(
+    cfg: ServerConfig,
+    dtm: Dtm,
+    make_sampler: F,
+    rx: mpsc::Receiver<Msg>,
+) -> ServerStats
+where
+    S: LayerSampler,
+    F: FnOnce() -> Result<S>,
+{
+    let mut sampler = match make_sampler() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("server: sampler init failed: {e:#}");
+            return ServerStats::default();
+        }
+    };
+    let device_batch = sampler.batch();
+    let mut batcher = Batcher::new(BatcherConfig {
+        device_batch,
+        ..cfg.batcher.clone()
+    });
+    let mut rng = Rng::new(cfg.seed);
+    let mut stats = ServerStats::default();
+    let mut pending: std::collections::HashMap<u64, (mpsc::Sender<Response>, Vec<f32>, usize, Instant)> =
+        std::collections::HashMap::new();
+    let mut next_id = 0u64;
+    let nd = sampler.topology().data_nodes.len();
+    let mut shutting_down = false;
+
+    loop {
+        // Pull messages; block only when the queue is empty.
+        let timeout = if batcher.queue_len() == 0 {
+            Duration::from_millis(50)
+        } else {
+            cfg.batcher.linger
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Generate { n_images, reply }) => {
+                let id = next_id;
+                next_id += 1;
+                stats.requests += 1;
+                let now = Instant::now();
+                pending.insert(id, (reply, Vec::with_capacity(n_images * nd), n_images, now));
+                let _ = batcher.push(Request {
+                    id,
+                    n_images,
+                    arrived: now,
+                });
+            }
+            Ok(Msg::Shutdown) => shutting_down = true,
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => shutting_down = true,
+        }
+
+        // Drain whatever is dispatchable.
+        while let Some(batch) = batcher.next_batch(Instant::now()) {
+            let images = match generate_batch(&mut sampler, &dtm, cfg.k_inference, &mut rng) {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("server: generation failed: {e:#}");
+                    break;
+                }
+            };
+            stats.batches += 1;
+            stats.total_batch_fill += batch.total as f64 / device_batch as f64;
+            let mut cursor = 0usize;
+            for (id, count) in batch.parts {
+                let done = {
+                    let entry = pending.get_mut(&id).expect("unknown request id");
+                    entry
+                        .1
+                        .extend_from_slice(&images[cursor * nd..(cursor + count) * nd]);
+                    cursor += count;
+                    entry.1.len() >= entry.2 * nd
+                };
+                if done {
+                    let (reply, imgs, n, t0) = pending.remove(&id).unwrap();
+                    let latency = t0.elapsed();
+                    stats.images += n;
+                    stats.latencies_ms.push(latency.as_secs_f64() * 1e3);
+                    let _ = reply.send(Response {
+                        id,
+                        images: imgs,
+                        latency,
+                    });
+                }
+            }
+        }
+
+        if shutting_down && pending.is_empty() {
+            return stats;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph;
+    use crate::train::sampler::RustSampler;
+
+    fn spawn_tiny(linger_ms: u64) -> Server {
+        let top = graph::build("t", 4, "G8", 8, 0).unwrap();
+        let dtm = Dtm::init("t", &top, 2, 3.0, 1);
+        let cfg = ServerConfig {
+            batcher: BatcherConfig {
+                device_batch: 4,
+                linger: Duration::from_millis(linger_ms),
+                max_queue: 64,
+            },
+            k_inference: 3,
+            seed: 0,
+        };
+        Server::spawn(cfg, dtm, move || {
+            Ok(RustSampler::new(graph::build("t", 4, "G8", 8, 0).unwrap(), 4, 9))
+        })
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let server = spawn_tiny(1);
+        let client = server.client();
+        let resp = client.generate(6).unwrap();
+        assert_eq!(resp.images.len(), 6 * 8);
+        assert!(resp.images.iter().all(|&x| x == 1.0 || x == -1.0));
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.images, 6);
+        assert!(stats.batches >= 2); // 6 images at device batch 4
+    }
+
+    #[test]
+    fn serves_concurrent_clients() {
+        let server = spawn_tiny(2);
+        let client = server.client();
+        let waiters: Vec<_> = (0..6).map(|_| client.generate_async(2).unwrap()).collect();
+        for w in waiters {
+            let r = w.recv().unwrap();
+            assert_eq!(r.images.len(), 16);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 6);
+        assert_eq!(stats.images, 12);
+        assert!(stats.mean_fill() > 0.4, "fill {}", stats.mean_fill());
+        assert!(stats.p99_ms() >= stats.p50_ms());
+    }
+}

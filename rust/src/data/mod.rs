@@ -1,0 +1,295 @@
+//! Synthetic datasets (offline substitutes for Fashion-MNIST / CIFAR-10).
+//!
+//! `fashion` — 10 procedural garment-like silhouette classes rendered at an
+//! arbitrary resolution, randomly translated/scaled and pixel-flipped, then
+//! binarized to spins. Multi-modal and class-structured, which is what drives
+//! the mixing-expressivity tradeoff the paper studies.
+//!
+//! `cifar_like` — 3-channel color-blob images for the hybrid HTDML
+//! experiment (Fig. 6), real-valued in [-1, 1].
+//!
+//! `embedding` — App. I: represent a k-level grayscale value as the sum of k
+//! binary spins (and decode back), used by the Fig. 5(a) grayscale renders.
+
+use crate::util::rng::Rng;
+
+/// One image as spins in {-1, +1}, row-major side x side.
+pub type BinaryImage = Vec<f32>;
+
+/// Procedural silhouette classes (0..10), loosely mirroring Fashion-MNIST's
+/// shirt/trouser/pullover/dress/coat/sandal/shirt2/sneaker/bag/boot.
+fn class_shape(class: usize, u: f64, v: f64) -> bool {
+    // (u, v) in [0,1]^2, v down. Each predicate paints the silhouette.
+    let in_box = |ul: f64, vt: f64, ur: f64, vb: f64| u >= ul && u <= ur && v >= vt && v <= vb;
+    match class % 10 {
+        // T-shirt: torso + short sleeves
+        0 => in_box(0.3, 0.25, 0.7, 0.85) || in_box(0.1, 0.25, 0.9, 0.45),
+        // Trousers: two legs
+        1 => in_box(0.28, 0.15, 0.48, 0.9) || in_box(0.52, 0.15, 0.72, 0.9),
+        // Pullover: torso + long sleeves
+        2 => in_box(0.3, 0.2, 0.7, 0.85) || in_box(0.05, 0.2, 0.95, 0.55),
+        // Dress: triangle
+        3 => {
+            let half = 0.12 + 0.38 * ((v - 0.15) / 0.75).clamp(0.0, 1.0);
+            v >= 0.15 && v <= 0.9 && (u - 0.5).abs() <= half
+        }
+        // Coat: wide torso + collar gap
+        4 => in_box(0.2, 0.15, 0.8, 0.9) && !in_box(0.45, 0.15, 0.55, 0.45),
+        // Sandal: sole + straps
+        5 => in_box(0.1, 0.65, 0.9, 0.8) || in_box(0.25, 0.35, 0.35, 0.65) || in_box(0.6, 0.35, 0.7, 0.65),
+        // Shirt: torso + buttons line
+        6 => in_box(0.3, 0.2, 0.7, 0.9) && !((u - 0.5).abs() < 0.02 && ((v * 10.0) as i64) % 2 == 0),
+        // Sneaker: wedge
+        7 => v >= 0.55 && v <= 0.85 && u >= 0.08 && u <= 0.92 && v >= 0.85 - 0.45 * u,
+        // Bag: body + handle
+        8 => {
+            let body = in_box(0.2, 0.45, 0.8, 0.9);
+            let dx = u - 0.5;
+            let dy = v - 0.45;
+            let handle = (dx * dx / 0.06 + dy * dy / 0.025 - 1.0).abs() < 0.35 && v < 0.45;
+            body || handle
+        }
+        // Ankle boot: shaft + foot
+        _ => in_box(0.35, 0.15, 0.65, 0.7) || in_box(0.35, 0.55, 0.9, 0.85),
+    }
+}
+
+/// Dataset generator configuration.
+#[derive(Clone, Debug)]
+pub struct FashionConfig {
+    pub side: usize,
+    pub flip_prob: f64,  // salt-and-pepper after rasterization
+    pub jitter: f64,     // max |translation| as a fraction of the side
+    pub scale_jitter: f64,
+}
+
+impl Default for FashionConfig {
+    fn default() -> Self {
+        FashionConfig {
+            side: 16,
+            flip_prob: 0.04,
+            jitter: 0.08,
+            scale_jitter: 0.12,
+        }
+    }
+}
+
+/// Render one sample of `class` with random deformation.
+pub fn fashion_sample(cfg: &FashionConfig, class: usize, rng: &mut Rng) -> BinaryImage {
+    let s = cfg.side;
+    let dx = (rng.uniform() * 2.0 - 1.0) * cfg.jitter;
+    let dy = (rng.uniform() * 2.0 - 1.0) * cfg.jitter;
+    let sc = 1.0 + (rng.uniform() * 2.0 - 1.0) * cfg.scale_jitter;
+    let mut img = Vec::with_capacity(s * s);
+    for py in 0..s {
+        for px in 0..s {
+            let u = ((px as f64 + 0.5) / s as f64 - 0.5 - dx) / sc + 0.5;
+            let v = ((py as f64 + 0.5) / s as f64 - 0.5 - dy) / sc + 0.5;
+            let mut on = class_shape(class, u, v);
+            if rng.uniform() < cfg.flip_prob {
+                on = !on;
+            }
+            img.push(if on { 1.0 } else { -1.0 });
+        }
+    }
+    img
+}
+
+/// A full dataset: images are concatenated rows [n, side*side], labels 0..10.
+pub struct Dataset {
+    pub images: Vec<f32>,
+    pub labels: Vec<u8>,
+    pub n: usize,
+    pub dim: usize,
+}
+
+pub fn fashion_dataset(cfg: &FashionConfig, n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let dim = cfg.side * cfg.side;
+    let mut images = Vec::with_capacity(n * dim);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = i % 10;
+        images.extend(fashion_sample(cfg, class, &mut rng));
+        labels.push(class as u8);
+    }
+    Dataset {
+        images,
+        labels,
+        n,
+        dim,
+    }
+}
+
+impl Dataset {
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// A random batch (with replacement) as a row-major [b, dim] buffer.
+    pub fn batch(&self, b: usize, rng: &mut Rng) -> Vec<f32> {
+        let mut out = Vec::with_capacity(b * self.dim);
+        for _ in 0..b {
+            out.extend_from_slice(self.image(rng.below(self.n)));
+        }
+        out
+    }
+}
+
+/// CIFAR-like: 3-channel color blobs, values in [-1, 1], row-major
+/// [3 * side * side] with channel-major layout.
+pub fn cifar_like_dataset(side: usize, n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let dim = 3 * side * side;
+    let mut images = Vec::with_capacity(n * dim);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = i % 10;
+        labels.push(class as u8);
+        // Class determines a base hue and blob layout; noise individualizes.
+        let cx = 0.3 + 0.4 * ((class % 3) as f64 / 2.0) + 0.1 * (rng.uniform() - 0.5);
+        let cy = 0.3 + 0.4 * ((class / 3 % 3) as f64 / 2.0) + 0.1 * (rng.uniform() - 0.5);
+        let r0 = 0.18 + 0.02 * class as f64 / 10.0 + 0.05 * rng.uniform();
+        let hue = [
+            (class as f64 * 0.1 * 6.28).sin() * 0.5 + 0.5,
+            (class as f64 * 0.1 * 6.28 + 2.1).sin() * 0.5 + 0.5,
+            (class as f64 * 0.1 * 6.28 + 4.2).sin() * 0.5 + 0.5,
+        ];
+        for c in 0..3 {
+            for py in 0..side {
+                for px in 0..side {
+                    let u = (px as f64 + 0.5) / side as f64;
+                    let v = (py as f64 + 0.5) / side as f64;
+                    let d2 = (u - cx) * (u - cx) + (v - cy) * (v - cy);
+                    let body = (-d2 / (r0 * r0)).exp();
+                    let val = (2.0 * hue[c] - 1.0) * body + 0.08 * rng.normal();
+                    images.push(val.clamp(-1.0, 1.0) as f32);
+                }
+            }
+        }
+        let _ = i;
+    }
+    Dataset {
+        images,
+        labels,
+        n,
+        dim,
+    }
+}
+
+/// App. I: embed a k-level integer x in [0, k] as k spins whose sum maps back
+/// to x (unary/sum code). `encode` chooses a random arrangement of +1s.
+pub fn embed_level(x: usize, k: usize, rng: &mut Rng) -> Vec<f32> {
+    assert!(x <= k);
+    let mut spins = vec![-1.0f32; k];
+    let mut pos: Vec<usize> = (0..k).collect();
+    rng.shuffle(&mut pos);
+    for &p in pos.iter().take(x) {
+        spins[p] = 1.0;
+    }
+    spins
+}
+
+/// Decode the sum code back to the integer level.
+pub fn decode_level(spins: &[f32]) -> usize {
+    spins.iter().filter(|&&s| s > 0.0).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fashion_images_are_spins_with_structure() {
+        let cfg = FashionConfig::default();
+        let ds = fashion_dataset(&cfg, 100, 0);
+        assert_eq!(ds.images.len(), 100 * 256);
+        assert!(ds.images.iter().all(|&x| x == 1.0 || x == -1.0));
+        // Each class must paint a nontrivial fraction of pixels.
+        for i in 0..10 {
+            let on = ds.image(i).iter().filter(|&&x| x > 0.0).count();
+            assert!(on > 10 && on < 246, "class {i} paints {on} pixels");
+        }
+    }
+
+    #[test]
+    fn classes_are_distinct_modes() {
+        // Average intra-class Hamming distance must be well below
+        // inter-class distance — that's the multi-modality the paper needs.
+        let cfg = FashionConfig {
+            flip_prob: 0.02,
+            ..FashionConfig::default()
+        };
+        let ds = fashion_dataset(&cfg, 200, 1);
+        let ham = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter().zip(b).filter(|(x, y)| x != y).count() as f64
+        };
+        let mut intra = 0.0;
+        let mut inter = 0.0;
+        let mut ni = 0.0;
+        let mut nj = 0.0;
+        for i in 0..40 {
+            for j in (i + 1)..40 {
+                let d = ham(ds.image(i), ds.image(j));
+                if ds.labels[i] == ds.labels[j] {
+                    intra += d;
+                    ni += 1.0;
+                } else {
+                    inter += d;
+                    nj += 1.0;
+                }
+            }
+        }
+        assert!(
+            intra / ni < 0.75 * (inter / nj),
+            "intra {} inter {}",
+            intra / ni,
+            inter / nj
+        );
+    }
+
+    #[test]
+    fn dataset_deterministic() {
+        let cfg = FashionConfig::default();
+        let a = fashion_dataset(&cfg, 20, 42);
+        let b = fashion_dataset(&cfg, 20, 42);
+        assert_eq!(a.images, b.images);
+        let c = fashion_dataset(&cfg, 20, 43);
+        assert_ne!(a.images, c.images);
+    }
+
+    #[test]
+    fn batch_shape() {
+        let ds = fashion_dataset(&FashionConfig::default(), 30, 0);
+        let mut rng = Rng::new(1);
+        let b = ds.batch(8, &mut rng);
+        assert_eq!(b.len(), 8 * ds.dim);
+    }
+
+    #[test]
+    fn cifar_like_in_range() {
+        let ds = cifar_like_dataset(16, 50, 0);
+        assert_eq!(ds.dim, 768);
+        assert!(ds.images.iter().all(|&x| (-1.0..=1.0).contains(&x)));
+        // Different classes differ substantially.
+        let d01: f64 = ds
+            .image(0)
+            .iter()
+            .zip(ds.image(1))
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum();
+        assert!(d01 > 10.0);
+    }
+
+    #[test]
+    fn embedding_roundtrip() {
+        let mut rng = Rng::new(0);
+        for k in [1usize, 4, 8] {
+            for x in 0..=k {
+                let s = embed_level(x, k, &mut rng);
+                assert_eq!(s.len(), k);
+                assert_eq!(decode_level(&s), x);
+            }
+        }
+    }
+}

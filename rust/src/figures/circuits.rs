@@ -1,0 +1,90 @@
+//! Fig. 4: RNG circuit characterization (operating curve, autocorrelation,
+//! process-corner Monte-Carlo).
+
+use anyhow::Result;
+
+use crate::circuit::{self, Corner, RngCellParams};
+use crate::energy::V_THERMAL;
+use crate::metrics;
+use crate::util::csv::Csv;
+use crate::util::rng::Rng;
+
+use super::FigOpts;
+
+/// Fig. 4(a): P(x=1) vs input voltage — measured, analytic, sigmoid fit.
+pub fn fig4a(opts: &FigOpts) -> Result<()> {
+    let p = RngCellParams::default();
+    let mut rng = Rng::new(opts.seed);
+    let steps = if opts.fast { 20_000 } else { 120_000 };
+    let vs: Vec<f64> = (0..21).map(|i| (i as f64 - 10.0) * V_THERMAL).collect();
+    let ps: Vec<f64> = vs.iter().map(|&v| circuit::measure_bias(&p, v, steps, &mut rng)).collect();
+    let (v0, k) = circuit::fit_sigmoid(&vs, &ps);
+    let mut csv = Csv::new(&["v_in_V", "p_measured", "p_analytic", "p_sigmoid_fit"]);
+    println!("{:>10} {:>10} {:>10} {:>12}", "V_in [V]", "P(meas)", "P(theory)", "P(sig fit)");
+    for (&v, &pm) in vs.iter().zip(&ps) {
+        let pa = circuit::analytic_bias(&p, v);
+        let pf = 1.0 / (1.0 + (-(v - v0) * k).exp());
+        println!("{v:>10.4} {pm:>10.4} {pa:>10.4} {pf:>12.4}");
+        csv.row_f64(&[v, pm, pa, pf]);
+    }
+    println!("sigmoid fit: v_half = {v0:.4} V, slope = {k:.1} /V");
+    csv.save(opts.path("fig4a.csv"))?;
+    Ok(())
+}
+
+/// Fig. 4(b): output autocorrelation at the unbiased point; tau_0 fit.
+pub fn fig4b(opts: &FigOpts) -> Result<()> {
+    let p = RngCellParams::default();
+    let mut rng = Rng::new(opts.seed + 1);
+    let steps = if opts.fast { 60_000 } else { 300_000 };
+    let chains: Vec<Vec<f64>> = (0..4)
+        .map(|_| circuit::simulate_waveform(&p, 0.0, steps, &mut rng))
+        .collect();
+    let max_lag = (5.0 * p.tau_noise / p.dt) as usize;
+    let r = metrics::autocorrelation(&chains, max_lag);
+    let tau = metrics::mixing_time_fit(&r, 2, max_lag, 1e-3).map(|t| t * p.dt);
+    let mut csv = Csv::new(&["lag_ns", "r_yy"]);
+    for (kk, &rv) in r.iter().enumerate().step_by(2) {
+        csv.row_f64(&[kk as f64 * p.dt * 1e9, rv]);
+    }
+    csv.save(opts.path("fig4b.csv"))?;
+    match tau {
+        Some(t) => println!(
+            "tau_0 = {:.1} ns (paper: ~100 ns); r[0]={:.3}, r[{} ns]={:.3}",
+            t * 1e9,
+            r[0],
+            (max_lag as f64 * p.dt * 1e9) as u64,
+            r[max_lag]
+        ),
+        None => println!("tau_0 fit failed (window too short)"),
+    }
+    Ok(())
+}
+
+/// Fig. 4(c): corner Monte-Carlo scatter — speed vs energy per bit.
+pub fn fig4c(opts: &FigOpts) -> Result<()> {
+    let n = if opts.fast { 50 } else { 200 };
+    let mut csv = Csv::new(&["corner", "tau0_ns", "energy_aJ"]);
+    println!("{:<24} {:>12} {:>12}", "corner", "mean tau0", "mean E/bit");
+    for corner in Corner::all() {
+        let samples = circuit::corner_monte_carlo(corner, n, opts.seed);
+        for s in &samples {
+            csv.row(&[
+                corner.name().to_string(),
+                format!("{:.4}", s.tau0_s * 1e9),
+                format!("{:.4}", s.energy_j * 1e18),
+            ]);
+        }
+        let mt = samples.iter().map(|s| s.tau0_s).sum::<f64>() / n as f64;
+        let me = samples.iter().map(|s| s.energy_j).sum::<f64>() / n as f64;
+        println!(
+            "{:<24} {:>9.1} ns {:>9.1} aJ",
+            corner.name(),
+            mt * 1e9,
+            me * 1e18
+        );
+    }
+    csv.save(opts.path("fig4c.csv"))?;
+    println!("(paper: slow-NMOS/fast-PMOS corner is worst due to design asymmetry)");
+    Ok(())
+}

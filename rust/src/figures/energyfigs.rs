@@ -1,0 +1,102 @@
+//! Figs. 7, 11, 12b: landscape conditioning and the App. E energy model.
+
+use anyhow::Result;
+
+use crate::energy::{self, DeviceParams, V_THERMAL};
+use crate::graph;
+use crate::util::csv::Csv;
+
+use super::FigOpts;
+
+/// Fig. 7: reverse-conditional energy landscape vs binding strength lambda.
+pub fn fig7(opts: &FigOpts) -> Result<()> {
+    let lambdas = [0.0, 0.5, 2.0, 8.0];
+    let x_t = -0.5;
+    let mut csv = Csv::new(&["x", "lambda", "energy"]);
+    for &l in &lambdas {
+        for i in 0..201 {
+            let x = -2.0 + 4.0 * i as f64 / 200.0;
+            csv.row_f64(&[x, l, energy::landscape_energy(x, x_t, l)]);
+        }
+        println!(
+            "lambda = {:>4}: {} local minima",
+            l,
+            energy::landscape_minima_count(x_t, l)
+        );
+    }
+    csv.save(opts.path("fig7.csv"))?;
+    println!("(paper: bimodal at lambda=0, unimodal near x_t as lambda grows)");
+    Ok(())
+}
+
+/// Fig. 11: (a) bias-node capacitance vs neighbor count, (b) wire capacitance
+/// vs length, (c) neighbor signaling energy vs voltage per pattern.
+pub fn fig11(opts: &FigOpts) -> Result<()> {
+    let p = DeviceParams::default();
+    let mut a = Csv::new(&["n_neighbors", "c_bias_fF"]);
+    for n in [4usize, 8, 12, 16, 20, 24] {
+        let c = p.c_bias_fixed + n as f64 * p.c_bias_per_neighbor;
+        a.row_f64(&[n as f64, c * 1e15]);
+        println!("neighbors {n:>2}: C_bias = {:.2} fF", c * 1e15);
+    }
+    a.save(opts.path("fig11a.csv"))?;
+
+    let mut b = Csv::new(&["length_um", "c_wire_fF"]);
+    for l in [6.0, 12.0, 25.0, 50.0, 100.0, 200.0, 420.0] {
+        b.row_f64(&[l, p.eta_wire * l * 1e15]);
+    }
+    b.save(opts.path("fig11b.csv"))?;
+
+    let mut c = Csv::new(&["pattern", "v_sig_over_vt", "e_comm_aJ"]);
+    println!("{:<6} {:>8} {:>12}", "pat", "V/V_T", "E_comm");
+    for pat in graph::PATTERN_NAMES {
+        for vr in [2.0, 3.0, 4.0, 5.0, 6.0, 8.0] {
+            let cn = energy::neighbor_capacitance(&p, pat)?;
+            let e = 0.5 * cn * (vr * V_THERMAL) * (vr * V_THERMAL);
+            c.row(&[pat.to_string(), format!("{vr}"), format!("{:.2}", e * 1e18)]);
+            if (vr - 4.0).abs() < 1e-9 {
+                println!("{pat:<6} {vr:>8} {:>9.1} aJ", e * 1e18);
+            }
+        }
+    }
+    c.save(opts.path("fig11c.csv"))?;
+    Ok(())
+}
+
+/// Fig. 12(b): per-cell energy breakdown at the App. E operating point.
+pub fn fig12b(opts: &FigOpts) -> Result<()> {
+    let p = DeviceParams::default();
+    let mut csv = Csv::new(&["pattern", "e_rng_aJ", "e_bias_aJ", "e_clock_aJ", "e_comm_aJ", "e_cell_fJ"]);
+    println!(
+        "{:<6} {:>9} {:>9} {:>9} {:>9} {:>10}",
+        "pat", "rng", "bias", "clock", "comm", "total"
+    );
+    for pat in graph::PATTERN_NAMES {
+        let c = energy::cell_energy(&p, pat)?;
+        csv.row(&[
+            pat.to_string(),
+            format!("{:.1}", c.e_rng * 1e18),
+            format!("{:.1}", c.e_bias * 1e18),
+            format!("{:.1}", c.e_clock * 1e18),
+            format!("{:.1}", c.e_comm * 1e18),
+            format!("{:.3}", c.total() * 1e15),
+        ]);
+        println!(
+            "{:<6} {:>6.0} aJ {:>6.0} aJ {:>6.0} aJ {:>6.0} aJ {:>7.2} fJ",
+            pat,
+            c.e_rng * 1e18,
+            c.e_bias * 1e18,
+            c.e_clock * 1e18,
+            c.e_comm * 1e18,
+            c.total() * 1e15
+        );
+    }
+    csv.save(opts.path("fig12b.csv"))?;
+    let pe = energy::denoising_energy(&p, "G12", 70, 834, 8, 250)?;
+    println!(
+        "paper-scale check (L=70, G12, K=250): {:.2} nJ/layer, IO {:.4} nJ (App. E.4: ~1.6, ~0.01)",
+        pe.per_layer * 1e9,
+        (pe.e_init + pe.e_read) * 1e9
+    );
+    Ok(())
+}

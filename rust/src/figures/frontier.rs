@@ -1,0 +1,317 @@
+//! Figs. 1, 2b, 6 and Table III: the quality-vs-energy frontier, the
+//! mixing-expressivity tradeoff, the hybrid HTDML comparison, and the GPU
+//! efficiency cross-check.
+
+use anyhow::Result;
+
+use crate::baselines::gpu::GpuBaseline;
+use crate::baselines::hybrid::HybridDriver;
+use crate::baselines::mebm;
+use crate::data::cifar_like_dataset;
+use crate::energy::{self, gpu as gpu_energy, DeviceParams};
+use crate::metrics::{self, FeatureNet};
+use crate::runtime::{Runtime, Tensor};
+use crate::util::csv::Csv;
+use crate::util::rng::Rng;
+
+use super::training::{dataset16, quick_train, topo};
+use super::FigOpts;
+
+/// Device-model energy per generated sample for our run-scale DTM chain.
+fn dtm_energy_per_sample(grid: usize, pattern: &str, n_data: usize, t: usize, k: usize) -> f64 {
+    energy::denoising_energy(&DeviceParams::default(), pattern, grid, n_data, t, k)
+        .map(|pe| pe.total)
+        .unwrap_or(f64::NAN)
+}
+
+/// Fig. 1: quality (proxy-FID) vs energy per sample — DTM depth sweep, MEBM
+/// mixing-limit sweep, and the GPU baselines (VAE / GAN / DDPM).
+pub fn fig1(opts: &FigOpts) -> Result<()> {
+    let ds = dataset16(if opts.fast { 200 } else { 400 }, 3);
+    let n_eval = if opts.fast { 96 } else { 192 };
+    let feat = FeatureNet::new(256, 0xF1D);
+    let n_ref = ds.images.len() / 256;
+    let mut csv = Csv::new(&["family", "variant", "pfid", "energy_j_per_sample"]);
+    println!("{:<8} {:<16} {:>9} {:>14}", "family", "variant", "pfid", "J/sample");
+
+    // --- DTM depth sweep (hardware EBMs, App. E energy model) ---
+    let top = topo(32, "G12", 256, 7)?;
+    let epochs = if opts.fast { 4 } else { 12 };
+    let ts: &[usize] = if opts.fast { &[2, 4] } else { &[2, 4, 8] };
+    let k_inf = 60usize;
+    for &t in ts {
+        let mut tr = quick_train(opts, &top, t, epochs, true, 0.0, 30, false, &ds.images, 0)?;
+        let pfid = tr.eval_pfid(n_eval)?;
+        let e = dtm_energy_per_sample(32, "G12", 256, t, k_inf);
+        csv.row(&[
+            "dtm".into(),
+            format!("T={t}"),
+            format!("{pfid:.4}"),
+            format!("{e:.4e}"),
+        ]);
+        println!("{:<8} {:<16} {pfid:>9.3} {e:>14.3e}", "dtm", format!("T={t}"));
+    }
+
+    // --- MEBM mixing-limit sweep ---
+    let mtop = topo(32, "G12", 256, 7)?;
+    let lambdas: &[f64] = if opts.fast { &[0.05, 0.01] } else { &[0.05, 0.01, 0.003] };
+    for &l in lambdas {
+        let mut tr = quick_train(opts, &mtop, 1, epochs, false, l, 30, true, &ds.images, 0)?;
+        let window = if opts.fast { 300 } else { 600 };
+        let rep = mebm::mebm_mixing(&mut tr.sampler, &tr.dtm, window)?;
+        let k_mix = rep
+            .tau_iters
+            .map(|t| (4.0 * t).ceil() as usize)
+            .unwrap_or(window * 4)
+            .clamp(k_inf, 4000);
+        // Sample with K = mixing time (the honest cost of an MEBM).
+        let mut rng = Rng::new(opts.seed + 21);
+        let imgs = crate::coordinator::pipeline::generate_images(
+            &mut tr.sampler,
+            &tr.dtm,
+            k_mix.min(if opts.fast { 400 } else { 1200 }),
+            n_eval,
+            &mut rng,
+        )?;
+        let pfid = metrics::pfid(&feat, &ds.images, n_ref, &imgs, n_eval)?;
+        let e = dtm_energy_per_sample(32, "G12", 256, 1, k_mix);
+        csv.row(&[
+            "mebm".into(),
+            format!("lambda={l}"),
+            format!("{pfid:.4}"),
+            format!("{e:.4e}"),
+        ]);
+        println!(
+            "{:<8} {:<16} {pfid:>9.3} {e:>14.3e}  (K_mix={k_mix})",
+            "mebm",
+            format!("lambda={l}")
+        );
+    }
+
+    // --- GPU baselines via artifacts (skipped gracefully if absent) ---
+    match Runtime::open(&opts.artifacts) {
+        Ok(rt) => {
+            let steps = if opts.fast { 80 } else { 400 };
+            for name in ["vae", "gan", "ddpm"] {
+                match run_gpu_baseline(&rt, name, &ds.images, steps, n_eval, &feat, opts.seed) {
+                    Ok((pfid, e_theory)) => {
+                        csv.row(&[
+                            "gpu".into(),
+                            name.into(),
+                            format!("{pfid:.4}"),
+                            format!("{e_theory:.4e}"),
+                        ]);
+                        println!("{:<8} {:<16} {pfid:>9.3} {e_theory:>14.3e}", "gpu", name);
+                    }
+                    Err(e) => println!("gpu baseline {name} failed: {e:#}"),
+                }
+            }
+        }
+        Err(e) => println!("(skipping GPU baselines: {e:#})"),
+    }
+
+    csv.save(opts.path("fig1.csv"))?;
+    println!("(paper headline: DTM reaches GPU-model quality at ~1e4x less energy)");
+    Ok(())
+}
+
+/// Train a GPU baseline on the dataset and report (pfid, theoretical J/sample).
+pub fn run_gpu_baseline(
+    rt: &Runtime,
+    name: &str,
+    data: &[f32],
+    steps: usize,
+    n_eval: usize,
+    feat: &FeatureNet,
+    seed: u64,
+) -> Result<(f64, f64)> {
+    let mut bl = GpuBaseline::load(rt, name, seed)?;
+    let (b, dim) = (bl.entry.batch, bl.entry.data_dim);
+    let rows = data.len() / dim;
+    let mut rng = Rng::new(seed + 31);
+    for _ in 0..steps {
+        let mut batch = Vec::with_capacity(b * dim);
+        for _ in 0..b {
+            let r = rng.below(rows);
+            batch.extend_from_slice(&data[r * dim..(r + 1) * dim]);
+        }
+        bl.train_step(&Tensor::new(vec![b, dim], batch))?;
+    }
+    let imgs = bl.sample_n(n_eval)?;
+    let pfid = metrics::pfid(feat, data, rows, &imgs, n_eval)?;
+    Ok((pfid, bl.energy_per_sample()))
+}
+
+/// Fig. 2(b): MEBM quality vs mixing time, with the DTM point overlaid.
+pub fn fig2b(opts: &FigOpts) -> Result<()> {
+    let ds = dataset16(if opts.fast { 200 } else { 400 }, 3);
+    let top = topo(24, "G12", 256, 7)?;
+    let epochs = if opts.fast { 4 } else { 20 };
+    let lambdas: &[f64] = if opts.fast { &[0.1, 0.01] } else { &[0.1, 0.03, 0.01, 0.003] };
+    let mut csv = Csv::new(&["model", "lambda", "mixing_iters", "pfid"]);
+    for &l in lambdas {
+        let mut tr = quick_train(opts, &top, 1, epochs, false, l, 30, true, &ds.images, 0)?;
+        let window = if opts.fast { 300 } else { 600 };
+        let rep = mebm::mebm_mixing(&mut tr.sampler, &tr.dtm, window)?;
+        let tau = rep.tau_iters.unwrap_or(window as f64);
+        let pfid = tr.eval_pfid(if opts.fast { 96 } else { 160 })?;
+        csv.row_f64(&[0.0, l, tau, pfid]);
+        println!("MEBM lambda={l:<6} tau {tau:>8.1} pfid {pfid:.3}");
+    }
+    // DTM point: per-layer mixing is short by construction.
+    let mut tr = quick_train(opts, &top, 4, epochs, true, 0.0, 30, false, &ds.images, 0)?;
+    let pfid = tr.eval_pfid(if opts.fast { 96 } else { 160 })?;
+    let rep = mebm::measure_mixing(&mut tr.sampler, &tr.dtm.layers[0], tr.dtm.beta, 300)?;
+    let tau = rep.tau_iters.unwrap_or(300.0);
+    csv.row_f64(&[1.0, -1.0, tau, pfid]);
+    println!("DTM (T=4)        tau {tau:>8.1} pfid {pfid:.3}");
+    csv.save(opts.path("fig2b.csv"))?;
+    println!("(paper: DTM sits above-left — better quality at far lower sampling cost)");
+    Ok(())
+}
+
+/// Table III: VAE theoretical vs (simulated-)empirical efficiency.
+pub fn table3(opts: &FigOpts) -> Result<()> {
+    let rt = Runtime::open(&opts.artifacts)?;
+    let ds = dataset16(if opts.fast { 200 } else { 400 }, 3);
+    let feat = FeatureNet::new(256, 0xF1D);
+    let mut csv = Csv::new(&["fid", "empirical_j_per_sample", "theoretical_j_per_sample"]);
+    println!("{:>9} {:>22} {:>24}", "pfid", "empirical J/sample", "theoretical J/sample");
+    // Three rows: increasing training budgets (quality improves; efficiency
+    // is architecture-bound, matching the paper's fixed-model rows).
+    let budgets = if opts.fast { vec![40, 120] } else { vec![60, 200, 500] };
+    for steps in budgets {
+        let (pfid, e_theory) =
+            run_gpu_baseline(&rt, "vae", &ds.images, steps, 128, &feat, opts.seed)?;
+        // Simulated-empirical: measured XLA FLOPs at a realistic achieved
+        // utilization (App. F: empirical lands 2-4x above theoretical).
+        let bl = GpuBaseline::load(&rt, "vae", opts.seed)?;
+        let e_emp = gpu_energy::empirical_energy_per_sample(
+            bl.entry.sample_flops,
+            0.35,
+        );
+        csv.row_f64(&[pfid, e_emp, e_theory]);
+        println!("{pfid:>9.3} {e_emp:>22.3e} {e_theory:>24.3e}");
+    }
+    csv.save(opts.path("table3.csv"))?;
+    println!("(paper: empirical within ~3x of theoretical)");
+    Ok(())
+}
+
+/// Fig. 6: hybrid HTDML — binary-latent DTM + small decoder vs a pure GAN.
+pub fn fig6(opts: &FigOpts) -> Result<()> {
+    let rt = Runtime::open(&opts.artifacts)?;
+    let mut hy = HybridDriver::load(&rt, opts.seed)?;
+    let side = 16usize;
+    let n_data = if opts.fast { 192 } else { 384 };
+    let ds = cifar_like_dataset(side, n_data, 5);
+    let dim = ds.dim;
+    let b = hy.entry.batch;
+    let mut rng = Rng::new(opts.seed + 41);
+
+    // 1) Train the binarizing autoencoder.
+    let ae_steps = if opts.fast { 80 } else { 300 };
+    let mut last_loss = f32::NAN;
+    for _ in 0..ae_steps {
+        let batch = Tensor::new(vec![b, dim], ds.batch(b, &mut rng));
+        last_loss = hy.ae_train_step(&batch)?;
+    }
+    println!("AE trained ({ae_steps} steps, final loss {last_loss:.4})");
+
+    // 2) Encode the dataset into the binary latent space and train a DTM.
+    let mut latents = Vec::with_capacity(ds.n * hy.entry.latent);
+    let mut row = 0;
+    while row < ds.n {
+        let take = b.min(ds.n - row);
+        let mut chunk = Vec::with_capacity(b * dim);
+        for r in 0..b {
+            let rr = (row + r.min(take - 1)).min(ds.n - 1);
+            chunk.extend_from_slice(ds.image(rr));
+        }
+        let z = hy.encode(&Tensor::new(vec![b, dim], chunk))?;
+        latents.extend_from_slice(&z.data[..take * hy.entry.latent]);
+        row += take;
+    }
+    let ltop = topo(16, "G8", hy.entry.latent, 7)?;
+    let epochs = if opts.fast { 4 } else { 10 };
+    let mut tr = quick_train(opts, &ltop, 4, epochs, true, 0.0, 30, false, &latents, 0)?;
+    println!("latent DTM trained (T=4, {} latents)", hy.entry.latent);
+
+    // 3) GAN fine-tune of the decoder on DTM latents.
+    let ft_steps = if opts.fast { 30 } else { 120 };
+    for _ in 0..ft_steps {
+        let z = crate::coordinator::pipeline::generate_images(
+            &mut tr.sampler,
+            &tr.dtm,
+            40,
+            b,
+            &mut rng,
+        )?;
+        let data = Tensor::new(vec![b, dim], ds.batch(b, &mut rng));
+        hy.decoder_ft_step(&Tensor::new(vec![b, hy.entry.latent], z), &data)?;
+    }
+
+    // 4) Evaluate the hybrid: DTM latents -> decoder -> images.
+    let n_eval = if opts.fast { 96 } else { 192 };
+    let feat = FeatureNet::new(dim, 0xC1FA);
+    let mut fake = Vec::with_capacity(n_eval * dim);
+    while fake.len() < n_eval * dim {
+        let z = crate::coordinator::pipeline::generate_images(
+            &mut tr.sampler,
+            &tr.dtm,
+            40,
+            b,
+            &mut rng,
+        )?;
+        let imgs = hy.decode(&Tensor::new(vec![b, hy.entry.latent], z))?;
+        fake.extend_from_slice(&imgs.data);
+    }
+    fake.truncate(n_eval * dim);
+    let hybrid_pfid = metrics::pfid(&feat, &ds.images, ds.n, &fake, n_eval)?;
+
+    // 5) Pure-GAN comparison at 768 dims.
+    let gan_row = match run_gpu_baseline(
+        &rt,
+        "gan768",
+        &ds.images,
+        if opts.fast { 120 } else { 500 },
+        n_eval,
+        &feat,
+        opts.seed,
+    ) {
+        Ok((pfid, _)) => Some(pfid),
+        Err(e) => {
+            println!("(gan768 baseline unavailable: {e:#})");
+            None
+        }
+    };
+
+    let mut csv = Csv::new(&["model", "inference_nn_params", "dtm_params", "pfid"]);
+    csv.row(&[
+        "hybrid_dtm".into(),
+        hy.inference_nn_params().to_string(),
+        tr.dtm.n_params().to_string(),
+        format!("{hybrid_pfid:.4}"),
+    ]);
+    println!(
+        "hybrid: decoder params {} + DTM params {} -> pfid {hybrid_pfid:.3}",
+        hy.inference_nn_params(),
+        tr.dtm.n_params()
+    );
+    if let Some(gp) = gan_row {
+        let gan_params = rt.baseline("gan768").map(|e| e.n_gen_params).unwrap_or(0);
+        csv.row(&[
+            "pure_gan".into(),
+            gan_params.to_string(),
+            "0".into(),
+            format!("{gp:.4}"),
+        ]);
+        println!("pure GAN: generator params {gan_params} -> pfid {gp:.3}");
+        println!(
+            "NN-parameter ratio at inference: {:.1}x (paper: ~10x)",
+            gan_params as f64 / hy.inference_nn_params().max(1) as f64
+        );
+    }
+    csv.save(opts.path("fig6.csv"))?;
+    Ok(())
+}

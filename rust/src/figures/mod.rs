@@ -1,0 +1,77 @@
+//! Figure/table reproduction harness: `repro figures <id>` regenerates the
+//! series behind every figure and table of the paper's evaluation, writing
+//! `results/<id>.csv` and printing the rows. See DESIGN.md's per-experiment
+//! index for the mapping.
+
+pub mod circuits;
+pub mod energyfigs;
+pub mod frontier;
+pub mod training;
+
+use anyhow::{bail, Result};
+
+use crate::util::cli::Args;
+
+/// Shared harness options.
+#[derive(Clone, Debug)]
+pub struct FigOpts {
+    pub out_dir: String,
+    /// Reduced workloads for CI / smoke runs.
+    pub fast: bool,
+    pub artifacts: String,
+    pub seed: u64,
+}
+
+impl FigOpts {
+    pub fn from_args(args: &Args) -> Result<FigOpts> {
+        Ok(FigOpts {
+            out_dir: args.str_opt("out", "results"),
+            fast: args.bool_flag("fast"),
+            artifacts: args.str_opt("artifacts", "artifacts"),
+            seed: args.usize_opt("seed", 0)? as u64,
+        })
+    }
+
+    pub fn path(&self, name: &str) -> std::path::PathBuf {
+        std::path::Path::new(&self.out_dir).join(name)
+    }
+}
+
+pub const ALL_FIGURES: &[&str] = &[
+    "fig1", "fig2b", "fig4a", "fig4b", "fig4c", "fig5a", "fig5b", "fig5c",
+    "fig6", "fig7", "fig11", "fig12a", "fig12b", "fig13", "fig14", "fig16",
+    "fig17", "fig18", "table3",
+];
+
+/// Dispatch one figure id (or "all").
+pub fn run(id: &str, opts: &FigOpts) -> Result<()> {
+    match id {
+        "all" => {
+            for f in ALL_FIGURES {
+                println!("\n########## {f} ##########");
+                run(f, opts)?;
+            }
+            Ok(())
+        }
+        "fig1" => frontier::fig1(opts),
+        "fig2b" => frontier::fig2b(opts),
+        "fig4a" => circuits::fig4a(opts),
+        "fig4b" => circuits::fig4b(opts),
+        "fig4c" => circuits::fig4c(opts),
+        "fig5a" => training::fig5a(opts),
+        "fig5b" => training::fig5b(opts),
+        "fig5c" => training::fig5c(opts),
+        "fig6" => frontier::fig6(opts),
+        "fig7" => energyfigs::fig7(opts),
+        "fig11" => energyfigs::fig11(opts),
+        "fig12a" => training::fig12a(opts),
+        "fig12b" => energyfigs::fig12b(opts),
+        "fig13" => training::fig13(opts),
+        "fig14" => training::fig14(opts),
+        "fig16" => training::fig16(opts),
+        "fig17" => training::fig17(opts),
+        "fig18" => training::fig18(opts),
+        "table3" => frontier::table3(opts),
+        other => bail!("unknown figure id {other:?}; known: {:?} or 'all'", ALL_FIGURES),
+    }
+}

@@ -1,0 +1,402 @@
+//! Training-dynamics figures: 5a/5b/5c, 12a, 13, 14, 16, 17, 18.
+//!
+//! These run at CPU scale (16x16 synthetic fashion data, L=24..40 grids)
+//! with the pure-Rust sampler so they are artifact-independent; the HLO hot
+//! path is exercised by fig1, the examples and the integration tests.
+
+use anyhow::Result;
+
+use crate::baselines::mebm;
+use crate::data::{fashion_dataset, Dataset, FashionConfig};
+use crate::graph::{self, Topology};
+use crate::metrics;
+use crate::model::Dtm;
+use crate::train::acp::AcpParams;
+use crate::train::sampler::RustSampler;
+use crate::train::trainer::{TrainConfig, Trainer};
+use crate::util::csv::Csv;
+use crate::util::rng::Rng;
+
+use super::FigOpts;
+
+pub fn dataset16(n: usize, seed: u64) -> Dataset {
+    fashion_dataset(&FashionConfig::default(), n, seed)
+}
+
+pub fn topo(l: usize, pattern: &str, n_data: usize, seed: u64) -> Result<Topology> {
+    graph::build(&format!("fig_{l}_{pattern}"), l, pattern, n_data, seed)
+}
+
+/// Train a DTM (or MEBM when t_steps = 1 and mebm = true) quickly.
+#[allow(clippy::too_many_arguments)]
+pub fn quick_train(
+    opts: &FigOpts,
+    top: &Topology,
+    t_steps: usize,
+    epochs: usize,
+    acp: bool,
+    fixed_lambda: f64,
+    k_train: usize,
+    mebm_mode: bool,
+    data: &[f32],
+    eval_every: usize,
+) -> Result<Trainer<RustSampler>> {
+    let dtm = if mebm_mode {
+        Dtm::init_mebm(&top.name, top, opts.seed + 11)
+    } else {
+        Dtm::init(&top.name, top, t_steps, 3.0, opts.seed + 11)
+    };
+    let cfg = TrainConfig {
+        epochs,
+        batches_per_epoch: if opts.fast { 2 } else { 4 },
+        k_train,
+        burn: k_train / 3,
+        // MEBMs get a hotter optimizer so the mixing-expressivity tradeoff
+        // develops within the figure budget (App. L trains to convergence).
+        lr: if mebm_mode { 0.05 } else { 0.02 },
+        acp: if acp { Some(AcpParams::default()) } else { None },
+        fixed_lambda,
+        eval_every,
+        eval_samples: if opts.fast { 96 } else { 160 },
+        k_eval: 2 * k_train,
+        seed: opts.seed + 77,
+    };
+    let sampler = RustSampler::new(top.clone(), 32, opts.seed + 5);
+    let mut tr = Trainer::new(sampler, dtm, cfg, data.to_vec())?;
+    tr.run(data)?;
+    Ok(tr)
+}
+
+/// Fig. 5(a): sample evolution through the reverse chain (ASCII render).
+pub fn fig5a(opts: &FigOpts) -> Result<()> {
+    let ds = dataset16(if opts.fast { 200 } else { 400 }, 3);
+    let top = topo(24, "G12", 256, 7)?;
+    let epochs = if opts.fast { 4 } else { 12 };
+    let mut tr = quick_train(opts, &top, 4, epochs, true, 0.0, 30, false, &ds.images, 0)?;
+    let mut rng = Rng::new(opts.seed + 2);
+    let traj = crate::coordinator::pipeline::generate_trajectory(
+        &mut tr.sampler,
+        &tr.dtm,
+        60,
+        &mut rng,
+    )?;
+    let mut csv = Csv::new(&["stage", "pixel", "value"]);
+    for (stage, xs) in traj.iter().enumerate() {
+        for (px, &v) in xs[..256].iter().enumerate() {
+            csv.row_f64(&[stage as f64, px as f64, v as f64]);
+        }
+    }
+    csv.save(opts.path("fig5a.csv"))?;
+    // ASCII render of the first chain, noise -> image.
+    for (stage, xs) in traj.iter().enumerate() {
+        println!("t = {} {}", traj.len() - 1 - stage, if stage == 0 { "(noise)" } else { "" });
+        for row in 0..16 {
+            let line: String = (0..16)
+                .map(|c| if xs[row * 16 + c] > 0.0 { '#' } else { '.' })
+                .collect();
+            println!("  {line}");
+        }
+    }
+    Ok(())
+}
+
+/// Fig. 5(b): training stability — MEBM vs DTM vs DTM+ACP.
+pub fn fig5b(opts: &FigOpts) -> Result<()> {
+    let ds = dataset16(if opts.fast { 200 } else { 400 }, 3);
+    let epochs = if opts.fast { 6 } else { 16 };
+    let top = topo(24, "G12", 256, 7)?;
+    let runs: [(&str, usize, bool, bool); 3] = [
+        ("mebm", 1, false, true),
+        ("dtm", 4, false, false),
+        ("dtm_acp", 4, true, false),
+    ];
+    let mut csv = Csv::new(&["run", "epoch", "pfid", "max_ryy", "max_lambda"]);
+    for (name, t, acp, mebm_mode) in runs {
+        let tr = quick_train(opts, &top, t, epochs, acp, 0.0, 30, mebm_mode, &ds.images, 2)?;
+        for rec in &tr.log {
+            let max_ryy = rec.ryy.iter().cloned().fold(0.0, f64::max);
+            let max_l = rec.lambdas.iter().cloned().fold(0.0, f64::max);
+            csv.row(&[
+                name.to_string(),
+                rec.epoch.to_string(),
+                rec.pfid.map(|x| format!("{x:.4}")).unwrap_or_default(),
+                format!("{max_ryy:.4}"),
+                format!("{max_l:.5}"),
+            ]);
+        }
+        let last = tr.final_pfid().unwrap_or(f64::NAN);
+        let worst_ryy = tr
+            .log
+            .iter()
+            .map(|r| r.ryy.iter().cloned().fold(0.0, f64::max))
+            .fold(0.0, f64::max);
+        println!("{name:<8} final pfid {last:>8.3}  worst r_yy[K] {worst_ryy:.3}");
+    }
+    csv.save(opts.path("fig5b.csv"))?;
+    println!("(paper: ACP keeps r_yy small and quality improving monotonically)");
+    Ok(())
+}
+
+/// Fig. 5(c): scaling EBM width / connectivity / K_train.
+pub fn fig5c(opts: &FigOpts) -> Result<()> {
+    let ds = dataset16(if opts.fast { 200 } else { 400 }, 3);
+    let epochs = if opts.fast { 3 } else { 8 };
+    let mut csv = Csv::new(&["sweep", "pattern", "grid", "k_train", "pfid"]);
+    // Top plot: latent count (grid width) x connectivity at fixed K.
+    let widths: &[usize] = if opts.fast { &[24, 32] } else { &[24, 32, 40] };
+    for pattern in ["G8", "G16"] {
+        for &l in widths {
+            let top = topo(l, pattern, 256, 7)?;
+            let tr = quick_train(opts, &top, 2, epochs, true, 0.0, 30, false, &ds.images, 0)?;
+            let mut t2 = tr;
+            let pfid = t2.eval_pfid(if opts.fast { 96 } else { 160 })?;
+            csv.row(&[
+                "width_conn".into(),
+                pattern.into(),
+                l.to_string(),
+                "30".into(),
+                format!("{pfid:.4}"),
+            ]);
+            println!("width/conn: {pattern} L={l:<3} pfid {pfid:.3}");
+        }
+    }
+    // Bottom plot: width x K_train.
+    let ks: &[usize] = if opts.fast { &[15, 40] } else { &[15, 40, 80] };
+    for &l in if opts.fast { &[24usize, 32][..] } else { &[24usize, 40][..] } {
+        for &k in ks {
+            let top = topo(l, "G12", 256, 7)?;
+            let tr = quick_train(opts, &top, 2, epochs, true, 0.0, k, false, &ds.images, 0)?;
+            let mut t2 = tr;
+            let pfid = t2.eval_pfid(if opts.fast { 96 } else { 160 })?;
+            csv.row(&[
+                "width_k".into(),
+                "G12".into(),
+                l.to_string(),
+                k.to_string(),
+                format!("{pfid:.4}"),
+            ]);
+            println!("width/K: L={l:<3} K={k:<3} pfid {pfid:.3}");
+        }
+    }
+    csv.save(opts.path("fig5c.csv"))?;
+    Ok(())
+}
+
+/// Fig. 12(a): per-layer autocorrelation of a trained DTM.
+pub fn fig12a(opts: &FigOpts) -> Result<()> {
+    let ds = dataset16(if opts.fast { 200 } else { 400 }, 3);
+    let top = topo(24, "G12", 256, 7)?;
+    let epochs = if opts.fast { 4 } else { 10 };
+    let mut tr = quick_train(opts, &top, 4, epochs, true, 0.0, 30, false, &ds.images, 0)?;
+    let mut rng = Rng::new(opts.seed + 9);
+    let b = 32;
+    let window = if opts.fast { 150 } else { 300 };
+    let mut csv = Csv::new(&["layer", "lag", "r_yy"]);
+    // Condition each layer on a noised data batch, like inference does.
+    let x0 = ds.batch(b, &mut rng);
+    let t_steps = tr.dtm.t_steps();
+    for t in 0..t_steps {
+        // Noise x0 to level t+1.
+        let mut xt = x0.clone();
+        for step in 0..=t {
+            let mut next = Vec::with_capacity(xt.len());
+            for row in 0..b {
+                next.extend(tr.dtm.forward.noise_step(step, &xt[row * 256..(row + 1) * 256], &mut rng));
+            }
+            xt = next;
+        }
+        let gm = tr.dtm.gm_vec(&top, t);
+        let xt_full = crate::model::scatter_data(&top, &xt, b);
+        let params = tr.dtm.layers[t].clone();
+        let series = crate::train::sampler::LayerSampler::trace(
+            &mut tr.sampler,
+            &params,
+            &gm,
+            tr.dtm.beta,
+            &xt_full,
+            window,
+        )?;
+        let tail: Vec<Vec<f64>> = series.iter().map(|c| c[window / 5..].to_vec()).collect();
+        let r = metrics::autocorrelation(&tail, window / 3);
+        for (lag, &rv) in r.iter().enumerate() {
+            csv.row_f64(&[t as f64, lag as f64, rv]);
+        }
+        let tau = metrics::mixing_time_fit(&r, 2, window / 3, 1e-3).or_else(|| {
+            r.iter()
+                .position(|&x| x < std::f64::consts::E.recip())
+                .map(|k| k.max(1) as f64)
+        });
+        println!(
+            "layer {t}: tau ≈ {} iterations",
+            tau.map(|x| format!("{x:.1}")).unwrap_or_else(|| "n/a".into())
+        );
+    }
+    csv.save(opts.path("fig12a.csv"))?;
+    println!("(paper: all layers of a trained DTM mix in tens of iterations)");
+    Ok(())
+}
+
+/// Fig. 13: sample quality vs K_inference (saturation).
+pub fn fig13(opts: &FigOpts) -> Result<()> {
+    let ds = dataset16(if opts.fast { 200 } else { 400 }, 3);
+    let top = topo(24, "G12", 256, 7)?;
+    let epochs = if opts.fast { 4 } else { 12 };
+    let mut tr = quick_train(opts, &top, 4, epochs, true, 0.0, 30, false, &ds.images, 0)?;
+    let feat = metrics::FeatureNet::new(256, 0xF1D);
+    let n_eval = if opts.fast { 96 } else { 192 };
+    let mut rng = Rng::new(opts.seed + 4);
+    let mut csv = Csv::new(&["k_inference", "pfid"]);
+    let ks: &[usize] = if opts.fast { &[5, 20, 60] } else { &[5, 10, 20, 40, 80, 160] };
+    for &k in ks {
+        let imgs = crate::coordinator::pipeline::generate_images(
+            &mut tr.sampler,
+            &tr.dtm,
+            k,
+            n_eval,
+            &mut rng,
+        )?;
+        let n_ref = ds.images.len() / 256;
+        let pfid = metrics::pfid(&feat, &ds.images, n_ref, &imgs, n_eval)?;
+        csv.row_f64(&[k as f64, pfid]);
+        println!("K = {k:<4} pfid {pfid:.3}");
+    }
+    csv.save(opts.path("fig13.csv"))?;
+    println!("(paper: quality saturates beyond K ≈ the layers' mixing time)");
+    Ok(())
+}
+
+/// Fig. 14: ACP dynamics — lambda_t and r_yy over training.
+pub fn fig14(opts: &FigOpts) -> Result<()> {
+    let ds = dataset16(if opts.fast { 200 } else { 400 }, 3);
+    let top = topo(24, "G12", 256, 7)?;
+    let epochs = if opts.fast { 8 } else { 20 };
+    let tr = quick_train(opts, &top, 2, epochs, true, 0.0, 30, false, &ds.images, 0)?;
+    let mut csv = Csv::new(&["epoch", "layer", "ryy", "lambda"]);
+    for rec in &tr.log {
+        for (t, (&a, &l)) in rec.ryy.iter().zip(&rec.lambdas).enumerate() {
+            csv.row_f64(&[rec.epoch as f64, t as f64, a, l]);
+        }
+    }
+    csv.save(opts.path("fig14.csv"))?;
+    for rec in tr.log.iter().step_by((epochs / 8).max(1)) {
+        println!(
+            "epoch {:>3}: ryy {:?} lambda {:?}",
+            rec.epoch,
+            rec.ryy.iter().map(|x| (x * 1e3).round() / 1e3).collect::<Vec<_>>(),
+            rec.lambdas
+                .iter()
+                .map(|x| (x * 1e5).round() / 1e5)
+                .collect::<Vec<_>>()
+        );
+    }
+    Ok(())
+}
+
+/// Fig. 16: MEBM autocorrelation curves for a penalty-strength sweep.
+pub fn fig16(opts: &FigOpts) -> Result<()> {
+    let ds = dataset16(if opts.fast { 200 } else { 400 }, 3);
+    let top = topo(16, "G8", 144, 7)?;
+    let epochs = if opts.fast { 4 } else { 24 };
+    let lambdas: &[f64] = if opts.fast {
+        &[0.1, 0.01]
+    } else {
+        &[0.1, 0.03, 0.01, 0.003, 0.001]
+    };
+    // 12x12 crops of the dataset for the smaller machine.
+    let data = crop_dataset(&ds, 12);
+    let window = if opts.fast { 300 } else { 600 };
+    let mut csv = Csv::new(&["lambda", "lag", "r_yy"]);
+    for &l in lambdas {
+        let mut tr = quick_train(opts, &top, 1, epochs, false, l, 30, true, &data, 0)?;
+        let rep = mebm::mebm_mixing(&mut tr.sampler, &tr.dtm, window)?;
+        for (lag, &rv) in rep.autocorr.iter().enumerate().step_by(2) {
+            csv.row_f64(&[l, lag as f64, rv]);
+        }
+        println!(
+            "lambda {l:<7}: tau = {}",
+            rep.tau_iters
+                .map(|t| format!("{t:.1} iters"))
+                .unwrap_or_else(|| "too slow to measure".into())
+        );
+    }
+    csv.save(opts.path("fig16.csv"))?;
+    println!("(paper: weaker penalties => slower decay; weakest never decays in-window)");
+    Ok(())
+}
+
+/// Fig. 17: pfid heatmap over (T denoising steps, K_train).
+pub fn fig17(opts: &FigOpts) -> Result<()> {
+    let ds = dataset16(if opts.fast { 200 } else { 400 }, 3);
+    let top = topo(24, "G12", 256, 7)?;
+    let epochs = if opts.fast { 3 } else { 6 };
+    let ts: &[usize] = if opts.fast { &[2, 4] } else { &[2, 4, 8] };
+    let ks: &[usize] = if opts.fast { &[10, 30] } else { &[10, 30, 90] };
+    let mut csv = Csv::new(&["t_steps", "k_train", "pfid", "energy_iters"]);
+    for &t in ts {
+        for &k in ks {
+            let mut tr = quick_train(opts, &top, t, epochs, true, 0.0, k, false, &ds.images, 0)?;
+            let pfid = tr.eval_pfid(if opts.fast { 96 } else { 160 })?;
+            // Constant-energy diagonals: T * K_inference (K_inf = 2 K_train).
+            csv.row_f64(&[t as f64, k as f64, pfid, (t * 2 * k) as f64]);
+            println!("T={t} K_train={k:<3} pfid {pfid:.3} (TK = {})", t * 2 * k);
+        }
+    }
+    csv.save(opts.path("fig17.csv"))?;
+    Ok(())
+}
+
+/// Fig. 18: un-penalized MEBM over training — quality vs mixing time.
+pub fn fig18(opts: &FigOpts) -> Result<()> {
+    let ds = dataset16(if opts.fast { 200 } else { 400 }, 3);
+    let top = topo(16, "G8", 144, 7)?;
+    let data = crop_dataset(&ds, 12);
+    let epochs = if opts.fast { 8 } else { 24 };
+    let window = if opts.fast { 200 } else { 400 };
+    // Manual epoch loop so we can measure mixing along the way.
+    let dtm = Dtm::init_mebm("fig18", &top, opts.seed + 11);
+    let cfg = TrainConfig {
+        epochs: 1,
+        batches_per_epoch: if opts.fast { 2 } else { 4 },
+        k_train: 30,
+        burn: 10,
+        lr: 0.03,
+        acp: None,
+        fixed_lambda: 0.0,
+        eval_every: 0,
+        eval_samples: 96,
+        k_eval: 60,
+        seed: opts.seed + 77,
+    };
+    let sampler = RustSampler::new(top.clone(), 32, opts.seed + 5);
+    let mut tr = Trainer::new(sampler, dtm, cfg, data.to_vec())?;
+    let mut csv = Csv::new(&["epoch", "pfid", "tau_iters"]);
+    for epoch in 0..epochs {
+        tr.run(&data)?; // one epoch per call (cfg.epochs = 1)
+        if epoch % 2 == 1 {
+            let pfid = tr.eval_pfid(96)?;
+            let rep = mebm::mebm_mixing(&mut tr.sampler, &tr.dtm, window)?;
+            let tau = rep.tau_iters.unwrap_or(window as f64);
+            csv.row_f64(&[epoch as f64, pfid, tau]);
+            println!("epoch {epoch:>3}: pfid {pfid:.3}, tau {tau:.1}");
+        }
+    }
+    csv.save(opts.path("fig18.csv"))?;
+    println!("(paper: mixing time grows as the MEBM gets expressive; quality eventually degrades)");
+    Ok(())
+}
+
+/// Center-crop every image of a 16x16 dataset to side x side.
+fn crop_dataset(ds: &Dataset, side: usize) -> Vec<f32> {
+    let full = 16usize;
+    let off = (full - side) / 2;
+    let mut out = Vec::with_capacity(ds.n * side * side);
+    for i in 0..ds.n {
+        let img = ds.image(i);
+        for r in 0..side {
+            for c in 0..side {
+                out.push(img[(r + off) * full + c + off]);
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,356 @@
+//! Pure-Rust chromatic Gibbs sampler for sparse Boltzmann machines.
+//!
+//! Mirrors the semantics of the L1 Pallas kernel / L2 layer programs exactly
+//! (same fields, same clamp rules, same two-phase color schedule) but runs
+//! without PJRT. Uses:
+//!  * validation — integration tests cross-check HLO executables against this
+//!    sampler on identical topologies;
+//!  * a CPU fallback so every substrate (MEBM sweeps, figure harness at
+//!    arbitrary graph sizes) works even with no artifacts present;
+//!  * the `bench_gibbs` comparison baseline for the hot path.
+
+use crate::graph::Topology;
+use crate::util::rng::Rng;
+
+/// A Boltzmann machine bound to a topology: per-slot weights, biases, and the
+/// forward-process coupling (paper Eq. 10 / Eq. D1).
+#[derive(Clone, Debug)]
+pub struct Machine {
+    pub w_slots: Vec<f32>, // [N * D], padding slots 0
+    pub h: Vec<f32>,       // [N]
+    pub gm: Vec<f32>,      // [N], Gamma/(2 beta) on data nodes, 0 on latents
+    pub beta: f32,
+}
+
+impl Machine {
+    pub fn new(top: &Topology, w_edges: &[f32], h: Vec<f32>, gm: Vec<f32>, beta: f32) -> Machine {
+        Machine {
+            w_slots: top.expand_edge_weights(w_edges),
+            h,
+            gm,
+            beta,
+        }
+    }
+
+    pub fn zeros(top: &Topology) -> Machine {
+        Machine {
+            w_slots: vec![0.0; top.n_nodes() * top.degree],
+            h: vec![0.0; top.n_nodes()],
+            gm: vec![0.0; top.n_nodes()],
+            beta: 1.0,
+        }
+    }
+}
+
+/// A batch of `b` independent chains over `n` nodes, stored row-major [B, N].
+#[derive(Clone, Debug)]
+pub struct Chains {
+    pub b: usize,
+    pub n: usize,
+    pub s: Vec<f32>,
+}
+
+impl Chains {
+    pub fn random(b: usize, n: usize, rng: &mut Rng) -> Chains {
+        Chains {
+            b,
+            n,
+            s: (0..b * n).map(|_| rng.spin()).collect(),
+        }
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.s[i * self.n..(i + 1) * self.n]
+    }
+
+    /// Impose clamp values where cmask=1 (same contract as the L2 program).
+    pub fn impose_clamps(&mut self, cmask: &[f32], cval: &[f32]) {
+        for bi in 0..self.b {
+            for i in 0..self.n {
+                if cmask[i] > 0.5 {
+                    self.s[bi * self.n + i] = cval[bi * self.n + i];
+                }
+            }
+        }
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    // §Perf iteration 1 (EXPERIMENTS.md): a polynomial fast-exp was tried
+    // here and REVERTED — it measured ~13% slower than libm expf on this
+    // target (the clamp/floor/bit-cast overhead exceeds libm's cost).
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Local field at node `i` of chain row `s` (paper Eq. 11 argument / 2beta).
+#[inline]
+pub fn local_field(top: &Topology, m: &Machine, s: &[f32], xt: &[f32], i: usize) -> f32 {
+    let d = top.degree;
+    let base = i * d;
+    let mut f = m.h[i] + m.gm[i] * xt[i];
+    for k in 0..d {
+        // Padding slots have weight 0, so no branch is needed.
+        f += m.w_slots[base + k] * s[top.idx[base + k] as usize];
+    }
+    f
+}
+
+/// One chromatic half-sweep: update every unclamped node of color `c`.
+pub fn halfsweep(
+    top: &Topology,
+    m: &Machine,
+    chains: &mut Chains,
+    xt: &[f32],
+    cmask: &[f32],
+    color: u8,
+    rng: &mut Rng,
+) {
+    let n = chains.n;
+    for bi in 0..chains.b {
+        let (xt_row, row_start) = (&xt[bi * n..(bi + 1) * n], bi * n);
+        for i in 0..n {
+            if top.color[i] != color || cmask[i] > 0.5 {
+                continue;
+            }
+            let f = {
+                let row = &chains.s[row_start..row_start + n];
+                local_field(top, m, row, xt_row, i)
+            };
+            let p = sigmoid(2.0 * m.beta * f);
+            chains.s[row_start + i] = if rng.uniform_f32() < p { 1.0 } else { -1.0 };
+        }
+    }
+}
+
+/// One full Gibbs iteration (color 0 then color 1) — the unit the paper
+/// counts as K (2 tau_0 of wall-clock on the DTCA).
+pub fn sweep(
+    top: &Topology,
+    m: &Machine,
+    chains: &mut Chains,
+    xt: &[f32],
+    cmask: &[f32],
+    rng: &mut Rng,
+) {
+    halfsweep(top, m, chains, xt, cmask, 0, rng);
+    halfsweep(top, m, chains, xt, cmask, 1, rng);
+}
+
+/// Sufficient statistics accumulated over sweeps (matches the L2 `stats`
+/// program): per-slot pair means, per-chain node means.
+#[derive(Clone, Debug)]
+pub struct SweepStats {
+    pub pair: Vec<f64>,   // [N * D]
+    pub mean_b: Vec<f64>, // [B * N]
+    pub count: usize,
+}
+
+impl SweepStats {
+    pub fn new(b: usize, n: usize, d: usize) -> SweepStats {
+        SweepStats {
+            pair: vec![0.0; n * d],
+            mean_b: vec![0.0; b * n],
+            count: 0,
+        }
+    }
+
+    pub fn accumulate(&mut self, top: &Topology, chains: &Chains) {
+        let (n, d) = (chains.n, top.degree);
+        for bi in 0..chains.b {
+            let row = chains.row(bi);
+            for i in 0..n {
+                self.mean_b[bi * n + i] += row[i] as f64;
+                for k in 0..d {
+                    // Padding slots carry no edge; keep them exactly zero
+                    // (matching the HLO path, which never reads them).
+                    if !top.pad[i * d + k] {
+                        self.pair[i * d + k] +=
+                            (row[i] * row[top.idx[i * d + k] as usize]) as f64 / chains.b as f64;
+                    }
+                }
+            }
+        }
+        self.count += 1;
+    }
+
+    /// Normalized pair means [N*D].
+    pub fn pair_mean(&self) -> Vec<f64> {
+        let c = self.count.max(1) as f64;
+        self.pair.iter().map(|x| x / c).collect()
+    }
+
+    /// Normalized per-chain node means [B*N].
+    pub fn node_mean_b(&self) -> Vec<f64> {
+        let c = self.count.max(1) as f64;
+        self.mean_b.iter().map(|x| x / c).collect()
+    }
+}
+
+/// Run `k` sweeps collecting stats after `burn` sweeps.
+#[allow(clippy::too_many_arguments)]
+pub fn run_stats(
+    top: &Topology,
+    m: &Machine,
+    chains: &mut Chains,
+    xt: &[f32],
+    cmask: &[f32],
+    k: usize,
+    burn: usize,
+    rng: &mut Rng,
+) -> SweepStats {
+    let mut st = SweepStats::new(chains.b, chains.n, top.degree);
+    for it in 0..k {
+        sweep(top, m, chains, xt, cmask, rng);
+        if it >= burn {
+            st.accumulate(top, chains);
+        }
+    }
+    st
+}
+
+/// Exact node marginals by enumerating all 2^N states (N <= 20); the test
+/// oracle shared with `python/compile/model.exact_marginals`.
+pub fn exact_marginals(top: &Topology, m: &Machine, xt: &[f32]) -> Vec<f64> {
+    let n = top.n_nodes();
+    assert!(n <= 20, "enumeration limited to N<=20");
+    let d = top.degree;
+    let mut marg = vec![0.0f64; n];
+    let mut z = 0.0f64;
+    let mut logps = Vec::with_capacity(1 << n);
+    let mut states: Vec<Vec<f32>> = Vec::with_capacity(1 << n);
+    let mut max_logp = f64::NEG_INFINITY;
+    for mask in 0u32..(1u32 << n) {
+        let s: Vec<f32> = (0..n)
+            .map(|i| if mask >> i & 1 == 1 { 1.0 } else { -1.0 })
+            .collect();
+        let mut pair = 0.0f64;
+        let mut field = 0.0f64;
+        for i in 0..n {
+            field += ((m.h[i] + m.gm[i] * xt[i]) * s[i]) as f64;
+            for kk in 0..d {
+                pair += (m.w_slots[i * d + kk] * s[i] * s[top.idx[i * d + kk] as usize]) as f64;
+            }
+        }
+        let logp = m.beta as f64 * (0.5 * pair + field);
+        max_logp = max_logp.max(logp);
+        logps.push(logp);
+        states.push(s);
+    }
+    for (logp, s) in logps.iter().zip(&states) {
+        let p = (logp - max_logp).exp();
+        z += p;
+        for i in 0..n {
+            marg[i] += p * s[i] as f64;
+        }
+    }
+    marg.iter().map(|x| x / z).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph;
+
+    fn setup(seed: u64) -> (Topology, Machine, Rng) {
+        let top = graph::build("t", 4, "G8", 8, 2).unwrap();
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> = (0..top.n_edges()).map(|_| 0.25 * rng.normal() as f32).collect();
+        let h: Vec<f32> = (0..top.n_nodes()).map(|_| 0.2 * rng.normal() as f32).collect();
+        let gm: Vec<f32> = top.data_mask().iter().map(|&x| 0.5 * x).collect();
+        let m = Machine::new(&top, &w, h, gm, 1.0);
+        (top, m, rng)
+    }
+
+    #[test]
+    fn clamped_nodes_never_move() {
+        let (top, m, mut rng) = setup(0);
+        let n = top.n_nodes();
+        let b = 4;
+        let mut chains = Chains::random(b, n, &mut rng);
+        let cmask = top.data_mask();
+        let cval: Vec<f32> = (0..b * n).map(|_| rng.spin()).collect();
+        chains.impose_clamps(&cmask, &cval);
+        let xt = vec![0.0f32; b * n];
+        for _ in 0..10 {
+            sweep(&top, &m, &mut chains, &xt, &cmask, &mut rng);
+        }
+        for bi in 0..b {
+            for i in 0..n {
+                if cmask[i] > 0.5 {
+                    assert_eq!(chains.s[bi * n + i], cval[bi * n + i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spins_stay_pm_one() {
+        let (top, m, mut rng) = setup(1);
+        let mut chains = Chains::random(2, top.n_nodes(), &mut rng);
+        let xt = vec![0.0f32; 2 * top.n_nodes()];
+        let cmask = vec![0.0f32; top.n_nodes()];
+        for _ in 0..20 {
+            sweep(&top, &m, &mut chains, &xt, &cmask, &mut rng);
+        }
+        assert!(chains.s.iter().all(|&x| x == 1.0 || x == -1.0));
+    }
+
+    #[test]
+    fn converges_to_exact_marginals() {
+        let (top, m, mut rng) = setup(3);
+        let n = top.n_nodes();
+        let xt_row: Vec<f32> = top
+            .data_mask()
+            .iter()
+            .map(|&dm| if dm > 0.5 { rng.spin() } else { 0.0 })
+            .collect();
+        let exact = exact_marginals(&top, &m, &xt_row);
+
+        let b = 32;
+        let mut chains = Chains::random(b, n, &mut rng);
+        let xt: Vec<f32> = (0..b).flat_map(|_| xt_row.clone()).collect();
+        let cmask = vec![0.0f32; n];
+        let st = run_stats(&top, &m, &mut chains, &xt, &cmask, 300, 50, &mut rng);
+        let mb = st.node_mean_b();
+        for i in 0..n {
+            let emp: f64 = (0..b).map(|bi| mb[bi * n + i]).sum::<f64>() / b as f64;
+            assert!(
+                (emp - exact[i]).abs() < 0.08,
+                "node {i}: emp {emp:.3} vs exact {:.3}",
+                exact[i]
+            );
+        }
+    }
+
+    #[test]
+    fn strong_bias_freezes_spins() {
+        let top = graph::build("t", 4, "G8", 8, 2).unwrap();
+        let n = top.n_nodes();
+        let m = Machine {
+            w_slots: vec![0.0; n * top.degree],
+            h: vec![25.0; n],
+            gm: vec![0.0; n],
+            beta: 1.0,
+        };
+        let mut rng = Rng::new(9);
+        let mut chains = Chains::random(3, n, &mut rng);
+        let xt = vec![0.0f32; 3 * n];
+        let cmask = vec![0.0f32; n];
+        sweep(&top, &m, &mut chains, &xt, &cmask, &mut rng);
+        assert!(chains.s.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn stats_bounded() {
+        let (top, m, mut rng) = setup(5);
+        let n = top.n_nodes();
+        let mut chains = Chains::random(8, n, &mut rng);
+        let xt = vec![0.0f32; 8 * n];
+        let cmask = vec![0.0f32; n];
+        let st = run_stats(&top, &m, &mut chains, &xt, &cmask, 50, 10, &mut rng);
+        assert!(st.pair_mean().iter().all(|x| x.abs() <= 1.0 + 1e-9));
+        assert!(st.node_mean_b().iter().all(|x| x.abs() <= 1.0 + 1e-9));
+        assert_eq!(st.count, 40);
+    }
+}

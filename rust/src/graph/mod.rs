@@ -1,0 +1,384 @@
+//! Grid topologies for hardware Boltzmann machines (paper Table II, App. D).
+//!
+//! Mirrors `python/compile/topology.py` (the compile-time authority whose
+//! index tables are baked into the HLO artifacts). The Rust generator exists
+//! so the pure-Rust substrates (reference Gibbs sampler, MEBM experiments at
+//! arbitrary sizes, energy accounting at paper scale) do not require
+//! artifacts; an integration test checks structural agreement against the
+//! exported `artifacts/topology_*.json`.
+
+use anyhow::{bail, Result};
+
+use crate::util::json;
+
+/// Table II: connection rules per pattern. Rule (a, b) connects node (x, y)
+/// to (x+a, y+b), (x-b, y+a), (x-a, y-b), (x+b, y-a).
+pub const PATTERN_NAMES: [&str; 5] = ["G8", "G12", "G16", "G20", "G24"];
+
+pub fn pattern_rules(name: &str) -> Result<Vec<(i32, i32)>> {
+    Ok(match name {
+        "G8" => vec![(0, 1), (4, 1)],
+        "G12" => vec![(0, 1), (4, 1), (9, 10)],
+        "G16" => vec![(0, 1), (4, 1), (8, 7), (14, 9)],
+        "G20" => vec![(0, 1), (4, 1), (3, 6), (8, 7), (14, 9)],
+        "G24" => vec![(0, 1), (1, 2), (4, 1), (3, 6), (8, 7), (14, 9)],
+        _ => bail!("unknown pattern {name:?}"),
+    })
+}
+
+pub fn rule_offsets(rule: (i32, i32)) -> [(i32, i32); 4] {
+    let (a, b) = rule;
+    [(a, b), (-b, a), (-a, -b), (b, -a)]
+}
+
+/// A sparse bipartite grid Boltzmann machine layout with padded index tables.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub name: String,
+    pub grid: usize,
+    pub pattern: String,
+    pub n_data: usize,
+    /// [N * D] neighbor ids; padding slots hold 0 (their weight is 0).
+    pub idx: Vec<u32>,
+    /// [N * D] edge id per slot; padding slots hold `n_edges`.
+    pub slot_edge: Vec<u32>,
+    /// [N * D] true where the slot is padding.
+    pub pad: Vec<bool>,
+    /// [N] checkerboard color in {0, 1}.
+    pub color: Vec<u8>,
+    /// Sorted visible-node ids, |data_nodes| = n_data.
+    pub data_nodes: Vec<u32>,
+    /// [E][2] undirected edges with u < v.
+    pub edges: Vec<[u32; 2]>,
+    pub degree: usize,
+}
+
+impl Topology {
+    pub fn n_nodes(&self) -> usize {
+        self.grid * self.grid
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    #[inline]
+    pub fn slot(&self, node: usize, d: usize) -> usize {
+        node * self.degree + d
+    }
+
+    /// Per-node f32 mask: 1.0 on data nodes.
+    pub fn data_mask(&self) -> Vec<f32> {
+        let mut m = vec![0.0f32; self.n_nodes()];
+        for &i in &self.data_nodes {
+            m[i as usize] = 1.0;
+        }
+        m
+    }
+
+    /// Per-node f32 mask for one color class.
+    pub fn color_mask(&self, c: u8) -> Vec<f32> {
+        self.color.iter().map(|&x| if x == c { 1.0 } else { 0.0 }).collect()
+    }
+
+    /// Expand per-edge weights to the symmetric dense coupling matrix
+    /// [N * N] row-major (zero diagonal / non-edges) — the layout the AOT
+    /// layer programs consume. Matches `topology.dense_weights` in Python.
+    pub fn expand_edge_weights_dense(&self, w_edges: &[f32]) -> Vec<f32> {
+        assert_eq!(w_edges.len(), self.n_edges());
+        let n = self.n_nodes();
+        let mut w = vec![0.0f32; n * n];
+        for (e, &[u, v]) in self.edges.iter().enumerate() {
+            let (u, v) = (u as usize, v as usize);
+            w[u * n + v] = w_edges[e];
+            w[v * n + u] = w_edges[e];
+        }
+        w
+    }
+
+    /// Expand per-edge weights to the padded per-slot table [N * D].
+    /// Matches `topology.expand_edge_weights` on the Python side.
+    pub fn expand_edge_weights(&self, w_edges: &[f32]) -> Vec<f32> {
+        assert_eq!(w_edges.len(), self.n_edges());
+        self.slot_edge
+            .iter()
+            .map(|&e| {
+                if (e as usize) < w_edges.len() {
+                    w_edges[e as usize]
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    /// Verify structural invariants (used by tests and after JSON loads).
+    pub fn validate(&self) -> Result<()> {
+        let n = self.n_nodes();
+        let d = self.degree;
+        if self.idx.len() != n * d || self.pad.len() != n * d || self.color.len() != n {
+            bail!("table sizes inconsistent");
+        }
+        for e in &self.edges {
+            if e[0] >= e[1] || e[1] as usize >= n {
+                bail!("bad edge {e:?}");
+            }
+            if self.color[e[0] as usize] == self.color[e[1] as usize] {
+                bail!("edge {e:?} does not cross the coloring");
+            }
+        }
+        let non_pad = self.pad.iter().filter(|&&p| !p).count();
+        if non_pad != 2 * self.n_edges() {
+            bail!("slot/edge count mismatch: {} vs {}", non_pad, 2 * self.n_edges());
+        }
+        if self.data_nodes.len() != self.n_data {
+            bail!("data node count mismatch");
+        }
+        Ok(())
+    }
+}
+
+/// Build a topology with the same structure as the Python generator.
+///
+/// Note: the *role assignment* (which nodes are data) is a seeded random
+/// choice made by Python at compile time; when running against artifacts the
+/// Rust side always loads roles from `topology_<cfg>.json`. This builder
+/// assigns the first `n_data` node ids of a deterministic permutation driven
+/// by our own PRNG — structurally valid, but only equal to the Python roles
+/// when loaded from JSON.
+pub fn build(name: &str, grid: usize, pattern: &str, n_data: usize, seed: u64) -> Result<Topology> {
+    let rules = pattern_rules(pattern)?;
+    let l = grid as i32;
+    let n = grid * grid;
+    if n_data == 0 || n_data > n {
+        bail!("n_data out of range");
+    }
+    let degree = 4 * rules.len();
+
+    let mut nbrs: Vec<Vec<u32>> = vec![Vec::with_capacity(degree); n];
+    for y in 0..l {
+        for x in 0..l {
+            let u = (y * l + x) as usize;
+            for &rule in &rules {
+                for (dx, dy) in rule_offsets(rule) {
+                    let (xx, yy) = (x + dx, y + dy);
+                    if xx >= 0 && xx < l && yy >= 0 && yy < l {
+                        nbrs[u].push((yy * l + xx) as u32);
+                    }
+                }
+            }
+        }
+    }
+
+    let mut edge_set: Vec<[u32; 2]> = Vec::new();
+    for (u, ns) in nbrs.iter().enumerate() {
+        for &v in ns {
+            let (a, b) = (u as u32, v);
+            if a < b {
+                edge_set.push([a, b]);
+            }
+        }
+    }
+    edge_set.sort();
+    edge_set.dedup();
+    let n_edges = edge_set.len();
+    let edge_id = |u: u32, v: u32| -> u32 {
+        let key = [u.min(v), u.max(v)];
+        edge_set.binary_search(&key).unwrap() as u32
+    };
+
+    let mut idx = vec![0u32; n * degree];
+    let mut slot_edge = vec![n_edges as u32; n * degree];
+    let mut pad = vec![true; n * degree];
+    for (u, ns) in nbrs.iter().enumerate() {
+        for (d, &v) in ns.iter().enumerate() {
+            idx[u * degree + d] = v;
+            slot_edge[u * degree + d] = edge_id(u as u32, v);
+            pad[u * degree + d] = false;
+        }
+    }
+
+    let color: Vec<u8> = (0..n).map(|i| (((i % grid) + (i / grid)) % 2) as u8).collect();
+
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    let mut rng = crate::util::rng::Rng::new(seed ^ 0xD7C0_11EC);
+    rng.shuffle(&mut perm);
+    let mut data_nodes: Vec<u32> = perm[..n_data].to_vec();
+    data_nodes.sort();
+
+    let top = Topology {
+        name: name.to_string(),
+        grid,
+        pattern: pattern.to_string(),
+        n_data,
+        idx,
+        slot_edge,
+        pad,
+        color,
+        data_nodes,
+        edges: edge_set,
+        degree,
+    };
+    top.validate()?;
+    Ok(top)
+}
+
+/// Load a topology exported by `python/compile/topology.py`.
+pub fn from_json(src: &str) -> Result<Topology> {
+    let v = json::parse(src)?;
+    let grid = v.get("grid")?.as_usize()?;
+    let degree = v.get("degree")?.as_usize()?;
+    let n = v.get("n_nodes")?.as_usize()?;
+    if n != grid * grid {
+        bail!("n_nodes != grid^2");
+    }
+    let (idx, w1) = v.get("idx")?.int_table()?;
+    let (slot_edge, w2) = v.get("slot_edge")?.int_table()?;
+    let (pad, w3) = v.get("pad")?.int_table()?;
+    if w1 != degree || w2 != degree || w3 != degree {
+        bail!("index table width mismatch");
+    }
+    let (edges_flat, ew) = v.get("edges")?.int_table()?;
+    if ew != 2 {
+        bail!("edges must be pairs");
+    }
+    let top = Topology {
+        name: v.get("name")?.as_str()?.to_string(),
+        grid,
+        pattern: v.get("pattern")?.as_str()?.to_string(),
+        n_data: v.get("n_data")?.as_usize()?,
+        idx: idx.iter().map(|&x| x as u32).collect(),
+        slot_edge: slot_edge.iter().map(|&x| x as u32).collect(),
+        pad: pad.iter().map(|&x| x != 0).collect(),
+        color: v
+            .get("color")?
+            .num_vec()?
+            .iter()
+            .map(|&x| x as u8)
+            .collect(),
+        data_nodes: v
+            .get("data_nodes")?
+            .num_vec()?
+            .iter()
+            .map(|&x| x as u32)
+            .collect(),
+        edges: edges_flat
+            .chunks(2)
+            .map(|c| [c[0] as u32, c[1] as u32])
+            .collect(),
+        degree,
+    };
+    top.validate()?;
+    Ok(top)
+}
+
+/// Load from a file path.
+pub fn from_json_file(path: &std::path::Path) -> Result<Topology> {
+    from_json(&std::fs::read_to_string(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degrees_match_patterns() {
+        for (p, d) in [("G8", 8), ("G12", 12), ("G16", 16), ("G20", 20), ("G24", 24)] {
+            let t = build("t", 32, p, 16, 0).unwrap();
+            assert_eq!(t.degree, d);
+            // A bulk node realizes the full degree.
+            let bulk = 16 * 32 + 16;
+            let non_pad = (0..t.degree).filter(|&k| !t.pad[t.slot(bulk, k)]).count();
+            assert_eq!(non_pad, d);
+        }
+    }
+
+    #[test]
+    fn bipartite_and_symmetric() {
+        let t = build("t", 12, "G12", 10, 3).unwrap();
+        t.validate().unwrap();
+        // Symmetry: if u lists v, v lists u.
+        for u in 0..t.n_nodes() {
+            for d in 0..t.degree {
+                if !t.pad[t.slot(u, d)] {
+                    let v = t.idx[t.slot(u, d)] as usize;
+                    let back = (0..t.degree)
+                        .any(|k| !t.pad[t.slot(v, k)] && t.idx[t.slot(v, k)] as usize == u);
+                    assert!(back, "asymmetric edge {u}->{v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn expand_weights_symmetric_and_padded() {
+        let t = build("t", 8, "G8", 4, 0).unwrap();
+        let w: Vec<f32> = (0..t.n_edges()).map(|i| i as f32 + 1.0).collect();
+        let slots = t.expand_edge_weights(&w);
+        for u in 0..t.n_nodes() {
+            for d in 0..t.degree {
+                let s = t.slot(u, d);
+                if t.pad[s] {
+                    assert_eq!(slots[s], 0.0);
+                } else {
+                    let v = t.idx[s] as usize;
+                    let k = (0..t.degree)
+                        .find(|&k| !t.pad[t.slot(v, k)] && t.idx[t.slot(v, k)] as usize == u)
+                        .unwrap();
+                    assert_eq!(slots[s], slots[t.slot(v, k)]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_with_python_schema() {
+        // Hand-built JSON in the Python export schema.
+        let t = build("cfg", 4, "G8", 4, 1).unwrap();
+        let mut idx_rows = Vec::new();
+        let mut se_rows = Vec::new();
+        let mut pad_rows = Vec::new();
+        for u in 0..t.n_nodes() {
+            let r = |v: Vec<f64>| json::Value::Arr(v.into_iter().map(json::Value::Num).collect());
+            idx_rows.push(r((0..t.degree).map(|d| t.idx[t.slot(u, d)] as f64).collect()));
+            se_rows.push(r((0..t.degree).map(|d| t.slot_edge[t.slot(u, d)] as f64).collect()));
+            pad_rows.push(r((0..t.degree).map(|d| t.pad[t.slot(u, d)] as u8 as f64).collect()));
+        }
+        let edges = json::Value::Arr(
+            t.edges
+                .iter()
+                .map(|e| json::Value::Arr(vec![json::Value::Num(e[0] as f64), json::Value::Num(e[1] as f64)]))
+                .collect(),
+        );
+        let obj = json::obj(vec![
+            ("name", json::Value::Str("cfg".into())),
+            ("grid", json::Value::Num(4.0)),
+            ("pattern", json::Value::Str("G8".into())),
+            ("degree", json::Value::Num(t.degree as f64)),
+            ("n_nodes", json::Value::Num(16.0)),
+            ("n_data", json::Value::Num(4.0)),
+            ("n_edges", json::Value::Num(t.n_edges() as f64)),
+            ("seed", json::Value::Num(1.0)),
+            ("idx", json::Value::Arr(idx_rows)),
+            ("slot_edge", json::Value::Arr(se_rows)),
+            ("pad", json::Value::Arr(pad_rows)),
+            ("color", json::arr_f64(&t.color.iter().map(|&c| c as f64).collect::<Vec<_>>())),
+            (
+                "data_nodes",
+                json::arr_f64(&t.data_nodes.iter().map(|&c| c as f64).collect::<Vec<_>>()),
+            ),
+            ("edges", edges),
+        ]);
+        let loaded = from_json(&json::write(&obj)).unwrap();
+        assert_eq!(loaded.idx, t.idx);
+        assert_eq!(loaded.edges, t.edges);
+        assert_eq!(loaded.color, t.color);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(build("t", 8, "G9", 4, 0).is_err());
+        assert!(build("t", 8, "G8", 0, 0).is_err());
+        assert!(build("t", 8, "G8", 65, 0).is_err());
+    }
+}

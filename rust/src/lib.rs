@@ -1,0 +1,49 @@
+//! # thermo-dtm
+//!
+//! A three-layer (Rust + JAX + Pallas, AOT via PJRT) reproduction of
+//! *"An efficient probabilistic hardware architecture for diffusion-like
+//! models"* — Denoising Thermodynamic Models (DTMs) running on the Denoising
+//! Thermodynamic Computer Architecture (DTCA).
+//!
+//! The Rust crate is **Layer 3**: it owns the event loop, the denoising
+//! pipeline, request batching/serving, the training loop (Eq. 14 Monte-Carlo
+//! gradients + total-correlation penalty + the Adaptive Correlation Penalty
+//! controller), the App. E/F energy models, the RNG circuit simulator, and
+//! the figure-reproduction harness. The compute hot path executes
+//! AOT-compiled HLO artifacts (Layer 2 JAX programs wrapping the Layer 1
+//! Pallas Gibbs kernel) through the PJRT CPU client; Python never runs at
+//! request time.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! - [`util`] — PRNG, JSON, CLI, thread pool (offline substrates).
+//! - [`graph`] — Table-II grid topologies, bipartite coloring, roles.
+//! - [`gibbs`] — pure-Rust chromatic Gibbs reference sampler.
+//! - [`linalg`] — dense ops + Jacobi eigensolver (Fréchet distance).
+//! - [`metrics`] — proxy-FID, autocorrelation, mixing-time fits.
+//! - [`data`] — synthetic fashion-like / CIFAR-like datasets, App. I embedding.
+//! - [`energy`] — App. E device energy model, App. F GPU model, Fig. 7 landscape.
+//! - [`circuit`] — subthreshold RNG simulator + process-corner Monte-Carlo.
+//! - [`runtime`] — PJRT client, artifact manifest, executable cache.
+//! - [`model`] — DTM parameters, forward process, persistence.
+//! - [`train`] — gradient estimation, Adam, ACP, trainers.
+//! - [`coordinator`] — denoising pipeline, batcher, serving loop.
+//! - [`baselines`] — MEBM and VAE/GAN/DDPM/hybrid drivers.
+//! - [`figures`] — per-figure/table reproduction harness.
+//! - [`bench`] — micro-benchmark harness (criterion substitute).
+
+pub mod baselines;
+pub mod bench;
+pub mod circuit;
+pub mod coordinator;
+pub mod data;
+pub mod energy;
+pub mod figures;
+pub mod gibbs;
+pub mod graph;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod train;
+pub mod util;

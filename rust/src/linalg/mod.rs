@@ -1,0 +1,315 @@
+//! Dense linear algebra substrate: matrices, covariance, Jacobi symmetric
+//! eigendecomposition, PSD matrix square root — everything the Fréchet
+//! distance (proxy-FID) needs.
+
+use anyhow::{bail, Result};
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Mat {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut m = Mat::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c);
+            m.data[i * c..(i + 1) * c].copy_from_slice(row);
+        }
+        m
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
+                let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    pub fn trace(&self) -> f64 {
+        (0..self.rows.min(self.cols)).map(|i| self[(i, i)]).sum()
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.rows != self.cols {
+            return false;
+        }
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                if (self[(i, j)] - self[(j, i)]).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Sample mean (per column) of a row-major data matrix [n, d].
+pub fn column_mean(data: &[f64], n: usize, d: usize) -> Vec<f64> {
+    let mut mu = vec![0.0; d];
+    for i in 0..n {
+        for j in 0..d {
+            mu[j] += data[i * d + j];
+        }
+    }
+    for v in mu.iter_mut() {
+        *v /= n.max(1) as f64;
+    }
+    mu
+}
+
+/// Sample covariance (unbiased) of row-major data [n, d].
+pub fn covariance(data: &[f64], n: usize, d: usize) -> Mat {
+    let mu = column_mean(data, n, d);
+    let mut c = Mat::zeros(d, d);
+    for i in 0..n {
+        for a in 0..d {
+            let xa = data[i * d + a] - mu[a];
+            for b in a..d {
+                c[(a, b)] += xa * (data[i * d + b] - mu[b]);
+            }
+        }
+    }
+    let denom = (n.max(2) - 1) as f64;
+    for a in 0..d {
+        for b in a..d {
+            let v = c[(a, b)] / denom;
+            c[(a, b)] = v;
+            c[(b, a)] = v;
+        }
+    }
+    c
+}
+
+/// Jacobi eigendecomposition of a symmetric matrix: returns (eigenvalues,
+/// eigenvectors as columns). Classic cyclic Jacobi; robust for the d <= ~128
+/// feature dimensions used by proxy-FID.
+pub fn jacobi_eigh(a: &Mat, max_sweeps: usize) -> Result<(Vec<f64>, Mat)> {
+    if a.rows != a.cols {
+        bail!("jacobi_eigh: matrix not square");
+    }
+    if !a.is_symmetric(1e-8 * (1.0 + a.data.iter().fold(0.0f64, |m, x| m.max(x.abs())))) {
+        bail!("jacobi_eigh: matrix not symmetric");
+    }
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+    for _ in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let theta = (m[(q, q)] - m[(p, p)]) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let evals: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    Ok((evals, v))
+}
+
+/// PSD matrix square root via eigendecomposition; negative eigenvalues
+/// (numerical noise) are clamped to zero.
+pub fn sqrtm_psd(a: &Mat) -> Result<Mat> {
+    let (evals, v) = jacobi_eigh(a, 50)?;
+    let n = a.rows;
+    let mut d = Mat::zeros(n, n);
+    for i in 0..n {
+        d[(i, i)] = evals[i].max(0.0).sqrt();
+    }
+    Ok(v.matmul(&d).matmul(&v.transpose()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_and_transpose() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+        assert_eq!(a.transpose().data, vec![1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(a.trace(), 5.0);
+    }
+
+    #[test]
+    fn jacobi_on_known_matrix() {
+        // Eigenvalues of [[2,1],[1,2]] are 1 and 3.
+        let a = Mat::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let (mut ev, _) = jacobi_eigh(&a, 50).unwrap();
+        ev.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((ev[0] - 1.0).abs() < 1e-10);
+        assert!((ev[1] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn jacobi_reconstructs() {
+        let mut rng = Rng::new(0);
+        let n = 12;
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.normal();
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        let (ev, v) = jacobi_eigh(&a, 80).unwrap();
+        let mut d = Mat::zeros(n, n);
+        for i in 0..n {
+            d[(i, i)] = ev[i];
+        }
+        let recon = v.matmul(&d).matmul(&v.transpose());
+        assert!(recon.max_abs_diff(&a) < 1e-8);
+        // Orthogonality.
+        let vtv = v.transpose().matmul(&v);
+        assert!(vtv.max_abs_diff(&Mat::eye(n)) < 1e-8);
+    }
+
+    #[test]
+    fn sqrtm_squares_back() {
+        let mut rng = Rng::new(1);
+        let n = 8;
+        // PSD: B^T B.
+        let mut b = Mat::zeros(n, n);
+        for v in b.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let a = b.transpose().matmul(&b);
+        let r = sqrtm_psd(&a).unwrap();
+        assert!(r.matmul(&r).max_abs_diff(&a) < 1e-7);
+    }
+
+    #[test]
+    fn covariance_of_known_data() {
+        // Two perfectly anti-correlated columns.
+        let data = vec![1.0, -1.0, -1.0, 1.0, 2.0, -2.0, -2.0, 2.0];
+        let c = covariance(&data, 4, 2);
+        assert!((c[(0, 0)] - c[(1, 1)]).abs() < 1e-12);
+        assert!((c[(0, 1)] + c[(0, 0)]).abs() < 1e-12);
+        let mu = column_mean(&data, 4, 2);
+        assert_eq!(mu, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn jacobi_rejects_asymmetric() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![0.0, 1.0]]);
+        assert!(jacobi_eigh(&a, 10).is_err());
+    }
+}

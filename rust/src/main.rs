@@ -1,0 +1,359 @@
+//! `repro` — the thermo-dtm command-line coordinator (leader entrypoint).
+//!
+//! Subcommands:
+//!   selfcheck                 artifact round-trip: HLO hot path vs pure-Rust
+//!   topology  <cfg>           print a DTM topology summary
+//!   train     [flags]         train a DTM and save a checkpoint
+//!   generate  [flags]         generate images from a checkpoint
+//!   serve     [flags]         run the batching server demo under load
+//!   figures   <id|all>        regenerate a paper figure/table (results/*.csv)
+//!   energy-report             App. E/F energy model summary
+//!   bench-info                print bench targets
+
+use anyhow::{bail, Context, Result};
+
+use thermo_dtm::coordinator::{ServerConfig, Server};
+use thermo_dtm::coordinator::batcher::BatcherConfig;
+use thermo_dtm::data::{fashion_dataset, FashionConfig};
+use thermo_dtm::energy::{self, DeviceParams};
+use thermo_dtm::figures::{self, FigOpts};
+use thermo_dtm::graph;
+use thermo_dtm::model::Dtm;
+use thermo_dtm::runtime::Runtime;
+use thermo_dtm::train::acp::AcpParams;
+use thermo_dtm::train::sampler::{HloSampler, LayerSampler, RustSampler};
+use thermo_dtm::train::trainer::{TrainConfig, Trainer};
+use thermo_dtm::util::cli::Args;
+use thermo_dtm::util::rng::Rng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "selfcheck" => selfcheck(&args),
+        "topology" => topology(&args),
+        "train" => train(&args),
+        "generate" => generate(&args),
+        "serve" => serve(&args),
+        "figures" => {
+            let id = args
+                .positional
+                .get(1)
+                .map(String::as_str)
+                .unwrap_or("all");
+            let opts = FigOpts::from_args(&args)?;
+            std::fs::create_dir_all(&opts.out_dir)?;
+            figures::run(id, &opts)
+        }
+        "energy-report" => energy_report(),
+        "bench-info" => {
+            println!("cargo bench targets: bench_gibbs, bench_pipeline, bench_batcher, bench_metrics, bench_energy");
+            Ok(())
+        }
+        "help" | _ => {
+            println!(
+                "usage: repro <selfcheck|topology|train|generate|serve|figures|energy-report> [--flags]\n\
+                 common flags: --artifacts DIR --config dtm_m32 --fast --seed N\n\
+                 train:    --t-steps 4 --epochs 10 --k-train 30 --out ckpt.json --backend hlo|rust\n\
+                 generate: --ckpt ckpt.json --n 64 --k 60 --backend hlo|rust\n\
+                 serve:    --ckpt ckpt.json --requests 32 --req-images 8 --linger-ms 5\n\
+                 figures:  repro figures <id|all> [--fast] [--out results]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.str_opt("artifacts", "artifacts")
+}
+
+/// Build a sampler for `--backend hlo|rust` (hlo requires artifacts).
+fn make_sampler(args: &Args, cfg: &str, seed: u64) -> Result<Box<dyn LayerSampler>> {
+    let backend = args.str_opt("backend", "hlo");
+    match backend.as_str() {
+        "hlo" => {
+            let rt = Runtime::open(artifacts_dir(args))
+                .context("opening artifacts (use --backend rust to run without)")?;
+            let exec = rt.dtm_exec(cfg)?;
+            Ok(Box::new(HloSampler::new(exec, seed)))
+        }
+        "rust" => {
+            // Mirror the artifact topology if present, else build fresh.
+            let top = match Runtime::open(artifacts_dir(args)) {
+                Ok(rt) => rt.topology(cfg)?,
+                Err(_) => graph::build(cfg, 32, "G12", 256, 7)?,
+            };
+            Ok(Box::new(RustSampler::new(top, 32, seed)))
+        }
+        other => bail!("unknown backend {other:?} (hlo|rust)"),
+    }
+}
+
+fn selfcheck(args: &Args) -> Result<()> {
+    let rt = Runtime::open(artifacts_dir(args))?;
+    println!("PJRT platform: {}", rt.platform());
+    println!(
+        "manifest: {} DTM configs, {} baselines, hybrid: {}",
+        rt.manifest.dtm.len(),
+        rt.manifest.baselines.len(),
+        rt.manifest.hybrid.is_some()
+    );
+    // Round-trip the tiny config against exact enumeration.
+    let exec = rt.dtm_exec("dtm_tiny")?;
+    let top = exec.top.clone();
+    let mut hlo = HloSampler::new(exec, 7);
+    let mut rng = Rng::new(0);
+    let mut params = thermo_dtm::model::LayerParams::init(&top, &mut rng, 0.2);
+    // Non-zero fields break the global spin symmetry, so the chain's
+    // marginals are informative (and mix quickly) at this K.
+    for h in params.h.iter_mut() {
+        *h = 0.3 * rng.normal() as f32;
+    }
+    let n = top.n_nodes();
+    let b = hlo.batch();
+    let gm = vec![0.0f32; n];
+    let xt = vec![0.0f32; b * n];
+    let st = hlo.stats(&params, &gm, 1.0, &xt, &vec![0.0; n], &vec![0.0; b * n], 400, 100)?;
+    let emp = st.node_mean(n);
+    let machine = thermo_dtm::gibbs::Machine::new(&top, &params.w_edges, params.h.clone(), gm, 1.0);
+    let exact = thermo_dtm::gibbs::exact_marginals(&top, &machine, &vec![0.0; n]);
+    let max_err = emp
+        .iter()
+        .zip(&exact)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max);
+    println!("HLO Gibbs vs exact enumeration (16 nodes): max marginal error {max_err:.4}");
+    if max_err > 0.1 {
+        bail!("selfcheck FAILED: HLO sampler does not match exact marginals");
+    }
+    println!("selfcheck OK");
+    Ok(())
+}
+
+fn topology(args: &Args) -> Result<()> {
+    let cfg = args.positional.get(1).map(String::as_str).unwrap_or("dtm_m32");
+    let rt = Runtime::open(artifacts_dir(args))?;
+    let top = rt.topology(cfg)?;
+    let entry = rt.dtm(cfg)?;
+    println!(
+        "{cfg}: L={} {} | nodes {} | data {} | edges {} | degree {} | batch {} chunk {}",
+        top.grid,
+        top.pattern,
+        top.n_nodes(),
+        top.n_data,
+        top.n_edges(),
+        top.degree,
+        entry.batch,
+        entry.chunk
+    );
+    let cell = energy::cell_energy(&DeviceParams::default(), &top.pattern)?;
+    println!(
+        "device model: E_cell = {:.2} fJ; full chip sweep = {:.2} pJ",
+        cell.total() * 1e15,
+        cell.total() * top.n_nodes() as f64 * 1e12
+    );
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let cfg_name = args.str_opt("config", "dtm_m32");
+    let t_steps = args.usize_opt("t-steps", 4)?;
+    let epochs = args.usize_opt("epochs", 10)?;
+    let k_train = args.usize_opt("k-train", 30)?;
+    let seed = args.usize_opt("seed", 0)? as u64;
+    let out = args.str_opt("out", "ckpt.json");
+    let mut sampler = make_sampler(args, &cfg_name, seed + 5)?;
+    let top = sampler.topology().clone();
+    let nd = top.data_nodes.len();
+    let side = (nd as f64).sqrt() as usize;
+    if side * side != nd {
+        bail!("config {cfg_name} has non-square n_data={nd}");
+    }
+    let ds = fashion_dataset(
+        &FashionConfig {
+            side,
+            ..FashionConfig::default()
+        },
+        args.usize_opt("dataset", 400)?,
+        3,
+    );
+    let dtm = Dtm::init(&cfg_name, &top, t_steps, 3.0, seed + 11);
+    let cfg = TrainConfig {
+        epochs,
+        batches_per_epoch: args.usize_opt("batches", 4)?,
+        k_train,
+        burn: k_train / 3,
+        lr: args.f64_opt("lr", 0.02)?,
+        acp: if args.bool_flag("no-acp") {
+            None
+        } else {
+            Some(AcpParams::default())
+        },
+        fixed_lambda: args.f64_opt("lambda", 0.0)?,
+        eval_every: args.usize_opt("eval-every", 2)?,
+        eval_samples: 128,
+        k_eval: 2 * k_train,
+        seed,
+    };
+    let mut tr = Trainer::new(&mut *sampler, dtm, cfg, ds.images.clone())?;
+    println!("training {cfg_name}: T={t_steps}, {epochs} epochs, K_train={k_train}");
+    tr.run(&ds.images)?;
+    for r in &tr.log {
+        println!(
+            "epoch {:>3}: grad {:.4} max_ryy {:.3} pfid {}",
+            r.epoch,
+            r.grad_norm,
+            r.ryy.iter().cloned().fold(0.0, f64::max),
+            r.pfid.map(|x| format!("{x:.3}")).unwrap_or_else(|| "-".into())
+        );
+    }
+    tr.dtm.save(std::path::Path::new(&out))?;
+    println!("checkpoint saved to {out}");
+    Ok(())
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let ckpt = args.str_opt("ckpt", "ckpt.json");
+    let dtm = Dtm::load(std::path::Path::new(&ckpt))?;
+    let mut sampler = make_sampler(args, &dtm.config, 9)?;
+    let n = args.usize_opt("n", 64)?;
+    let k = args.usize_opt("k", 60)?;
+    let mut rng = Rng::new(args.usize_opt("seed", 1)? as u64);
+    let t0 = std::time::Instant::now();
+    let imgs = thermo_dtm::coordinator::pipeline::generate_images(
+        &mut sampler,
+        &dtm,
+        k,
+        n,
+        &mut rng,
+    )?;
+    let dt = t0.elapsed();
+    let nd = sampler.topology().data_nodes.len();
+    println!(
+        "generated {n} images ({nd} px) in {:.2}s ({:.1} img/s)",
+        dt.as_secs_f64(),
+        n as f64 / dt.as_secs_f64()
+    );
+    // Device-model energy for the same workload.
+    let top = sampler.topology();
+    let pe = energy::denoising_energy(
+        &DeviceParams::default(),
+        &top.pattern,
+        top.grid,
+        top.n_data,
+        dtm.t_steps(),
+        k,
+    )?;
+    println!(
+        "DTCA energy model: {:.3e} J/sample ({:.2} nJ)",
+        pe.total,
+        pe.total * 1e9
+    );
+    // ASCII-render the first image.
+    let side = (nd as f64).sqrt() as usize;
+    for r in 0..side {
+        let line: String = (0..side)
+            .map(|c| if imgs[r * side + c] > 0.0 { '#' } else { '.' })
+            .collect();
+        println!("  {line}");
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let ckpt = args.str_opt("ckpt", "ckpt.json");
+    let dtm = Dtm::load(std::path::Path::new(&ckpt))?;
+    let requests = args.usize_opt("requests", 32)?;
+    let req_images = args.usize_opt("req-images", 8)?;
+    let k = args.usize_opt("k", 40)?;
+    let linger = args.usize_opt("linger-ms", 5)? as u64;
+    let backend = args.str_opt("backend", "hlo");
+    let artifacts = artifacts_dir(args);
+    let cfg_name = dtm.config.clone();
+    let cfg = ServerConfig {
+        batcher: BatcherConfig {
+            device_batch: 32,
+            linger: std::time::Duration::from_millis(linger),
+            max_queue: 4096,
+        },
+        k_inference: k,
+        seed: 4,
+    };
+    let server = if backend == "rust" {
+        let top = graph::build(&cfg_name, 32, "G12", 256, 7)?;
+        Server::spawn(cfg, dtm, move || Ok(RustSampler::new(top, 32, 13)))
+    } else {
+        Server::spawn(cfg, dtm, move || {
+            let rt = Runtime::open(artifacts)?;
+            let exec = rt.dtm_exec(&cfg_name)?;
+            Ok(HloSampler::new(exec, 13))
+        })
+    };
+    let client = server.client();
+    let t0 = std::time::Instant::now();
+    let waiters: Vec<_> = (0..requests)
+        .map(|_| client.generate_async(req_images).unwrap())
+        .collect();
+    for w in waiters {
+        let _ = w.recv()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+    println!(
+        "served {} requests / {} images in {wall:.2}s  ({:.1} img/s)",
+        stats.requests,
+        stats.images,
+        stats.images as f64 / wall
+    );
+    println!(
+        "batches {}  mean fill {:.2}  p50 {:.1} ms  p99 {:.1} ms",
+        stats.batches,
+        stats.mean_fill(),
+        stats.p50_ms(),
+        stats.p99_ms()
+    );
+    Ok(())
+}
+
+fn energy_report() -> Result<()> {
+    let p = DeviceParams::default();
+    println!("== DTCA device energy model (App. E) ==");
+    for pat in graph::PATTERN_NAMES {
+        let c = energy::cell_energy(&p, pat)?;
+        println!(
+            "{pat:<5} E_cell {:.2} fJ  (rng {:.0} aJ, bias {:.0} aJ, clock {:.0} aJ, comm {:.0} aJ)",
+            c.total() * 1e15,
+            c.e_rng * 1e18,
+            c.e_bias * 1e18,
+            c.e_clock * 1e18,
+            c.e_comm * 1e18
+        );
+    }
+    let pe = energy::denoising_energy(&p, "G12", 70, 834, 8, 250)?;
+    println!(
+        "paper-scale DTM (T=8, L=70, K=250): {:.2} nJ/layer, total {:.2} nJ/sample, IO {:.3} nJ",
+        pe.per_layer * 1e9,
+        pe.total * 1e9,
+        (pe.e_init + pe.e_read) * 1e9
+    );
+    println!(
+        "wall-clock at tau0=100ns: {:.0} µs/sample",
+        energy::denoising_time_s(8, 250, 100e-9) * 1e6
+    );
+    println!("== GPU model (App. F) ==");
+    for (name, flops) in [("VAE (decoder)", 7.0e4), ("GAN (generator)", 7.0e4), ("DDPM x50", 3.5e6)] {
+        println!(
+            "{name:<16} {flops:>10.1e} FLOP/sample -> {:.3e} J/sample",
+            energy::gpu::energy_per_sample(flops)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,283 @@
+//! Evaluation metrics: proxy-FID, autocorrelation, mixing-time fits.
+//!
+//! * `pfid` — Fréchet distance in the feature space of a fixed, seeded
+//!   random tanh network. The mechanics of FID (Gaussian moment matching +
+//!   Fréchet distance via PSD matrix sqrt) are exact; only the Inception
+//!   feature extractor is replaced (offline environment, see DESIGN.md).
+//! * `autocorr` — normalized autocorrelation r_yy[k] of a scalar observable
+//!   (paper App. G), plus the exponential-tail mixing-time fit of App. L.
+
+use anyhow::Result;
+
+use crate::linalg::{self, Mat};
+use crate::util::rng::Rng;
+
+/// Fixed random feature network: data_dim -> hidden -> feat_dim, tanh.
+/// Weights are derived deterministically from `seed`, so scores are
+/// comparable across runs and processes.
+pub struct FeatureNet {
+    pub data_dim: usize,
+    pub hidden: usize,
+    pub feat_dim: usize,
+    w1: Vec<f64>,
+    b1: Vec<f64>,
+    w2: Vec<f64>,
+}
+
+impl FeatureNet {
+    pub fn new(data_dim: usize, seed: u64) -> FeatureNet {
+        let hidden = 96;
+        let feat_dim = 48;
+        let mut rng = Rng::new(seed ^ 0xFEA7_0000);
+        let scale1 = (2.0 / data_dim as f64).sqrt();
+        let scale2 = (2.0 / hidden as f64).sqrt();
+        FeatureNet {
+            data_dim,
+            hidden,
+            feat_dim,
+            w1: (0..data_dim * hidden).map(|_| scale1 * rng.normal()).collect(),
+            b1: (0..hidden).map(|_| 0.3 * rng.normal()).collect(),
+            w2: (0..hidden * feat_dim).map(|_| scale2 * rng.normal()).collect(),
+        }
+    }
+
+    /// Features for a batch of images [n, data_dim] (f32 spins or reals).
+    pub fn features(&self, data: &[f32], n: usize) -> Vec<f64> {
+        assert_eq!(data.len(), n * self.data_dim);
+        let mut out = vec![0.0f64; n * self.feat_dim];
+        let mut hid = vec![0.0f64; self.hidden];
+        for i in 0..n {
+            let row = &data[i * self.data_dim..(i + 1) * self.data_dim];
+            for hj in hid.iter_mut() {
+                *hj = 0.0;
+            }
+            for (a, &x) in row.iter().enumerate() {
+                if x == 0.0 {
+                    continue;
+                }
+                let wrow = &self.w1[a * self.hidden..(a + 1) * self.hidden];
+                for (hj, &w) in hid.iter_mut().zip(wrow) {
+                    *hj += x as f64 * w;
+                }
+            }
+            for (hj, &b) in hid.iter_mut().zip(&self.b1) {
+                *hj = (*hj + b).tanh();
+            }
+            let orow = &mut out[i * self.feat_dim..(i + 1) * self.feat_dim];
+            for (a, &hv) in hid.iter().enumerate() {
+                let wrow = &self.w2[a * self.feat_dim..(a + 1) * self.feat_dim];
+                for (o, &w) in orow.iter_mut().zip(wrow) {
+                    *o += hv * w;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Gaussian moments of a feature set.
+pub struct Moments {
+    pub mu: Vec<f64>,
+    pub sigma: Mat,
+}
+
+pub fn moments(features: &[f64], n: usize, d: usize) -> Moments {
+    Moments {
+        mu: linalg::column_mean(features, n, d),
+        sigma: linalg::covariance(features, n, d),
+    }
+}
+
+/// Fréchet distance between two Gaussians:
+/// ||mu1-mu2||^2 + Tr(S1 + S2 - 2 (S1 S2)^{1/2}).
+pub fn frechet_distance(a: &Moments, b: &Moments) -> Result<f64> {
+    let d2: f64 = a
+        .mu
+        .iter()
+        .zip(&b.mu)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum();
+    // (S1 S2) is not symmetric in general; use the standard equivalent form
+    // sqrt(S1) S2 sqrt(S1), which is PSD-symmetric.
+    let s1h = linalg::sqrtm_psd(&a.sigma)?;
+    let inner = s1h.matmul(&b.sigma).matmul(&s1h);
+    // Symmetrize against numerical noise.
+    let inner = inner.add(&inner.transpose()).scale(0.5);
+    let cross = linalg::sqrtm_psd(&inner)?;
+    Ok(d2 + a.sigma.trace() + b.sigma.trace() - 2.0 * cross.trace())
+}
+
+/// Proxy-FID between two image sets (row-major [n, data_dim]).
+pub fn pfid(net: &FeatureNet, real: &[f32], n_real: usize, fake: &[f32], n_fake: usize) -> Result<f64> {
+    let fr = net.features(real, n_real);
+    let ff = net.features(fake, n_fake);
+    let mr = moments(&fr, n_real, net.feat_dim);
+    let mf = moments(&ff, n_fake, net.feat_dim);
+    frechet_distance(&mr, &mf)
+}
+
+/// Normalized autocorrelation r_yy[k] for k in 0..max_lag over a set of
+/// independent chains (App. G: expectation approximated by averaging over
+/// time and chains). `series` is [n_chains][t] of a scalar observable.
+pub fn autocorrelation(series: &[Vec<f64>], max_lag: usize) -> Vec<f64> {
+    let mut num = vec![0.0f64; max_lag + 1];
+    let mut cnt = vec![0.0f64; max_lag + 1];
+    // Global mean/variance across chains (chains share the stationary law).
+    let all: Vec<f64> = series.iter().flatten().copied().collect();
+    let mu = crate::util::mean(&all);
+    let var: f64 = all.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / all.len().max(1) as f64;
+    if var < 1e-30 {
+        let mut out = vec![0.0; max_lag + 1];
+        out[0] = 1.0;
+        return out;
+    }
+    for chain in series {
+        let t = chain.len();
+        for k in 0..=max_lag.min(t.saturating_sub(1)) {
+            for j in 0..t - k {
+                num[k] += (chain[j] - mu) * (chain[j + k] - mu);
+                cnt[k] += 1.0;
+            }
+        }
+    }
+    (0..=max_lag)
+        .map(|k| if cnt[k] > 0.0 { num[k] / cnt[k] / var } else { 0.0 })
+        .collect()
+}
+
+/// App. L mixing-time estimate: fit ln r_yy[k] = ln C + k ln(sigma2) on the
+/// tail (k in [lo, hi], r_yy > floor) and return -1/ln(sigma2) (iterations).
+/// Returns None when the tail never decays below `floor` within the window
+/// (the "too slow to measure" case of Fig. 16).
+pub fn mixing_time_fit(r: &[f64], lo: usize, hi: usize, floor: f64) -> Option<f64> {
+    let hi = hi.min(r.len().saturating_sub(1));
+    if lo >= hi {
+        return None;
+    }
+    let pts: Vec<(f64, f64)> = (lo..=hi)
+        .filter(|&k| r[k] > floor)
+        .map(|k| (k as f64, r[k].ln()))
+        .collect();
+    if pts.len() < 3 {
+        return None;
+    }
+    // Least squares slope.
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return None;
+    }
+    let slope = (n * sxy - sx * sy) / denom;
+    if slope >= -1e-9 {
+        return None; // not decaying
+    }
+    Some(-1.0 / slope)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn images(n: usize, dim: usize, mode: f32, noise: f64, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n * dim)
+            .map(|_| {
+                let base = mode;
+                if rng.uniform() < noise {
+                    -base
+                } else {
+                    base
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pfid_zero_for_identical_distributions() {
+        let net = FeatureNet::new(64, 0);
+        let a = images(400, 64, 1.0, 0.3, 1);
+        let b = images(400, 64, 1.0, 0.3, 2);
+        // Finite-sample bias keeps this above 0; it must just be far below
+        // any between-distribution distance (see the ordering test).
+        let d = pfid(&net, &a, 400, &b, 400).unwrap();
+        assert!(d < 5.0, "same-dist pfid should be small, got {d}");
+    }
+
+    #[test]
+    fn pfid_orders_distributions_by_similarity() {
+        let net = FeatureNet::new(64, 0);
+        let real = images(400, 64, 1.0, 0.25, 1);
+        let close = images(400, 64, 1.0, 0.35, 2);
+        let far = images(400, 64, -1.0, 0.05, 3);
+        let d_close = pfid(&net, &real, 400, &close, 400).unwrap();
+        let d_far = pfid(&net, &real, 400, &far, 400).unwrap();
+        assert!(d_close < d_far, "close {d_close} !< far {d_far}");
+        assert!(d_far > 1.0);
+    }
+
+    #[test]
+    fn pfid_deterministic_in_seed() {
+        let net1 = FeatureNet::new(32, 7);
+        let net2 = FeatureNet::new(32, 7);
+        let a = images(100, 32, 1.0, 0.2, 1);
+        let b = images(100, 32, -1.0, 0.2, 2);
+        let d1 = pfid(&net1, &a, 100, &b, 100).unwrap();
+        let d2 = pfid(&net2, &a, 100, &b, 100).unwrap();
+        assert!((d1 - d2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn autocorr_of_ar1_matches_theory() {
+        // AR(1): x[t+1] = rho x[t] + noise; r[k] = rho^k.
+        let rho: f64 = 0.8;
+        let mut rng = Rng::new(0);
+        let chains: Vec<Vec<f64>> = (0..8)
+            .map(|_| {
+                let mut x = 0.0;
+                (0..4000)
+                    .map(|_| {
+                        x = rho * x + (1.0 - rho * rho).sqrt() * rng.normal();
+                        x
+                    })
+                    .collect()
+            })
+            .collect();
+        let r = autocorrelation(&chains, 20);
+        assert!((r[0] - 1.0).abs() < 1e-9);
+        for k in [1usize, 3, 6] {
+            assert!(
+                (r[k] - rho.powi(k as i32)).abs() < 0.06,
+                "lag {k}: {} vs {}",
+                r[k],
+                rho.powi(k as i32)
+            );
+        }
+    }
+
+    #[test]
+    fn mixing_fit_recovers_rate() {
+        let sigma2: f64 = 0.9;
+        let r: Vec<f64> = (0..200).map(|k| sigma2.powi(k)).collect();
+        let tau = mixing_time_fit(&r, 10, 100, 1e-12).unwrap();
+        let expect = -1.0 / sigma2.ln();
+        assert!((tau - expect).abs() / expect < 0.01, "{tau} vs {expect}");
+    }
+
+    #[test]
+    fn mixing_fit_none_for_flat_series() {
+        let r = vec![1.0; 100];
+        assert!(mixing_time_fit(&r, 10, 90, 1e-12).is_none());
+    }
+
+    #[test]
+    fn autocorr_constant_series_safe() {
+        let chains = vec![vec![2.0; 100]];
+        let r = autocorrelation(&chains, 5);
+        assert_eq!(r[0], 1.0);
+        assert!(r[1..].iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,136 @@
+//! The discrete forward (noising) process, paper App. B.1.b.
+//!
+//! Each spin independently follows an M=2 Markov jump process with rate
+//! gamma; over total time 1 split into T uniform steps, a step flips a spin
+//! with probability p = (1 - exp(-2 gamma / T)) / 2. The step transition
+//! kernel has the exponential form Q(x'|x) ∝ exp((Gamma/2) x' x) with
+//! Gamma = ln((1-p)/p) (Eq. B15 / D1), which is exactly the pairwise
+//! coupling the DTCA realizes between the x^t and x^{t-1} node planes.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ForwardProcess {
+    pub t_steps: usize,
+    /// Total jump-rate x time product over the whole chain; >= ~3 makes
+    /// x^T indistinguishable from uniform noise.
+    pub gamma_total: f64,
+}
+
+impl ForwardProcess {
+    pub fn new(t_steps: usize, gamma_total: f64) -> ForwardProcess {
+        assert!(t_steps >= 1);
+        assert!(gamma_total > 0.0);
+        ForwardProcess {
+            t_steps,
+            gamma_total,
+        }
+    }
+
+    /// The MEBM degenerate case: one step that fully randomizes.
+    pub fn full_noise() -> ForwardProcess {
+        ForwardProcess {
+            t_steps: 1,
+            gamma_total: f64::INFINITY,
+        }
+    }
+
+    /// Per-step spin flip probability (uniform schedule).
+    pub fn flip_prob(&self, _step: usize) -> f64 {
+        if self.gamma_total.is_infinite() {
+            return 0.5;
+        }
+        (1.0 - (-2.0 * self.gamma_total / self.t_steps as f64).exp()) / 2.0
+    }
+
+    /// The coupling Gamma_t = ln((1-p)/p) of Eq. B15/D1 for step t.
+    pub fn coupling_gamma(&self, step: usize) -> f64 {
+        let p = self.flip_prob(step).clamp(1e-9, 0.5);
+        ((1.0 - p) / p).ln()
+    }
+
+    /// Probability that a spin survives the *whole* chain unflipped minus
+    /// flipped — the signal retention E[x^T x^0] = exp(-2 gamma_total).
+    pub fn total_retention(&self) -> f64 {
+        if self.gamma_total.is_infinite() {
+            0.0
+        } else {
+            (-2.0 * self.gamma_total).exp()
+        }
+    }
+
+    /// Apply one noising step to a row of spins.
+    pub fn noise_step(&self, step: usize, x: &[f32], rng: &mut Rng) -> Vec<f32> {
+        let p = self.flip_prob(step);
+        x.iter()
+            .map(|&s| if rng.uniform() < p { -s } else { s })
+            .collect()
+    }
+
+    /// Sample the full chain x^0 .. x^T given clean data x^0.
+    pub fn noise_chain(&self, x0: &[f32], rng: &mut Rng) -> Vec<Vec<f32>> {
+        let mut chain = Vec::with_capacity(self.t_steps + 1);
+        chain.push(x0.to_vec());
+        for t in 0..self.t_steps {
+            let next = self.noise_step(t, chain.last().unwrap(), rng);
+            chain.push(next);
+        }
+        chain
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flip_prob_monotone_in_gamma() {
+        let a = ForwardProcess::new(4, 1.0);
+        let b = ForwardProcess::new(4, 3.0);
+        assert!(a.flip_prob(0) < b.flip_prob(0));
+        assert!(b.flip_prob(0) < 0.5);
+    }
+
+    #[test]
+    fn coupling_consistent_with_flip_prob() {
+        // sigmoid(Gamma) must equal P(stay) = 1 - p.
+        let f = ForwardProcess::new(8, 3.0);
+        let p = f.flip_prob(0);
+        let g = f.coupling_gamma(0);
+        let stay = 1.0 / (1.0 + (-g).exp());
+        assert!((stay - (1.0 - p)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn full_noise_is_memoryless() {
+        let f = ForwardProcess::full_noise();
+        assert_eq!(f.flip_prob(0), 0.5);
+        assert!(f.coupling_gamma(0).abs() < 1e-9);
+        assert_eq!(f.total_retention(), 0.0);
+    }
+
+    #[test]
+    fn chain_ends_near_uniform() {
+        let f = ForwardProcess::new(8, 3.0);
+        let mut rng = Rng::new(0);
+        let x0 = vec![1.0f32; 4096];
+        let chain = f.noise_chain(&x0, &mut rng);
+        assert_eq!(chain.len(), 9);
+        let corr: f64 = chain[8].iter().map(|&s| s as f64).sum::<f64>() / 4096.0;
+        // E[x^T x^0] = exp(-6) ≈ 0.0025.
+        assert!(corr.abs() < 0.06, "end-of-chain correlation {corr}");
+        // Early steps retain most of the signal.
+        let c1: f64 = chain[1].iter().map(|&s| s as f64).sum::<f64>() / 4096.0;
+        assert!(c1 > 0.4);
+    }
+
+    #[test]
+    fn empirical_flip_rate_matches() {
+        let f = ForwardProcess::new(4, 2.0);
+        let mut rng = Rng::new(1);
+        let x = vec![1.0f32; 20_000];
+        let y = f.noise_step(0, &x, &mut rng);
+        let flips = y.iter().filter(|&&s| s < 0.0).count() as f64 / 20_000.0;
+        assert!((flips - f.flip_prob(0)).abs() < 0.01);
+    }
+}

@@ -1,0 +1,294 @@
+//! DTM model state: per-layer Boltzmann machine parameters, the discrete
+//! forward (noising) process, and checkpoint persistence.
+//!
+//! A T-step DTM is T independent latent-variable Boltzmann machines sharing
+//! one topology (paper Sec. III: "the various EBMs may be ... implemented by
+//! the same hardware, reprogrammed with distinct sets of weights"). Layer t
+//! models P(x^{t-1}, z^{t-1} | x^t) via Eq. 8; the forward coupling enters
+//! as the per-data-node field gm = Gamma_t / (2 beta) (Eq. D1 / B15).
+
+pub mod forward;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::Topology;
+use crate::util::json::{self, Value};
+use crate::util::rng::Rng;
+
+pub use forward::ForwardProcess;
+
+/// Parameters of one EBM layer: undirected edge weights + biases.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerParams {
+    pub w_edges: Vec<f32>,
+    pub h: Vec<f32>,
+}
+
+impl LayerParams {
+    /// Small-random init (Hinton's practical guide: start near an
+    /// easy-to-sample landscape).
+    pub fn init(top: &Topology, rng: &mut Rng, scale: f32) -> LayerParams {
+        LayerParams {
+            w_edges: (0..top.n_edges()).map(|_| scale * rng.normal() as f32).collect(),
+            h: (0..top.n_nodes()).map(|_| 0.0).collect(),
+        }
+    }
+
+    pub fn zeros(top: &Topology) -> LayerParams {
+        LayerParams {
+            w_edges: vec![0.0; top.n_edges()],
+            h: vec![0.0; top.n_nodes()],
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.w_edges.len() + self.h.len()
+    }
+}
+
+/// A full DTM: T layers + the forward process that generated the chain.
+#[derive(Clone, Debug)]
+pub struct Dtm {
+    pub config: String,
+    pub layers: Vec<LayerParams>,
+    pub forward: ForwardProcess,
+    pub beta: f32,
+}
+
+impl Dtm {
+    pub fn init(config: &str, top: &Topology, t_steps: usize, gamma_total: f64,
+                seed: u64) -> Dtm {
+        let mut rng = Rng::new(seed);
+        Dtm {
+            config: config.to_string(),
+            layers: (0..t_steps)
+                .map(|_| LayerParams::init(top, &mut rng, 0.01))
+                .collect(),
+            forward: ForwardProcess::new(t_steps, gamma_total),
+            beta: 1.0,
+        }
+    }
+
+    /// An MEBM is the T=1, fully-noising degenerate case: the forward step
+    /// erases all information (flip prob 1/2 => Gamma = 0 => no coupling),
+    /// so the single EBM models the data monolithically (paper Sec. I).
+    pub fn init_mebm(config: &str, top: &Topology, seed: u64) -> Dtm {
+        let mut rng = Rng::new(seed);
+        Dtm {
+            config: config.to_string(),
+            layers: vec![LayerParams::init(top, &mut rng, 0.01)],
+            forward: ForwardProcess::full_noise(),
+            beta: 1.0,
+        }
+    }
+
+    pub fn t_steps(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(|l| l.n_params()).sum()
+    }
+
+    /// The gm vector for layer t (0-indexed; layer t denoises x^{t+1}->x^t):
+    /// Gamma_{t}/(2 beta) on data nodes, 0 on latents.
+    pub fn gm_vec(&self, top: &Topology, layer: usize) -> Vec<f32> {
+        let g = self.forward.coupling_gamma(layer) as f32 / (2.0 * self.beta);
+        let mut gm = vec![0.0f32; top.n_nodes()];
+        for &i in &top.data_nodes {
+            gm[i as usize] = g;
+        }
+        gm
+    }
+
+    // --------------------------- persistence ---------------------------
+
+    pub fn to_json(&self) -> String {
+        let layers: Vec<Value> = self
+            .layers
+            .iter()
+            .map(|l| {
+                json::obj(vec![
+                    ("w", json::arr_f32(&l.w_edges)),
+                    ("h", json::arr_f32(&l.h)),
+                ])
+            })
+            .collect();
+        json::write(&json::obj(vec![
+            ("format", Value::Str("thermo-dtm-ckpt-v1".into())),
+            ("config", Value::Str(self.config.clone())),
+            ("beta", Value::Num(self.beta as f64)),
+            ("t_steps", Value::Num(self.t_steps() as f64)),
+            // Infinity (the MEBM full-noise case) is not representable in
+            // JSON; use a sentinel the loader maps back (> 1e17).
+            (
+                "gamma_total",
+                Value::Num(if self.forward.gamma_total.is_finite() {
+                    self.forward.gamma_total
+                } else {
+                    1e18
+                }),
+            ),
+            ("layers", Value::Arr(layers)),
+        ]))
+    }
+
+    pub fn from_json(src: &str) -> Result<Dtm> {
+        let v = json::parse(src)?;
+        let fmt = v.get("format")?.as_str()?;
+        if fmt != "thermo-dtm-ckpt-v1" {
+            bail!("unknown checkpoint format {fmt:?}");
+        }
+        let t_steps = v.get("t_steps")?.as_usize()?;
+        let layers: Vec<LayerParams> = v
+            .get("layers")?
+            .as_arr()?
+            .iter()
+            .map(|lv| {
+                Ok(LayerParams {
+                    w_edges: lv.get("w")?.num_vec()?.iter().map(|&x| x as f32).collect(),
+                    h: lv.get("h")?.num_vec()?.iter().map(|&x| x as f32).collect(),
+                })
+            })
+            .collect::<Result<_>>()?;
+        if layers.len() != t_steps {
+            bail!("layer count mismatch");
+        }
+        let gamma_total = v.get("gamma_total")?.as_f64()?;
+        Ok(Dtm {
+            config: v.get("config")?.as_str()?.to_string(),
+            layers,
+            forward: if gamma_total.is_infinite() || gamma_total > 1e17 {
+                ForwardProcess::full_noise()
+            } else {
+                ForwardProcess::new(t_steps, gamma_total)
+            },
+            beta: v.get("beta")?.as_f64()? as f32,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        std::fs::write(path, self.to_json()).with_context(|| format!("saving {path:?}"))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Dtm> {
+        Dtm::from_json(&std::fs::read_to_string(path).with_context(|| format!("loading {path:?}"))?)
+    }
+}
+
+/// Scatter per-data-node values [B, n_data] into full-node rows [B, N]
+/// (zeros on latent nodes) — the xt / cval layout the layer programs expect.
+pub fn scatter_data(top: &Topology, vals: &[f32], batch: usize) -> Vec<f32> {
+    let n = top.n_nodes();
+    let nd = top.data_nodes.len();
+    assert_eq!(vals.len(), batch * nd);
+    let mut out = vec![0.0f32; batch * n];
+    for b in 0..batch {
+        for (j, &node) in top.data_nodes.iter().enumerate() {
+            out[b * n + node as usize] = vals[b * nd + j];
+        }
+    }
+    out
+}
+
+/// Gather data-node values [B, n_data] out of full-node rows [B, N].
+pub fn gather_data(top: &Topology, full: &[f32], batch: usize) -> Vec<f32> {
+    let n = top.n_nodes();
+    let nd = top.data_nodes.len();
+    assert_eq!(full.len(), batch * n);
+    let mut out = vec![0.0f32; batch * nd];
+    for b in 0..batch {
+        for (j, &node) in top.data_nodes.iter().enumerate() {
+            out[b * nd + j] = full[b * n + node as usize];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph;
+
+    #[test]
+    fn init_shapes() {
+        let top = graph::build("t", 8, "G8", 16, 0).unwrap();
+        let dtm = Dtm::init("t", &top, 4, 3.0, 0);
+        assert_eq!(dtm.t_steps(), 4);
+        assert_eq!(dtm.layers[0].w_edges.len(), top.n_edges());
+        assert_eq!(dtm.layers[0].h.len(), 64);
+        assert!(dtm.n_params() > 0);
+    }
+
+    #[test]
+    fn gm_vec_zero_on_latents() {
+        let top = graph::build("t", 8, "G8", 16, 0).unwrap();
+        let dtm = Dtm::init("t", &top, 2, 3.0, 0);
+        let gm = dtm.gm_vec(&top, 0);
+        let dm = top.data_mask();
+        for i in 0..64 {
+            if dm[i] > 0.5 {
+                assert!(gm[i] > 0.0);
+            } else {
+                assert_eq!(gm[i], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn mebm_has_zero_coupling() {
+        let top = graph::build("t", 8, "G8", 16, 0).unwrap();
+        let mebm = Dtm::init_mebm("t", &top, 0);
+        assert_eq!(mebm.t_steps(), 1);
+        let gm = mebm.gm_vec(&top, 0);
+        assert!(gm.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let top = graph::build("t", 6, "G8", 9, 0).unwrap();
+        let dtm = Dtm::init("cfg", &top, 3, 2.5, 7);
+        let back = Dtm::from_json(&dtm.to_json()).unwrap();
+        assert_eq!(back.config, "cfg");
+        assert_eq!(back.t_steps(), 3);
+        assert_eq!(back.beta, dtm.beta);
+        for (a, b) in dtm.layers.iter().zip(&back.layers) {
+            for (x, y) in a.w_edges.iter().zip(&b.w_edges) {
+                assert!((x - y).abs() < 1e-6);
+            }
+        }
+        assert!((back.forward.gamma_total - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mebm_checkpoint_roundtrip() {
+        let top = graph::build("t", 6, "G8", 9, 0).unwrap();
+        let mebm = Dtm::init_mebm("cfg", &top, 7);
+        let back = Dtm::from_json(&mebm.to_json()).unwrap();
+        assert!((back.forward.flip_prob(0) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip() {
+        let top = graph::build("t", 6, "G8", 9, 0).unwrap();
+        let mut rng = Rng::new(0);
+        let b = 3;
+        let vals: Vec<f32> = (0..b * 9).map(|_| rng.spin()).collect();
+        let full = scatter_data(&top, &vals, b);
+        assert_eq!(full.len(), b * 36);
+        let back = gather_data(&top, &full, b);
+        assert_eq!(back, vals);
+        // Latent positions zero.
+        let dm = top.data_mask();
+        for bi in 0..b {
+            for i in 0..36 {
+                if dm[i] < 0.5 {
+                    assert_eq!(full[bi * 36 + i], 0.0);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! `artifacts/manifest.json` schema (written by `python/compile/aot.py`).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::{self, Value};
+
+/// One lowered program: file name + XLA cost-analysis FLOPs (-1 if unknown).
+#[derive(Clone, Debug)]
+pub struct ProgramInfo {
+    pub file: String,
+    pub flops: f64,
+}
+
+fn program_info(v: &Value) -> Result<ProgramInfo> {
+    Ok(ProgramInfo {
+        file: v.get("file")?.as_str()?.to_string(),
+        flops: v.get("flops")?.as_f64()?,
+    })
+}
+
+/// One DTM configuration (topology + the three chunked layer programs).
+#[derive(Clone, Debug)]
+pub struct DtmEntry {
+    pub topology: String,
+    pub grid: usize,
+    pub pattern: String,
+    pub n_nodes: usize,
+    pub n_data: usize,
+    pub n_edges: usize,
+    pub degree: usize,
+    pub batch: usize,
+    pub chunk: usize,
+    pub programs: HashMap<String, ProgramInfo>,
+}
+
+/// One GPU-baseline model (train + sample programs, App. F accounting).
+#[derive(Clone, Debug)]
+pub struct BaselineEntry {
+    pub n_params: usize,
+    pub n_gen_params: usize,
+    pub batch: usize,
+    pub data_dim: usize,
+    pub sample_flops: f64,
+    pub train: ProgramInfo,
+    pub sample: ProgramInfo,
+}
+
+/// The hybrid HTDML artifact set (Fig. 6 / App. J).
+#[derive(Clone, Debug)]
+pub struct HybridEntry {
+    pub n_params: usize,
+    pub n_enc_params: usize,
+    pub n_dec_params: usize,
+    pub n_critic_params: usize,
+    pub batch: usize,
+    pub data_dim: usize,
+    pub latent: usize,
+    pub decode_flops: f64,
+    pub ae_train: ProgramInfo,
+    pub ae_encode: ProgramInfo,
+    pub ae_decode: ProgramInfo,
+    pub dec_ft: ProgramInfo,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dtm: HashMap<String, DtmEntry>,
+    pub baselines: HashMap<String, BaselineEntry>,
+    pub hybrid: Option<HybridEntry>,
+}
+
+impl Manifest {
+    pub fn parse(src: &str) -> Result<Manifest> {
+        let v = json::parse(src)?;
+        let mut m = Manifest::default();
+        if let Some(dtm) = v.opt("dtm") {
+            for (name, e) in dtm.as_obj()? {
+                let mut programs = HashMap::new();
+                for (pname, pv) in e.get("programs")?.as_obj()? {
+                    programs.insert(pname.clone(), program_info(pv)?);
+                }
+                m.dtm.insert(
+                    name.clone(),
+                    DtmEntry {
+                        topology: e.get("topology")?.as_str()?.to_string(),
+                        grid: e.get("grid")?.as_usize()?,
+                        pattern: e.get("pattern")?.as_str()?.to_string(),
+                        n_nodes: e.get("n_nodes")?.as_usize()?,
+                        n_data: e.get("n_data")?.as_usize()?,
+                        n_edges: e.get("n_edges")?.as_usize()?,
+                        degree: e.get("degree")?.as_usize()?,
+                        batch: e.get("batch")?.as_usize()?,
+                        chunk: e.get("chunk")?.as_usize()?,
+                        programs,
+                    },
+                );
+            }
+        }
+        if let Some(bl) = v.opt("baselines") {
+            for (name, e) in bl.as_obj()? {
+                m.baselines.insert(
+                    name.clone(),
+                    BaselineEntry {
+                        n_params: e.get("n_params")?.as_usize()?,
+                        n_gen_params: e
+                            .opt("n_gen_params")
+                            .map(|x| x.as_usize())
+                            .transpose()?
+                            .unwrap_or(0),
+                        batch: e.get("batch")?.as_usize()?,
+                        data_dim: e.get("data_dim")?.as_usize()?,
+                        sample_flops: e.get("sample_flops")?.as_f64()?,
+                        train: program_info(e.get("train")?)?,
+                        sample: program_info(e.get("sample")?)?,
+                    },
+                );
+            }
+        }
+        if let Some(hy) = v.opt("hybrid") {
+            if hy.opt("n_params").is_some() {
+                m.hybrid = Some(HybridEntry {
+                    n_params: hy.get("n_params")?.as_usize()?,
+                    n_enc_params: hy.get("n_enc_params")?.as_usize()?,
+                    n_dec_params: hy.get("n_dec_params")?.as_usize()?,
+                    n_critic_params: hy.get("n_critic_params")?.as_usize()?,
+                    batch: hy.get("batch")?.as_usize()?,
+                    data_dim: hy.get("data_dim")?.as_usize()?,
+                    latent: hy.get("latent")?.as_usize()?,
+                    decode_flops: hy.get("decode_flops")?.as_f64()?,
+                    ae_train: program_info(hy.get("ae_train")?)?,
+                    ae_encode: program_info(hy.get("ae_encode")?)?,
+                    ae_decode: program_info(hy.get("ae_decode")?)?,
+                    dec_ft: program_info(hy.get("dec_ft")?)?,
+                });
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        Manifest::parse(&std::fs::read_to_string(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "dtm": {
+        "dtm_x": {
+          "topology": "topology_dtm_x.json", "grid": 8, "pattern": "G8",
+          "n_nodes": 64, "n_data": 16, "n_edges": 200, "degree": 8,
+          "batch": 4, "chunk": 10,
+          "programs": {
+            "sample": {"file": "dtm_x_sample.hlo.txt", "flops": 123.0},
+            "stats": {"file": "dtm_x_stats.hlo.txt", "flops": -1},
+            "trace": {"file": "dtm_x_trace.hlo.txt", "flops": 5}
+          }
+        }
+      },
+      "baselines": {
+        "vae": {"n_params": 100, "batch": 64, "data_dim": 256, "latent": 16,
+                "sample_flops": 1000.0,
+                "train": {"file": "vae_train.hlo.txt", "flops": 1.0},
+                "sample": {"file": "vae_sample.hlo.txt", "flops": 2.0}}
+      },
+      "hybrid": {}
+    }"#;
+
+    #[test]
+    fn parse_sample_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let d = &m.dtm["dtm_x"];
+        assert_eq!(d.n_nodes, 64);
+        assert_eq!(d.programs["sample"].file, "dtm_x_sample.hlo.txt");
+        assert_eq!(d.programs["stats"].flops, -1.0);
+        let b = &m.baselines["vae"];
+        assert_eq!(b.n_params, 100);
+        assert_eq!(b.n_gen_params, 0);
+        assert!(m.hybrid.is_none());
+    }
+
+    #[test]
+    fn parse_real_manifest_if_present() {
+        let p = std::path::Path::new("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(p).unwrap();
+            assert!(m.dtm.contains_key("dtm_m32"));
+            assert!(m.baselines.contains_key("vae"));
+            assert!(m.hybrid.is_some());
+        }
+    }
+}

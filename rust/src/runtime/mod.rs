@@ -1,0 +1,319 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU client): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format (the image's xla_extension 0.5.1
+//! rejects jax ≥ 0.5 serialized protos; the text parser reassigns ids).
+//!
+//! PJRT wrapper types hold raw pointers and are not `Send`; the coordinator
+//! therefore confines a `Runtime` to one *device thread* and feeds it work
+//! over channels (see `coordinator::server`), which also matches the
+//! physical picture: one DTCA chip, many requests.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use manifest::{BaselineEntry, DtmEntry, HybridEntry, Manifest, ProgramInfo};
+
+use crate::graph::Topology;
+
+/// A host-side f32 tensor (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn scalar1(v: f32) -> Tensor {
+        Tensor::new(vec![1], vec![v])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        Ok(Tensor::new(dims, lit.to_vec::<f32>()?))
+    }
+}
+
+/// Build the u32[2] threefry key literal.
+fn key_literal(key: [u32; 2]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(&key).reshape(&[2])?)
+}
+
+/// A compiled executable plus bookkeeping.
+pub struct Executable {
+    pub name: String,
+    pub flops: f64,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Input to an executable: f32 tensor or a threefry key.
+pub enum Arg<'a> {
+    T(&'a Tensor),
+    Key([u32; 2]),
+}
+
+impl Executable {
+    /// Execute with the given args; returns the flattened output tuple.
+    pub fn run(&self, args: &[Arg]) -> Result<Vec<Tensor>> {
+        let mut lits = Vec::with_capacity(args.len());
+        for a in args {
+            lits.push(match a {
+                Arg::T(t) => t.to_literal()?,
+                Arg::Key(k) => key_literal(*k)?,
+            });
+        }
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("executing {}", self.name))?;
+        let result = bufs[0][0].to_literal_sync()?;
+        // Programs are lowered with return_tuple=True.
+        let parts = result.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+/// The artifact-backed runtime: PJRT client + manifest + executable cache.
+pub struct Runtime {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: std::cell::RefCell<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open `artifacts/` (compiles nothing eagerly).
+    pub fn open<P: AsRef<Path>>(dir: P) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let mpath = dir.join("manifest.json");
+        let manifest = Manifest::load(&mpath)
+            .with_context(|| format!("loading {}", mpath.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            dir,
+            manifest,
+            client,
+            cache: std::cell::RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts location (repo root), overridable via env.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("THERMO_DTM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by file name (cached).
+    pub fn load(&self, info: &ProgramInfo) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(&info.file) {
+            return Ok(Arc::clone(e));
+        }
+        let path = self.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", info.file))?;
+        let out = Arc::new(Executable {
+            name: info.file.clone(),
+            flops: info.flops,
+            exe,
+        });
+        self.cache
+            .borrow_mut()
+            .insert(info.file.clone(), Arc::clone(&out));
+        Ok(out)
+    }
+
+    /// Load the topology JSON exported alongside a DTM config.
+    pub fn topology(&self, cfg: &str) -> Result<Topology> {
+        let entry = self.dtm(cfg)?;
+        crate::graph::from_json_file(&self.dir.join(&entry.topology))
+    }
+
+    pub fn dtm(&self, cfg: &str) -> Result<&DtmEntry> {
+        self.manifest
+            .dtm
+            .get(cfg)
+            .ok_or_else(|| anyhow!("no DTM config {cfg:?} in manifest"))
+    }
+
+    pub fn baseline(&self, name: &str) -> Result<&BaselineEntry> {
+        self.manifest
+            .baselines
+            .get(name)
+            .ok_or_else(|| anyhow!("no baseline {name:?} in manifest"))
+    }
+
+    /// Typed handle for one DTM layer-program family.
+    pub fn dtm_exec(&self, cfg: &str) -> Result<DtmExec> {
+        let entry = self.dtm(cfg)?.clone();
+        let top = self.topology(cfg)?;
+        let sample = self.load(&entry.programs["sample"])?;
+        let stats = self.load(&entry.programs["stats"])?;
+        let trace = self.load(&entry.programs["trace"])?;
+        Ok(DtmExec {
+            entry,
+            top,
+            sample,
+            stats,
+            trace,
+        })
+    }
+}
+
+/// Inputs shared by every DTM layer-program call. Shapes follow
+/// `python/compile/model.example_args`.
+pub struct LayerInputs<'a> {
+    pub s0: &'a Tensor,    // [B, N]
+    pub w: &'a Tensor,     // [N, D]
+    pub h: &'a Tensor,     // [N]
+    pub gm: &'a Tensor,    // [N]
+    pub xt: &'a Tensor,    // [B, N]
+    pub cmask: &'a Tensor, // [N]
+    pub cval: &'a Tensor,  // [B, N]
+    pub key: [u32; 2],
+    pub beta: f32,
+}
+
+/// A DTM layer's three executables bound to its topology.
+pub struct DtmExec {
+    pub entry: DtmEntry,
+    pub top: Topology,
+    sample: Arc<Executable>,
+    stats: Arc<Executable>,
+    trace: Arc<Executable>,
+}
+
+pub struct StatsOut {
+    pub s_final: Tensor,
+    /// [N, D] mean of s_i * s_{idx(i,d)} over (batch, chunk iterations).
+    pub pair: Tensor,
+    /// [B, N] per-chain node means over the chunk.
+    pub mean_b: Tensor,
+}
+
+pub struct TraceOut {
+    pub s_final: Tensor,
+    /// [chunk, B, P] random-projection trace.
+    pub proj: Tensor,
+}
+
+impl DtmExec {
+    pub fn batch(&self) -> usize {
+        self.entry.batch
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.entry.chunk
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.entry.n_nodes
+    }
+
+    fn args<'a>(&self, i: &'a LayerInputs<'a>, beta_t: &'a Tensor) -> Vec<Arg<'a>> {
+        vec![
+            Arg::T(i.s0),
+            Arg::T(i.w),
+            Arg::T(i.h),
+            Arg::T(i.gm),
+            Arg::T(i.xt),
+            Arg::T(i.cmask),
+            Arg::T(i.cval),
+            Arg::Key(i.key),
+            Arg::T(beta_t),
+        ]
+    }
+
+    /// Run `chunk` Gibbs iterations; returns the final state [B, N].
+    pub fn run_sample(&self, i: &LayerInputs) -> Result<Tensor> {
+        let beta_t = Tensor::scalar1(i.beta);
+        let mut out = self.sample.run(&self.args(i, &beta_t))?;
+        if out.len() != 1 {
+            bail!("sample program returned {} outputs", out.len());
+        }
+        Ok(out.remove(0))
+    }
+
+    /// Run `chunk` iterations accumulating gradient sufficient statistics.
+    pub fn run_stats(&self, i: &LayerInputs) -> Result<StatsOut> {
+        let beta_t = Tensor::scalar1(i.beta);
+        let mut out = self.stats.run(&self.args(i, &beta_t))?;
+        if out.len() != 3 {
+            bail!("stats program returned {} outputs", out.len());
+        }
+        let mean_b = out.remove(2);
+        let pair = out.remove(1);
+        let s_final = out.remove(0);
+        Ok(StatsOut {
+            s_final,
+            pair,
+            mean_b,
+        })
+    }
+
+    /// Run `chunk` iterations emitting the projection trace.
+    pub fn run_trace(&self, i: &LayerInputs) -> Result<TraceOut> {
+        let beta_t = Tensor::scalar1(i.beta);
+        let mut out = self.trace.run(&self.args(i, &beta_t))?;
+        if out.len() != 2 {
+            bail!("trace program returned {} outputs", out.len());
+        }
+        let proj = out.remove(1);
+        let s_final = out.remove(0);
+        Ok(TraceOut { s_final, proj })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape, vec![2, 3]);
+        let z = Tensor::zeros(vec![4]);
+        assert_eq!(z.data.len(), 4);
+        assert_eq!(Tensor::scalar1(2.5).data, vec![2.5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_size_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,82 @@
+//! Adam optimizer (Kingma & Ba) over flat f32 parameter vectors.
+
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f64,
+    pub b1: f64,
+    pub b2: f64,
+    pub eps: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(n: usize, lr: f64) -> Adam {
+        Adam {
+            lr,
+            b1: 0.9,
+            b2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0,
+        }
+    }
+
+    /// In-place update: params -= lr * mhat / (sqrt(vhat) + eps).
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grads.len(), self.m.len());
+        self.t += 1;
+        let bc1 = 1.0 - self.b1.powi(self.t as i32);
+        let bc2 = 1.0 - self.b2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = grads[i] as f64;
+            self.m[i] = self.b1 * self.m[i] + (1.0 - self.b1) * g;
+            self.v[i] = self.b2 * self.v[i] + (1.0 - self.b2) * g * g;
+            let mh = self.m[i] / bc1;
+            let vh = self.v[i] / bc2;
+            params[i] -= (self.lr * mh / (vh.sqrt() + self.eps)) as f32;
+        }
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        // f(x) = (x - 3)^2; grad = 2(x - 3).
+        let mut x = vec![0.0f32];
+        let mut opt = Adam::new(1, 0.1);
+        for _ in 0..500 {
+            let g = vec![2.0 * (x[0] - 3.0)];
+            opt.step(&mut x, &g);
+        }
+        assert!((x[0] - 3.0).abs() < 0.01, "x = {}", x[0]);
+        assert_eq!(opt.steps_taken(), 500);
+    }
+
+    #[test]
+    fn first_step_magnitude_is_lr() {
+        // Adam's bias correction makes the first step ≈ lr * sign(grad).
+        let mut x = vec![0.0f32];
+        let mut opt = Adam::new(1, 0.05);
+        opt.step(&mut x, &[123.0]);
+        assert!((x[0] + 0.05).abs() < 1e-4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn size_mismatch_panics() {
+        let mut opt = Adam::new(2, 0.1);
+        let mut x = vec![0.0f32; 2];
+        opt.step(&mut x, &[1.0]);
+    }
+}

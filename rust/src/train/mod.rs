@@ -1,0 +1,15 @@
+//! Training: Eq. 14 Monte-Carlo gradients, the total-correlation penalty
+//! (Eqs. 15/H1), Adam, and the Adaptive Correlation Penalty controller
+//! (App. H.2), plus the epoch driver used by Figs. 1, 2b, 5, 14, 17, 18.
+
+pub mod acp;
+pub mod adam;
+pub mod grad;
+pub mod sampler;
+pub mod trainer;
+
+pub use acp::AcpController;
+pub use adam::Adam;
+pub use grad::{estimate_layer_grad, LayerGrad};
+pub use sampler::{HloSampler, LayerSampler, RustSampler};
+pub use trainer::{TrainConfig, TrainRecord, Trainer};

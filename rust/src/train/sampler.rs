@@ -1,0 +1,509 @@
+//! The `LayerSampler` abstraction: one EBM layer's Gibbs machinery.
+//!
+//! Two interchangeable implementations:
+//!  * [`HloSampler`] — the production hot path; chains the AOT-compiled
+//!    chunked programs (L2/L1) through the PJRT runtime.
+//!  * [`RustSampler`] — the pure-Rust reference sampler; used for tests,
+//!    artifact-free operation at arbitrary graph sizes, and as the
+//!    `bench_gibbs` baseline.
+//!
+//! Integration tests assert the two produce statistically identical results
+//! on the same topology/parameters.
+
+use anyhow::Result;
+
+use crate::gibbs;
+use crate::graph::Topology;
+use crate::model::LayerParams;
+use crate::runtime::{DtmExec, LayerInputs, Tensor};
+use crate::util::rng::Rng;
+
+/// Averaged sufficient statistics from a clamped/free sampling run.
+#[derive(Clone, Debug)]
+pub struct LayerStats {
+    /// [N * D] mean s_i * s_{idx(i,d)} over (batch, kept iterations).
+    pub pair: Vec<f64>,
+    /// [B * N] per-chain node means over kept iterations.
+    pub mean_b: Vec<f64>,
+    pub batch: usize,
+}
+
+impl LayerStats {
+    /// Node means averaged over the batch, [N].
+    pub fn node_mean(&self, n: usize) -> Vec<f64> {
+        let b = self.batch;
+        (0..n)
+            .map(|i| (0..b).map(|bi| self.mean_b[bi * n + i]).sum::<f64>() / b as f64)
+            .collect()
+    }
+}
+
+/// One EBM layer's sampling backend.
+pub trait LayerSampler {
+    fn topology(&self) -> &Topology;
+    fn batch(&self) -> usize;
+
+    /// Run `k` Gibbs iterations from random init (clamps imposed first);
+    /// collect statistics after `burn` iterations. `xt`, `cval` are full-node
+    /// rows [B, N]; `cmask` is per-node [N].
+    fn stats(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        cmask: &[f32],
+        cval: &[f32],
+        k: usize,
+        burn: usize,
+    ) -> Result<LayerStats>;
+
+    /// Run `k` iterations from `s0` (or random if None); return final states
+    /// [B, N].
+    fn sample(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        s0: Option<&[f32]>,
+        k: usize,
+    ) -> Result<Vec<f32>>;
+
+    /// Run `k` iterations recording a low-dimensional observable per
+    /// iteration; returns per-chain scalar series [B][k] (App. G).
+    fn trace(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        k: usize,
+    ) -> Result<Vec<Vec<f64>>>;
+}
+
+/// Delegation so `&mut S` and `Box<dyn LayerSampler>` are themselves
+/// samplers (the CLI uses trait objects to pick the backend at runtime).
+impl<T: LayerSampler + ?Sized> LayerSampler for &mut T {
+    fn topology(&self) -> &Topology {
+        (**self).topology()
+    }
+    fn batch(&self) -> usize {
+        (**self).batch()
+    }
+    fn stats(&mut self, params: &LayerParams, gm: &[f32], beta: f32, xt: &[f32],
+             cmask: &[f32], cval: &[f32], k: usize, burn: usize) -> Result<LayerStats> {
+        (**self).stats(params, gm, beta, xt, cmask, cval, k, burn)
+    }
+    fn sample(&mut self, params: &LayerParams, gm: &[f32], beta: f32, xt: &[f32],
+              s0: Option<&[f32]>, k: usize) -> Result<Vec<f32>> {
+        (**self).sample(params, gm, beta, xt, s0, k)
+    }
+    fn trace(&mut self, params: &LayerParams, gm: &[f32], beta: f32, xt: &[f32],
+             k: usize) -> Result<Vec<Vec<f64>>> {
+        (**self).trace(params, gm, beta, xt, k)
+    }
+}
+
+impl<T: LayerSampler + ?Sized> LayerSampler for Box<T> {
+    fn topology(&self) -> &Topology {
+        (**self).topology()
+    }
+    fn batch(&self) -> usize {
+        (**self).batch()
+    }
+    fn stats(&mut self, params: &LayerParams, gm: &[f32], beta: f32, xt: &[f32],
+             cmask: &[f32], cval: &[f32], k: usize, burn: usize) -> Result<LayerStats> {
+        (**self).stats(params, gm, beta, xt, cmask, cval, k, burn)
+    }
+    fn sample(&mut self, params: &LayerParams, gm: &[f32], beta: f32, xt: &[f32],
+              s0: Option<&[f32]>, k: usize) -> Result<Vec<f32>> {
+        (**self).sample(params, gm, beta, xt, s0, k)
+    }
+    fn trace(&mut self, params: &LayerParams, gm: &[f32], beta: f32, xt: &[f32],
+             k: usize) -> Result<Vec<Vec<f64>>> {
+        (**self).trace(params, gm, beta, xt, k)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pure-Rust implementation
+// ---------------------------------------------------------------------------
+
+pub struct RustSampler {
+    top: Topology,
+    batch: usize,
+    rng: Rng,
+    proj: Vec<f32>, // [N * P] fixed random projection for trace()
+    proj_dim: usize,
+}
+
+impl RustSampler {
+    pub fn new(top: Topology, batch: usize, seed: u64) -> RustSampler {
+        let mut rng = Rng::new(seed);
+        let n = top.n_nodes();
+        let proj_dim = 8;
+        let proj = (0..n * proj_dim)
+            .map(|_| (rng.normal() / (n as f64).sqrt()) as f32)
+            .collect();
+        RustSampler {
+            top,
+            batch,
+            rng,
+            proj,
+            proj_dim,
+        }
+    }
+
+    fn machine(&self, params: &LayerParams, gm: &[f32], beta: f32) -> gibbs::Machine {
+        gibbs::Machine::new(&self.top, &params.w_edges, params.h.clone(), gm.to_vec(), beta)
+    }
+}
+
+impl LayerSampler for RustSampler {
+    fn topology(&self) -> &Topology {
+        &self.top
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn stats(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        cmask: &[f32],
+        cval: &[f32],
+        k: usize,
+        burn: usize,
+    ) -> Result<LayerStats> {
+        let m = self.machine(params, gm, beta);
+        let mut chains = gibbs::Chains::random(self.batch, self.top.n_nodes(), &mut self.rng);
+        chains.impose_clamps(cmask, cval);
+        let st = gibbs::run_stats(&self.top, &m, &mut chains, xt, cmask, k, burn, &mut self.rng);
+        Ok(LayerStats {
+            pair: st.pair_mean(),
+            mean_b: st.node_mean_b(),
+            batch: self.batch,
+        })
+    }
+
+    fn sample(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        s0: Option<&[f32]>,
+        k: usize,
+    ) -> Result<Vec<f32>> {
+        let m = self.machine(params, gm, beta);
+        let n = self.top.n_nodes();
+        let mut chains = match s0 {
+            Some(s) => gibbs::Chains {
+                b: self.batch,
+                n,
+                s: s.to_vec(),
+            },
+            None => gibbs::Chains::random(self.batch, n, &mut self.rng),
+        };
+        let cmask = vec![0.0f32; n];
+        for _ in 0..k {
+            gibbs::sweep(&self.top, &m, &mut chains, xt, &cmask, &mut self.rng);
+        }
+        Ok(chains.s)
+    }
+
+    fn trace(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        k: usize,
+    ) -> Result<Vec<Vec<f64>>> {
+        let m = self.machine(params, gm, beta);
+        let n = self.top.n_nodes();
+        let mut chains = gibbs::Chains::random(self.batch, n, &mut self.rng);
+        let cmask = vec![0.0f32; n];
+        let mut series = vec![Vec::with_capacity(k); self.batch];
+        for _ in 0..k {
+            gibbs::sweep(&self.top, &m, &mut chains, xt, &cmask, &mut self.rng);
+            for (bi, out) in series.iter_mut().enumerate() {
+                let row = chains.row(bi);
+                // First projection component as the scalar observable.
+                let mut acc = 0.0f64;
+                for i in 0..n {
+                    acc += (row[i] * self.proj[i * self.proj_dim]) as f64;
+                }
+                out.push(acc);
+            }
+        }
+        Ok(series)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HLO / PJRT implementation (the production hot path)
+// ---------------------------------------------------------------------------
+
+pub struct HloSampler {
+    exec: DtmExec,
+    rng: Rng,
+}
+
+impl HloSampler {
+    pub fn new(exec: DtmExec, seed: u64) -> HloSampler {
+        HloSampler {
+            exec,
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn exec(&self) -> &DtmExec {
+        &self.exec
+    }
+
+    fn tensors(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        xt: &[f32],
+        cmask: &[f32],
+        cval: &[f32],
+        s0: Option<&[f32]>,
+    ) -> (Tensor, Tensor, Tensor, Tensor, Tensor, Tensor, Tensor) {
+        let top = &self.exec.top;
+        let (n, b) = (top.n_nodes(), self.exec.batch());
+        // Dense symmetric coupling matrix — the layout the AOT programs take.
+        let w = Tensor::new(vec![n, n], top.expand_edge_weights_dense(&params.w_edges));
+        let h = Tensor::new(vec![n], params.h.clone());
+        let gm_t = Tensor::new(vec![n], gm.to_vec());
+        let xt_t = Tensor::new(vec![b, n], xt.to_vec());
+        let cmask_t = Tensor::new(vec![n], cmask.to_vec());
+        let cval_t = Tensor::new(vec![b, n], cval.to_vec());
+        let s0_t = match s0 {
+            Some(s) => Tensor::new(vec![b, n], s.to_vec()),
+            None => Tensor::new(vec![b, n], (0..b * n).map(|_| self.rng.spin()).collect()),
+        };
+        (s0_t, w, h, gm_t, xt_t, cmask_t, cval_t)
+    }
+
+    fn chunks_for(&self, k: usize) -> usize {
+        k.div_ceil(self.exec.chunk()).max(1)
+    }
+}
+
+impl LayerSampler for HloSampler {
+    fn topology(&self) -> &Topology {
+        &self.exec.top
+    }
+
+    fn batch(&self) -> usize {
+        self.exec.batch()
+    }
+
+    fn stats(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        cmask: &[f32],
+        cval: &[f32],
+        k: usize,
+        burn: usize,
+    ) -> Result<LayerStats> {
+        let (mut s0, w, h, gm_t, xt_t, cmask_t, cval_t) =
+            self.tensors(params, gm, xt, cmask, cval, None);
+        let burn_chunks = burn / self.exec.chunk();
+        let stat_chunks = (self.chunks_for(k)).saturating_sub(burn_chunks).max(1);
+        let top_n = self.exec.top.n_nodes();
+        let d = self.exec.top.degree;
+        let b = self.exec.batch();
+        // Burn-in via the sample program (cheaper output).
+        for _ in 0..burn_chunks {
+            let key = self.rng.next_key();
+            let inp = LayerInputs {
+                s0: &s0,
+                w: &w,
+                h: &h,
+                gm: &gm_t,
+                xt: &xt_t,
+                cmask: &cmask_t,
+                cval: &cval_t,
+                key,
+                beta,
+            };
+            s0 = self.exec.run_sample(&inp)?;
+        }
+        let mut pair = vec![0.0f64; top_n * d];
+        let mut mean_b = vec![0.0f64; b * top_n];
+        let top = self.exec.top.clone();
+        for _ in 0..stat_chunks {
+            let key = self.rng.next_key();
+            let inp = LayerInputs {
+                s0: &s0,
+                w: &w,
+                h: &h,
+                gm: &gm_t,
+                xt: &xt_t,
+                cmask: &cmask_t,
+                cval: &cval_t,
+                key,
+                beta,
+            };
+            let out = self.exec.run_stats(&inp)?;
+            // The program returns the full second-moment matrix [N, N];
+            // read out the Table-II edge entries into the per-slot layout
+            // the gradient estimator uses.
+            debug_assert_eq!(out.pair.shape, vec![top_n, top_n]);
+            for i in 0..top_n {
+                for k in 0..d {
+                    let slot = i * d + k;
+                    if !top.pad[slot] {
+                        let j = top.idx[slot] as usize;
+                        pair[slot] += out.pair.data[i * top_n + j] as f64;
+                    }
+                }
+            }
+            for (acc, &x) in mean_b.iter_mut().zip(&out.mean_b.data) {
+                *acc += x as f64;
+            }
+            s0 = out.s_final;
+        }
+        let c = stat_chunks as f64;
+        Ok(LayerStats {
+            pair: pair.iter().map(|x| x / c).collect(),
+            mean_b: mean_b.iter().map(|x| x / c).collect(),
+            batch: b,
+        })
+    }
+
+    fn sample(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        s0: Option<&[f32]>,
+        k: usize,
+    ) -> Result<Vec<f32>> {
+        let n = self.exec.top.n_nodes();
+        let zeros_m = vec![0.0f32; n];
+        let zeros_v = vec![0.0f32; self.exec.batch() * n];
+        let (mut s, w, h, gm_t, xt_t, cmask_t, cval_t) =
+            self.tensors(params, gm, xt, &zeros_m, &zeros_v, s0);
+        for _ in 0..self.chunks_for(k) {
+            let key = self.rng.next_key();
+            let inp = LayerInputs {
+                s0: &s,
+                w: &w,
+                h: &h,
+                gm: &gm_t,
+                xt: &xt_t,
+                cmask: &cmask_t,
+                cval: &cval_t,
+                key,
+                beta,
+            };
+            s = self.exec.run_sample(&inp)?;
+        }
+        Ok(s.data)
+    }
+
+    fn trace(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        k: usize,
+    ) -> Result<Vec<Vec<f64>>> {
+        let n = self.exec.top.n_nodes();
+        let b = self.exec.batch();
+        let zeros_m = vec![0.0f32; n];
+        let zeros_v = vec![0.0f32; b * n];
+        let (mut s, w, h, gm_t, xt_t, cmask_t, cval_t) =
+            self.tensors(params, gm, xt, &zeros_m, &zeros_v, None);
+        let mut series = vec![Vec::with_capacity(k); b];
+        for _ in 0..self.chunks_for(k) {
+            let key = self.rng.next_key();
+            let inp = LayerInputs {
+                s0: &s,
+                w: &w,
+                h: &h,
+                gm: &gm_t,
+                xt: &xt_t,
+                cmask: &cmask_t,
+                cval: &cval_t,
+                key,
+                beta,
+            };
+            let out = self.exec.run_trace(&inp)?;
+            // proj is [chunk, B, P]; take component 0 as the observable.
+            let chunk = out.proj.shape[0];
+            let p = out.proj.shape[2];
+            for step in 0..chunk {
+                for (bi, srs) in series.iter_mut().enumerate() {
+                    srs.push(out.proj.data[(step * b + bi) * p] as f64);
+                }
+            }
+            s = out.s_final;
+        }
+        Ok(series)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph;
+
+    #[test]
+    fn rust_sampler_stats_shapes() {
+        let top = graph::build("t", 6, "G8", 9, 0).unwrap();
+        let n = top.n_nodes();
+        let mut s = RustSampler::new(top.clone(), 4, 0);
+        let params = LayerParams::init(&top, &mut Rng::new(0), 0.1);
+        let gm = vec![0.0f32; n];
+        let xt = vec![0.0f32; 4 * n];
+        let st = s
+            .stats(&params, &gm, 1.0, &xt, &vec![0.0; n], &vec![0.0; 4 * n], 20, 5)
+            .unwrap();
+        assert_eq!(st.pair.len(), n * top.degree);
+        assert_eq!(st.mean_b.len(), 4 * n);
+        assert_eq!(st.node_mean(n).len(), n);
+    }
+
+    #[test]
+    fn rust_sampler_trace_len() {
+        let top = graph::build("t", 6, "G8", 9, 0).unwrap();
+        let n = top.n_nodes();
+        let mut s = RustSampler::new(top.clone(), 3, 1);
+        let params = LayerParams::init(&top, &mut Rng::new(0), 0.1);
+        let tr = s
+            .trace(&params, &vec![0.0; n], 1.0, &vec![0.0; 3 * n], 15)
+            .unwrap();
+        assert_eq!(tr.len(), 3);
+        assert!(tr.iter().all(|c| c.len() == 15));
+    }
+
+    #[test]
+    fn rust_sampler_sample_continues_state() {
+        let top = graph::build("t", 6, "G8", 9, 0).unwrap();
+        let n = top.n_nodes();
+        let mut s = RustSampler::new(top.clone(), 2, 2);
+        let params = LayerParams::zeros(&top);
+        let xt = vec![0.0f32; 2 * n];
+        let out = s.sample(&params, &vec![0.0; n], 1.0, &xt, None, 5).unwrap();
+        assert_eq!(out.len(), 2 * n);
+        let out2 = s
+            .sample(&params, &vec![0.0; n], 1.0, &xt, Some(&out), 5)
+            .unwrap();
+        assert_eq!(out2.len(), 2 * n);
+    }
+}

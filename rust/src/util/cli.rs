@@ -1,0 +1,107 @@
+//! Tiny CLI argument parser (clap substitute).
+//!
+//! Supports `program <subcommand> [positional ...] [--flag] [--key value]`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse raw arguments (excluding the program name).
+    pub fn parse(raw: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    out.flags.insert(name.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&raw)
+    }
+
+    pub fn str_opt(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_opt(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn f64_opt(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn bool_flag(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = Args::parse(&s(&["figures", "fig1", "--out", "results", "--fast"])).unwrap();
+        assert_eq!(a.positional, vec!["figures", "fig1"]);
+        assert_eq!(a.str_opt("out", "x"), "results");
+        assert!(a.bool_flag("fast"));
+        assert!(!a.bool_flag("slow"));
+    }
+
+    #[test]
+    fn equals_form_and_numbers() {
+        let a = Args::parse(&s(&["--k=250", "--lr", "0.01"])).unwrap();
+        assert_eq!(a.usize_opt("k", 0).unwrap(), 250);
+        assert!((a.f64_opt("lr", 0.0).unwrap() - 0.01).abs() < 1e-12);
+        assert_eq!(a.usize_opt("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn negative_number_value() {
+        // "--bias -3" would be ambiguous; the '=' form handles negatives.
+        let a = Args::parse(&s(&["--bias=-3.5"])).unwrap();
+        assert!((a.f64_opt("bias", 0.0).unwrap() + 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_error_on_bad_number() {
+        let a = Args::parse(&s(&["--k", "abc"])).unwrap();
+        assert!(a.usize_opt("k", 0).is_err());
+    }
+}

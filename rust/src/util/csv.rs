@@ -1,0 +1,81 @@
+//! CSV writer for the figure-reproduction harness (`results/*.csv`).
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::Result;
+
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(columns: &[&str]) -> Csv {
+        Csv {
+            header: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "csv row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_f64(&mut self, cells: &[f64]) {
+        self.row(&cells.iter().map(|x| format!("{x:.6e}")).collect::<Vec<_>>());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut s = self.header.join(",");
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_string())?;
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_and_save() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["1".into(), "x".into()]);
+        c.row_f64(&[0.5, 2.0]);
+        let s = c.to_string();
+        assert!(s.starts_with("a,b\n1,x\n"));
+        assert_eq!(c.len(), 2);
+        let dir = std::env::temp_dir().join("thermo_dtm_csv_test");
+        let p = dir.join("t.csv");
+        c.save(&p).unwrap();
+        assert!(std::fs::read_to_string(&p).unwrap().contains("a,b"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["only-one".into()]);
+    }
+}

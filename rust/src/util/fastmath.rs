@@ -1,0 +1,87 @@
+//! Polynomial float math (available utility; NOT wired into the Gibbs hot
+//! loop — the §Perf pass measured libm expf faster on this target, see
+//! EXPERIMENTS.md iteration 1).
+//!
+//! `fast_exp` is a degree-5 exp2-split approximation with |relative error|
+//! < 1e-4 on the clamped range; `fast_sigmoid` inherits ~5e-5 absolute
+//! error — adequate for diagnostics, not for bit-exact sampling paths.
+
+/// Fast e^x for f32, |rel err| < ~1e-4 on [-87, 87]; clamps outside.
+#[inline]
+pub fn fast_exp(x: f32) -> f32 {
+    // exp(x) = 2^(x * log2(e)); split into integer + fractional parts.
+    const LOG2E: f32 = std::f32::consts::LOG2_E;
+    let x = x.clamp(-87.0, 87.0);
+    let t = x * LOG2E;
+    let k = t.floor();
+    let f = t - k; // in [0, 1)
+    // Degree-5 minimax polynomial for 2^f on [0, 1).
+    let p = 1.000_000_0_f32
+        + f * (0.693_147_2
+            + f * (0.240_226_5
+                + f * (0.055_504_11
+                    + f * (0.009_618_13 + f * 0.001_339_352))));
+    // Scale by 2^k via exponent bits.
+    let ki = k as i32;
+    let bits = ((ki + 127) as u32) << 23;
+    p * f32::from_bits(bits)
+}
+
+/// Fast logistic sigmoid 1 / (1 + e^{-x}).
+#[inline]
+pub fn fast_sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + fast_exp(-x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_matches_libm() {
+        let mut worst = 0.0f64;
+        let mut x = -20.0f32;
+        while x < 20.0 {
+            let got = fast_exp(x) as f64;
+            let want = (x as f64).exp();
+            let rel = ((got - want) / want).abs();
+            worst = worst.max(rel);
+            x += 0.000_37;
+        }
+        assert!(worst < 1e-4, "worst rel err {worst}");
+    }
+
+    #[test]
+    fn exp_extremes_safe() {
+        assert!(fast_exp(-200.0) >= 0.0);
+        assert!(fast_exp(-200.0) < 1e-30);
+        assert!(fast_exp(200.0).is_finite());
+        assert!((fast_exp(0.0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sigmoid_properties() {
+        assert!((fast_sigmoid(0.0) - 0.5).abs() < 1e-4);
+        assert!(fast_sigmoid(30.0) > 0.999_999);
+        assert!(fast_sigmoid(-30.0) < 1e-5);
+        // Symmetry: s(x) + s(-x) = 1.
+        for i in -100..100 {
+            let x = i as f32 * 0.1;
+            let s = fast_sigmoid(x) + fast_sigmoid(-x);
+            assert!((s - 1.0).abs() < 2e-4, "x={x}: {s}");
+        }
+    }
+
+    #[test]
+    fn sigmoid_close_to_libm_everywhere() {
+        for i in -400..400 {
+            let x = i as f32 * 0.05;
+            let fast = fast_sigmoid(x);
+            let exact = 1.0 / (1.0 + (-x as f64).exp());
+            assert!(
+                (fast as f64 - exact).abs() < 1e-4,
+                "x={x}: {fast} vs {exact}"
+            );
+        }
+    }
+}

@@ -1,0 +1,258 @@
+//! Integration tests over the AOT artifacts + PJRT runtime.
+//!
+//! These are skipped (with a notice) when `artifacts/` has not been built;
+//! `make test` always builds artifacts first.
+
+use thermo_dtm::baselines::gpu::GpuBaseline;
+use thermo_dtm::gibbs;
+use thermo_dtm::graph;
+use thermo_dtm::model::{Dtm, LayerParams};
+use thermo_dtm::runtime::{Runtime, Tensor};
+use thermo_dtm::train::sampler::{HloSampler, LayerSampler, RustSampler};
+use thermo_dtm::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("NOTE: artifacts/ missing; integration test skipped (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open("artifacts").expect("runtime open"))
+}
+
+#[test]
+fn manifest_and_topologies_load() {
+    let Some(rt) = runtime() else { return };
+    assert!(rt.manifest.dtm.len() >= 6);
+    for name in rt.manifest.dtm.keys() {
+        let top = rt.topology(name).expect("topology");
+        top.validate().expect("valid topology");
+        let entry = rt.dtm(name).unwrap();
+        assert_eq!(entry.n_nodes, top.n_nodes());
+        assert_eq!(entry.n_edges, top.n_edges());
+        assert_eq!(entry.degree, top.degree);
+    }
+}
+
+/// The core statistical cross-validation: HLO-through-PJRT Gibbs sampling
+/// agrees with exact enumeration on the 16-node machine.
+#[test]
+fn hlo_matches_exact_marginals() {
+    let Some(rt) = runtime() else { return };
+    let exec = rt.dtm_exec("dtm_tiny").unwrap();
+    let top = exec.top.clone();
+    let mut hlo = HloSampler::new(exec, 7);
+    let mut rng = Rng::new(0);
+    let mut params = LayerParams::init(&top, &mut rng, 0.25);
+    for h in params.h.iter_mut() {
+        *h = 0.3 * rng.normal() as f32;
+    }
+    let n = top.n_nodes();
+    let b = hlo.batch();
+    // Condition on a random x^t row through a real forward coupling to also
+    // exercise the gm/xt path.
+    let gm: Vec<f32> = top.data_mask().iter().map(|&x| 0.7 * x).collect();
+    let xt_row: Vec<f32> = top
+        .data_mask()
+        .iter()
+        .map(|&dm| if dm > 0.5 { rng.spin() } else { 0.0 })
+        .collect();
+    let xt: Vec<f32> = (0..b).flat_map(|_| xt_row.clone()).collect();
+
+    let st = hlo
+        .stats(&params, &gm, 1.0, &xt, &vec![0.0; n], &vec![0.0; b * n], 400, 100)
+        .unwrap();
+    let emp = st.node_mean(n);
+
+    let machine = gibbs::Machine::new(&top, &params.w_edges, params.h.clone(), gm, 1.0);
+    let exact = gibbs::exact_marginals(&top, &machine, &xt_row);
+    for i in 0..n {
+        assert!(
+            (emp[i] - exact[i]).abs() < 0.08,
+            "node {i}: HLO {:.3} vs exact {:.3}",
+            emp[i],
+            exact[i]
+        );
+    }
+}
+
+/// HLO and pure-Rust samplers agree on pair statistics (the gradient inputs).
+#[test]
+fn hlo_and_rust_sampler_agree_statistically() {
+    let Some(rt) = runtime() else { return };
+    let exec = rt.dtm_exec("dtm_tiny").unwrap();
+    let top = exec.top.clone();
+    let b = exec.batch();
+    let n = top.n_nodes();
+    let mut rng = Rng::new(3);
+    let mut params = LayerParams::init(&top, &mut rng, 0.3);
+    for h in params.h.iter_mut() {
+        *h = 0.2 * rng.normal() as f32;
+    }
+    let gm = vec![0.0f32; n];
+    let xt = vec![0.0f32; b * n];
+    let zeros_m = vec![0.0f32; n];
+    let zeros_v = vec![0.0f32; b * n];
+
+    let mut hlo = HloSampler::new(exec, 5);
+    let st_h = hlo
+        .stats(&params, &gm, 1.0, &xt, &zeros_m, &zeros_v, 400, 100)
+        .unwrap();
+    let mut rs = RustSampler::new(top.clone(), b, 6);
+    let st_r = rs
+        .stats(&params, &gm, 1.0, &xt, &zeros_m, &zeros_v, 400, 100)
+        .unwrap();
+    // Compare per-slot pair correlations. NB: guard against NaN first —
+    // f64::max ignores NaN, which once masked a real corruption here.
+    assert!(st_h.pair.iter().all(|x| x.is_finite()), "HLO pair stats not finite");
+    assert!(st_h.mean_b.iter().all(|x| x.is_finite()), "HLO mean_b not finite");
+    let mut max_diff = 0.0f64;
+    for (a, b) in st_h.pair.iter().zip(&st_r.pair) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff < 0.12, "pair-stat divergence {max_diff}");
+}
+
+/// Clamp semantics through the artifacts: clamped data nodes hold values.
+#[test]
+fn hlo_clamps_hold() {
+    let Some(rt) = runtime() else { return };
+    let exec = rt.dtm_exec("dtm_tiny").unwrap();
+    let top = exec.top.clone();
+    let b = exec.batch();
+    let n = top.n_nodes();
+    let mut rng = Rng::new(4);
+    let params = LayerParams::init(&top, &mut rng, 0.3);
+    let gm = vec![0.0f32; n];
+    let xt = vec![0.0f32; b * n];
+    let cmask = top.data_mask();
+    let cval: Vec<f32> = (0..b * n).map(|_| rng.spin()).collect();
+    let mut hlo = HloSampler::new(exec, 5);
+    let st = hlo
+        .stats(&params, &gm, 1.0, &xt, &cmask, &cval, 50, 10)
+        .unwrap();
+    for bi in 0..b {
+        for i in 0..n {
+            if cmask[i] > 0.5 {
+                let m = st.mean_b[bi * n + i];
+                let v = cval[bi * n + i] as f64;
+                assert!((m - v).abs() < 1e-9, "clamp drifted: {m} vs {v}");
+            }
+        }
+    }
+}
+
+/// Trace program: projection series have the right shape and decorrelate.
+#[test]
+fn hlo_trace_produces_series() {
+    let Some(rt) = runtime() else { return };
+    let exec = rt.dtm_exec("dtm_tiny").unwrap();
+    let top = exec.top.clone();
+    let b = exec.batch();
+    let n = top.n_nodes();
+    let mut rng = Rng::new(8);
+    let params = LayerParams::init(&top, &mut rng, 0.1);
+    let mut hlo = HloSampler::new(exec, 5);
+    let series = hlo
+        .trace(&params, &vec![0.0; n], 1.0, &vec![0.0; b * n], 60)
+        .unwrap();
+    assert_eq!(series.len(), b);
+    assert!(series.iter().all(|c| c.len() == 60));
+    let r = thermo_dtm::metrics::autocorrelation(&series, 20);
+    assert!((r[0] - 1.0).abs() < 1e-6);
+    assert!(r[15].abs() < 0.5, "weak machine should decorrelate, r[15]={}", r[15]);
+}
+
+/// End-to-end: the full reverse process runs through the PJRT hot path.
+#[test]
+fn hlo_pipeline_generates() {
+    let Some(rt) = runtime() else { return };
+    let exec = rt.dtm_exec("dtm_tiny").unwrap();
+    let top = exec.top.clone();
+    let dtm = Dtm::init("dtm_tiny", &top, 3, 3.0, 1);
+    let mut s = HloSampler::new(exec, 5);
+    let mut rng = Rng::new(2);
+    let imgs =
+        thermo_dtm::coordinator::pipeline::generate_images(&mut s, &dtm, 20, 70, &mut rng)
+            .unwrap();
+    assert_eq!(imgs.len(), 70 * top.n_data);
+    assert!(imgs.iter().all(|&x| x == 1.0 || x == -1.0));
+}
+
+/// GPU baselines: one train step moves parameters; sampling yields spins.
+#[test]
+fn baselines_train_and_sample() {
+    let Some(rt) = runtime() else { return };
+    for name in ["vae", "gan", "ddpm"] {
+        let mut bl = GpuBaseline::load(&rt, name, 0).unwrap();
+        let (b, dim) = (bl.entry.batch, bl.entry.data_dim);
+        let mut rng = Rng::new(1);
+        let data = Tensor::new(vec![b, dim], (0..b * dim).map(|_| rng.spin()).collect());
+        let p0 = bl.params.data.clone();
+        let losses = bl.train_step(&data).unwrap();
+        assert!(losses.iter().all(|l| l.is_finite()), "{name} loss not finite");
+        assert_ne!(p0, bl.params.data, "{name} params did not move");
+        let imgs = bl.sample().unwrap();
+        assert_eq!(imgs.shape, vec![b, dim]);
+        assert!(imgs.data.iter().all(|&x| x == 1.0 || x == -1.0));
+        assert!(bl.energy_per_sample() > 0.0);
+    }
+}
+
+/// VAE training through artifacts reduces the loss on a simple dataset.
+#[test]
+fn vae_loss_decreases() {
+    let Some(rt) = runtime() else { return };
+    let mut bl = GpuBaseline::load(&rt, "vae", 0).unwrap();
+    let (b, dim) = (bl.entry.batch, bl.entry.data_dim);
+    let ds = thermo_dtm::data::fashion_dataset(&thermo_dtm::data::FashionConfig::default(), 128, 0);
+    assert_eq!(ds.dim, dim);
+    let mut rng = Rng::new(2);
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    for step in 0..60 {
+        let batch = Tensor::new(vec![b, dim], ds.batch(b, &mut rng));
+        let loss = bl.train_step(&batch).unwrap()[0];
+        if step == 0 {
+            first = loss;
+        }
+        last = loss;
+    }
+    assert!(last < first * 0.9, "vae loss {first} -> {last}");
+}
+
+/// The Rust topology generator agrees structurally with the Python export.
+#[test]
+fn rust_topology_matches_python_export() {
+    let Some(rt) = runtime() else { return };
+    for (name, entry) in &rt.manifest.dtm {
+        let top = rt.topology(name).unwrap();
+        let mine = graph::build(name, entry.grid, &entry.pattern, entry.n_data, 7).unwrap();
+        // Structure (index tables, edges, colors) must match exactly; role
+        // assignment is seeded differently and may differ.
+        assert_eq!(top.idx, mine.idx, "{name} idx differs");
+        assert_eq!(top.edges, mine.edges, "{name} edges differ");
+        assert_eq!(top.color, mine.color, "{name} colors differ");
+        assert_eq!(top.slot_edge, mine.slot_edge, "{name} slot_edge differs");
+    }
+}
+
+/// Hybrid artifacts: AE round-trip and decoder fine-tune step execute.
+#[test]
+fn hybrid_artifacts_execute() {
+    let Some(rt) = runtime() else { return };
+    let mut hy = thermo_dtm::baselines::hybrid::HybridDriver::load(&rt, 0).unwrap();
+    let (b, dim, lat) = (hy.entry.batch, hy.entry.data_dim, hy.entry.latent);
+    let ds = thermo_dtm::data::cifar_like_dataset(16, 64, 0);
+    assert_eq!(ds.dim, dim);
+    let mut rng = Rng::new(3);
+    let batch = Tensor::new(vec![b, dim], ds.batch(b, &mut rng));
+    let loss0 = hy.ae_train_step(&batch).unwrap();
+    assert!(loss0.is_finite());
+    let z = hy.encode(&batch).unwrap();
+    assert_eq!(z.shape, vec![b, lat]);
+    assert!(z.data.iter().all(|&x| x == 1.0 || x == -1.0));
+    let recon = hy.decode(&z).unwrap();
+    assert_eq!(recon.shape, vec![b, dim]);
+    let (cl, gl) = hy.decoder_ft_step(&z, &batch).unwrap();
+    assert!(cl.is_finite() && gl.is_finite());
+}
