@@ -11,12 +11,7 @@ use thermo_dtm::util::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
-    let opts = FigOpts {
-        out_dir: args.str_opt("out", "results"),
-        fast: args.bool_flag("fast"),
-        artifacts: args.str_opt("artifacts", "artifacts"),
-        seed: args.usize_opt("seed", 0)? as u64,
-    };
+    let opts = FigOpts::from_args(&args)?;
     std::fs::create_dir_all(&opts.out_dir)?;
     frontier::fig6(&opts)
 }

@@ -117,6 +117,20 @@ mod tests {
         );
     }
 
+    /// Mixing measurements ride on the chain-parallel engine; the report
+    /// must be bit-identical for any sampler thread count.
+    #[test]
+    fn mixing_report_thread_invariant() {
+        let top = graph::build("t", 8, "G8", 16, 0).unwrap();
+        let params = LayerParams::init(&top, &mut Rng::new(4), 0.05);
+        let mut s1 = RustSampler::new(top.clone(), 8, 3).with_threads(1);
+        let mut s2 = RustSampler::new(top.clone(), 8, 3).with_threads(4);
+        let a = measure_mixing(&mut s1, &params, 1.0, 200).unwrap();
+        let b = measure_mixing(&mut s2, &params, 1.0, 200).unwrap();
+        assert_eq!(a.autocorr, b.autocorr);
+        assert_eq!(a.tau_iters, b.tau_iters);
+    }
+
     #[test]
     fn mebm_is_single_layer() {
         let top = graph::build("t", 6, "G8", 9, 0).unwrap();

@@ -20,6 +20,8 @@ pub struct FigOpts {
     pub fast: bool,
     pub artifacts: String,
     pub seed: u64,
+    /// Worker threads for the chain-parallel Gibbs engine (`--threads`).
+    pub threads: usize,
 }
 
 impl FigOpts {
@@ -29,6 +31,7 @@ impl FigOpts {
             fast: args.bool_flag("fast"),
             artifacts: args.str_opt("artifacts", "artifacts"),
             seed: args.usize_opt("seed", 0)? as u64,
+            threads: args.usize_opt("threads", crate::util::threadpool::default_threads())?,
         })
     }
 

@@ -61,7 +61,7 @@ pub fn quick_train(
         k_eval: 2 * k_train,
         seed: opts.seed + 77,
     };
-    let sampler = RustSampler::new(top.clone(), 32, opts.seed + 5);
+    let sampler = RustSampler::new(top.clone(), 32, opts.seed + 5).with_threads(opts.threads);
     let mut tr = Trainer::new(sampler, dtm, cfg, data.to_vec())?;
     tr.run(data)?;
     Ok(tr)
@@ -367,7 +367,7 @@ pub fn fig18(opts: &FigOpts) -> Result<()> {
         k_eval: 60,
         seed: opts.seed + 77,
     };
-    let sampler = RustSampler::new(top.clone(), 32, opts.seed + 5);
+    let sampler = RustSampler::new(top.clone(), 32, opts.seed + 5).with_threads(opts.threads);
     let mut tr = Trainer::new(sampler, dtm, cfg, data.to_vec())?;
     let mut csv = Csv::new(&["epoch", "pfid", "tau_iters"]);
     for epoch in 0..epochs {

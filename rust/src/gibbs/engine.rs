@@ -1,0 +1,403 @@
+//! Precompiled color-partitioned sweep engine — the software stand-in for
+//! the DTCA's massively parallel two-color update fabric, and the L1 hot
+//! path of every pure-Rust substrate (trainer, figures, MEBM, serving).
+//!
+//! [`SweepPlan::new`] compiles a `(Topology, Machine, cmask)` triple once
+//! into per-color update lists: unclamped nodes grouped by color in scalar
+//! sweep order, each with its non-padding `(weight, neighbor)` pairs
+//! gathered into contiguous arrays. The per-update inner loop is then a
+//! pure gather/multiply-add with no color test, no clamp test, and no
+//! padding slots — the branchy per-node checks the scalar
+//! [`super::halfsweep`] pays on every visit are paid once at plan time.
+//!
+//! Chains execute batch-parallel over `util::threadpool::parallel_map`
+//! with per-chain [`Rng::fork`] streams forked chain-major from the caller
+//! RNG *before* dispatch, so results for a given seed are bit-identical
+//! for every thread count (1 included). The scalar `halfsweep` remains the
+//! reference oracle: running it chain by chain on the same forked streams
+//! reproduces the engine bit for bit (see `tests/engine_equivalence.rs`).
+//!
+//! [`run_stats`] additionally fuses sufficient-statistics accumulation
+//! into each chain's post-burn sweep loop (over the plan's non-padding
+//! slot list), removing the separate O(B·N·D) `SweepStats::accumulate`
+//! pass per kept sweep.
+
+use crate::graph::Topology;
+use crate::util::rng::Rng;
+use crate::util::threadpool::parallel_map;
+
+use super::{sigmoid, Chains, Machine, SweepStats};
+
+/// One color class's compiled update list (struct-of-arrays layout).
+struct ColorPlan {
+    /// Node ids to update, ascending (the scalar sweep order).
+    nodes: Vec<u32>,
+    /// Per listed node: bias h\[i\].
+    bias: Vec<f32>,
+    /// Per listed node: forward coupling gm\[i\].
+    gm: Vec<f32>,
+    /// Prefix offsets into `w`/`nbr`; len = nodes.len() + 1.
+    off: Vec<u32>,
+    /// Gathered non-padding weights, slot order preserved.
+    w: Vec<f32>,
+    /// Gathered neighbor indices aligned with `w`.
+    nbr: Vec<u32>,
+}
+
+/// A sweep schedule precompiled for one `(Topology, Machine, cmask)`.
+pub struct SweepPlan {
+    pub n: usize,
+    pub degree: usize,
+    pub beta: f32,
+    colors: [ColorPlan; 2],
+    /// Non-padding slots `(slot, node, neighbor)` — the fused-stats gather
+    /// list (clamped nodes included: `SweepStats` counts every real slot).
+    stat_slot: Vec<u32>,
+    stat_node: Vec<u32>,
+    stat_nbr: Vec<u32>,
+}
+
+impl SweepPlan {
+    pub fn new(top: &Topology, m: &Machine, cmask: &[f32]) -> SweepPlan {
+        let n = top.n_nodes();
+        let d = top.degree;
+        assert_eq!(cmask.len(), n, "cmask length");
+        assert_eq!(m.w_slots.len(), n * d, "weight table length");
+        assert_eq!(m.h.len(), n, "bias length");
+        assert_eq!(m.gm.len(), n, "gm length");
+
+        let build_color = |c: u8| -> ColorPlan {
+            let mut cp = ColorPlan {
+                nodes: Vec::new(),
+                bias: Vec::new(),
+                gm: Vec::new(),
+                off: vec![0],
+                w: Vec::new(),
+                nbr: Vec::new(),
+            };
+            for i in 0..n {
+                if top.color[i] != c || cmask[i] > 0.5 {
+                    continue;
+                }
+                cp.nodes.push(i as u32);
+                cp.bias.push(m.h[i]);
+                cp.gm.push(m.gm[i]);
+                for k in 0..d {
+                    let s = i * d + k;
+                    if !top.pad[s] {
+                        cp.w.push(m.w_slots[s]);
+                        cp.nbr.push(top.idx[s]);
+                    }
+                }
+                cp.off.push(cp.w.len() as u32);
+            }
+            cp
+        };
+
+        let mut stat_slot = Vec::with_capacity(2 * top.n_edges());
+        let mut stat_node = Vec::with_capacity(2 * top.n_edges());
+        let mut stat_nbr = Vec::with_capacity(2 * top.n_edges());
+        for i in 0..n {
+            for k in 0..d {
+                let s = i * d + k;
+                if !top.pad[s] {
+                    stat_slot.push(s as u32);
+                    stat_node.push(i as u32);
+                    stat_nbr.push(top.idx[s]);
+                }
+            }
+        }
+
+        SweepPlan {
+            n,
+            degree: d,
+            beta: m.beta,
+            colors: [build_color(0), build_color(1)],
+            stat_slot,
+            stat_node,
+            stat_nbr,
+        }
+    }
+
+    /// Nodes updated per full sweep (unclamped nodes of both colors).
+    pub fn updates_per_sweep(&self) -> usize {
+        self.colors[0].nodes.len() + self.colors[1].nodes.len()
+    }
+
+    /// Gathered (weight, neighbor) pairs across both colors.
+    pub fn gathered_pairs(&self) -> usize {
+        self.colors[0].w.len() + self.colors[1].w.len()
+    }
+
+    #[inline]
+    fn half(&self, c: usize, s: &mut [f32], xt_row: &[f32], rng: &mut Rng) {
+        let cp = &self.colors[c];
+        let two_beta = 2.0 * self.beta;
+        for j in 0..cp.nodes.len() {
+            let i = cp.nodes[j] as usize;
+            let mut f = cp.bias[j] + cp.gm[j] * xt_row[i];
+            let (a, b) = (cp.off[j] as usize, cp.off[j + 1] as usize);
+            for t in a..b {
+                f += cp.w[t] * s[cp.nbr[t] as usize];
+            }
+            let p = sigmoid(two_beta * f);
+            s[i] = if rng.uniform_f32() < p { 1.0 } else { -1.0 };
+        }
+    }
+
+    /// One full two-color sweep of a single chain row (`s.len() == n`).
+    #[inline]
+    pub fn sweep_row(&self, s: &mut [f32], xt_row: &[f32], rng: &mut Rng) {
+        self.half(0, s, xt_row, rng);
+        self.half(1, s, xt_row, rng);
+    }
+}
+
+/// Fork one RNG stream per chain, chain-major, tag = chain id. Doing this
+/// eagerly from the caller RNG (before any dispatch) is what makes results
+/// independent of the thread count.
+fn chain_rngs(rng: &mut Rng, b: usize) -> Vec<Rng> {
+    (0..b).map(|bi| rng.fork(bi as u64)).collect()
+}
+
+/// Chain-indexed map that skips thread spawn entirely when `threads <= 1`.
+fn map_chains<T, F>(b: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if threads <= 1 {
+        (0..b).map(f).collect()
+    } else {
+        parallel_map(b, threads, f)
+    }
+}
+
+/// Run `k` full sweeps on every chain, chain-parallel across `threads`.
+pub fn run_sweeps(
+    plan: &SweepPlan,
+    chains: &mut Chains,
+    xt: &[f32],
+    k: usize,
+    threads: usize,
+    rng: &mut Rng,
+) {
+    let n = chains.n;
+    assert_eq!(plan.n, n, "plan/chains node count");
+    assert_eq!(xt.len(), chains.b * n, "xt shape");
+    let rngs = chain_rngs(rng, chains.b);
+    let rows = map_chains(chains.b, threads, |bi| {
+        let mut row = chains.row(bi).to_vec();
+        let mut r = rngs[bi].clone();
+        let xt_row = &xt[bi * n..(bi + 1) * n];
+        for _ in 0..k {
+            plan.sweep_row(&mut row, xt_row, &mut r);
+        }
+        row
+    });
+    for (bi, row) in rows.into_iter().enumerate() {
+        chains.s[bi * n..(bi + 1) * n].copy_from_slice(&row);
+    }
+}
+
+/// Run `k` sweeps per chain, accumulating `SweepStats` after `burn` sweeps
+/// inside each chain's loop (fused; no second pass over the batch).
+#[allow(clippy::too_many_arguments)]
+pub fn run_stats(
+    plan: &SweepPlan,
+    chains: &mut Chains,
+    xt: &[f32],
+    k: usize,
+    burn: usize,
+    threads: usize,
+    rng: &mut Rng,
+) -> SweepStats {
+    let n = chains.n;
+    let d = plan.degree;
+    let b = chains.b;
+    assert_eq!(plan.n, n, "plan/chains node count");
+    assert_eq!(xt.len(), b * n, "xt shape");
+    let rngs = chain_rngs(rng, b);
+    let per_chain = map_chains(b, threads, |bi| {
+        let mut row = chains.row(bi).to_vec();
+        let mut r = rngs[bi].clone();
+        let xt_row = &xt[bi * n..(bi + 1) * n];
+        let mut pair = vec![0.0f64; n * d];
+        let mut mean = vec![0.0f64; n];
+        for it in 0..k {
+            plan.sweep_row(&mut row, xt_row, &mut r);
+            if it >= burn {
+                for (acc, &v) in mean.iter_mut().zip(row.iter()) {
+                    *acc += v as f64;
+                }
+                for t in 0..plan.stat_slot.len() {
+                    let slot = plan.stat_slot[t] as usize;
+                    pair[slot] += (row[plan.stat_node[t] as usize]
+                        * row[plan.stat_nbr[t] as usize]) as f64;
+                }
+            }
+        }
+        (row, pair, mean)
+    });
+    let mut st = SweepStats::new(b, n, d);
+    st.count = k.saturating_sub(burn);
+    for (bi, (row, pair, mean)) in per_chain.into_iter().enumerate() {
+        chains.s[bi * n..(bi + 1) * n].copy_from_slice(&row);
+        for (acc, v) in st.pair.iter_mut().zip(&pair) {
+            *acc += v;
+        }
+        st.mean_b[bi * n..(bi + 1) * n].copy_from_slice(&mean);
+    }
+    st
+}
+
+/// Run `k` sweeps per chain, recording the App. G projection observable
+/// `dot(row, proj[.., 0])` after each sweep; `proj` is `[n * stride]` and
+/// column 0 is used, matching `RustSampler::trace`. Returns `[B][k]`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_trace(
+    plan: &SweepPlan,
+    chains: &mut Chains,
+    xt: &[f32],
+    k: usize,
+    proj: &[f32],
+    stride: usize,
+    threads: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<f64>> {
+    let n = chains.n;
+    assert_eq!(plan.n, n, "plan/chains node count");
+    assert_eq!(xt.len(), chains.b * n, "xt shape");
+    assert!(stride >= 1 && proj.len() >= n * stride, "projection shape");
+    let rngs = chain_rngs(rng, chains.b);
+    let per_chain = map_chains(chains.b, threads, |bi| {
+        let mut row = chains.row(bi).to_vec();
+        let mut r = rngs[bi].clone();
+        let xt_row = &xt[bi * n..(bi + 1) * n];
+        let mut series = Vec::with_capacity(k);
+        for _ in 0..k {
+            plan.sweep_row(&mut row, xt_row, &mut r);
+            let mut acc = 0.0f64;
+            for i in 0..n {
+                acc += (row[i] * proj[i * stride]) as f64;
+            }
+            series.push(acc);
+        }
+        (row, series)
+    });
+    let mut out = Vec::with_capacity(chains.b);
+    for (bi, (row, series)) in per_chain.into_iter().enumerate() {
+        chains.s[bi * n..(bi + 1) * n].copy_from_slice(&row);
+        out.push(series);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph;
+
+    fn setup(seed: u64) -> (Topology, Machine, Rng) {
+        let top = graph::build("t", 6, "G8", 9, 0).unwrap();
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> = (0..top.n_edges()).map(|_| 0.25 * rng.normal() as f32).collect();
+        let h: Vec<f32> = (0..top.n_nodes()).map(|_| 0.2 * rng.normal() as f32).collect();
+        let gm: Vec<f32> = top.data_mask().iter().map(|&x| 0.5 * x).collect();
+        let m = Machine::new(&top, &w, h, gm, 1.0);
+        (top, m, rng)
+    }
+
+    #[test]
+    fn plan_partitions_all_unclamped_nodes() {
+        let (top, m, _) = setup(0);
+        let n = top.n_nodes();
+        let free = SweepPlan::new(&top, &m, &vec![0.0; n]);
+        assert_eq!(free.updates_per_sweep(), n);
+        // Padding dropped: exactly the 2E directed slots survive gathering.
+        assert_eq!(free.gathered_pairs(), 2 * top.n_edges());
+        assert_eq!(free.stat_slot.len(), 2 * top.n_edges());
+
+        let cmask = top.data_mask();
+        let clamped = SweepPlan::new(&top, &m, &cmask);
+        let n_clamped = cmask.iter().filter(|&&x| x > 0.5).count();
+        assert_eq!(clamped.updates_per_sweep(), n - n_clamped);
+        // Stats still cover every real slot regardless of clamping.
+        assert_eq!(clamped.stat_slot.len(), 2 * top.n_edges());
+    }
+
+    #[test]
+    fn clamped_nodes_never_move() {
+        let (top, m, mut rng) = setup(1);
+        let n = top.n_nodes();
+        let b = 4;
+        let mut chains = Chains::random(b, n, &mut rng);
+        let cmask = top.data_mask();
+        let cval: Vec<f32> = (0..b * n).map(|_| rng.spin()).collect();
+        chains.impose_clamps(&cmask, &cval);
+        let xt = vec![0.0f32; b * n];
+        let plan = SweepPlan::new(&top, &m, &cmask);
+        run_sweeps(&plan, &mut chains, &xt, 10, 2, &mut rng);
+        for bi in 0..b {
+            for i in 0..n {
+                if cmask[i] > 0.5 {
+                    assert_eq!(chains.s[bi * n + i], cval[bi * n + i]);
+                }
+            }
+        }
+        assert!(chains.s.iter().all(|&x| x == 1.0 || x == -1.0));
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let (top, m, mut rng) = setup(2);
+        let n = top.n_nodes();
+        let b = 6;
+        let start = Chains::random(b, n, &mut rng);
+        let xt: Vec<f32> = (0..b * n).map(|_| rng.spin()).collect();
+        let cmask = vec![0.0f32; n];
+        let plan = SweepPlan::new(&top, &m, &cmask);
+        let mut outs = Vec::new();
+        for threads in [1usize, 2, 8] {
+            let mut chains = start.clone();
+            let mut r = Rng::new(99);
+            let st = run_stats(&plan, &mut chains, &xt, 20, 5, threads, &mut r);
+            outs.push((chains.s, st.pair, st.mean_b));
+        }
+        assert_eq!(outs[0], outs[1]);
+        assert_eq!(outs[0], outs[2]);
+    }
+
+    #[test]
+    fn fused_stats_are_bounded_and_counted() {
+        let (top, m, mut rng) = setup(3);
+        let n = top.n_nodes();
+        let mut chains = Chains::random(8, n, &mut rng);
+        let xt = vec![0.0f32; 8 * n];
+        let plan = SweepPlan::new(&top, &m, &vec![0.0; n]);
+        let st = run_stats(&plan, &mut chains, &xt, 50, 10, 4, &mut rng);
+        assert_eq!(st.count, 40);
+        assert_eq!(st.b, 8);
+        assert!(st.pair_mean().iter().all(|x| x.abs() <= 1.0 + 1e-9));
+        assert!(st.node_mean_b().iter().all(|x| x.abs() <= 1.0 + 1e-9));
+    }
+
+    #[test]
+    fn trace_series_shape_and_thread_invariance() {
+        let (top, m, mut rng) = setup(4);
+        let n = top.n_nodes();
+        let b = 3;
+        let start = Chains::random(b, n, &mut rng);
+        let xt = vec![0.0f32; b * n];
+        let proj: Vec<f32> = (0..n * 4).map(|_| rng.normal() as f32).collect();
+        let plan = SweepPlan::new(&top, &m, &vec![0.0; n]);
+        let mut c1 = start.clone();
+        let mut c2 = start.clone();
+        let s1 = run_trace(&plan, &mut c1, &xt, 15, &proj, 4, 1, &mut Rng::new(5));
+        let s2 = run_trace(&plan, &mut c2, &xt, 15, &proj, 4, 3, &mut Rng::new(5));
+        assert_eq!(s1.len(), b);
+        assert!(s1.iter().all(|c| c.len() == 15));
+        assert_eq!(s1, s2);
+        assert_eq!(c1.s, c2.s);
+    }
+}

@@ -8,6 +8,15 @@
 //!  * a CPU fallback so every substrate (MEBM sweeps, figure harness at
 //!    arbitrary graph sizes) works even with no artifacts present;
 //!  * the `bench_gibbs` comparison baseline for the hot path.
+//!
+//! The scalar `halfsweep`/`sweep` path below is the *reference oracle*;
+//! production consumers run the precompiled, chain-parallel [`engine`]
+//! (see `engine::SweepPlan`), which is bit-for-bit equivalent to running
+//! the scalar sweep chain by chain on per-chain forked RNG streams.
+
+pub mod engine;
+
+pub use engine::SweepPlan;
 
 use crate::graph::Topology;
 use crate::util::rng::Rng;
@@ -138,12 +147,19 @@ pub fn sweep(
 }
 
 /// Sufficient statistics accumulated over sweeps (matches the L2 `stats`
-/// program): per-slot pair means, per-chain node means.
+/// program): per-slot pair sums, per-chain node sums. Raw sums are kept
+/// (no per-term division in the hot loop); `pair_mean`/`node_mean_b`
+/// normalize once at read time.
 #[derive(Clone, Debug)]
 pub struct SweepStats {
-    pub pair: Vec<f64>,   // [N * D]
-    pub mean_b: Vec<f64>, // [B * N]
+    /// [N * D] raw Σ over (kept sweeps, chains) of s_i · s_{idx(i,d)}.
+    pub pair: Vec<f64>,
+    /// [B * N] per-chain raw Σ over kept sweeps of s_i.
+    pub mean_b: Vec<f64>,
+    /// Kept sweeps accumulated.
     pub count: usize,
+    /// Chains contributing to each `pair` entry per sweep.
+    pub b: usize,
 }
 
 impl SweepStats {
@@ -152,10 +168,12 @@ impl SweepStats {
             pair: vec![0.0; n * d],
             mean_b: vec![0.0; b * n],
             count: 0,
+            b,
         }
     }
 
     pub fn accumulate(&mut self, top: &Topology, chains: &Chains) {
+        debug_assert_eq!(chains.b, self.b);
         let (n, d) = (chains.n, top.degree);
         for bi in 0..chains.b {
             let row = chains.row(bi);
@@ -166,7 +184,7 @@ impl SweepStats {
                     // (matching the HLO path, which never reads them).
                     if !top.pad[i * d + k] {
                         self.pair[i * d + k] +=
-                            (row[i] * row[top.idx[i * d + k] as usize]) as f64 / chains.b as f64;
+                            (row[i] * row[top.idx[i * d + k] as usize]) as f64;
                     }
                 }
             }
@@ -174,9 +192,9 @@ impl SweepStats {
         self.count += 1;
     }
 
-    /// Normalized pair means [N*D].
+    /// Normalized pair means [N*D] (over kept sweeps × chains).
     pub fn pair_mean(&self) -> Vec<f64> {
-        let c = self.count.max(1) as f64;
+        let c = (self.count.max(1) * self.b.max(1)) as f64;
         self.pair.iter().map(|x| x / c).collect()
     }
 
@@ -214,16 +232,45 @@ pub fn run_stats(
 pub fn exact_marginals(top: &Topology, m: &Machine, xt: &[f32]) -> Vec<f64> {
     let n = top.n_nodes();
     assert!(n <= 20, "enumeration limited to N<=20");
+    let zeros = vec![0.0f32; n];
+    exact_marginals_clamped(top, m, xt, &zeros, &zeros)
+}
+
+/// Exact node marginals with clamped nodes (cmask > 0.5) held at one
+/// `cval_row` shared across chains: enumerate the free nodes only, so the
+/// free-node count (not N) bounds the state space. Clamped nodes report
+/// their clamp value. The conditional oracle for the engine equivalence
+/// suite under nonzero clamp masks.
+pub fn exact_marginals_clamped(
+    top: &Topology,
+    m: &Machine,
+    xt: &[f32],
+    cmask: &[f32],
+    cval_row: &[f32],
+) -> Vec<f64> {
+    let n = top.n_nodes();
     let d = top.degree;
+    let free: Vec<usize> = (0..n).filter(|&i| cmask[i] <= 0.5).collect();
+    assert!(free.len() <= 20, "enumeration limited to 20 free nodes");
+    let mut base: Vec<f32> = (0..n)
+        .map(|i| if cmask[i] > 0.5 { cval_row[i] } else { -1.0 })
+        .collect();
     let mut marg = vec![0.0f64; n];
     let mut z = 0.0f64;
-    let mut logps = Vec::with_capacity(1 << n);
-    let mut states: Vec<Vec<f32>> = Vec::with_capacity(1 << n);
+    let n_states = 1usize << free.len();
+    // Two passes over the same mask enumeration, regenerating `base` from
+    // the mask each time, so memory stays O(n + 2^free) instead of
+    // O(n * 2^free) (states are never materialized).
+    let mut logps = Vec::with_capacity(n_states);
     let mut max_logp = f64::NEG_INFINITY;
-    for mask in 0u32..(1u32 << n) {
-        let s: Vec<f32> = (0..n)
-            .map(|i| if mask >> i & 1 == 1 { 1.0 } else { -1.0 })
-            .collect();
+    let set_free = |base: &mut Vec<f32>, mask: u32| {
+        for (bit, &i) in free.iter().enumerate() {
+            base[i] = if mask >> bit & 1 == 1 { 1.0 } else { -1.0 };
+        }
+    };
+    for mask in 0u32..(n_states as u32) {
+        set_free(&mut base, mask);
+        let s = &base;
         let mut pair = 0.0f64;
         let mut field = 0.0f64;
         for i in 0..n {
@@ -235,13 +282,13 @@ pub fn exact_marginals(top: &Topology, m: &Machine, xt: &[f32]) -> Vec<f64> {
         let logp = m.beta as f64 * (0.5 * pair + field);
         max_logp = max_logp.max(logp);
         logps.push(logp);
-        states.push(s);
     }
-    for (logp, s) in logps.iter().zip(&states) {
+    for (mask, logp) in logps.iter().enumerate() {
+        set_free(&mut base, mask as u32);
         let p = (logp - max_logp).exp();
         z += p;
         for i in 0..n {
-            marg[i] += p * s[i] as f64;
+            marg[i] += p * base[i] as f64;
         }
     }
     marg.iter().map(|x| x / z).collect()

@@ -25,6 +25,7 @@ use thermo_dtm::train::sampler::{HloSampler, LayerSampler, RustSampler};
 use thermo_dtm::train::trainer::{TrainConfig, Trainer};
 use thermo_dtm::util::cli::Args;
 use thermo_dtm::util::rng::Rng;
+use thermo_dtm::util::threadpool::default_threads;
 
 fn main() {
     if let Err(e) = run() {
@@ -60,7 +61,7 @@ fn run() -> Result<()> {
         "help" | _ => {
             println!(
                 "usage: repro <selfcheck|topology|train|generate|serve|figures|energy-report> [--flags]\n\
-                 common flags: --artifacts DIR --config dtm_m32 --fast --seed N\n\
+                 common flags: --artifacts DIR --config dtm_m32 --fast --seed N --threads N\n\
                  train:    --t-steps 4 --epochs 10 --k-train 30 --out ckpt.json --backend hlo|rust\n\
                  generate: --ckpt ckpt.json --n 64 --k 60 --backend hlo|rust\n\
                  serve:    --ckpt ckpt.json --requests 32 --req-images 8 --linger-ms 5\n\
@@ -91,7 +92,8 @@ fn make_sampler(args: &Args, cfg: &str, seed: u64) -> Result<Box<dyn LayerSample
                 Ok(rt) => rt.topology(cfg)?,
                 Err(_) => graph::build(cfg, 32, "G12", 256, 7)?,
             };
-            Ok(Box::new(RustSampler::new(top, 32, seed)))
+            let threads = args.usize_opt("threads", default_threads())?;
+            Ok(Box::new(RustSampler::new(top, 32, seed).with_threads(threads)))
         }
         other => bail!("unknown backend {other:?} (hlo|rust)"),
     }
@@ -289,7 +291,10 @@ fn serve(args: &Args) -> Result<()> {
     };
     let server = if backend == "rust" {
         let top = graph::build(&cfg_name, 32, "G12", 256, 7)?;
-        Server::spawn(cfg, dtm, move || Ok(RustSampler::new(top, 32, 13)))
+        let threads = args.usize_opt("threads", default_threads())?;
+        Server::spawn(cfg, dtm, move || {
+            Ok(RustSampler::new(top, 32, 13).with_threads(threads))
+        })
     } else {
         Server::spawn(cfg, dtm, move || {
             let rt = Runtime::open(artifacts)?;

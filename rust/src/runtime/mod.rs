@@ -5,12 +5,32 @@
 //! HLO *text* is the interchange format (the image's xla_extension 0.5.1
 //! rejects jax ≥ 0.5 serialized protos; the text parser reassigns ids).
 //!
+//! Without the `pjrt` cargo feature (the default in the offline image,
+//! where the `xla` crate is not vendored) this module compiles against
+//! `xla_stub`, which fails cleanly at `PjRtClient::cpu()`; callers already
+//! treat a failed `Runtime::open` as "artifacts unavailable" and fall back
+//! to the pure-Rust Gibbs engine.
+//!
 //! PJRT wrapper types hold raw pointers and are not `Send`; the coordinator
 //! therefore confines a `Runtime` to one *device thread* and feeds it work
 //! over channels (see `coordinator::server`), which also matches the
 //! physical picture: one DTCA chip, many requests.
 
 pub mod manifest;
+
+#[cfg(not(feature = "pjrt"))]
+mod xla_stub;
+#[cfg(not(feature = "pjrt"))]
+use xla_stub as xla;
+
+// Guard rail: the feature exists so the real dependency can be slotted in,
+// but until the `xla` crate is vendored, enabling it would only produce a
+// wall of unresolved-path errors. Remove this once the dep is added.
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "the `pjrt` feature requires the `xla` crate: vendor it, add it as an \
+     optional dependency (`pjrt = [\"dep:xla\"]`), and delete this guard"
+);
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

@@ -1,0 +1,130 @@
+//! API-compatible stand-in for the `xla` crate (PJRT bindings).
+//!
+//! The offline image does not ship the `xla` crate or the xla_extension
+//! native library, so the default feature set compiles this stub instead
+//! (see `Cargo.toml` / the `pjrt` feature). Every construction path fails
+//! cleanly at [`PjRtClient::cpu`], and all artifact-dependent code paths
+//! (HLO sampler, GPU baselines, integration tests, `bench_gibbs`'s HLO
+//! section) already treat a failed `Runtime::open` as "artifacts
+//! unavailable" and fall back to the pure-Rust Gibbs engine.
+//!
+//! Only the exact API surface `runtime/mod.rs` consumes is mirrored here;
+//! swap in the real crate by enabling `pjrt` once `xla` is vendored.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` closely enough for our call sites:
+/// `Debug` formatting plus `std::error::Error` so `?` converts into anyhow.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable<T>() -> Result<T, XlaError> {
+    Err(XlaError(
+        "PJRT unavailable: built without the `pjrt` feature (xla crate not vendored)".into(),
+    ))
+}
+
+/// Element types the stub's `Literal` pretends to carry.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for u32 {}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, XlaError> {
+        unavailable()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        unavailable()
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, XlaError> {
+        unavailable()
+    }
+}
+
+pub struct ArrayShape;
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &[]
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, XlaError> {
+        unavailable()
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        unavailable()
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "pjrt-unavailable".into()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("PJRT unavailable"));
+    }
+}

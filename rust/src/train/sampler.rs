@@ -3,16 +3,20 @@
 //! Two interchangeable implementations:
 //!  * [`HloSampler`] — the production hot path; chains the AOT-compiled
 //!    chunked programs (L2/L1) through the PJRT runtime.
-//!  * [`RustSampler`] — the pure-Rust reference sampler; used for tests,
-//!    artifact-free operation at arbitrary graph sizes, and as the
-//!    `bench_gibbs` baseline.
+//!  * [`RustSampler`] — the pure-Rust sampler, running the precompiled
+//!    color-partitioned `gibbs::engine` chain-parallel across a
+//!    configurable worker count (`with_threads`, default
+//!    `util::threadpool::default_threads()`); per-chain forked RNG streams
+//!    make results bit-identical for every thread count at a given seed.
+//!    Used for tests, artifact-free operation at arbitrary graph sizes,
+//!    and as the `bench_gibbs` baseline.
 //!
 //! Integration tests assert the two produce statistically identical results
 //! on the same topology/parameters.
 
 use anyhow::Result;
 
-use crate::gibbs;
+use crate::gibbs::{self, engine, engine::SweepPlan};
 use crate::graph::Topology;
 use crate::model::LayerParams;
 use crate::runtime::{DtmExec, LayerInputs, Tensor};
@@ -134,6 +138,7 @@ pub struct RustSampler {
     top: Topology,
     batch: usize,
     rng: Rng,
+    threads: usize,
     proj: Vec<f32>, // [N * P] fixed random projection for trace()
     proj_dim: usize,
 }
@@ -150,9 +155,21 @@ impl RustSampler {
             top,
             batch,
             rng,
+            threads: crate::util::threadpool::default_threads(),
             proj,
             proj_dim,
         }
+    }
+
+    /// Set the chain-parallel worker count (results are identical for any
+    /// value at a given seed; this only trades wall-clock).
+    pub fn with_threads(mut self, threads: usize) -> RustSampler {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     fn machine(&self, params: &LayerParams, gm: &[f32], beta: f32) -> gibbs::Machine {
@@ -183,7 +200,8 @@ impl LayerSampler for RustSampler {
         let m = self.machine(params, gm, beta);
         let mut chains = gibbs::Chains::random(self.batch, self.top.n_nodes(), &mut self.rng);
         chains.impose_clamps(cmask, cval);
-        let st = gibbs::run_stats(&self.top, &m, &mut chains, xt, cmask, k, burn, &mut self.rng);
+        let plan = SweepPlan::new(&self.top, &m, cmask);
+        let st = engine::run_stats(&plan, &mut chains, xt, k, burn, self.threads, &mut self.rng);
         Ok(LayerStats {
             pair: st.pair_mean(),
             mean_b: st.node_mean_b(),
@@ -211,9 +229,8 @@ impl LayerSampler for RustSampler {
             None => gibbs::Chains::random(self.batch, n, &mut self.rng),
         };
         let cmask = vec![0.0f32; n];
-        for _ in 0..k {
-            gibbs::sweep(&self.top, &m, &mut chains, xt, &cmask, &mut self.rng);
-        }
+        let plan = SweepPlan::new(&self.top, &m, &cmask);
+        engine::run_sweeps(&plan, &mut chains, xt, k, self.threads, &mut self.rng);
         Ok(chains.s)
     }
 
@@ -229,19 +246,18 @@ impl LayerSampler for RustSampler {
         let n = self.top.n_nodes();
         let mut chains = gibbs::Chains::random(self.batch, n, &mut self.rng);
         let cmask = vec![0.0f32; n];
-        let mut series = vec![Vec::with_capacity(k); self.batch];
-        for _ in 0..k {
-            gibbs::sweep(&self.top, &m, &mut chains, xt, &cmask, &mut self.rng);
-            for (bi, out) in series.iter_mut().enumerate() {
-                let row = chains.row(bi);
-                // First projection component as the scalar observable.
-                let mut acc = 0.0f64;
-                for i in 0..n {
-                    acc += (row[i] * self.proj[i * self.proj_dim]) as f64;
-                }
-                out.push(acc);
-            }
-        }
+        let plan = SweepPlan::new(&self.top, &m, &cmask);
+        // First projection component as the scalar observable.
+        let series = engine::run_trace(
+            &plan,
+            &mut chains,
+            xt,
+            k,
+            &self.proj,
+            self.proj_dim,
+            self.threads,
+            &mut self.rng,
+        );
         Ok(series)
     }
 }
@@ -490,6 +506,28 @@ mod tests {
             .unwrap();
         assert_eq!(tr.len(), 3);
         assert!(tr.iter().all(|c| c.len() == 15));
+    }
+
+    #[test]
+    fn rust_sampler_results_thread_invariant() {
+        let top = graph::build("t", 6, "G8", 9, 0).unwrap();
+        let n = top.n_nodes();
+        let params = LayerParams::init(&top, &mut Rng::new(1), 0.15);
+        let gm = vec![0.0f32; n];
+        let xt = vec![0.0f32; 4 * n];
+        let cmask = vec![0.0f32; n];
+        let cval = vec![0.0f32; 4 * n];
+        let run = |threads: usize| {
+            let mut s = RustSampler::new(top.clone(), 4, 9).with_threads(threads);
+            let st = s.stats(&params, &gm, 1.0, &xt, &cmask, &cval, 30, 5).unwrap();
+            let smp = s.sample(&params, &gm, 1.0, &xt, None, 10).unwrap();
+            (st.pair, st.mean_b, smp)
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+        assert_eq!(a.2, b.2);
     }
 
     #[test]

@@ -345,6 +345,34 @@ mod tests {
         assert!(tr.log.iter().all(|r| r.lambdas.len() == 2));
     }
 
+    /// The sampler's chain-parallel engine forks per-chain RNG streams, so
+    /// a full gradient step is bit-identical for any worker count.
+    #[test]
+    fn train_batch_deterministic_across_sampler_threads() {
+        let top = graph::build("t", 6, "G8", 16, 0).unwrap();
+        let mut rng = Rng::new(8);
+        let data: Vec<f32> = (0..32 * 16).map(|_| rng.spin()).collect();
+        let cfg = TrainConfig {
+            epochs: 1,
+            batches_per_epoch: 1,
+            k_train: 20,
+            burn: 5,
+            eval_every: 0,
+            ..TrainConfig::default()
+        };
+        let run = |threads: usize| {
+            let sampler = RustSampler::new(top.clone(), 8, 3).with_threads(threads);
+            let dtm = Dtm::init("t", &top, 2, 3.0, 1);
+            let mut tr = Trainer::new(sampler, dtm, cfg.clone(), data.clone()).unwrap();
+            tr.train_batch(&data).unwrap();
+            (tr.dtm.layers[0].w_edges.clone(), tr.dtm.layers[0].h.clone())
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a.0, b.0, "weights diverged across thread counts");
+        assert_eq!(a.1, b.1, "biases diverged across thread counts");
+    }
+
     #[test]
     fn rejects_mismatched_eval_ref() {
         let top = graph::build("t", 6, "G8", 16, 0).unwrap();

@@ -1,8 +1,11 @@
 //! Offline substrates: PRNG, JSON, CLI parsing, thread pool, CSV.
 //!
-//! The build environment has no network access and only the `xla`/`anyhow`
-//! crates vendored, so the usual ecosystem pieces (rand, serde_json, clap,
-//! rayon/tokio) are implemented here at the size this project needs.
+//! The build environment has no network access: `anyhow` is vendored
+//! in-tree (`rust/vendor/anyhow`, a minimal API-compatible subset), the
+//! `xla` PJRT dependency is gated behind the off-by-default `pjrt` feature
+//! (see `runtime/xla_stub.rs`), and the usual ecosystem pieces (rand,
+//! serde_json, clap, rayon/tokio) are implemented here at the size this
+//! project needs.
 
 pub mod cli;
 pub mod csv;

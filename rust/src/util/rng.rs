@@ -56,10 +56,22 @@ impl Rng {
         (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
     }
 
-    /// Uniform integer in [0, n).
+    /// Uniform integer in [0, n), free of modulo bias (Lemire's widening
+    /// multiply with rejection: accept unless the low 64 bits of x·n fall
+    /// in the first 2^64 mod n values). Panics if `n == 0`.
     #[inline]
     pub fn below(&mut self, n: usize) -> usize {
-        (self.next_u64() % n as u64) as usize
+        assert!(n > 0, "below(0)");
+        let n = n as u64;
+        let mut m = (self.next_u64() as u128) * (n as u128);
+        if (m as u64) < n {
+            // 2^64 mod n, computed as (2^64 - n) mod n.
+            let t = n.wrapping_neg() % n;
+            while (m as u64) < t {
+                m = (self.next_u64() as u128) * (n as u128);
+            }
+        }
+        (m >> 64) as usize
     }
 
     /// Standard normal via Box–Muller.
@@ -143,6 +155,30 @@ mod tests {
         let mut r = Rng::new(3);
         let sum: f32 = (0..10_000).map(|_| r.spin()).sum();
         assert!(sum.abs() < 300.0);
+    }
+
+    #[test]
+    fn below_in_range_and_unbiased() {
+        let mut r = Rng::new(7);
+        let n = 6usize;
+        let mut counts = [0usize; 6];
+        let trials = 60_000;
+        for _ in 0..trials {
+            let v = r.below(n);
+            assert!(v < n);
+            counts[v] += 1;
+        }
+        // With the old modulo method the bias for tiny n is invisible, but
+        // the rejection method must still be uniform: each bucket within 5%
+        // of trials/n (~5.5 sigma).
+        let expect = (trials / n) as f64;
+        for &c in &counts {
+            assert!(
+                (c as f64 - expect).abs() < 0.05 * expect,
+                "count {c} vs expected {expect}"
+            );
+        }
+        assert_eq!(r.below(1), 0);
     }
 
     #[test]

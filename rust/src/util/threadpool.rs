@@ -68,6 +68,20 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Default worker count for chain-parallel work: `THERMO_DTM_THREADS` if
+/// set (and nonzero), else the machine's available parallelism.
+pub fn default_threads() -> usize {
+    std::env::var("THERMO_DTM_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&t| t > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}
+
 /// Run `f(i)` for i in 0..n across `threads` OS threads, collecting results
 /// in order. Panics in workers propagate.
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
@@ -123,5 +137,10 @@ mod tests {
     #[test]
     fn parallel_map_single_item() {
         assert_eq!(parallel_map(1, 8, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
     }
 }

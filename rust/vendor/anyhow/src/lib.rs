@@ -1,0 +1,234 @@
+//! Minimal in-tree stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access, so the subset of anyhow this
+//! project actually uses is implemented here as a path dependency: `Result`,
+//! `Error`, the `anyhow!` / `bail!` / `ensure!` macros, and the `Context`
+//! extension trait (`.context(..)` / `.with_context(..)` on both `Result`
+//! and `Option`). Errors are stored as a flattened message chain (outermost
+//! context first, root cause last); `{:#}` prints the full chain like the
+//! real crate does.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the same defaulted error type as anyhow.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-chain error: the outermost context first, the root cause last.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The message chain, outermost context first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` prints the whole chain, outermost first, like anyhow.
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`; that is what makes this blanket `From` (used by `?`)
+// coherent alongside core's reflexive `impl From<T> for T`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+mod private {
+    /// Conversion into `Error` from both std errors and `Error` itself.
+    /// Two impls that cannot overlap because `Error: !std::error::Error`.
+    pub trait IntoAnyhow {
+        fn into_anyhow(self) -> super::Error;
+    }
+
+    impl<E> IntoAnyhow for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_anyhow(self) -> super::Error {
+            super::Error::from(self)
+        }
+    }
+
+    impl IntoAnyhow for super::Error {
+        fn into_anyhow(self) -> super::Error {
+            self
+        }
+    }
+}
+
+use private::IntoAnyhow;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: IntoAnyhow> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_anyhow().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_anyhow().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(format!("{e}"), "missing file");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_display() {
+        let e: Result<()> = Err(io_err());
+        let e = e.context("opening config").unwrap_err();
+        assert_eq!(format!("{e}"), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: missing file");
+        assert_eq!(e.root_cause(), "missing file");
+    }
+
+    #[test]
+    fn with_context_on_anyhow_result_and_option() {
+        let r: Result<()> = Err(anyhow!("root {}", 7));
+        let e = r.with_context(|| format!("step {}", 1)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 1: root 7");
+        let o: Option<u32> = None;
+        assert_eq!(format!("{}", o.context("empty").unwrap_err()), "empty");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 100 {
+                bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(f(-1).is_err());
+        assert_eq!(format!("{}", f(101).unwrap_err()), "too big: 101");
+    }
+
+    #[test]
+    fn debug_prints_cause_chain() {
+        let e = Error::msg("root").context("mid").context("outer");
+        let d = format!("{e:?}");
+        assert!(d.starts_with("outer"));
+        assert!(d.contains("Caused by:"));
+        assert!(d.contains("root"));
+    }
+}
