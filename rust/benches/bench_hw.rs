@@ -1,0 +1,91 @@
+//! bench_hw: the emulated-device backend — end-to-end image generation
+//! through the denoising pipeline on `hw::HwSampler`, across grid sizes.
+//! Reports samples/second (host wall-clock of the emulator) alongside the
+//! model-derived joules-per-image and emulated device time, both computed
+//! from the schedule the array *actually executed* (cells × phases ×
+//! sweeps × programs priced through the App. E device model). Writes a
+//! machine-readable `BENCH_hw.json` at the repo root next to
+//! `BENCH_gibbs.json`.
+
+use std::path::PathBuf;
+
+use thermo_dtm::bench::Bencher;
+use thermo_dtm::coordinator::pipeline::generate_images;
+use thermo_dtm::energy::DeviceParams;
+use thermo_dtm::graph;
+use thermo_dtm::hw::{HwConfig, HwSampler};
+use thermo_dtm::model::Dtm;
+use thermo_dtm::util::json::{self, Value};
+use thermo_dtm::util::rng::Rng;
+use thermo_dtm::util::threadpool::default_threads;
+
+fn main() {
+    let mut b = Bencher::new("hw_array");
+    b.target = std::time::Duration::from_secs(1);
+    let threads = default_threads();
+    let dev = DeviceParams::default();
+    let t_layers = 2usize;
+    let k = 10usize;
+    let batch = 16usize;
+
+    let mut entries: Vec<Value> = Vec::new();
+    for (l, pat) in [(12usize, "G8"), (16, "G8"), (24, "G12")] {
+        let n_data = l * l / 4;
+        let top = graph::build("bench_hw", l, pat, n_data, 0).unwrap();
+        let dtm = Dtm::init("bench_hw", &top, t_layers, 3.0, 1);
+        let mut sampler = HwSampler::new(top.clone(), batch, HwConfig::default(), 3)
+            .with_threads(threads);
+        let mut rng = Rng::new(5);
+        let name = format!("hw_L{l}_{pat}_B{batch}_T{t_layers}_K{k}");
+        let samples_per_sec = b
+            .iter_items(&name, batch as f64, || {
+                let _ = generate_images(&mut sampler, &dtm, k, batch, &mut rng).unwrap();
+            })
+            .throughput();
+
+        // Joules per image from the executed schedule (warmup iterations
+        // accumulate in both the energy meter and the program count, so
+        // the ratio is exact).
+        let sched = *sampler.schedule();
+        let energy = sampler.energy(&dev).unwrap();
+        let images = sched.programs as f64 / t_layers as f64;
+        let joules_per_image = energy.total() / images.max(1.0);
+        let device_s_per_image = sampler.device_seconds() / images.max(1.0);
+
+        entries.push(json::obj(vec![
+            ("name", Value::Str(name)),
+            ("grid", Value::Num(l as f64)),
+            ("pattern", Value::Str(pat.to_string())),
+            ("batch", Value::Num(batch as f64)),
+            ("t_layers", Value::Num(t_layers as f64)),
+            ("k_per_layer", Value::Num(k as f64)),
+            ("samples_per_sec", Value::Num(samples_per_sec)),
+            ("joules_per_image", Value::Num(joules_per_image)),
+            ("device_seconds_per_image", Value::Num(device_s_per_image)),
+            ("cell_updates", Value::Num(sched.cell_updates as f64)),
+            ("rng_joules", Value::Num(energy.rng_j)),
+            ("io_joules", Value::Num(energy.io_j)),
+        ]));
+        println!(
+            "  -> {joules_per_image:.3e} J/image (model), {:.1} us/image (device)",
+            device_s_per_image * 1e6
+        );
+    }
+
+    b.report();
+
+    let root = json::obj(vec![
+        ("bench", Value::Str("hw_array".into())),
+        ("threads", Value::Num(threads as f64)),
+        ("configs", Value::Arr(entries)),
+    ]);
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| PathBuf::from("."))
+        .join("BENCH_hw.json");
+    match std::fs::write(&path, json::write(&root)) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", path.display()),
+    }
+}

@@ -35,10 +35,11 @@ pub fn measure_mixing<S: LayerSampler>(
     let b = sampler.batch();
     let gm = vec![0.0f32; n];
     let xt = vec![0.0f32; b * n];
-    let series = sampler.trace(params, &gm, beta, &xt, window)?;
-    // Drop a warm-up prefix.
+    // Drop a warm-up prefix: only the final window-minus-warm observations
+    // are kept (streamed through a ring buffer by samplers that support it,
+    // so Fig. 16-scale windows don't materialize the full series).
     let warm = window / 5;
-    let tail: Vec<Vec<f64>> = series.iter().map(|c| c[warm..].to_vec()).collect();
+    let tail = sampler.trace_tail(params, &gm, beta, &xt, window, window - warm)?;
     let max_lag = (window - warm) / 2;
     let r = metrics::autocorrelation(&tail, max_lag);
     // Fit only the decaying region (before r falls into sampling noise);

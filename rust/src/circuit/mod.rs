@@ -167,6 +167,11 @@ impl Corner {
         }
     }
 
+    /// Inverse of [`Corner::name`] (CLI parsing).
+    pub fn from_name(name: &str) -> Option<Corner> {
+        Corner::all().into_iter().find(|c| c.name() == name)
+    }
+
     /// Systematic threshold-voltage shifts (dVth_n, dVth_p) [V].
     pub fn vth_shift(&self) -> (f64, f64) {
         let s = 0.030; // 30 mV corner skew
@@ -185,13 +190,26 @@ pub struct CornerSample {
     pub energy_j: f64,
 }
 
-/// PDK-style Monte-Carlo: draw `n` device instances at a corner; each gets
-/// intra-die mismatch dVth ~ N(0, sigma_mm). Subthreshold current scales as
+/// Subthreshold slope factor n_f of the Fig. 4c device model.
+pub const SUBTHRESHOLD_SLOPE_FACTOR: f64 = 1.3;
+
+/// The subthreshold mapping from one instance's threshold-voltage shifts
+/// to (tau_0 [s], static power [W]): currents scale as
 /// exp(-dVth / (n_f V_T)); the (asymmetric) design's speed tracks the NMOS
-/// branch while static power tracks both branches.
+/// pull-down while static power tracks both branches. Shared by
+/// [`corner_monte_carlo`] and the `hw::CellFabric` fabrication model so
+/// the two can never drift apart.
+pub fn device_speed_power(base: &RngCellParams, dvth_n: f64, dvth_p: f64) -> (f64, f64) {
+    let i_n = (-dvth_n / (SUBTHRESHOLD_SLOPE_FACTOR * V_THERMAL)).exp();
+    let i_p = (-dvth_p / (SUBTHRESHOLD_SLOPE_FACTOR * V_THERMAL)).exp();
+    (base.tau_noise / i_n, base.power * 0.5 * (i_n + i_p))
+}
+
+/// PDK-style Monte-Carlo: draw `n` device instances at a corner; each gets
+/// intra-die mismatch dVth ~ N(0, sigma_mm), mapped through
+/// [`device_speed_power`].
 pub fn corner_monte_carlo(corner: Corner, n: usize, seed: u64) -> Vec<CornerSample> {
     let base = RngCellParams::default();
-    let n_f = 1.3; // subthreshold slope factor
     let sigma_mm = 0.006; // 6 mV intra-die mismatch
     let (dn_sys, dp_sys) = corner.vth_shift();
     let mut rng = Rng::new(seed ^ corner_tag(corner));
@@ -199,12 +217,7 @@ pub fn corner_monte_carlo(corner: Corner, n: usize, seed: u64) -> Vec<CornerSamp
         .map(|_| {
             let dvn = dn_sys + sigma_mm * rng.normal();
             let dvp = dp_sys + sigma_mm * rng.normal();
-            let i_n = (-dvn / (n_f * V_THERMAL)).exp();
-            let i_p = (-dvp / (n_f * V_THERMAL)).exp();
-            // Speed limited by the NMOS pull-down (design asymmetry).
-            let tau0 = base.tau_noise / i_n;
-            // Static power from both branches.
-            let power = base.power * 0.5 * (i_n + i_p);
+            let (tau0, power) = device_speed_power(&base, dvn, dvp);
             CornerSample {
                 tau0_s: tau0,
                 energy_j: power * tau0,

@@ -116,6 +116,14 @@ pub struct ProgramEnergy {
     pub total: f64,
 }
 
+/// Per-node init/readout I/O energy (Eq. E16/E17): drive a boundary-to-bulk
+/// wire of length L (chip side). Shared by [`denoising_energy`] and the
+/// `hw::HwSampler` schedule pricing so the two paths can never drift apart.
+pub fn io_energy_per_node(p: &DeviceParams, grid: usize) -> f64 {
+    let chip_side_um = grid as f64 * p.cell_side_um;
+    0.5 * p.eta_wire * chip_side_um * p.v_clock * p.v_clock
+}
+
 /// Energy of a T-layer denoising program on an L x L grid with `k` Gibbs
 /// iterations per layer and `n_data` readout nodes.
 pub fn denoising_energy(
@@ -130,9 +138,7 @@ pub fn denoising_energy(
     let cell = cell_energy(p, pattern)?;
     // Eq. E15.
     let e_samp = k as f64 * n * cell.total();
-    // Eq. E16/E17: drive a boundary-to-bulk wire of length L (chip side).
-    let chip_side_um = grid as f64 * p.cell_side_um;
-    let io = 0.5 * p.eta_wire * chip_side_um * p.v_clock * p.v_clock;
+    let io = io_energy_per_node(p, grid);
     let e_init = n * io;
     let e_read = n_data as f64 * io;
     let per_layer = e_samp + e_init + e_read;

@@ -1,0 +1,195 @@
+//! Fidelity-frontier scenarios for the `hw::` DTCA emulator (not paper
+//! figures — the follow-on studies the emulator unlocks):
+//!
+//! * `hwbits` — DAC resolution vs conditional-marginal fidelity: how many
+//!   weight bits the array needs before it samples like the ideal engine.
+//! * `hwautocorr` — phase-clock period vs mixing: clocking faster than the
+//!   RNG decorrelates trades wall-clock for correlated draws and longer
+//!   effective mixing (the tau_0 side of App. E's speed story).
+//! * `hwcorners` — process-corner robustness: fidelity and energy/update
+//!   across the Fig. 4c corners on the same programs.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::baselines::mebm;
+use crate::circuit::Corner;
+use crate::energy::DeviceParams;
+use crate::gibbs::{self, engine::SweepTopo, Chains, Machine};
+use crate::graph::{self, Topology};
+use crate::hw::{CellFabric, HwArray, HwConfig, HwSampler};
+use crate::model::LayerParams;
+use crate::util::csv::Csv;
+use crate::util::rng::Rng;
+
+use super::FigOpts;
+
+/// The shared small conditional problem: grid-4 G8, data nodes clamped to
+/// a random row, exact marginals by enumeration.
+struct Conditional {
+    top: Topology,
+    m: Machine,
+    cmask: Vec<f32>,
+    cval_row: Vec<f32>,
+    exact: Vec<f64>,
+}
+
+fn conditional(seed: u64) -> Conditional {
+    let top = graph::build("hwfid", 4, "G8", 6, 0).unwrap();
+    let n = top.n_nodes();
+    let mut rng = Rng::new(seed);
+    let w: Vec<f32> = (0..top.n_edges()).map(|_| 0.25 * rng.normal() as f32).collect();
+    let h: Vec<f32> = (0..n).map(|_| 0.2 * rng.normal() as f32).collect();
+    let gm: Vec<f32> = top.data_mask().iter().map(|&x| 0.5 * x).collect();
+    let m = Machine::new(&top, &w, h, gm, 1.0);
+    let cmask = top.data_mask();
+    let cval_row: Vec<f32> = (0..n)
+        .map(|i| if cmask[i] > 0.5 { rng.spin() } else { 0.0 })
+        .collect();
+    let xt_row = vec![0.0f32; n];
+    let exact = gibbs::exact_marginals_clamped(&top, &m, &xt_row, &cmask, &cval_row);
+    Conditional {
+        top,
+        m,
+        cmask,
+        cval_row,
+        exact,
+    }
+}
+
+/// (max, mean) absolute free-node marginal error of the emulator under
+/// `cfg` on the conditional problem.
+fn hw_marginal_err(c: &Conditional, cfg: &HwConfig, sweeps: usize, seed: u64) -> (f64, f64) {
+    let n = c.top.n_nodes();
+    let b = 32;
+    let mut rng = Rng::new(seed);
+    let mut chains = Chains::random(b, n, &mut rng);
+    let cval: Vec<f32> = (0..b).flat_map(|_| c.cval_row.clone()).collect();
+    chains.impose_clamps(&c.cmask, &cval);
+    let xt = vec![0.0f32; b * n];
+    let topo = Arc::new(SweepTopo::new(&c.top, &c.cmask));
+    let fabric = CellFabric::fabricate(n, cfg);
+    let mut arr = HwArray::new(topo, &fabric, &c.m, cfg);
+    let st = arr.run_stats(&mut chains, &xt, sweeps, sweeps / 8, 4, &mut rng);
+    let mb = st.node_mean_b();
+    let mut max_e = 0.0f64;
+    let mut sum_e = 0.0f64;
+    let mut cnt = 0usize;
+    for i in 0..n {
+        if c.cmask[i] > 0.5 {
+            continue;
+        }
+        let emp: f64 = (0..b).map(|bi| mb[bi * n + i]).sum::<f64>() / b as f64;
+        let e = (emp - c.exact[i]).abs();
+        max_e = max_e.max(e);
+        sum_e += e;
+        cnt += 1;
+    }
+    (max_e, sum_e / cnt.max(1) as f64)
+}
+
+/// DAC-resolution sweep: bits vs marginal fidelity (mismatch and RNG
+/// correlation disabled so the quantization axis is isolated).
+pub fn hwbits(opts: &FigOpts) -> Result<()> {
+    let c = conditional(opts.seed + 4);
+    let sweeps = if opts.fast { 240 } else { 500 };
+    let bits: &[u32] = if opts.fast {
+        &[2, 4, 8, 16]
+    } else {
+        &[2, 3, 4, 6, 8, 12, 16]
+    };
+    let mut csv = Csv::new(&["dac_bits", "max_marginal_err", "mean_marginal_err"]);
+    println!("{:>8} {:>14} {:>14}", "bits", "max err", "mean err");
+    for &b in bits {
+        let cfg = HwConfig::ideal().with_bits(b);
+        let (max_e, mean_e) = hw_marginal_err(&c, &cfg, sweeps, 123);
+        println!("{b:>8} {max_e:>14.4} {mean_e:>14.4}");
+        csv.row_f64(&[b as f64, max_e, mean_e]);
+    }
+    csv.save(opts.path("hwbits.csv"))?;
+    println!("(fidelity must rise monotonically with DAC resolution)");
+    Ok(())
+}
+
+/// Phase-clock sweep: resampling faster than the RNG decorrelates trades
+/// wall-clock for correlated draws and slower mixing.
+pub fn hwautocorr(opts: &FigOpts) -> Result<()> {
+    let top = graph::build("hwac", 8, "G8", 16, 0).unwrap();
+    let params = LayerParams::init(&top, &mut Rng::new(opts.seed), 0.05);
+    let window = if opts.fast { 200 } else { 400 };
+    let intervals: &[f64] = if opts.fast {
+        &[f64::INFINITY, 1.0, 0.25]
+    } else {
+        &[f64::INFINITY, 4.0, 2.0, 1.0, 0.5, 0.25]
+    };
+    let mut csv = Csv::new(&["phase_interval_tau0", "rho_typical", "tau_iters"]);
+    println!("{:>16} {:>10} {:>12}", "interval [tau0]", "rho_typ", "tau [iters]");
+    for &iv in intervals {
+        let cfg = HwConfig::default()
+            .with_interval(iv)
+            .with_mismatch(0.0)
+            .with_bits(16);
+        let mut s = HwSampler::new(top.clone(), 8, cfg, opts.seed + 1)
+            .with_threads(opts.threads);
+        let rep = mebm::measure_mixing(&mut s, &params, 1.0, window)?;
+        // Draw-to-draw correlation of a typical cell (2 phase ticks apart).
+        let rho = (-2.0 * iv).exp();
+        let tau = rep.tau_iters.unwrap_or(f64::NAN);
+        println!("{iv:>16.2} {rho:>10.3} {tau:>12.2}");
+        csv.row_f64(&[iv, rho, tau]);
+    }
+    csv.save(opts.path("hwautocorr.csv"))?;
+    println!("(faster clocking than tau_0 must lengthen effective mixing)");
+    Ok(())
+}
+
+/// Process-corner robustness: fidelity and energy/update per Fig. 4c corner.
+pub fn hwcorners(opts: &FigOpts) -> Result<()> {
+    let c = conditional(opts.seed + 4);
+    let n = c.top.n_nodes();
+    let sweeps = if opts.fast { 240 } else { 500 };
+    let mut csv = Csv::new(&[
+        "corner",
+        "mean_tau0_ns",
+        "mean_rho",
+        "rng_energy_per_update_aJ",
+        "max_marginal_err",
+    ]);
+    println!(
+        "{:<24} {:>12} {:>10} {:>14} {:>10}",
+        "corner", "tau0 [ns]", "rho", "E_rng [aJ]", "max err"
+    );
+    for corner in Corner::all() {
+        let cfg = HwConfig::default().with_corner(corner).with_seed(opts.seed);
+        let fabric = CellFabric::fabricate(n, &cfg);
+        let mean_tau0 = fabric.tau0.iter().sum::<f64>() / n as f64;
+        let mean_rho = fabric.rho.iter().map(|&r| r as f64).sum::<f64>() / n as f64;
+        let mean_ebit = fabric.e_bit.iter().sum::<f64>() / n as f64;
+        let (max_e, _) = hw_marginal_err(&c, &cfg, sweeps, 321);
+        println!(
+            "{:<24} {:>12.1} {:>10.3} {:>14.1} {:>10.4}",
+            corner.name(),
+            mean_tau0 * 1e9,
+            mean_rho,
+            mean_ebit * 1e18,
+            max_e
+        );
+        csv.row(&[
+            corner.name().to_string(),
+            format!("{:.3}", mean_tau0 * 1e9),
+            format!("{:.4}", mean_rho),
+            format!("{:.3}", mean_ebit * 1e18),
+            format!("{:.4}", max_e),
+        ]);
+    }
+    csv.save(opts.path("hwcorners.csv"))?;
+    // Context: what the App. E model charges an ideal-device update.
+    let cell = crate::energy::cell_energy(&DeviceParams::default(), &c.top.pattern)?;
+    println!(
+        "(device model non-RNG update energy at {}: {:.0} aJ)",
+        c.top.pattern,
+        (cell.e_bias + cell.e_clock + cell.e_comm) * 1e18
+    );
+    Ok(())
+}

@@ -6,6 +6,7 @@
 pub mod circuits;
 pub mod energyfigs;
 pub mod frontier;
+pub mod hwfidelity;
 pub mod training;
 
 use anyhow::{bail, Result};
@@ -43,7 +44,7 @@ impl FigOpts {
 pub const ALL_FIGURES: &[&str] = &[
     "fig1", "fig2b", "fig4a", "fig4b", "fig4c", "fig5a", "fig5b", "fig5c",
     "fig6", "fig7", "fig11", "fig12a", "fig12b", "fig13", "fig14", "fig16",
-    "fig17", "fig18", "table3",
+    "fig17", "fig18", "table3", "hwbits", "hwautocorr", "hwcorners",
 ];
 
 /// Dispatch one figure id (or "all").
@@ -75,6 +76,9 @@ pub fn run(id: &str, opts: &FigOpts) -> Result<()> {
         "fig17" => training::fig17(opts),
         "fig18" => training::fig18(opts),
         "table3" => frontier::table3(opts),
+        "hwbits" => hwfidelity::hwbits(opts),
+        "hwautocorr" => hwfidelity::hwautocorr(opts),
+        "hwcorners" => hwfidelity::hwcorners(opts),
         other => bail!("unknown figure id {other:?}; known: {:?} or 'all'", ALL_FIGURES),
     }
 }

@@ -2,54 +2,70 @@
 //! the DTCA's massively parallel two-color update fabric, and the L1 hot
 //! path of every pure-Rust substrate (trainer, figures, MEBM, serving).
 //!
-//! [`SweepPlan::new`] compiles a `(Topology, Machine, cmask)` triple once
-//! into per-color update lists: unclamped nodes grouped by color in scalar
-//! sweep order, each with its non-padding `(weight, neighbor)` pairs
-//! gathered into contiguous arrays. The per-update inner loop is then a
-//! pure gather/multiply-add with no color test, no clamp test, and no
-//! padding slots — the branchy per-node checks the scalar
-//! [`super::halfsweep`] pays on every visit are paid once at plan time.
+//! Plan compilation is split in two so consumers can amortize each part at
+//! its own natural rate:
 //!
-//! Chains execute batch-parallel over `util::threadpool::parallel_map`
-//! with per-chain [`Rng::fork`] streams forked chain-major from the caller
-//! RNG *before* dispatch, so results for a given seed are bit-identical
-//! for every thread count (1 included). The scalar `halfsweep` remains the
-//! reference oracle: running it chain by chain on the same forked streams
-//! reproduces the engine bit for bit (see `tests/engine_equivalence.rs`).
+//! * [`SweepTopo`] compiles a `(Topology, cmask)` pair once into per-color
+//!   update lists: unclamped nodes grouped by color in scalar sweep order,
+//!   each with its non-padding slot/neighbor pairs gathered into contiguous
+//!   arrays, plus the fused-stats slot list. This is the O(N·D) branchy
+//!   gather — it only depends on the graph and the clamp mask, so the
+//!   trainer reuses one topo across every iteration of a layer (weights
+//!   change every step; the mask does not).
+//! * [`SweepPlan::from_topo`] gathers the *weights* (bias/gm/coupling)
+//!   against an existing topo — a branch-free O(E) copy — and
+//!   [`SweepPlan::reweight`] refreshes them in place.
+//!
+//! [`SweepPlan::new`] composes both for one-shot callers. The per-update
+//! inner loop is a pure gather/multiply-add with no color test, no clamp
+//! test, and no padding slots — the branchy per-node checks the scalar
+//! [`super::halfsweep`] pays on every visit are paid once at topo time.
+//!
+//! Chains execute batch-parallel over the shared persistent worker pool
+//! (`util::threadpool::pooled_map`) with per-chain [`Rng::fork`] streams
+//! forked chain-major from the caller RNG *before* dispatch, so results for
+//! a given seed are bit-identical for every thread count (1 included). The
+//! scalar `halfsweep` remains the reference oracle: running it chain by
+//! chain on the same forked streams reproduces the engine bit for bit (see
+//! `tests/engine_equivalence.rs`).
 //!
 //! [`run_stats`] additionally fuses sufficient-statistics accumulation
 //! into each chain's post-burn sweep loop (over the plan's non-padding
 //! slot list), removing the separate O(B·N·D) `SweepStats::accumulate`
-//! pass per kept sweep.
+//! pass per kept sweep. [`run_trace_tail`] streams the App. G observable
+//! through a fixed-size `util::ring::RingBuf`, so Fig. 16-scale windows
+//! cost O(keep) memory per chain instead of O(k).
+
+use std::sync::Arc;
 
 use crate::graph::Topology;
+use crate::util::ring::RingBuf;
 use crate::util::rng::Rng;
-use crate::util::threadpool::parallel_map;
+use crate::util::threadpool::pooled_map;
 
 use super::{sigmoid, Chains, Machine, SweepStats};
 
-/// One color class's compiled update list (struct-of-arrays layout).
-struct ColorPlan {
+/// One color class's compiled topology lists (struct-of-arrays layout).
+struct ColorTopo {
     /// Node ids to update, ascending (the scalar sweep order).
     nodes: Vec<u32>,
-    /// Per listed node: bias h\[i\].
-    bias: Vec<f32>,
-    /// Per listed node: forward coupling gm\[i\].
-    gm: Vec<f32>,
-    /// Prefix offsets into `w`/`nbr`; len = nodes.len() + 1.
+    /// Prefix offsets into `nbr`/`slot`; len = nodes.len() + 1.
     off: Vec<u32>,
-    /// Gathered non-padding weights, slot order preserved.
-    w: Vec<f32>,
-    /// Gathered neighbor indices aligned with `w`.
+    /// Gathered neighbor indices, slot order preserved.
     nbr: Vec<u32>,
+    /// Source slot id (i * D + k) per gathered pair — the weight-regather map.
+    slot: Vec<u32>,
 }
 
-/// A sweep schedule precompiled for one `(Topology, Machine, cmask)`.
-pub struct SweepPlan {
+/// The topology/clamp-dependent half of a sweep schedule: which nodes update
+/// in which color phase, which neighbor/slot pairs feed each update, and the
+/// non-padding slot list the fused statistics pass walks. Independent of the
+/// machine's weights, so one `SweepTopo` serves arbitrarily many
+/// [`SweepPlan`]s (and the `hw::` array emulator) on the same graph + mask.
+pub struct SweepTopo {
     pub n: usize,
     pub degree: usize,
-    pub beta: f32,
-    colors: [ColorPlan; 2],
+    colors: [ColorTopo; 2],
     /// Non-padding slots `(slot, node, neighbor)` — the fused-stats gather
     /// list (clamped nodes included: `SweepStats` counts every real slot).
     stat_slot: Vec<u32>,
@@ -57,41 +73,34 @@ pub struct SweepPlan {
     stat_nbr: Vec<u32>,
 }
 
-impl SweepPlan {
-    pub fn new(top: &Topology, m: &Machine, cmask: &[f32]) -> SweepPlan {
+impl SweepTopo {
+    pub fn new(top: &Topology, cmask: &[f32]) -> SweepTopo {
         let n = top.n_nodes();
         let d = top.degree;
         assert_eq!(cmask.len(), n, "cmask length");
-        assert_eq!(m.w_slots.len(), n * d, "weight table length");
-        assert_eq!(m.h.len(), n, "bias length");
-        assert_eq!(m.gm.len(), n, "gm length");
 
-        let build_color = |c: u8| -> ColorPlan {
-            let mut cp = ColorPlan {
+        let build_color = |c: u8| -> ColorTopo {
+            let mut ct = ColorTopo {
                 nodes: Vec::new(),
-                bias: Vec::new(),
-                gm: Vec::new(),
                 off: vec![0],
-                w: Vec::new(),
                 nbr: Vec::new(),
+                slot: Vec::new(),
             };
             for i in 0..n {
                 if top.color[i] != c || cmask[i] > 0.5 {
                     continue;
                 }
-                cp.nodes.push(i as u32);
-                cp.bias.push(m.h[i]);
-                cp.gm.push(m.gm[i]);
+                ct.nodes.push(i as u32);
                 for k in 0..d {
                     let s = i * d + k;
                     if !top.pad[s] {
-                        cp.w.push(m.w_slots[s]);
-                        cp.nbr.push(top.idx[s]);
+                        ct.nbr.push(top.idx[s]);
+                        ct.slot.push(s as u32);
                     }
                 }
-                cp.off.push(cp.w.len() as u32);
+                ct.off.push(ct.nbr.len() as u32);
             }
-            cp
+            ct
         };
 
         let mut stat_slot = Vec::with_capacity(2 * top.n_edges());
@@ -108,10 +117,9 @@ impl SweepPlan {
             }
         }
 
-        SweepPlan {
+        SweepTopo {
             n,
             degree: d,
-            beta: m.beta,
             colors: [build_color(0), build_color(1)],
             stat_slot,
             stat_node,
@@ -126,19 +134,170 @@ impl SweepPlan {
 
     /// Gathered (weight, neighbor) pairs across both colors.
     pub fn gathered_pairs(&self) -> usize {
-        self.colors[0].w.len() + self.colors[1].w.len()
+        self.colors[0].nbr.len() + self.colors[1].nbr.len()
+    }
+
+    // Crate-internal accessors for alternate executors (the `hw::` emulator
+    // shares the color partition and stats lists without re-deriving them).
+    pub(crate) fn color_nodes(&self, c: usize) -> &[u32] {
+        &self.colors[c].nodes
+    }
+
+    pub(crate) fn color_off(&self, c: usize) -> &[u32] {
+        &self.colors[c].off
+    }
+
+    pub(crate) fn color_nbr(&self, c: usize) -> &[u32] {
+        &self.colors[c].nbr
+    }
+
+    pub(crate) fn color_slot(&self, c: usize) -> &[u32] {
+        &self.colors[c].slot
+    }
+
+    pub(crate) fn stat_lists(&self) -> (&[u32], &[u32], &[u32]) {
+        (&self.stat_slot, &self.stat_node, &self.stat_nbr)
+    }
+}
+
+/// A small cmask-keyed cache of compiled [`SweepTopo`]s. Samplers hold one
+/// per instance so repeated `stats()`/`sample()` calls (trainer iterations,
+/// serving requests) skip the O(N·D) branchy topology gather when only the
+/// weights change between calls — the ROADMAP plan-reuse item. The clamp
+/// masks in play per sampler are few (free, data-clamped), so a bounded
+/// linear scan is cheaper than hashing.
+pub struct TopoCache {
+    entries: Vec<(Vec<u8>, Arc<SweepTopo>)>,
+}
+
+impl TopoCache {
+    pub fn new() -> TopoCache {
+        TopoCache { entries: Vec::new() }
+    }
+
+    /// The compiled topo for `(top, cmask)`, reusing a cached one when the
+    /// mask matches (masks are compared as thresholded bit rows). A cache
+    /// instance belongs to ONE topology — hits are only keyed on the mask,
+    /// so reusing a cache across graphs would return lists compiled for the
+    /// wrong edge set (asserted where detectable).
+    pub fn topo_for(&mut self, top: &Topology, cmask: &[f32]) -> Arc<SweepTopo> {
+        let key: Vec<u8> = cmask.iter().map(|&x| (x > 0.5) as u8).collect();
+        if let Some((_, t)) = self.entries.iter().find(|(k, _)| *k == key) {
+            assert!(
+                t.n == top.n_nodes() && t.degree == top.degree,
+                "TopoCache reused across different topologies"
+            );
+            return Arc::clone(t);
+        }
+        let t = Arc::new(SweepTopo::new(top, cmask));
+        if self.entries.len() >= 8 {
+            self.entries.remove(0);
+        }
+        self.entries.push((key, Arc::clone(&t)));
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+impl Default for TopoCache {
+    fn default() -> Self {
+        TopoCache::new()
+    }
+}
+
+/// One color class's gathered weights, aligned with the topo's lists.
+struct ColorWeights {
+    /// Per listed node: bias h\[i\].
+    bias: Vec<f32>,
+    /// Per listed node: forward coupling gm\[i\].
+    gm: Vec<f32>,
+    /// Gathered non-padding weights, slot order preserved.
+    w: Vec<f32>,
+}
+
+/// A sweep schedule precompiled for one `(SweepTopo, Machine)` pairing.
+pub struct SweepPlan {
+    pub topo: Arc<SweepTopo>,
+    pub beta: f32,
+    colors: [ColorWeights; 2],
+}
+
+impl SweepPlan {
+    pub fn new(top: &Topology, m: &Machine, cmask: &[f32]) -> SweepPlan {
+        SweepPlan::from_topo(Arc::new(SweepTopo::new(top, cmask)), m)
+    }
+
+    /// Gather `m`'s weights against a precompiled topo (branch-free O(E)).
+    pub fn from_topo(topo: Arc<SweepTopo>, m: &Machine) -> SweepPlan {
+        let (n, d) = (topo.n, topo.degree);
+        assert_eq!(m.w_slots.len(), n * d, "weight table length");
+        assert_eq!(m.h.len(), n, "bias length");
+        assert_eq!(m.gm.len(), n, "gm length");
+        let gather = |ct: &ColorTopo| ColorWeights {
+            bias: ct.nodes.iter().map(|&i| m.h[i as usize]).collect(),
+            gm: ct.nodes.iter().map(|&i| m.gm[i as usize]).collect(),
+            w: ct.slot.iter().map(|&s| m.w_slots[s as usize]).collect(),
+        };
+        let colors = [gather(&topo.colors[0]), gather(&topo.colors[1])];
+        SweepPlan {
+            topo,
+            beta: m.beta,
+            colors,
+        }
+    }
+
+    /// Refresh the gathered weights in place from `m` (same topology/mask).
+    /// This is the per-iteration cost when reusing a plan across trainer
+    /// steps: no allocation, no pad/color branches.
+    pub fn reweight(&mut self, m: &Machine) {
+        let (n, d) = (self.topo.n, self.topo.degree);
+        assert_eq!(m.w_slots.len(), n * d, "weight table length");
+        assert_eq!(m.h.len(), n, "bias length");
+        assert_eq!(m.gm.len(), n, "gm length");
+        for c in 0..2 {
+            let ct = &self.topo.colors[c];
+            let cw = &mut self.colors[c];
+            for (dst, &i) in cw.bias.iter_mut().zip(&ct.nodes) {
+                *dst = m.h[i as usize];
+            }
+            for (dst, &i) in cw.gm.iter_mut().zip(&ct.nodes) {
+                *dst = m.gm[i as usize];
+            }
+            for (dst, &s) in cw.w.iter_mut().zip(&ct.slot) {
+                *dst = m.w_slots[s as usize];
+            }
+        }
+        self.beta = m.beta;
+    }
+
+    /// Nodes updated per full sweep (unclamped nodes of both colors).
+    pub fn updates_per_sweep(&self) -> usize {
+        self.topo.updates_per_sweep()
+    }
+
+    /// Gathered (weight, neighbor) pairs across both colors.
+    pub fn gathered_pairs(&self) -> usize {
+        self.topo.gathered_pairs()
     }
 
     #[inline]
     fn half(&self, c: usize, s: &mut [f32], xt_row: &[f32], rng: &mut Rng) {
-        let cp = &self.colors[c];
+        let ct = &self.topo.colors[c];
+        let cw = &self.colors[c];
         let two_beta = 2.0 * self.beta;
-        for j in 0..cp.nodes.len() {
-            let i = cp.nodes[j] as usize;
-            let mut f = cp.bias[j] + cp.gm[j] * xt_row[i];
-            let (a, b) = (cp.off[j] as usize, cp.off[j + 1] as usize);
+        for j in 0..ct.nodes.len() {
+            let i = ct.nodes[j] as usize;
+            let mut f = cw.bias[j] + cw.gm[j] * xt_row[i];
+            let (a, b) = (ct.off[j] as usize, ct.off[j + 1] as usize);
             for t in a..b {
-                f += cp.w[t] * s[cp.nbr[t] as usize];
+                f += cw.w[t] * s[ct.nbr[t] as usize];
             }
             let p = sigmoid(two_beta * f);
             s[i] = if rng.uniform_f32() < p { 1.0 } else { -1.0 };
@@ -156,21 +315,18 @@ impl SweepPlan {
 /// Fork one RNG stream per chain, chain-major, tag = chain id. Doing this
 /// eagerly from the caller RNG (before any dispatch) is what makes results
 /// independent of the thread count.
-fn chain_rngs(rng: &mut Rng, b: usize) -> Vec<Rng> {
+pub(crate) fn chain_rngs(rng: &mut Rng, b: usize) -> Vec<Rng> {
     (0..b).map(|bi| rng.fork(bi as u64)).collect()
 }
 
-/// Chain-indexed map that skips thread spawn entirely when `threads <= 1`.
-fn map_chains<T, F>(b: usize, threads: usize, f: F) -> Vec<T>
+/// Chain-indexed map over the shared persistent worker pool; inline (no
+/// synchronization) when `threads <= 1`.
+pub(crate) fn map_chains<T, F>(b: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    if threads <= 1 {
-        (0..b).map(f).collect()
-    } else {
-        parallel_map(b, threads, f)
-    }
+    pooled_map(b, threads, f)
 }
 
 /// Run `k` full sweeps on every chain, chain-parallel across `threads`.
@@ -183,7 +339,7 @@ pub fn run_sweeps(
     rng: &mut Rng,
 ) {
     let n = chains.n;
-    assert_eq!(plan.n, n, "plan/chains node count");
+    assert_eq!(plan.topo.n, n, "plan/chains node count");
     assert_eq!(xt.len(), chains.b * n, "xt shape");
     let rngs = chain_rngs(rng, chains.b);
     let rows = map_chains(chains.b, threads, |bi| {
@@ -213,11 +369,12 @@ pub fn run_stats(
     rng: &mut Rng,
 ) -> SweepStats {
     let n = chains.n;
-    let d = plan.degree;
+    let d = plan.topo.degree;
     let b = chains.b;
-    assert_eq!(plan.n, n, "plan/chains node count");
+    assert_eq!(plan.topo.n, n, "plan/chains node count");
     assert_eq!(xt.len(), b * n, "xt shape");
     let rngs = chain_rngs(rng, b);
+    let (stat_slot, stat_node, stat_nbr) = plan.topo.stat_lists();
     let per_chain = map_chains(b, threads, |bi| {
         let mut row = chains.row(bi).to_vec();
         let mut r = rngs[bi].clone();
@@ -230,10 +387,10 @@ pub fn run_stats(
                 for (acc, &v) in mean.iter_mut().zip(row.iter()) {
                     *acc += v as f64;
                 }
-                for t in 0..plan.stat_slot.len() {
-                    let slot = plan.stat_slot[t] as usize;
-                    pair[slot] += (row[plan.stat_node[t] as usize]
-                        * row[plan.stat_nbr[t] as usize]) as f64;
+                for t in 0..stat_slot.len() {
+                    let slot = stat_slot[t] as usize;
+                    pair[slot] +=
+                        (row[stat_node[t] as usize] * row[stat_nbr[t] as usize]) as f64;
                 }
             }
         }
@@ -265,24 +422,45 @@ pub fn run_trace(
     threads: usize,
     rng: &mut Rng,
 ) -> Vec<Vec<f64>> {
+    run_trace_tail(plan, chains, xt, k, k, proj, stride, threads, rng)
+}
+
+/// Like [`run_trace`], but stream the observable through a fixed-size ring
+/// and return only the final `keep` observations per chain — O(keep) memory
+/// per chain for arbitrarily long windows. `keep >= k` returns the full
+/// series.
+#[allow(clippy::too_many_arguments)]
+pub fn run_trace_tail(
+    plan: &SweepPlan,
+    chains: &mut Chains,
+    xt: &[f32],
+    k: usize,
+    keep: usize,
+    proj: &[f32],
+    stride: usize,
+    threads: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<f64>> {
     let n = chains.n;
-    assert_eq!(plan.n, n, "plan/chains node count");
+    assert_eq!(plan.topo.n, n, "plan/chains node count");
     assert_eq!(xt.len(), chains.b * n, "xt shape");
     assert!(stride >= 1 && proj.len() >= n * stride, "projection shape");
+    let keep = keep.min(k);
     let rngs = chain_rngs(rng, chains.b);
     let per_chain = map_chains(chains.b, threads, |bi| {
         let mut row = chains.row(bi).to_vec();
         let mut r = rngs[bi].clone();
         let xt_row = &xt[bi * n..(bi + 1) * n];
-        let mut series = Vec::with_capacity(k);
+        let mut ring = RingBuf::new(keep.max(1));
         for _ in 0..k {
             plan.sweep_row(&mut row, xt_row, &mut r);
             let mut acc = 0.0f64;
             for i in 0..n {
                 acc += (row[i] * proj[i * stride]) as f64;
             }
-            series.push(acc);
+            ring.push(acc);
         }
+        let series = if keep == 0 { Vec::new() } else { ring.to_vec() };
         (row, series)
     });
     let mut out = Vec::with_capacity(chains.b);
@@ -316,14 +494,14 @@ mod tests {
         assert_eq!(free.updates_per_sweep(), n);
         // Padding dropped: exactly the 2E directed slots survive gathering.
         assert_eq!(free.gathered_pairs(), 2 * top.n_edges());
-        assert_eq!(free.stat_slot.len(), 2 * top.n_edges());
+        assert_eq!(free.topo.stat_slot.len(), 2 * top.n_edges());
 
         let cmask = top.data_mask();
         let clamped = SweepPlan::new(&top, &m, &cmask);
         let n_clamped = cmask.iter().filter(|&&x| x > 0.5).count();
         assert_eq!(clamped.updates_per_sweep(), n - n_clamped);
         // Stats still cover every real slot regardless of clamping.
-        assert_eq!(clamped.stat_slot.len(), 2 * top.n_edges());
+        assert_eq!(clamped.topo.stat_slot.len(), 2 * top.n_edges());
     }
 
     #[test]
@@ -399,5 +577,56 @@ mod tests {
         assert!(s1.iter().all(|c| c.len() == 15));
         assert_eq!(s1, s2);
         assert_eq!(c1.s, c2.s);
+    }
+
+    #[test]
+    fn trace_tail_is_suffix_of_full_trace() {
+        let (top, m, mut rng) = setup(6);
+        let n = top.n_nodes();
+        let b = 3;
+        let start = Chains::random(b, n, &mut rng);
+        let xt = vec![0.0f32; b * n];
+        let proj: Vec<f32> = (0..n * 2).map(|_| rng.normal() as f32).collect();
+        let plan = SweepPlan::new(&top, &m, &vec![0.0; n]);
+        let mut c1 = start.clone();
+        let mut c2 = start.clone();
+        let full = run_trace(&plan, &mut c1, &xt, 25, &proj, 2, 2, &mut Rng::new(8));
+        let tail = run_trace_tail(&plan, &mut c2, &xt, 25, 10, &proj, 2, 2, &mut Rng::new(8));
+        assert_eq!(c1.s, c2.s);
+        for (f, t) in full.iter().zip(&tail) {
+            assert_eq!(t.len(), 10);
+            assert_eq!(&f[15..], &t[..]);
+        }
+    }
+
+    #[test]
+    fn reweight_matches_fresh_plan() {
+        let (top, m0, mut rng) = setup(7);
+        let n = top.n_nodes();
+        let cmask = top.data_mask();
+        let topo = Arc::new(SweepTopo::new(&top, &cmask));
+        let mut plan = SweepPlan::from_topo(Arc::clone(&topo), &m0);
+
+        // A second machine with different weights/biases/beta on the same
+        // topology + mask.
+        let w: Vec<f32> = (0..top.n_edges()).map(|_| 0.3 * rng.normal() as f32).collect();
+        let h: Vec<f32> = (0..n).map(|_| 0.1 * rng.normal() as f32).collect();
+        let gm: Vec<f32> = top.data_mask().iter().map(|&x| 0.7 * x).collect();
+        let m1 = Machine::new(&top, &w, h, gm, 0.8);
+
+        plan.reweight(&m1);
+        let fresh = SweepPlan::from_topo(topo, &m1);
+
+        let b = 4;
+        let mut init = Rng::new(11);
+        let start = Chains::random(b, n, &mut init);
+        let cval: Vec<f32> = (0..b * n).map(|_| init.spin()).collect();
+        let xt: Vec<f32> = (0..b * n).map(|_| init.spin()).collect();
+        let mut ca = start.clone();
+        ca.impose_clamps(&cmask, &cval);
+        let mut cb = ca.clone();
+        run_sweeps(&plan, &mut ca, &xt, 8, 2, &mut Rng::new(12));
+        run_sweeps(&fresh, &mut cb, &xt, 8, 2, &mut Rng::new(12));
+        assert_eq!(ca.s, cb.s, "reweighted plan must equal a fresh gather");
     }
 }

@@ -1,0 +1,504 @@
+//! The block-parallel DTCA array emulator: executes a compiled layer
+//! program the way the chip would.
+//!
+//! A program is compiled from `(SweepTopo, CellFabric, Machine, HwConfig)`:
+//! the topology's color partition is shared with `gibbs::engine` (the
+//! checkerboard phases of the paper's two-color update fabric), weights and
+//! biases are quantized through the programming DACs, and each listed cell
+//! carries its fabricated skew (sigmoid-argument offset `delta`, noise
+//! autocorrelation `rho`).
+//!
+//! Execution model (paper App. E schedule): one Gibbs iteration is two
+//! phase-clock ticks. On a tick, every cell of the active color latches its
+//! neighbor states, evaluates its local field through the quantized DAC
+//! values, and its RNG cell emits a bit; outputs commit only when the tick
+//! closes. Per (chain, cell) a persistent standard-normal comparator state
+//! is evolved as an AR(1) process with the cell's `rho` and compared
+//! against the calibrated acceptance probability through a Gaussian copula
+//! (`Phi(z) < p`), so `rho = 0` is an exact Bernoulli(p) draw and
+//! `rho -> 1` reproduces a cell resampled long before its noise
+//! decorrelates.
+//!
+//! Every run is metered in [`HwSchedule`]: cell updates, phases, sweeps,
+//! program executions (one init + readout per chain per call), and the RNG
+//! energy actually drawn (per-cell e_bit summed over executed updates) —
+//! the inputs `HwSampler::energy` prices through the App. E device model.
+
+use std::sync::Arc;
+
+use crate::gibbs::engine::{chain_rngs, map_chains, SweepTopo};
+use crate::gibbs::{Chains, Machine, SweepStats};
+use crate::util::ring::RingBuf;
+use crate::util::rng::Rng;
+
+use super::{phi, quantize, CellFabric, HwConfig};
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// The executed schedule of an array (or accumulated across a sampler's
+/// lifetime): the quantities App. E charges energy for.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HwSchedule {
+    /// Individual cell updates executed.
+    pub cell_updates: u64,
+    /// Phase-clock ticks (2 per full Gibbs iteration).
+    pub phases: u64,
+    /// Full Gibbs iterations executed, summed over chains.
+    pub sweeps: u64,
+    /// Program executions: one array initialization + readout per chain
+    /// per run call (Eq. E16/E17 charge per program).
+    pub programs: u64,
+    /// RNG energy actually drawn: Σ over executed updates of the updating
+    /// cell's e_bit [J].
+    pub rng_joules: f64,
+}
+
+impl HwSchedule {
+    pub fn absorb(&mut self, o: &HwSchedule) {
+        self.cell_updates += o.cell_updates;
+        self.phases += o.phases;
+        self.sweeps += o.sweeps;
+        self.programs += o.programs;
+        self.rng_joules += o.rng_joules;
+    }
+}
+
+/// One color class's DAC-quantized weights, aligned with the topo's lists.
+struct QuantWeights {
+    bias: Vec<f32>,
+    gm: Vec<f32>,
+    w: Vec<f32>,
+}
+
+/// One color class's gathered per-cell fabrication skews.
+struct CellSkew {
+    delta: Vec<f32>,
+    rho: Vec<f32>,
+}
+
+/// A compiled layer program bound to one fabricated chip.
+pub struct HwArray {
+    topo: Arc<SweepTopo>,
+    pub beta: f32,
+    colors: [QuantWeights; 2],
+    skews: [CellSkew; 2],
+    /// Σ e_bit over the cells updated in one full sweep [J].
+    rng_j_per_sweep: f64,
+    sched: HwSchedule,
+}
+
+impl HwArray {
+    /// Compile `m` for the chip `fabric` under `cfg`. The topo may be
+    /// shared with `gibbs::engine` plans on the same `(topology, cmask)`.
+    pub fn new(
+        topo: Arc<SweepTopo>,
+        fabric: &CellFabric,
+        m: &Machine,
+        cfg: &HwConfig,
+    ) -> HwArray {
+        let (n, d) = (topo.n, topo.degree);
+        assert_eq!(fabric.n, n, "fabric/topology cell count");
+        assert_eq!(m.w_slots.len(), n * d, "weight table length");
+        assert_eq!(m.h.len(), n, "bias length");
+        assert_eq!(m.gm.len(), n, "gm length");
+        let gather_w = |c: usize| QuantWeights {
+            bias: topo
+                .color_nodes(c)
+                .iter()
+                .map(|&i| quantize(m.h[i as usize], cfg.dac_bits, cfg.h_full_scale))
+                .collect(),
+            gm: topo
+                .color_nodes(c)
+                .iter()
+                .map(|&i| quantize(m.gm[i as usize], cfg.dac_bits, cfg.h_full_scale))
+                .collect(),
+            w: topo
+                .color_slot(c)
+                .iter()
+                .map(|&s| quantize(m.w_slots[s as usize], cfg.dac_bits, cfg.w_full_scale))
+                .collect(),
+        };
+        let gather_s = |c: usize| CellSkew {
+            delta: topo
+                .color_nodes(c)
+                .iter()
+                .map(|&i| fabric.delta[i as usize])
+                .collect(),
+            rho: topo
+                .color_nodes(c)
+                .iter()
+                .map(|&i| fabric.rho[i as usize])
+                .collect(),
+        };
+        let rng_j_per_sweep: f64 = (0..2)
+            .flat_map(|c| topo.color_nodes(c).iter())
+            .map(|&i| fabric.e_bit[i as usize])
+            .sum();
+        HwArray {
+            beta: m.beta,
+            colors: [gather_w(0), gather_w(1)],
+            skews: [gather_s(0), gather_s(1)],
+            rng_j_per_sweep,
+            sched: HwSchedule::default(),
+            topo,
+        }
+    }
+
+    pub fn topo(&self) -> &Arc<SweepTopo> {
+        &self.topo
+    }
+
+    /// The schedule executed by this array so far.
+    pub fn schedule(&self) -> &HwSchedule {
+        &self.sched
+    }
+
+    pub fn reset_schedule(&mut self) {
+        self.sched = HwSchedule::default();
+    }
+
+    /// One phase-clock tick: every cell of color `c` latches its neighbors,
+    /// samples, and the outputs commit together when the tick closes.
+    fn phase(
+        &self,
+        c: usize,
+        s: &mut [f32],
+        noise: &mut [f64],
+        xt_row: &[f32],
+        latch: &mut Vec<f32>,
+        rng: &mut Rng,
+    ) {
+        let nodes = self.topo.color_nodes(c);
+        let off = self.topo.color_off(c);
+        let nbr = self.topo.color_nbr(c);
+        let qw = &self.colors[c];
+        let sk = &self.skews[c];
+        let two_beta = 2.0 * self.beta;
+        latch.clear();
+        for j in 0..nodes.len() {
+            let i = nodes[j] as usize;
+            let mut f = qw.bias[j] + qw.gm[j] * xt_row[i];
+            let (a, b) = (off[j] as usize, off[j + 1] as usize);
+            for t in a..b {
+                f += qw.w[t] * s[nbr[t] as usize];
+            }
+            // Calibrated acceptance with the cell's offset skew, then the
+            // correlated comparator draw (AR(1) noise state + copula).
+            let p = sigmoid(two_beta * f + sk.delta[j]);
+            let rho = sk.rho[j] as f64;
+            let z = rho * noise[i] + (1.0 - rho * rho).sqrt() * rng.normal();
+            noise[i] = z;
+            latch.push(if (phi(z) as f32) < p { 1.0 } else { -1.0 });
+        }
+        for (j, &v) in latch.iter().enumerate() {
+            s[nodes[j] as usize] = v;
+        }
+    }
+
+    /// One full Gibbs iteration (two phase ticks) of a single chain row.
+    pub fn sweep_row(
+        &self,
+        s: &mut [f32],
+        noise: &mut [f64],
+        xt_row: &[f32],
+        latch: &mut Vec<f32>,
+        rng: &mut Rng,
+    ) {
+        self.phase(0, s, noise, xt_row, latch, rng);
+        self.phase(1, s, noise, xt_row, latch, rng);
+    }
+
+    fn record(&mut self, b: u64, k: u64) {
+        let ups = self.topo.updates_per_sweep() as u64;
+        self.sched.sweeps += b * k;
+        self.sched.phases += 2 * b * k;
+        self.sched.cell_updates += b * k * ups;
+        self.sched.programs += b;
+        self.sched.rng_joules += (b * k) as f64 * self.rng_j_per_sweep;
+    }
+
+    /// Run `k` full iterations on every chain, chain-parallel across
+    /// `threads`. Per-chain comparator noise states are seeded from the
+    /// chain's forked stream, so results are thread-count invariant.
+    pub fn run_sweeps(
+        &mut self,
+        chains: &mut Chains,
+        xt: &[f32],
+        k: usize,
+        threads: usize,
+        rng: &mut Rng,
+    ) {
+        let n = chains.n;
+        assert_eq!(self.topo.n, n, "array/chains node count");
+        assert_eq!(xt.len(), chains.b * n, "xt shape");
+        let rngs = chain_rngs(rng, chains.b);
+        let this = &*self;
+        let rows = map_chains(chains.b, threads, |bi| {
+            let mut row = chains.row(bi).to_vec();
+            let mut r = rngs[bi].clone();
+            let xt_row = &xt[bi * n..(bi + 1) * n];
+            let mut noise: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+            let mut latch = Vec::with_capacity(this.topo.updates_per_sweep());
+            for _ in 0..k {
+                this.sweep_row(&mut row, &mut noise, xt_row, &mut latch, &mut r);
+            }
+            row
+        });
+        for (bi, row) in rows.into_iter().enumerate() {
+            chains.s[bi * n..(bi + 1) * n].copy_from_slice(&row);
+        }
+        self.record(chains.b as u64, k as u64);
+    }
+
+    /// Run `k` iterations per chain, accumulating `SweepStats` after `burn`
+    /// iterations inside each chain's loop (fused, like the engine).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_stats(
+        &mut self,
+        chains: &mut Chains,
+        xt: &[f32],
+        k: usize,
+        burn: usize,
+        threads: usize,
+        rng: &mut Rng,
+    ) -> SweepStats {
+        let n = chains.n;
+        let d = self.topo.degree;
+        let b = chains.b;
+        assert_eq!(self.topo.n, n, "array/chains node count");
+        assert_eq!(xt.len(), b * n, "xt shape");
+        let rngs = chain_rngs(rng, b);
+        let this = &*self;
+        let (stat_slot, stat_node, stat_nbr) = this.topo.stat_lists();
+        let per_chain = map_chains(b, threads, |bi| {
+            let mut row = chains.row(bi).to_vec();
+            let mut r = rngs[bi].clone();
+            let xt_row = &xt[bi * n..(bi + 1) * n];
+            let mut noise: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+            let mut latch = Vec::with_capacity(this.topo.updates_per_sweep());
+            let mut pair = vec![0.0f64; n * d];
+            let mut mean = vec![0.0f64; n];
+            for it in 0..k {
+                this.sweep_row(&mut row, &mut noise, xt_row, &mut latch, &mut r);
+                if it >= burn {
+                    for (acc, &v) in mean.iter_mut().zip(row.iter()) {
+                        *acc += v as f64;
+                    }
+                    for t in 0..stat_slot.len() {
+                        let slot = stat_slot[t] as usize;
+                        pair[slot] +=
+                            (row[stat_node[t] as usize] * row[stat_nbr[t] as usize]) as f64;
+                    }
+                }
+            }
+            (row, pair, mean)
+        });
+        let mut st = SweepStats::new(b, n, d);
+        st.count = k.saturating_sub(burn);
+        for (bi, (row, pair, mean)) in per_chain.into_iter().enumerate() {
+            chains.s[bi * n..(bi + 1) * n].copy_from_slice(&row);
+            for (acc, v) in st.pair.iter_mut().zip(&pair) {
+                *acc += v;
+            }
+            st.mean_b[bi * n..(bi + 1) * n].copy_from_slice(&mean);
+        }
+        self.record(b as u64, k as u64);
+        st
+    }
+
+    /// Run `k` iterations per chain, streaming the App. G projection
+    /// observable through a ring and returning the final `keep` values per
+    /// chain (the `gibbs::engine::run_trace_tail` contract).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_trace_tail(
+        &mut self,
+        chains: &mut Chains,
+        xt: &[f32],
+        k: usize,
+        keep: usize,
+        proj: &[f32],
+        stride: usize,
+        threads: usize,
+        rng: &mut Rng,
+    ) -> Vec<Vec<f64>> {
+        let n = chains.n;
+        assert_eq!(self.topo.n, n, "array/chains node count");
+        assert_eq!(xt.len(), chains.b * n, "xt shape");
+        assert!(stride >= 1 && proj.len() >= n * stride, "projection shape");
+        let keep = keep.min(k);
+        let rngs = chain_rngs(rng, chains.b);
+        let this = &*self;
+        let per_chain = map_chains(chains.b, threads, |bi| {
+            let mut row = chains.row(bi).to_vec();
+            let mut r = rngs[bi].clone();
+            let xt_row = &xt[bi * n..(bi + 1) * n];
+            let mut noise: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+            let mut latch = Vec::with_capacity(this.topo.updates_per_sweep());
+            let mut ring = RingBuf::new(keep.max(1));
+            for _ in 0..k {
+                this.sweep_row(&mut row, &mut noise, xt_row, &mut latch, &mut r);
+                let mut acc = 0.0f64;
+                for i in 0..n {
+                    acc += (row[i] * proj[i * stride]) as f64;
+                }
+                ring.push(acc);
+            }
+            let series = if keep == 0 { Vec::new() } else { ring.to_vec() };
+            (row, series)
+        });
+        let mut out = Vec::with_capacity(chains.b);
+        for (bi, (row, series)) in per_chain.into_iter().enumerate() {
+            chains.s[bi * n..(bi + 1) * n].copy_from_slice(&row);
+            out.push(series);
+        }
+        self.record(chains.b as u64, k as u64);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph;
+
+    fn setup(seed: u64) -> (crate::graph::Topology, Machine, Rng) {
+        let top = graph::build("t", 6, "G8", 9, 0).unwrap();
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> = (0..top.n_edges()).map(|_| 0.25 * rng.normal() as f32).collect();
+        let h: Vec<f32> = (0..top.n_nodes()).map(|_| 0.2 * rng.normal() as f32).collect();
+        let gm: Vec<f32> = top.data_mask().iter().map(|&x| 0.5 * x).collect();
+        let m = Machine::new(&top, &w, h, gm, 1.0);
+        (top, m, rng)
+    }
+
+    fn array_for(
+        top: &crate::graph::Topology,
+        m: &Machine,
+        cmask: &[f32],
+        cfg: &HwConfig,
+    ) -> HwArray {
+        let topo = Arc::new(SweepTopo::new(top, cmask));
+        let fabric = CellFabric::fabricate(top.n_nodes(), cfg);
+        HwArray::new(topo, &fabric, m, cfg)
+    }
+
+    #[test]
+    fn spins_stay_pm_one_and_clamps_hold() {
+        let (top, m, mut rng) = setup(0);
+        let n = top.n_nodes();
+        let b = 4;
+        let cmask = top.data_mask();
+        let mut chains = Chains::random(b, n, &mut rng);
+        let cval: Vec<f32> = (0..b * n).map(|_| rng.spin()).collect();
+        chains.impose_clamps(&cmask, &cval);
+        let xt = vec![0.0f32; b * n];
+        let mut arr = array_for(&top, &m, &cmask, &HwConfig::default());
+        arr.run_sweeps(&mut chains, &xt, 12, 2, &mut rng);
+        assert!(chains.s.iter().all(|&x| x == 1.0 || x == -1.0));
+        for bi in 0..b {
+            for i in 0..n {
+                if cmask[i] > 0.5 {
+                    assert_eq!(chains.s[bi * n + i], cval[bi * n + i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let (top, m, mut rng) = setup(1);
+        let n = top.n_nodes();
+        let b = 6;
+        let start = Chains::random(b, n, &mut rng);
+        let xt: Vec<f32> = (0..b * n).map(|_| rng.spin()).collect();
+        let cmask = vec![0.0f32; n];
+        let cfg = HwConfig::default();
+        let mut outs = Vec::new();
+        for threads in [1usize, 3, 8] {
+            let mut arr = array_for(&top, &m, &cmask, &cfg);
+            let mut chains = start.clone();
+            let st = arr.run_stats(&mut chains, &xt, 20, 5, threads, &mut Rng::new(42));
+            outs.push((chains.s, st.pair, st.mean_b));
+        }
+        assert_eq!(outs[0], outs[1]);
+        assert_eq!(outs[0], outs[2]);
+    }
+
+    #[test]
+    fn schedule_accounting_is_exact() {
+        let (top, m, mut rng) = setup(2);
+        let n = top.n_nodes();
+        let b = 3;
+        let cmask = top.data_mask();
+        let n_clamped = cmask.iter().filter(|&&x| x > 0.5).count();
+        let mut chains = Chains::random(b, n, &mut rng);
+        let xt = vec![0.0f32; b * n];
+        let mut arr = array_for(&top, &m, &cmask, &HwConfig::default());
+        arr.run_sweeps(&mut chains, &xt, 7, 1, &mut rng);
+        let s = *arr.schedule();
+        assert_eq!(s.sweeps, (b * 7) as u64);
+        assert_eq!(s.phases, (2 * b * 7) as u64);
+        assert_eq!(s.cell_updates, (b * 7 * (n - n_clamped)) as u64);
+        assert_eq!(s.programs, b as u64);
+        // ~350 aJ per update at the typical corner.
+        let per_update = s.rng_joules / s.cell_updates as f64;
+        assert!(
+            (1e-16..1e-15).contains(&per_update),
+            "per-update RNG energy {per_update:.3e}"
+        );
+        arr.run_sweeps(&mut chains, &xt, 3, 1, &mut rng);
+        assert_eq!(arr.schedule().sweeps, (b * 10) as u64);
+        arr.reset_schedule();
+        assert_eq!(*arr.schedule(), HwSchedule::default());
+    }
+
+    #[test]
+    fn correlated_noise_slows_state_turnover() {
+        // Zero machine: every acceptance probability is 1/2, so with iid
+        // draws every cell resamples to a fresh +/-1 each sweep and the
+        // summed-spin observable decorrelates in one step. With a fast
+        // phase clock (interval << 1, rho ~ 1) the comparator state barely
+        // moves between phases, so successive sweeps stay correlated.
+        let top = graph::build("t", 6, "G8", 9, 0).unwrap();
+        let n = top.n_nodes();
+        let m = Machine::zeros(&top);
+        let cmask = vec![0.0f32; n];
+        let proj = vec![1.0f32; n];
+        let lag1 = |interval: f64| -> f64 {
+            let cfg = HwConfig::default()
+                .with_interval(interval)
+                .with_mismatch(0.0)
+                .with_bits(16);
+            let mut arr = array_for(&top, &m, &cmask, &cfg);
+            let mut chains = Chains::random(4, n, &mut Rng::new(7));
+            let xt = vec![0.0f32; 4 * n];
+            let series =
+                arr.run_trace_tail(&mut chains, &xt, 200, 200, &proj, 1, 2, &mut Rng::new(9));
+            crate::metrics::autocorrelation(&series, 1)[1]
+        };
+        let fast = lag1(f64::INFINITY);
+        let slow = lag1(0.05);
+        assert!(fast.abs() < 0.2, "iid draws should decorrelate in one sweep, r1={fast}");
+        assert!(
+            slow > 0.5,
+            "undecorrelated RNG must correlate successive sweeps, r1={slow}"
+        );
+    }
+
+    #[test]
+    fn trace_tail_shape() {
+        let (top, m, mut rng) = setup(3);
+        let n = top.n_nodes();
+        let b = 3;
+        let mut chains = Chains::random(b, n, &mut rng);
+        let xt = vec![0.0f32; b * n];
+        let proj: Vec<f32> = (0..n * 2).map(|_| rng.normal() as f32).collect();
+        let mut arr = array_for(&top, &m, &vec![0.0; n], &HwConfig::default());
+        let tr = arr.run_trace_tail(&mut chains, &xt, 20, 8, &proj, 2, 2, &mut rng);
+        assert_eq!(tr.len(), b);
+        assert!(tr.iter().all(|c| c.len() == 8));
+    }
+}

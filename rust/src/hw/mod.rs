@@ -1,0 +1,340 @@
+//! `hw::` — a device-faithful emulator of the DTCA sampling-cell array.
+//!
+//! The software Gibbs engine (`gibbs::engine`) samples with ideal
+//! arithmetic: f32 weights, an exact logistic acceptance curve, and fresh
+//! iid uniforms on every update. The chip of the paper has none of those
+//! luxuries, and this module emulates the machine the paper actually
+//! proposes, at the level App. E charges energy for:
+//!
+//! * **Phase-clocked checkerboard execution.** A layer program runs as
+//!   alternating color phases. Within a phase *every* cell of the active
+//!   color latches its neighbors' states, samples simultaneously, and the
+//!   outputs are committed only when the phase clock closes ([`HwArray`]
+//!   buffers each phase's outputs and commits them in a second pass). One
+//!   full Gibbs iteration = 2 phases = 2·tau_0 of wall-clock, matching
+//!   `energy::denoising_time_s`.
+//! * **Finite-resolution programming DACs.** Couplings, biases and the
+//!   forward coupling gm are quantized to `dac_bits` levels over a
+//!   programmable full scale ([`quantize`]) before the program is loaded;
+//!   the array never sees the f32 trainer values.
+//! * **RNG-cell-calibrated acceptance.** Each cell's Bernoulli draw comes
+//!   from the subthreshold comparator of `circuit::` — the operating curve
+//!   P(1|V) of `circuit::analytic_bias`, fit once to a logistic by
+//!   `circuit::fit_sigmoid` exactly the way an on-chip calibration would,
+//!   so comparator offset mismatch (volts) lands as a per-cell shift of the
+//!   sigmoid argument ([`CellFabric::delta`]).
+//! * **Correlated noise.** The comparator noise is an OU process with
+//!   per-cell decorrelation time tau_0; when the phase clock resamples a
+//!   cell before its noise has decorrelated, consecutive draws correlate
+//!   with rho_i = exp(-2 t_phase / tau_0i) (each cell fires on its own
+//!   color's tick, every other tick). The emulator threads a persistent
+//!   standard-normal state per (chain, cell) through a Gaussian copula:
+//!   marginals stay exactly Bernoulli(p) while successive draws correlate —
+//!   `phase_interval = INFINITY` recovers ideal iid sampling.
+//! * **Process corners and mismatch.** [`CellFabric::fabricate`] draws one
+//!   chip: per-cell threshold mismatch plus the systematic skew of a
+//!   `circuit::Corner`, mapped through subthreshold current laws to
+//!   per-cell tau_0 (and thus rho and energy/bit), exactly as
+//!   `circuit::corner_monte_carlo` does for Fig. 4c.
+//!
+//! [`HwArray`] implements the same run surface as `gibbs::engine`
+//! (`run_sweeps` / `run_stats` / `run_trace_tail` over `gibbs::Chains`),
+//! and [`HwSampler`] wraps it in the `train::sampler::LayerSampler` trait,
+//! so the trainer, the MEBM baseline, the serving coordinator and the
+//! figure harness can all run on the emulated device (`--backend hw`).
+//! Every run is metered: the executed schedule (cells × phases × sweeps ×
+//! programs) accumulates in [`HwSchedule`] and is priced through the
+//! App. E device model by [`HwSampler::energy`] — joules per image come
+//! from what the emulator actually executed, not from a formula evaluated
+//! beside the sampler.
+
+pub mod array;
+pub mod sampler;
+
+pub use array::{HwArray, HwSchedule};
+pub use sampler::{HwEnergy, HwSampler};
+
+use crate::circuit::{self, Corner, RngCellParams};
+use crate::energy::V_THERMAL;
+use crate::util::rng::Rng;
+
+/// Emulation knobs: DAC resolution, RNG timing, and fabrication corner.
+#[derive(Clone, Debug)]
+pub struct HwConfig {
+    /// Programming-DAC resolution in bits (applied to weights, biases and
+    /// the forward coupling). 16+ bits is indistinguishable from f32 at the
+    /// coupling scales the trainer produces.
+    pub dac_bits: u32,
+    /// Full scale of the coupling DAC: representable weights span
+    /// [-w_full_scale, +w_full_scale].
+    pub w_full_scale: f32,
+    /// Full scale of the bias / forward-coupling DAC.
+    pub h_full_scale: f32,
+    /// Inter-wafer process corner the chip was fabricated at.
+    pub corner: Corner,
+    /// Intra-die threshold mismatch sigma [V] (Fig. 4c uses 6 mV).
+    pub sigma_mismatch_v: f64,
+    /// Phase-clock period in units of the *typical* cell decorrelation
+    /// time tau_0. Each cell samples on its own color's tick — every other
+    /// tick of the two-color clock — so consecutive draws are 2·t_phase
+    /// apart and correlate as rho_i = exp(-2 · interval · tau_0typ /
+    /// tau_0i); small intervals mean faster wall-clock but correlated
+    /// draws. `f64::INFINITY` = fully decorrelated (ideal) draws.
+    pub phase_interval: f64,
+    /// Seed for the fabrication (mismatch) draws.
+    pub seed: u64,
+}
+
+impl Default for HwConfig {
+    fn default() -> Self {
+        HwConfig {
+            dac_bits: 8,
+            w_full_scale: 2.0,
+            h_full_scale: 2.0,
+            corner: Corner::Typical,
+            sigma_mismatch_v: 0.006,
+            phase_interval: 2.0,
+            seed: 0,
+        }
+    }
+}
+
+impl HwConfig {
+    /// The high-fidelity limit: fine DACs, a perfectly matched die, and a
+    /// phase clock slow enough that every draw is independent. In this
+    /// limit the emulator is an exact chromatic Gibbs sampler and must
+    /// match `gibbs::engine` statistically (see `tests/engine_equivalence`).
+    pub fn ideal() -> HwConfig {
+        HwConfig {
+            dac_bits: 16,
+            sigma_mismatch_v: 0.0,
+            phase_interval: f64::INFINITY,
+            ..HwConfig::default()
+        }
+    }
+
+    pub fn with_bits(mut self, bits: u32) -> HwConfig {
+        self.dac_bits = bits;
+        self
+    }
+
+    pub fn with_corner(mut self, corner: Corner) -> HwConfig {
+        self.corner = corner;
+        self
+    }
+
+    pub fn with_interval(mut self, interval: f64) -> HwConfig {
+        self.phase_interval = interval;
+        self
+    }
+
+    pub fn with_mismatch(mut self, sigma_v: f64) -> HwConfig {
+        self.sigma_mismatch_v = sigma_v;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> HwConfig {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Quantize `v` to the nearest `bits`-bit DAC level on the uniform ladder
+/// spanning [-full_scale, +full_scale]. Values outside the programmable
+/// range clip to the rails. The ladder is the standard midrise DAC (2^bits
+/// evenly spaced levels, end points on the rails), so *zero is not a
+/// representable level* — at coarse resolutions even a zero weight programs
+/// a small coupling, which is part of the nonideality being emulated. 24+
+/// bits passes through (finer than the f32 mantissa at these scales).
+pub fn quantize(v: f32, bits: u32, full_scale: f32) -> f32 {
+    assert!(bits >= 1, "a DAC needs at least one bit");
+    debug_assert!(full_scale > 0.0, "full scale must be positive");
+    let v = v.clamp(-full_scale, full_scale);
+    if bits >= 24 {
+        return v;
+    }
+    let steps = ((1u32 << bits) - 1) as f32;
+    let q = ((v + full_scale) * steps / (2.0 * full_scale)).round();
+    q * (2.0 * full_scale) / steps - full_scale
+}
+
+/// One fabricated chip: the per-cell device parameters drawn once at
+/// "manufacture" (corner systematic skew + intra-die mismatch) and shared
+/// by every program the chip runs. Holding this fixed across sampler calls
+/// is what makes the emulator a *chip* rather than fresh noise per call.
+#[derive(Clone, Debug)]
+pub struct CellFabric {
+    pub n: usize,
+    pub corner: Corner,
+    /// Per-cell shift of the sigmoid argument: comparator offset mismatch
+    /// in volts mapped through the calibrated logistic slope of the RNG
+    /// operating curve.
+    pub delta: Vec<f32>,
+    /// Per-cell draw-to-draw comparator-noise autocorrelation in [0, 1)
+    /// (a cell draws once per sweep, i.e. every two phase ticks).
+    pub rho: Vec<f32>,
+    /// Per-cell output decorrelation time tau_0 [s].
+    pub tau0: Vec<f64>,
+    /// Per-cell RNG energy per produced bit [J] (static power × tau_0).
+    pub e_bit: Vec<f64>,
+}
+
+impl CellFabric {
+    /// Draw one chip of `n` cells under `cfg` (deterministic in
+    /// `cfg.seed`). Mismatch and corner mapping follow
+    /// `circuit::corner_monte_carlo`: threshold shifts scale subthreshold
+    /// currents as exp(-dVth / (n_f·V_T)); speed tracks the NMOS branch,
+    /// static power tracks both. The comparator *offset* is an independent
+    /// intra-die draw (the corner skews both halves of the differential
+    /// pair together, so it is common-mode there).
+    pub fn fabricate(n: usize, cfg: &HwConfig) -> CellFabric {
+        let base = RngCellParams::default();
+        // Calibrate the operating curve to a logistic once, the way the
+        // on-chip DAC calibration would: fit P(1|V) over ±10 V_T.
+        let vs: Vec<f64> = (0..41).map(|i| (i as f64 - 20.0) * 0.5 * V_THERMAL).collect();
+        let ps: Vec<f64> = vs.iter().map(|&v| circuit::analytic_bias(&base, v)).collect();
+        let (_v_half, slope_per_v) = circuit::fit_sigmoid(&vs, &ps);
+
+        let (dn_sys, dp_sys) = cfg.corner.vth_shift();
+        let mut rng = Rng::new(cfg.seed ^ 0x44C7_A11A);
+        let mut delta = Vec::with_capacity(n);
+        let mut rho = Vec::with_capacity(n);
+        let mut tau0 = Vec::with_capacity(n);
+        let mut e_bit = Vec::with_capacity(n);
+        for _ in 0..n {
+            let dvn = dn_sys + cfg.sigma_mismatch_v * rng.normal();
+            let dvp = dp_sys + cfg.sigma_mismatch_v * rng.normal();
+            let (t0, power) = circuit::device_speed_power(&base, dvn, dvp);
+            let dv_offset = cfg.sigma_mismatch_v * rng.normal();
+            tau0.push(t0);
+            e_bit.push(power * t0);
+            delta.push((slope_per_v * dv_offset) as f32);
+            // t_phase is set chip-wide against the typical tau_0. A cell
+            // samples on every OTHER tick of the two-color phase clock, so
+            // its consecutive draws are 2·t_phase apart — hence the factor
+            // 2 in the exponent. Slow cells decorrelate less per draw.
+            // Clamped below 1 so a degenerate (zero/negative) interval
+            // still yields a valid AR(1) state instead of NaN draws.
+            let r = (-(2.0 * cfg.phase_interval * base.tau_noise) / t0).exp();
+            rho.push(r.clamp(0.0, 0.999_999) as f32);
+        }
+        CellFabric {
+            n,
+            corner: cfg.corner,
+            delta,
+            rho,
+            tau0,
+            e_bit,
+        }
+    }
+}
+
+/// Standard normal CDF via the circuit module's erf approximation.
+#[inline]
+pub(crate) fn phi(x: f64) -> f64 {
+    0.5 * (1.0 + circuit::erf(x / std::f64::consts::SQRT_2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_levels_and_rails() {
+        // 1 bit: only the rails.
+        assert_eq!(quantize(0.3, 1, 2.0), 2.0);
+        assert_eq!(quantize(-0.3, 1, 2.0), -2.0);
+        // 2 bits over ±2: ladder {-2, -2/3, 2/3, 2}.
+        let q = quantize(0.5, 2, 2.0);
+        assert!((q - 2.0 / 3.0).abs() < 1e-6, "got {q}");
+        // Midrise ladder: zero is not representable at coarse resolution.
+        assert!((quantize(0.0, 2, 2.0).abs() - 2.0 / 3.0).abs() < 1e-6);
+        // Out-of-range clips.
+        assert_eq!(quantize(7.0, 8, 2.0), 2.0);
+        assert_eq!(quantize(-7.0, 8, 2.0), -2.0);
+        // High resolution is near-exact; 24+ bits is exact passthrough.
+        assert!((quantize(0.377, 16, 2.0) - 0.377).abs() < 1e-4);
+        assert_eq!(quantize(0.377, 24, 2.0), 0.377);
+    }
+
+    #[test]
+    fn quantize_monotone_and_symmetric() {
+        for bits in [2u32, 4, 8] {
+            let mut prev = f32::NEG_INFINITY;
+            for i in 0..200 {
+                let v = -2.5 + 5.0 * i as f32 / 199.0;
+                let q = quantize(v, bits, 2.0);
+                assert!(q >= prev, "quantizer must be monotone");
+                prev = q;
+            }
+            // Odd symmetry away from rounding boundaries.
+            for v in [0.3f32, 0.5, 1.0] {
+                let q = quantize(v, bits, 2.0);
+                assert!((quantize(-v, bits, 2.0) + q).abs() < 1e-5, "odd symmetry");
+            }
+        }
+    }
+
+    #[test]
+    fn fabric_deterministic_and_sized() {
+        let cfg = HwConfig::default();
+        let a = CellFabric::fabricate(64, &cfg);
+        let b = CellFabric::fabricate(64, &cfg);
+        assert_eq!(a.n, 64);
+        assert_eq!(a.delta, b.delta);
+        assert_eq!(a.rho, b.rho);
+        assert!(a.tau0.iter().all(|&t| t > 0.0 && t.is_finite()));
+        assert!(a.e_bit.iter().all(|&e| e > 0.0 && e.is_finite()));
+        assert!(a.rho.iter().all(|&r| (0.0..1.0).contains(&r)));
+    }
+
+    #[test]
+    fn ideal_fabric_is_noise_free() {
+        let f = CellFabric::fabricate(32, &HwConfig::ideal());
+        assert!(f.delta.iter().all(|&d| d == 0.0));
+        assert!(f.rho.iter().all(|&r| r == 0.0));
+        // Typical corner, zero mismatch: exactly nominal tau_0 and 350 aJ.
+        assert!(f.tau0.iter().all(|&t| (t - 100e-9).abs() < 1e-15));
+        assert!(f.e_bit.iter().all(|&e| (e - 350e-18).abs() / 350e-18 < 1e-9));
+    }
+
+    #[test]
+    fn slow_corner_has_higher_autocorrelation_and_energy() {
+        let n = 256;
+        let typ = CellFabric::fabricate(n, &HwConfig::default());
+        let slow = CellFabric::fabricate(
+            n,
+            &HwConfig::default().with_corner(Corner::SlowNFastP),
+        );
+        let mean = |v: &[f32]| v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+        let mean64 = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert!(
+            mean(&slow.rho) > mean(&typ.rho),
+            "slow-NMOS cells must decorrelate less per phase"
+        );
+        assert!(mean64(&slow.e_bit) > mean64(&typ.e_bit));
+        assert!(mean64(&slow.tau0) > mean64(&typ.tau0));
+    }
+
+    #[test]
+    fn mismatch_spreads_delta() {
+        let f = CellFabric::fabricate(512, &HwConfig::default());
+        let mean: f64 = f.delta.iter().map(|&d| d as f64).sum::<f64>() / 512.0;
+        let var: f64 = f
+            .delta
+            .iter()
+            .map(|&d| (d as f64 - mean) * (d as f64 - mean))
+            .sum::<f64>()
+            / 512.0;
+        // 6 mV through a ~16/V calibrated slope: sigma_delta ~ 0.1.
+        assert!(var.sqrt() > 0.02 && var.sqrt() < 0.5, "sigma {}", var.sqrt());
+        assert!(mean.abs() < 0.05);
+    }
+
+    #[test]
+    fn phi_matches_known_values() {
+        assert!((phi(0.0) - 0.5).abs() < 1e-7);
+        assert!((phi(1.96) - 0.975).abs() < 2e-3);
+        assert!((phi(-1.96) - 0.025).abs() < 2e-3);
+    }
+}

@@ -1,0 +1,366 @@
+//! [`HwSampler`] — the emulated-device sampling backend.
+//!
+//! Implements `train::sampler::LayerSampler` on top of [`HwArray`], so the
+//! trainer, the MEBM baseline, the serving coordinator and the figure
+//! harness can run against the emulated DTCA instead of the ideal software
+//! engine (`--backend hw` on the CLI). One [`CellFabric`] is drawn at
+//! construction — the sampler *is* a chip; every program it runs shares the
+//! same fabricated mismatch — and every call's executed schedule
+//! accumulates into one [`HwSchedule`], priced through the App. E device
+//! model by [`HwSampler::energy`].
+
+use anyhow::Result;
+
+use crate::energy::{self, DeviceParams};
+use crate::gibbs::{self, engine::TopoCache};
+use crate::graph::Topology;
+use crate::model::LayerParams;
+use crate::train::sampler::{LayerSampler, LayerStats};
+use crate::util::rng::Rng;
+
+use super::{CellFabric, HwArray, HwConfig, HwSchedule};
+
+/// App. E-style breakdown of the energy for an executed schedule [J].
+#[derive(Clone, Copy, Debug)]
+pub struct HwEnergy {
+    /// RNG cells, from the per-cell corner/mismatch-scaled e_bit actually
+    /// drawn (Fig. 4c).
+    pub rng_j: f64,
+    /// Bias-network charging, Eq. E10, per executed cell update.
+    pub bias_j: f64,
+    /// Phase-clock row lines (Sec. E3a), per executed cell update.
+    pub clock_j: f64,
+    /// Neighbor-wire signaling, Eq. E11/E12, per executed cell update.
+    pub comm_j: f64,
+    /// Program initialization + readout I/O, Eq. E16/E17, per executed
+    /// program (one per chain per run call).
+    pub io_j: f64,
+}
+
+impl HwEnergy {
+    pub fn total(&self) -> f64 {
+        self.rng_j + self.bias_j + self.clock_j + self.comm_j + self.io_j
+    }
+}
+
+pub struct HwSampler {
+    top: Topology,
+    batch: usize,
+    cfg: HwConfig,
+    fabric: CellFabric,
+    rng: Rng,
+    threads: usize,
+    proj: Vec<f32>, // [N * P] fixed random projection for trace()
+    proj_dim: usize,
+    topos: TopoCache,
+    sched: HwSchedule,
+}
+
+impl HwSampler {
+    pub fn new(top: Topology, batch: usize, cfg: HwConfig, seed: u64) -> HwSampler {
+        let mut rng = Rng::new(seed);
+        let n = top.n_nodes();
+        let proj_dim = 8;
+        let proj = (0..n * proj_dim)
+            .map(|_| (rng.normal() / (n as f64).sqrt()) as f32)
+            .collect();
+        let fabric = CellFabric::fabricate(n, &cfg);
+        HwSampler {
+            top,
+            batch,
+            cfg,
+            fabric,
+            rng,
+            threads: crate::util::threadpool::default_threads(),
+            proj,
+            proj_dim,
+            topos: TopoCache::new(),
+            sched: HwSchedule::default(),
+        }
+    }
+
+    /// Set the chain-parallel worker count (results are identical for any
+    /// value at a given seed; this only trades wall-clock).
+    pub fn with_threads(mut self, threads: usize) -> HwSampler {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn config(&self) -> &HwConfig {
+        &self.cfg
+    }
+
+    pub fn fabric(&self) -> &CellFabric {
+        &self.fabric
+    }
+
+    /// The cumulative executed schedule across every call on this sampler.
+    pub fn schedule(&self) -> &HwSchedule {
+        &self.sched
+    }
+
+    pub fn reset_schedule(&mut self) {
+        self.sched = HwSchedule::default();
+    }
+
+    /// Price the executed schedule through the App. E device model: cell
+    /// updates pay bias/clock/comm at the pattern's wire geometry, RNG
+    /// energy is the per-cell corner-scaled sum the array metered, and each
+    /// program pays boundary-to-bulk init/readout I/O at the chip side
+    /// length.
+    pub fn energy(&self, p: &DeviceParams) -> Result<HwEnergy> {
+        let cell = energy::cell_energy(p, &self.top.pattern)?;
+        let u = self.sched.cell_updates as f64;
+        let io = energy::io_energy_per_node(p, self.top.grid);
+        let per_program = (self.top.n_nodes() + self.top.n_data) as f64 * io;
+        Ok(HwEnergy {
+            rng_j: self.sched.rng_joules,
+            bias_j: u * cell.e_bias,
+            clock_j: u * cell.e_clock,
+            comm_j: u * cell.e_comm,
+            io_j: self.sched.programs as f64 * per_program,
+        })
+    }
+
+    /// Emulated wall-clock of the executed schedule: every sweep is two
+    /// phase ticks of `phase_interval * tau_0`. Ideal (infinite-interval)
+    /// RNG runs are clocked at 20 tau_0 per phase — the point where the
+    /// draws are decorrelated to ~1e-9; explicit finite intervals are
+    /// honored as given.
+    pub fn device_seconds(&self) -> f64 {
+        let tau0 = crate::circuit::RngCellParams::default().tau_noise;
+        let interval = if self.cfg.phase_interval.is_finite() {
+            self.cfg.phase_interval
+        } else {
+            20.0
+        };
+        self.sched.sweeps as f64 * 2.0 * interval * tau0
+    }
+
+    fn machine(&self, params: &LayerParams, gm: &[f32], beta: f32) -> gibbs::Machine {
+        gibbs::Machine::new(&self.top, &params.w_edges, params.h.clone(), gm.to_vec(), beta)
+    }
+
+    /// Compile a program for `(machine, cmask)` on this chip; topology
+    /// gather cached per cmask like `RustSampler`.
+    fn array(&mut self, m: &gibbs::Machine, cmask: &[f32]) -> HwArray {
+        let topo = self.topos.topo_for(&self.top, cmask);
+        HwArray::new(topo, &self.fabric, m, &self.cfg)
+    }
+}
+
+impl LayerSampler for HwSampler {
+    fn topology(&self) -> &Topology {
+        &self.top
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn stats(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        cmask: &[f32],
+        cval: &[f32],
+        k: usize,
+        burn: usize,
+    ) -> Result<LayerStats> {
+        let m = self.machine(params, gm, beta);
+        let mut arr = self.array(&m, cmask);
+        let mut chains = gibbs::Chains::random(self.batch, self.top.n_nodes(), &mut self.rng);
+        chains.impose_clamps(cmask, cval);
+        let st = arr.run_stats(&mut chains, xt, k, burn, self.threads, &mut self.rng);
+        self.sched.absorb(arr.schedule());
+        Ok(LayerStats {
+            pair: st.pair_mean(),
+            mean_b: st.node_mean_b(),
+            batch: self.batch,
+        })
+    }
+
+    fn sample(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        s0: Option<&[f32]>,
+        k: usize,
+    ) -> Result<Vec<f32>> {
+        let m = self.machine(params, gm, beta);
+        let n = self.top.n_nodes();
+        let cmask = vec![0.0f32; n];
+        let mut arr = self.array(&m, &cmask);
+        let mut chains = match s0 {
+            Some(s) => gibbs::Chains {
+                b: self.batch,
+                n,
+                s: s.to_vec(),
+            },
+            None => gibbs::Chains::random(self.batch, n, &mut self.rng),
+        };
+        arr.run_sweeps(&mut chains, xt, k, self.threads, &mut self.rng);
+        self.sched.absorb(arr.schedule());
+        Ok(chains.s)
+    }
+
+    fn trace(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        k: usize,
+    ) -> Result<Vec<Vec<f64>>> {
+        self.trace_tail(params, gm, beta, xt, k, k)
+    }
+
+    fn trace_tail(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        k: usize,
+        keep: usize,
+    ) -> Result<Vec<Vec<f64>>> {
+        let m = self.machine(params, gm, beta);
+        let n = self.top.n_nodes();
+        let cmask = vec![0.0f32; n];
+        let mut arr = self.array(&m, &cmask);
+        let mut chains = gibbs::Chains::random(self.batch, n, &mut self.rng);
+        let series = arr.run_trace_tail(
+            &mut chains,
+            xt,
+            k,
+            keep,
+            &self.proj,
+            self.proj_dim,
+            self.threads,
+            &mut self.rng,
+        );
+        self.sched.absorb(arr.schedule());
+        Ok(series)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph;
+
+    fn tiny() -> (Topology, LayerParams) {
+        let top = graph::build("t", 6, "G8", 9, 0).unwrap();
+        let params = LayerParams::init(&top, &mut Rng::new(0), 0.1);
+        (top, params)
+    }
+
+    #[test]
+    fn hw_sampler_stats_shapes() {
+        let (top, params) = tiny();
+        let n = top.n_nodes();
+        let mut s = HwSampler::new(top.clone(), 4, HwConfig::default(), 0);
+        let gm = vec![0.0f32; n];
+        let xt = vec![0.0f32; 4 * n];
+        let st = s
+            .stats(&params, &gm, 1.0, &xt, &vec![0.0; n], &vec![0.0; 4 * n], 20, 5)
+            .unwrap();
+        assert_eq!(st.pair.len(), n * top.degree);
+        assert_eq!(st.mean_b.len(), 4 * n);
+        assert!(st.pair.iter().all(|x| x.abs() <= 1.0 + 1e-9));
+    }
+
+    #[test]
+    fn hw_sampler_thread_invariant() {
+        let (top, params) = tiny();
+        let n = top.n_nodes();
+        let gm = vec![0.0f32; n];
+        let xt = vec![0.0f32; 4 * n];
+        let run = |threads: usize| {
+            let mut s =
+                HwSampler::new(top.clone(), 4, HwConfig::default(), 9).with_threads(threads);
+            let st = s
+                .stats(&params, &gm, 1.0, &xt, &vec![0.0; n], &vec![0.0; 4 * n], 25, 5)
+                .unwrap();
+            let smp = s.sample(&params, &gm, 1.0, &xt, None, 10).unwrap();
+            (st.pair, st.mean_b, smp)
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+        assert_eq!(a.2, b.2);
+    }
+
+    #[test]
+    fn hw_sampler_trace_tail_len() {
+        let (top, params) = tiny();
+        let n = top.n_nodes();
+        let mut s = HwSampler::new(top.clone(), 3, HwConfig::default(), 1);
+        let tr = s
+            .trace_tail(&params, &vec![0.0; n], 1.0, &vec![0.0; 3 * n], 30, 12)
+            .unwrap();
+        assert_eq!(tr.len(), 3);
+        assert!(tr.iter().all(|c| c.len() == 12));
+    }
+
+    #[test]
+    fn hw_sampler_meters_energy() {
+        let (top, params) = tiny();
+        let n = top.n_nodes();
+        let mut s = HwSampler::new(top.clone(), 4, HwConfig::default(), 2);
+        assert_eq!(s.schedule().cell_updates, 0);
+        let _ = s
+            .sample(&params, &vec![0.0; n], 1.0, &vec![0.0; 4 * n], None, 15)
+            .unwrap();
+        let sched = *s.schedule();
+        assert_eq!(sched.sweeps, 4 * 15);
+        assert_eq!(sched.cell_updates, (4 * 15 * n) as u64);
+        assert_eq!(sched.programs, 4);
+        let e = s.energy(&DeviceParams::default()).unwrap();
+        assert!(e.rng_j > 0.0 && e.bias_j > 0.0 && e.clock_j > 0.0 && e.comm_j > 0.0);
+        assert!(e.io_j > 0.0);
+        let total = e.total();
+        // Ballpark: ~2 fJ/update at G8-ish wiring.
+        let per_update = (total - e.io_j) / sched.cell_updates as f64;
+        assert!(
+            (0.5e-15..5e-15).contains(&per_update),
+            "per-update energy {per_update:.3e} J"
+        );
+        assert!(s.device_seconds() > 0.0 && s.device_seconds().is_finite());
+        // Energy is cumulative across calls and resettable.
+        let _ = s
+            .sample(&params, &vec![0.0; n], 1.0, &vec![0.0; 4 * n], None, 5)
+            .unwrap();
+        assert_eq!(s.schedule().sweeps, 4 * 20);
+        s.reset_schedule();
+        assert_eq!(s.schedule().sweeps, 0);
+    }
+
+    #[test]
+    fn worse_corner_costs_more_energy_per_update() {
+        let (top, params) = tiny();
+        let n = top.n_nodes();
+        let run = |cfg: HwConfig| {
+            let mut s = HwSampler::new(top.clone(), 4, cfg, 3);
+            let _ = s
+                .sample(&params, &vec![0.0; n], 1.0, &vec![0.0; 4 * n], None, 10)
+                .unwrap();
+            s.schedule().rng_joules / s.schedule().cell_updates as f64
+        };
+        let typ = run(HwConfig::default());
+        let slow = run(HwConfig::default().with_corner(crate::circuit::Corner::SlowNFastP));
+        assert!(
+            slow > typ,
+            "slow-NMOS/fast-PMOS corner must draw more RNG energy: {slow:.3e} vs {typ:.3e}"
+        );
+    }
+}

@@ -24,6 +24,8 @@
 //! - [`data`] — synthetic fashion-like / CIFAR-like datasets, App. I embedding.
 //! - [`energy`] — App. E device energy model, App. F GPU model, Fig. 7 landscape.
 //! - [`circuit`] — subthreshold RNG simulator + process-corner Monte-Carlo.
+//! - [`hw`] — device-faithful DTCA array emulator (quantized DACs, correlated
+//!   RNG cells, phase clocking, process corners) behind the sampler trait.
 //! - [`runtime`] — PJRT client, artifact manifest, executable cache.
 //! - [`model`] — DTM parameters, forward process, persistence.
 //! - [`train`] — gradient estimation, Adam, ACP, trainers.
@@ -41,6 +43,7 @@ pub mod energy;
 pub mod figures;
 pub mod gibbs;
 pub mod graph;
+pub mod hw;
 pub mod linalg;
 pub mod metrics;
 pub mod model;

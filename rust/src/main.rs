@@ -12,12 +12,14 @@
 
 use anyhow::{bail, Context, Result};
 
+use thermo_dtm::circuit::Corner;
 use thermo_dtm::coordinator::{ServerConfig, Server};
 use thermo_dtm::coordinator::batcher::BatcherConfig;
 use thermo_dtm::data::{fashion_dataset, FashionConfig};
 use thermo_dtm::energy::{self, DeviceParams};
 use thermo_dtm::figures::{self, FigOpts};
 use thermo_dtm::graph;
+use thermo_dtm::hw::{HwConfig, HwSampler};
 use thermo_dtm::model::Dtm;
 use thermo_dtm::runtime::Runtime;
 use thermo_dtm::train::acp::AcpParams;
@@ -55,17 +57,19 @@ fn run() -> Result<()> {
         }
         "energy-report" => energy_report(),
         "bench-info" => {
-            println!("cargo bench targets: bench_gibbs, bench_pipeline, bench_batcher, bench_metrics, bench_energy");
+            println!("cargo bench targets: bench_gibbs, bench_hw, bench_pipeline, bench_batcher, bench_metrics, bench_energy");
             Ok(())
         }
         "help" | _ => {
             println!(
                 "usage: repro <selfcheck|topology|train|generate|serve|figures|energy-report> [--flags]\n\
                  common flags: --artifacts DIR --config dtm_m32 --fast --seed N --threads N\n\
-                 train:    --t-steps 4 --epochs 10 --k-train 30 --out ckpt.json --backend hlo|rust\n\
-                 generate: --ckpt ckpt.json --n 64 --k 60 --backend hlo|rust\n\
+                 train:    --t-steps 4 --epochs 10 --k-train 30 --out ckpt.json --backend hlo|rust|hw\n\
+                 generate: --ckpt ckpt.json --n 64 --k 60 --backend hlo|rust|hw\n\
                  serve:    --ckpt ckpt.json --requests 32 --req-images 8 --linger-ms 5\n\
-                 figures:  repro figures <id|all> [--fast] [--out results]"
+                 figures:  repro figures <id|all> [--fast] [--out results]\n\
+                 hw backend (emulated DTCA): --hw-bits 8 --hw-corner typical --hw-interval 2.0\n\
+                           --hw-mismatch-mv 6.0 --hw-seed 0"
             );
             Ok(())
         }
@@ -76,9 +80,46 @@ fn artifacts_dir(args: &Args) -> String {
     args.str_opt("artifacts", "artifacts")
 }
 
-/// Build a sampler for `--backend hlo|rust` (hlo requires artifacts).
+/// Emulated-device knobs for `--backend hw`.
+fn hw_config_from_args(args: &Args) -> Result<HwConfig> {
+    let corner_name = args.str_opt("hw-corner", "typical");
+    let corner = Corner::from_name(&corner_name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown corner {corner_name:?}; known: typical, slow_nmos_fast_pmos, fast_nmos_slow_pmos"
+        )
+    })?;
+    let bits = args.usize_opt("hw-bits", 8)?;
+    if !(1..=32).contains(&bits) {
+        bail!("--hw-bits must be in 1..=32, got {bits}");
+    }
+    let interval = args.f64_opt("hw-interval", 2.0)?;
+    if !(interval > 0.0) {
+        bail!("--hw-interval must be positive (phase period in units of tau_0), got {interval}");
+    }
+    let mismatch_mv = args.f64_opt("hw-mismatch-mv", 6.0)?;
+    if !(0.0..=1000.0).contains(&mismatch_mv) {
+        bail!("--hw-mismatch-mv must be in 0..=1000, got {mismatch_mv}");
+    }
+    Ok(HwConfig::default()
+        .with_bits(bits as u32)
+        .with_corner(corner)
+        .with_interval(interval)
+        .with_mismatch(mismatch_mv * 1e-3)
+        .with_seed(args.usize_opt("hw-seed", 0)? as u64))
+}
+
+/// Build a sampler for `--backend hlo|rust|hw` (hlo requires artifacts; hw
+/// is the emulated DTCA device).
 fn make_sampler(args: &Args, cfg: &str, seed: u64) -> Result<Box<dyn LayerSampler>> {
     let backend = args.str_opt("backend", "hlo");
+    // For artifact-free backends: mirror the artifact topology if present,
+    // else build fresh.
+    let local_top = |args: &Args| -> Result<graph::Topology> {
+        match Runtime::open(artifacts_dir(args)) {
+            Ok(rt) => rt.topology(cfg),
+            Err(_) => graph::build(cfg, 32, "G12", 256, 7),
+        }
+    };
     match backend.as_str() {
         "hlo" => {
             let rt = Runtime::open(artifacts_dir(args))
@@ -87,15 +128,17 @@ fn make_sampler(args: &Args, cfg: &str, seed: u64) -> Result<Box<dyn LayerSample
             Ok(Box::new(HloSampler::new(exec, seed)))
         }
         "rust" => {
-            // Mirror the artifact topology if present, else build fresh.
-            let top = match Runtime::open(artifacts_dir(args)) {
-                Ok(rt) => rt.topology(cfg)?,
-                Err(_) => graph::build(cfg, 32, "G12", 256, 7)?,
-            };
+            let top = local_top(args)?;
             let threads = args.usize_opt("threads", default_threads())?;
             Ok(Box::new(RustSampler::new(top, 32, seed).with_threads(threads)))
         }
-        other => bail!("unknown backend {other:?} (hlo|rust)"),
+        "hw" => {
+            let top = local_top(args)?;
+            let threads = args.usize_opt("threads", default_threads())?;
+            let hw_cfg = hw_config_from_args(args)?;
+            Ok(Box::new(HwSampler::new(top, 32, hw_cfg, seed).with_threads(threads)))
+        }
+        other => bail!("unknown backend {other:?} (hlo|rust|hw)"),
     }
 }
 
@@ -289,18 +332,27 @@ fn serve(args: &Args) -> Result<()> {
         k_inference: k,
         seed: 4,
     };
-    let server = if backend == "rust" {
-        let top = graph::build(&cfg_name, 32, "G12", 256, 7)?;
-        let threads = args.usize_opt("threads", default_threads())?;
-        Server::spawn(cfg, dtm, move || {
-            Ok(RustSampler::new(top, 32, 13).with_threads(threads))
-        })
-    } else {
-        Server::spawn(cfg, dtm, move || {
+    let server = match backend.as_str() {
+        "rust" => {
+            let top = graph::build(&cfg_name, 32, "G12", 256, 7)?;
+            let threads = args.usize_opt("threads", default_threads())?;
+            Server::spawn(cfg, dtm, move || {
+                Ok(RustSampler::new(top, 32, 13).with_threads(threads))
+            })
+        }
+        "hw" => {
+            let top = graph::build(&cfg_name, 32, "G12", 256, 7)?;
+            let threads = args.usize_opt("threads", default_threads())?;
+            let hw_cfg = hw_config_from_args(args)?;
+            Server::spawn(cfg, dtm, move || {
+                Ok(HwSampler::new(top, 32, hw_cfg, 13).with_threads(threads))
+            })
+        }
+        _ => Server::spawn(cfg, dtm, move || {
             let rt = Runtime::open(artifacts)?;
             let exec = rt.dtm_exec(&cfg_name)?;
             Ok(HloSampler::new(exec, 13))
-        })
+        }),
     };
     let client = server.client();
     let t0 = std::time::Instant::now();

@@ -14,9 +14,11 @@
 //! Integration tests assert the two produce statistically identical results
 //! on the same topology/parameters.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
-use crate::gibbs::{self, engine, engine::SweepPlan};
+use crate::gibbs::{self, engine, engine::SweepPlan, engine::SweepTopo};
 use crate::graph::Topology;
 use crate::model::LayerParams;
 use crate::runtime::{DtmExec, LayerInputs, Tensor};
@@ -84,6 +86,30 @@ pub trait LayerSampler {
         xt: &[f32],
         k: usize,
     ) -> Result<Vec<Vec<f64>>>;
+
+    /// Like [`LayerSampler::trace`], but return only the final `keep`
+    /// observations per chain — the window the autocorrelation consumers
+    /// (r_yy, mixing fits) actually read after discarding warm-up. The
+    /// default truncates a full trace; streaming backends override it to
+    /// hold O(keep) memory per chain regardless of `k` (Fig. 16-scale
+    /// windows).
+    fn trace_tail(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        k: usize,
+        keep: usize,
+    ) -> Result<Vec<Vec<f64>>> {
+        let mut series = self.trace(params, gm, beta, xt, k)?;
+        for c in series.iter_mut() {
+            if c.len() > keep {
+                c.drain(..c.len() - keep);
+            }
+        }
+        Ok(series)
+    }
 }
 
 /// Delegation so `&mut S` and `Box<dyn LayerSampler>` are themselves
@@ -107,6 +133,10 @@ impl<T: LayerSampler + ?Sized> LayerSampler for &mut T {
              k: usize) -> Result<Vec<Vec<f64>>> {
         (**self).trace(params, gm, beta, xt, k)
     }
+    fn trace_tail(&mut self, params: &LayerParams, gm: &[f32], beta: f32, xt: &[f32],
+                  k: usize, keep: usize) -> Result<Vec<Vec<f64>>> {
+        (**self).trace_tail(params, gm, beta, xt, k, keep)
+    }
 }
 
 impl<T: LayerSampler + ?Sized> LayerSampler for Box<T> {
@@ -128,6 +158,10 @@ impl<T: LayerSampler + ?Sized> LayerSampler for Box<T> {
              k: usize) -> Result<Vec<Vec<f64>>> {
         (**self).trace(params, gm, beta, xt, k)
     }
+    fn trace_tail(&mut self, params: &LayerParams, gm: &[f32], beta: f32, xt: &[f32],
+                  k: usize, keep: usize) -> Result<Vec<Vec<f64>>> {
+        (**self).trace_tail(params, gm, beta, xt, k, keep)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -141,6 +175,9 @@ pub struct RustSampler {
     threads: usize,
     proj: Vec<f32>, // [N * P] fixed random projection for trace()
     proj_dim: usize,
+    /// Per-cmask compiled topologies, reused across calls so per-call plan
+    /// construction is only the O(E) weight gather.
+    topos: engine::TopoCache,
 }
 
 impl RustSampler {
@@ -158,6 +195,7 @@ impl RustSampler {
             threads: crate::util::threadpool::default_threads(),
             proj,
             proj_dim,
+            topos: engine::TopoCache::new(),
         }
     }
 
@@ -174,6 +212,13 @@ impl RustSampler {
 
     fn machine(&self, params: &LayerParams, gm: &[f32], beta: f32) -> gibbs::Machine {
         gibbs::Machine::new(&self.top, &params.w_edges, params.h.clone(), gm.to_vec(), beta)
+    }
+
+    /// Compiled plan for `(machine, cmask)`: topology gather cached per
+    /// cmask, weights regathered fresh (they change every trainer step).
+    fn plan(&mut self, m: &gibbs::Machine, cmask: &[f32]) -> SweepPlan {
+        let topo: Arc<SweepTopo> = self.topos.topo_for(&self.top, cmask);
+        SweepPlan::from_topo(topo, m)
     }
 }
 
@@ -198,9 +243,9 @@ impl LayerSampler for RustSampler {
         burn: usize,
     ) -> Result<LayerStats> {
         let m = self.machine(params, gm, beta);
+        let plan = self.plan(&m, cmask);
         let mut chains = gibbs::Chains::random(self.batch, self.top.n_nodes(), &mut self.rng);
         chains.impose_clamps(cmask, cval);
-        let plan = SweepPlan::new(&self.top, &m, cmask);
         let st = engine::run_stats(&plan, &mut chains, xt, k, burn, self.threads, &mut self.rng);
         Ok(LayerStats {
             pair: st.pair_mean(),
@@ -220,6 +265,8 @@ impl LayerSampler for RustSampler {
     ) -> Result<Vec<f32>> {
         let m = self.machine(params, gm, beta);
         let n = self.top.n_nodes();
+        let cmask = vec![0.0f32; n];
+        let plan = self.plan(&m, &cmask);
         let mut chains = match s0 {
             Some(s) => gibbs::Chains {
                 b: self.batch,
@@ -228,8 +275,6 @@ impl LayerSampler for RustSampler {
             },
             None => gibbs::Chains::random(self.batch, n, &mut self.rng),
         };
-        let cmask = vec![0.0f32; n];
-        let plan = SweepPlan::new(&self.top, &m, &cmask);
         engine::run_sweeps(&plan, &mut chains, xt, k, self.threads, &mut self.rng);
         Ok(chains.s)
     }
@@ -242,17 +287,31 @@ impl LayerSampler for RustSampler {
         xt: &[f32],
         k: usize,
     ) -> Result<Vec<Vec<f64>>> {
+        self.trace_tail(params, gm, beta, xt, k, k)
+    }
+
+    fn trace_tail(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        k: usize,
+        keep: usize,
+    ) -> Result<Vec<Vec<f64>>> {
         let m = self.machine(params, gm, beta);
         let n = self.top.n_nodes();
-        let mut chains = gibbs::Chains::random(self.batch, n, &mut self.rng);
         let cmask = vec![0.0f32; n];
-        let plan = SweepPlan::new(&self.top, &m, &cmask);
-        // First projection component as the scalar observable.
-        let series = engine::run_trace(
+        let plan = self.plan(&m, &cmask);
+        let mut chains = gibbs::Chains::random(self.batch, n, &mut self.rng);
+        // First projection component as the scalar observable, streamed
+        // through a fixed-size ring (O(keep) memory per chain).
+        let series = engine::run_trace_tail(
             &plan,
             &mut chains,
             xt,
             k,
+            keep,
             &self.proj,
             self.proj_dim,
             self.threads,
@@ -528,6 +587,53 @@ mod tests {
         assert_eq!(a.0, b.0);
         assert_eq!(a.1, b.1);
         assert_eq!(a.2, b.2);
+    }
+
+    #[test]
+    fn rust_sampler_topo_cache_reused_across_calls() {
+        let top = graph::build("t", 6, "G8", 9, 0).unwrap();
+        let n = top.n_nodes();
+        let params = LayerParams::init(&top, &mut Rng::new(2), 0.1);
+        let p2 = LayerParams::init(&top, &mut Rng::new(5), 0.2);
+        let gm = vec![0.0f32; n];
+        let xt = vec![0.0f32; 4 * n];
+        let dmask = top.data_mask();
+        let zeros_m = vec![0.0f32; n];
+        let cval = vec![1.0f32; 4 * n];
+        let mut s = RustSampler::new(top.clone(), 4, 7);
+        // Alternate clamped/free masks with changing weights, like trainer
+        // iterations do.
+        for p in [&params, &p2, &params] {
+            let a = s.stats(p, &gm, 1.0, &xt, &dmask, &cval, 15, 5).unwrap();
+            let b = s.stats(p, &gm, 1.0, &xt, &zeros_m, &cval, 15, 5).unwrap();
+            assert!(a.pair.iter().chain(&b.pair).all(|x| x.is_finite()));
+        }
+        // Only two distinct masks were seen -> only two compiled topos,
+        // reused across all six stats() calls.
+        assert_eq!(s.topos.len(), 2);
+        // The cached topos are exactly what a fresh compile produces.
+        let cached = s.topos.topo_for(&top, &dmask);
+        let fresh = engine::SweepTopo::new(&top, &dmask);
+        assert_eq!(cached.updates_per_sweep(), fresh.updates_per_sweep());
+        assert_eq!(cached.gathered_pairs(), fresh.gathered_pairs());
+        assert_eq!(s.topos.len(), 2, "lookup must not grow the cache");
+    }
+
+    #[test]
+    fn rust_sampler_trace_tail_matches_trace_suffix() {
+        let top = graph::build("t", 6, "G8", 9, 0).unwrap();
+        let n = top.n_nodes();
+        let params = LayerParams::init(&top, &mut Rng::new(3), 0.1);
+        let full = RustSampler::new(top.clone(), 3, 4)
+            .trace(&params, &vec![0.0; n], 1.0, &vec![0.0; 3 * n], 20)
+            .unwrap();
+        let tail = RustSampler::new(top.clone(), 3, 4)
+            .trace_tail(&params, &vec![0.0; n], 1.0, &vec![0.0; 3 * n], 20, 8)
+            .unwrap();
+        for (f, t) in full.iter().zip(&tail) {
+            assert_eq!(t.len(), 8);
+            assert_eq!(&f[12..], &t[..]);
+        }
     }
 
     #[test]

@@ -201,11 +201,12 @@ impl<S: LayerSampler> Trainer<S> {
             let gm = self.dtm.gm_vec(&top, t);
             let xt_full = crate::model::scatter_data(&top, &chain[t + 1], b);
             let params = self.dtm.layers[t].clone();
-            let series = self
+            // Keep only the post-burn-in window (streamed through a ring
+            // buffer by samplers that support it), so the chains are
+            // near-stationary and memory stays O(keep) per chain.
+            let tail = self
                 .sampler
-                .trace(&params, &gm, self.dtm.beta, &xt_full, 3 * k)?;
-            // Discard a burn-in prefix so the chains are near-stationary.
-            let tail: Vec<Vec<f64>> = series.iter().map(|c| c[k.min(c.len())..].to_vec()).collect();
+                .trace_tail(&params, &gm, self.dtm.beta, &xt_full, 3 * k, 2 * k)?;
             let r = metrics::autocorrelation(&tail, k);
             out.push(r[k].clamp(-1.0, 1.0));
         }

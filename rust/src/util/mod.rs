@@ -11,6 +11,7 @@ pub mod cli;
 pub mod csv;
 pub mod fastmath;
 pub mod json;
+pub mod ring;
 pub mod rng;
 pub mod threadpool;
 

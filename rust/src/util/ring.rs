@@ -1,0 +1,92 @@
+//! Fixed-capacity ring buffer for streaming scalar observables.
+//!
+//! Used by the trace paths (`gibbs::engine::run_trace_tail`, the samplers'
+//! `trace_tail`) to keep only the most recent `cap` observations of a long
+//! Gibbs trace window, so Fig. 16-scale autocorrelation windows cost O(cap)
+//! memory per chain instead of O(k).
+
+/// A fixed-capacity overwrite-oldest ring of `f64` samples.
+#[derive(Clone, Debug)]
+pub struct RingBuf {
+    cap: usize,
+    buf: Vec<f64>,
+    /// Index of the oldest element once the buffer has wrapped.
+    head: usize,
+}
+
+impl RingBuf {
+    pub fn new(cap: usize) -> RingBuf {
+        assert!(cap > 0, "RingBuf capacity must be positive");
+        RingBuf {
+            cap,
+            buf: Vec::with_capacity(cap),
+            head: 0,
+        }
+    }
+
+    /// Append a sample, evicting the oldest once full.
+    pub fn push(&mut self, v: f64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(v);
+        } else {
+            self.buf[self.head] = v;
+            self.head = (self.head + 1) % self.cap;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Contents in arrival order (oldest first).
+    pub fn to_vec(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_then_wraps() {
+        let mut r = RingBuf::new(3);
+        assert!(r.is_empty());
+        r.push(1.0);
+        r.push(2.0);
+        assert_eq!(r.to_vec(), vec![1.0, 2.0]);
+        r.push(3.0);
+        r.push(4.0);
+        r.push(5.0);
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.capacity(), 3);
+        assert_eq!(r.to_vec(), vec![3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn matches_tail_of_full_series() {
+        let mut r = RingBuf::new(7);
+        let series: Vec<f64> = (0..100).map(|i| (i as f64).sin()).collect();
+        for &v in &series {
+            r.push(v);
+        }
+        assert_eq!(r.to_vec(), series[93..].to_vec());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_panics() {
+        let _ = RingBuf::new(0);
+    }
+}

@@ -1,14 +1,26 @@
-//! Fixed-size thread pool with a scoped `map` helper (tokio/rayon substitute).
+//! Fixed-size thread pool with scoped `map` helpers (tokio/rayon substitute).
 //!
 //! The coordinator uses this for request handling and for running
-//! independent chains/figure sweeps in parallel.
+//! independent chains/figure sweeps in parallel. The chain-parallel Gibbs
+//! engine routes its per-call fan-out through [`pooled_map`], which reuses
+//! one process-wide pool ([`ThreadPool::shared`]) instead of spawning and
+//! joining scoped OS threads on every engine call — the per-call overhead
+//! that small-k serving workloads used to pay.
 
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    /// True on threads owned by any `ThreadPool` — used by [`pooled_map`] to
+    /// avoid queueing work behind the very job that is waiting for it.
+    static IS_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
 
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
@@ -26,14 +38,17 @@ impl ThreadPool {
             .map(|_| {
                 let rx = Arc::clone(&rx);
                 let queued = Arc::clone(&queued);
-                thread::spawn(move || loop {
-                    let job = { rx.lock().unwrap().recv() };
-                    match job {
-                        Ok(job) => {
-                            job();
-                            queued.fetch_sub(1, Ordering::SeqCst);
+                thread::spawn(move || {
+                    IS_POOL_WORKER.with(|c| c.set(true));
+                    loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                queued.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break,
                         }
-                        Err(_) => break,
                     }
                 })
             })
@@ -43,6 +58,82 @@ impl ThreadPool {
             workers,
             queued,
         }
+    }
+
+    /// The process-wide shared pool (sized to [`default_threads`]), created
+    /// on first use and kept alive for the life of the process so repeated
+    /// engine calls amortize thread creation to zero.
+    pub fn shared() -> &'static ThreadPool {
+        static POOL: OnceLock<ThreadPool> = OnceLock::new();
+        POOL.get_or_init(|| ThreadPool::new(default_threads()))
+    }
+
+    /// True when the calling thread is a `ThreadPool` worker.
+    pub fn on_worker_thread() -> bool {
+        IS_POOL_WORKER.with(|c| c.get())
+    }
+
+    /// Run `f(i)` for i in 0..n across up to `width` pool workers, blocking
+    /// until every index completes; results are returned in order. A panic
+    /// inside `f` is caught on the worker and re-raised here after all
+    /// outstanding work drains (the pool itself survives).
+    pub fn scoped_map<T, F>(&self, n: usize, width: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        // A pool job that queued sub-work on its own pool and then blocked on
+        // it could deadlock once every worker is such a parent; fall back to
+        // plain scoped threads in that (nested) case.
+        if Self::on_worker_thread() {
+            return parallel_map(n, width, f);
+        }
+        let width = width.clamp(1, n).min(self.size());
+        if width <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let slots = Mutex::new(&mut out);
+        let (done_tx, done_rx) = mpsc::channel::<bool>();
+        {
+            let next = &next;
+            let slots = &slots;
+            let f = &f;
+            for _ in 0..width {
+                let tx = done_tx.clone();
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let ok = catch_unwind(AssertUnwindSafe(|| loop {
+                        let i = next.fetch_add(1, Ordering::SeqCst);
+                        if i >= n {
+                            break;
+                        }
+                        let v = f(i);
+                        slots.lock().unwrap()[i] = Some(v);
+                    }))
+                    .is_ok();
+                    let _ = tx.send(ok);
+                });
+                // SAFETY: the borrows captured by `job` (next/slots/f) stay
+                // alive until this function returns, and we block below until
+                // every submitted job has signalled completion — including on
+                // panic, which `catch_unwind` converts into a signal — so no
+                // job can outlive the borrows despite the 'static erasure.
+                let job: Job = unsafe { std::mem::transmute(job) };
+                self.queued.fetch_add(1, Ordering::SeqCst);
+                self.tx.as_ref().unwrap().send(job).unwrap();
+            }
+        }
+        drop(done_tx);
+        let mut ok = true;
+        for _ in 0..width {
+            ok &= done_rx.recv().expect("pool worker disappeared");
+        }
+        assert!(ok, "scoped_map worker panicked");
+        out.into_iter().map(|x| x.unwrap()).collect()
     }
 
     pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
@@ -109,6 +200,27 @@ where
     out.into_iter().map(|x| x.unwrap()).collect()
 }
 
+/// Run `f(i)` for i in 0..n with up to `threads` workers from the shared
+/// persistent pool ([`ThreadPool::shared`]), collecting results in order.
+/// `threads <= 1` runs inline with no synchronization at all. Requests
+/// wider than the pool (deliberate oversubscription via `--threads` /
+/// `THERMO_DTM_THREADS`) fall back to dedicated scoped threads so the
+/// requested width is honored. Results never depend on the worker count —
+/// only wall-clock does.
+pub fn pooled_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if threads <= 1 || n <= 1 {
+        (0..n).map(f).collect()
+    } else if threads > ThreadPool::shared().size() {
+        parallel_map(n, threads, f)
+    } else {
+        ThreadPool::shared().scoped_map(n, threads, f)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,5 +254,65 @@ mod tests {
     #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn scoped_map_ordered_and_complete() {
+        let pool = ThreadPool::new(4);
+        let out = pool.scoped_map(37, 4, |i| 3 * i + 1);
+        assert_eq!(out, (0..37).map(|i| 3 * i + 1).collect::<Vec<_>>());
+        // The pool survives and can be reused.
+        let out2 = pool.scoped_map(5, 8, |i| i);
+        assert_eq!(out2, vec![0, 1, 2, 3, 4]);
+        assert_eq!(pool.pending(), 0);
+    }
+
+    #[test]
+    fn scoped_map_borrows_caller_state() {
+        let pool = ThreadPool::new(3);
+        let data: Vec<u64> = (0..100).collect();
+        let out = pool.scoped_map(100, 3, |i| data[i] * 2);
+        assert_eq!(out[99], 198);
+    }
+
+    #[test]
+    fn scoped_map_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scoped_map(8, 2, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+                i
+            })
+        }));
+        assert!(r.is_err());
+        // Workers are still alive afterwards.
+        assert_eq!(pool.scoped_map(4, 2, |i| i), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn scoped_map_nested_from_worker_falls_back() {
+        let pool = ThreadPool::new(2);
+        // Every outer job issues a nested scoped_map on the same pool; the
+        // worker-thread fallback keeps this from deadlocking.
+        let out = pool.scoped_map(4, 2, |i| pool.scoped_map(3, 2, move |j| i * 10 + j));
+        assert_eq!(out[2], vec![20, 21, 22]);
+    }
+
+    #[test]
+    fn pooled_map_matches_inline() {
+        let a = pooled_map(20, 1, |i| i * i);
+        let b = pooled_map(20, 4, |i| i * i);
+        assert_eq!(a, b);
+        assert!(pooled_map(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn shared_pool_is_reused() {
+        let p1 = ThreadPool::shared() as *const ThreadPool;
+        let p2 = ThreadPool::shared() as *const ThreadPool;
+        assert_eq!(p1, p2);
+        assert!(ThreadPool::shared().size() >= 1);
     }
 }
