@@ -89,7 +89,8 @@ fn main() -> Result<()> {
     let last = tr.final_pfid();
     println!("\nwall clock: {wall:.1}s");
     if let (Some(a), Some(b)) = (first, last) {
-        println!("proxy-FID: {a:.2} -> {b:.2} ({})", if b < a { "improved" } else { "no improvement" });
+        let verdict = if b < a { "improved" } else { "no improvement" };
+        println!("proxy-FID: {a:.2} -> {b:.2} ({verdict})");
     }
 
     // Paper headline accounting for this trained model.

@@ -1,0 +1,157 @@
+#!/usr/bin/env python3
+"""Bench regression gate: compare freshly emitted BENCH_*.json files against
+committed baselines and FAIL on throughput regression.
+
+Usage:
+    python3 python/tools/check_bench.py [--threshold 0.25] [--update] \
+        FRESH=BASELINE [FRESH=BASELINE ...]
+
+e.g. (what CI runs after the bench smokes):
+    python3 python/tools/check_bench.py \
+        BENCH_gibbs.json=baselines/BENCH_gibbs.json \
+        BENCH_hw.json=baselines/BENCH_hw.json
+
+Rules (stdlib only, exit code is the gate):
+  * rows are matched by their "name" field inside "configs";
+  * every numeric field ending in `_per_sec` is compared; a fresh value
+    below baseline * (1 - threshold) is a REGRESSION -> exit 1;
+  * a baseline value of null means "seeded, not yet measured" (the repo is
+    bootstrapped from a toolchain-less image): reported, never failing —
+    run with --update on a quiet machine and commit the result to arm the
+    gate for that row;
+  * a baseline row missing from the fresh output is a FAILURE (renaming or
+    dropping a bench must be done deliberately, by updating the baseline);
+  * new fresh rows/fields simply report "new (no baseline)";
+  * --update rewrites each baseline from the fresh file (all `_per_sec`
+    fields filled in), so refreshing baselines is one command.
+
+A table is printed either way so the numbers land in the CI log.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+THRESHOLD_DEFAULT = 0.25
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows_by_name(doc):
+    out = {}
+    for row in doc.get("configs", []):
+        name = row.get("name")
+        if isinstance(name, str):
+            out[name] = row
+    return out
+
+
+def perf_fields(row):
+    return sorted(
+        k
+        for k, v in row.items()
+        if k.endswith("_per_sec") and (v is None or isinstance(v, (int, float)))
+    )
+
+
+def fmt(v):
+    if v is None:
+        return "-"
+    if isinstance(v, float) and (v != v):  # NaN
+        return "nan"
+    return f"{v:,.1f}"
+
+
+def check_pair(fresh_path, base_path, threshold, update):
+    print(f"\n== {fresh_path} vs {base_path} ==")
+    if not os.path.exists(fresh_path):
+        print(f"FAIL: fresh bench output {fresh_path!r} missing (bench did not run?)")
+        return ["missing fresh output"]
+    fresh = rows_by_name(load(fresh_path))
+    if not os.path.exists(base_path):
+        print(f"note: no baseline at {base_path!r}; nothing to gate against")
+        if update:
+            write_baseline(fresh_path, base_path)
+        return []
+    base = rows_by_name(load(base_path))
+
+    failures = []
+    header = f"{'row':<28} {'field':<26} {'baseline':>14} {'fresh':>14} {'ratio':>7}  status"
+    print(header)
+    print("-" * len(header))
+    for name, brow in sorted(base.items()):
+        frow = fresh.get(name)
+        if frow is None:
+            print(f"{name:<28} {'-':<26} {'-':>14} {'-':>14} {'-':>7}  MISSING from fresh run")
+            failures.append(f"{name}: row missing from fresh output")
+            continue
+        for field in perf_fields(brow):
+            bval = brow.get(field)
+            fval = frow.get(field)
+            if bval is None:
+                status = "seeded (no measured baseline yet)"
+                ratio = "-"
+            elif not isinstance(fval, (int, float)):
+                status = "MISSING field in fresh row"
+                failures.append(f"{name}.{field}: missing from fresh output")
+                ratio = "-"
+            else:
+                ratio = f"{fval / bval:5.2f}x" if bval > 0 else "-"
+                if bval > 0 and fval < bval * (1.0 - threshold):
+                    status = f"REGRESSION (> {threshold:.0%} below baseline)"
+                    failures.append(
+                        f"{name}.{field}: {fval:,.1f} < {bval * (1 - threshold):,.1f} "
+                        f"(baseline {bval:,.1f})"
+                    )
+                else:
+                    status = "ok"
+            print(f"{name:<28} {field:<26} {fmt(bval):>14} {fmt(fval):>14} {ratio:>7}  {status}")
+    for name in sorted(set(fresh) - set(base)):
+        print(f"{name:<28} {'*':<26} {'-':>14} {'-':>14} {'-':>7}  new (no baseline)")
+
+    if update:
+        write_baseline(fresh_path, base_path)
+    return failures
+
+
+def write_baseline(fresh_path, base_path):
+    os.makedirs(os.path.dirname(base_path) or ".", exist_ok=True)
+    with open(fresh_path) as f:
+        doc = json.load(f)
+    with open(base_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"updated baseline {base_path} from {fresh_path}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("pairs", nargs="+", metavar="FRESH=BASELINE")
+    ap.add_argument("--threshold", type=float, default=THRESHOLD_DEFAULT,
+                    help="max tolerated fractional drop (default 0.25)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite each baseline from the fresh file")
+    args = ap.parse_args()
+
+    all_failures = []
+    for pair in args.pairs:
+        if "=" not in pair:
+            ap.error(f"expected FRESH=BASELINE, got {pair!r}")
+        fresh_path, base_path = pair.split("=", 1)
+        all_failures += check_pair(fresh_path, base_path, args.threshold, args.update)
+
+    print()
+    if all_failures:
+        print(f"BENCH GATE FAILED ({len(all_failures)} problem(s)):")
+        for f in all_failures:
+            print(f"  - {f}")
+        sys.exit(1)
+    print("BENCH GATE PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,18 +1,26 @@
 //! bench_gibbs: the L1 hot path — node-updates/second of one full Gibbs
-//! iteration across grid sizes, comparing three substrates:
+//! iteration across grid sizes, comparing the substrates:
 //!   * `rust_*`      — the scalar reference sweep (`gibbs::sweep`), the
 //!                     seed baseline every speedup is measured against;
 //!   * `engine_t1_*` — the precompiled color-partitioned `SweepPlan`
 //!                     engine on one worker;
 //!   * `engine_tN_*` — the same engine chain-parallel on N workers;
+//!   * `packed_*`    — the bit-packed popcount backend vs the f32 gather
+//!                     backend on the *same* DAC-quantized machine
+//!                     (identical target distribution), at the paper's
+//!                     L=70 scale and below;
 //! plus the HLO/PJRT path when artifacts are present. Writes a
-//! machine-readable `BENCH_gibbs.json` at the repo root so future PRs can
-//! track the perf trajectory.
+//! machine-readable `BENCH_gibbs.json` at the repo root; CI compares it
+//! against `baselines/BENCH_gibbs.json` (python/tools/check_bench.py) and
+//! fails on >25% samples/s regression.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use thermo_dtm::bench::Bencher;
-use thermo_dtm::gibbs::{self, engine, engine::SweepPlan};
+use thermo_dtm::gibbs::engine::{self, SweepPlan, SweepTopo};
+use thermo_dtm::gibbs::packed::quantize_machine;
+use thermo_dtm::gibbs::{self, SweepPlanPacked, WeightGrid};
 use thermo_dtm::graph;
 use thermo_dtm::model::LayerParams;
 use thermo_dtm::runtime::Runtime;
@@ -93,6 +101,85 @@ fn main() {
                 Value::Num(mt_ups / scalar_ups.max(1e-9)),
             ),
         ]));
+    }
+
+    // Packed vs f32 on the SAME DAC-quantized machine (identical target
+    // distribution) — the representation comparison, up to the paper's
+    // L=70 benchmark scale. samples/s counts chain-sweeps: one chain
+    // advancing one full Gibbs iteration (batch 32 x k sweeps per call).
+    for (l, pat) in [(24usize, "G8"), (48, "G12"), (70, "G12")] {
+        let top = graph::build("bench_packed", l, pat, l * l / 4, 0).unwrap();
+        let n = top.n_nodes();
+        let mut rng = Rng::new(0);
+        let params = LayerParams::init(&top, &mut rng, 0.2);
+        let m = gibbs::Machine::new(&top, &params.w_edges, params.h.clone(), vec![0.0; n], 1.0);
+        let cmask = vec![0.0f32; n];
+        let topo = Arc::new(SweepTopo::new(&top, &cmask));
+        let qm = quantize_machine(&topo, &m, WeightGrid::default());
+        let f32_plan = SweepPlan::from_topo(Arc::clone(&topo), &qm);
+        let packed_plan = SweepPlanPacked::from_topo(Arc::clone(&topo), &qm, WeightGrid::default());
+
+        let batch = 32;
+        let mt_used = mt.min(batch);
+        let mut chains = gibbs::Chains::random(batch, n, &mut rng);
+        let xt = vec![0.0f32; batch * n];
+        // One "sample" = one chain-sweep (a single chain's full two-color
+        // Gibbs iteration, the unit the paper counts as K per chain).
+        let samples = (batch * k_amort) as f64;
+        let f32_sps = b
+            .iter_items(&format!("repr_f32_L{l}_{pat}_B{batch}"), samples, || {
+                engine::run_sweeps(&f32_plan, &mut chains, &xt, k_amort, mt_used, &mut rng);
+            })
+            .throughput();
+        let packed_sps = b
+            .iter_items(&format!("repr_packed_L{l}_{pat}_B{batch}"), samples, || {
+                gibbs::packed::run_sweeps_packed(
+                    &packed_plan,
+                    &mut chains,
+                    &xt,
+                    k_amort,
+                    mt_used,
+                    &mut rng,
+                );
+            })
+            .throughput();
+
+        entries.push(json::obj(vec![
+            ("name", Value::Str(format!("packed_L{l}_{pat}_B{batch}"))),
+            ("grid", Value::Num(l as f64)),
+            ("pattern", Value::Str(pat.to_string())),
+            ("batch", Value::Num(batch as f64)),
+            ("threads", Value::Num(mt_used as f64)),
+            ("sweeps_per_engine_call", Value::Num(k_amort as f64)),
+            ("f32_samples_per_sec", Value::Num(f32_sps)),
+            ("packed_samples_per_sec", Value::Num(packed_sps)),
+            (
+                "speedup_packed_vs_f32",
+                Value::Num(packed_sps / f32_sps.max(1e-9)),
+            ),
+            (
+                "f32_state_bytes_per_chain",
+                Value::Num(f32_plan.state_bytes_per_chain() as f64),
+            ),
+            (
+                "packed_state_bytes_per_chain",
+                Value::Num(packed_plan.state_bytes_per_chain() as f64),
+            ),
+            (
+                "f32_plan_bytes_per_sweep",
+                Value::Num(f32_plan.plan_bytes_per_sweep() as f64),
+            ),
+            (
+                "packed_plan_bytes_per_sweep",
+                Value::Num(packed_plan.plan_bytes_per_sweep() as f64),
+            ),
+        ]));
+        println!(
+            "  -> L{l} packed/f32 speedup {:.2}x  (state {} B vs {} B per chain)",
+            packed_sps / f32_sps.max(1e-9),
+            packed_plan.state_bytes_per_chain(),
+            f32_plan.state_bytes_per_chain()
+        );
     }
 
     // HLO hot path (chunk iterations per call; report per-iteration rate).

@@ -159,8 +159,10 @@ where
     });
     let mut rng = Rng::new(cfg.seed);
     let mut stats = ServerStats::default();
-    let mut pending: std::collections::HashMap<u64, (mpsc::Sender<Response>, Vec<f32>, usize, Instant)> =
-        std::collections::HashMap::new();
+    let mut pending: std::collections::HashMap<
+        u64,
+        (mpsc::Sender<Response>, Vec<f32>, usize, Instant),
+    > = std::collections::HashMap::new();
     let mut next_id = 0u64;
     let nd = sampler.topology().data_nodes.len();
     let mut shutting_down = false;

@@ -36,9 +36,16 @@ fn class_shape(class: usize, u: f64, v: f64) -> bool {
         // Coat: wide torso + collar gap
         4 => in_box(0.2, 0.15, 0.8, 0.9) && !in_box(0.45, 0.15, 0.55, 0.45),
         // Sandal: sole + straps
-        5 => in_box(0.1, 0.65, 0.9, 0.8) || in_box(0.25, 0.35, 0.35, 0.65) || in_box(0.6, 0.35, 0.7, 0.65),
+        5 => {
+            in_box(0.1, 0.65, 0.9, 0.8)
+                || in_box(0.25, 0.35, 0.35, 0.65)
+                || in_box(0.6, 0.35, 0.7, 0.65)
+        }
         // Shirt: torso + buttons line
-        6 => in_box(0.3, 0.2, 0.7, 0.9) && !((u - 0.5).abs() < 0.02 && ((v * 10.0) as i64) % 2 == 0),
+        6 => {
+            let button_gap = (u - 0.5).abs() < 0.02 && ((v * 10.0) as i64) % 2 == 0;
+            in_box(0.3, 0.2, 0.7, 0.9) && !button_gap
+        }
         // Sneaker: wedge
         7 => v >= 0.55 && v <= 0.85 && u >= 0.08 && u <= 0.92 && v >= 0.85 - 0.45 * u,
         // Bag: body + handle

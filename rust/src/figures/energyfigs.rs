@@ -66,7 +66,9 @@ pub fn fig11(opts: &FigOpts) -> Result<()> {
 /// Fig. 12(b): per-cell energy breakdown at the App. E operating point.
 pub fn fig12b(opts: &FigOpts) -> Result<()> {
     let p = DeviceParams::default();
-    let mut csv = Csv::new(&["pattern", "e_rng_aJ", "e_bias_aJ", "e_clock_aJ", "e_comm_aJ", "e_cell_fJ"]);
+    let mut csv = Csv::new(&[
+        "pattern", "e_rng_aJ", "e_bias_aJ", "e_clock_aJ", "e_comm_aJ", "e_cell_fJ",
+    ]);
     println!(
         "{:<6} {:>9} {:>9} {:>9} {:>9} {:>10}",
         "pat", "rng", "bias", "clock", "comm", "total"

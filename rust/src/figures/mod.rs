@@ -11,6 +11,7 @@ pub mod training;
 
 use anyhow::{bail, Result};
 
+use crate::gibbs::Repr;
 use crate::util::cli::Args;
 
 /// Shared harness options.
@@ -23,16 +24,22 @@ pub struct FigOpts {
     pub seed: u64,
     /// Worker threads for the chain-parallel Gibbs engine (`--threads`).
     pub threads: usize,
+    /// Spin representation for the engine-backed figures (`--repr`);
+    /// `Auto` picks packed whenever a layer's weights sit on a DAC grid.
+    pub repr: Repr,
 }
 
 impl FigOpts {
     pub fn from_args(args: &Args) -> Result<FigOpts> {
+        let repr_name = args.str_opt("repr", "auto");
         Ok(FigOpts {
             out_dir: args.str_opt("out", "results"),
             fast: args.bool_flag("fast"),
             artifacts: args.str_opt("artifacts", "artifacts"),
             seed: args.usize_opt("seed", 0)? as u64,
             threads: args.usize_opt("threads", crate::util::threadpool::default_threads())?,
+            repr: Repr::from_name(&repr_name)
+                .ok_or_else(|| anyhow::anyhow!("unknown --repr {repr_name:?} (packed|f32|auto)"))?,
         })
     }
 

@@ -61,7 +61,9 @@ pub fn quick_train(
         k_eval: 2 * k_train,
         seed: opts.seed + 77,
     };
-    let sampler = RustSampler::new(top.clone(), 32, opts.seed + 5).with_threads(opts.threads);
+    let sampler = RustSampler::new(top.clone(), 32, opts.seed + 5)
+        .with_threads(opts.threads)
+        .with_repr(opts.repr);
     let mut tr = Trainer::new(sampler, dtm, cfg, data.to_vec())?;
     tr.run(data)?;
     Ok(tr)
@@ -201,7 +203,8 @@ pub fn fig12a(opts: &FigOpts) -> Result<()> {
         for step in 0..=t {
             let mut next = Vec::with_capacity(xt.len());
             for row in 0..b {
-                next.extend(tr.dtm.forward.noise_step(step, &xt[row * 256..(row + 1) * 256], &mut rng));
+                let src = &xt[row * 256..(row + 1) * 256];
+                next.extend(tr.dtm.forward.noise_step(step, src, &mut rng));
             }
             xt = next;
         }
@@ -367,7 +370,9 @@ pub fn fig18(opts: &FigOpts) -> Result<()> {
         k_eval: 60,
         seed: opts.seed + 77,
     };
-    let sampler = RustSampler::new(top.clone(), 32, opts.seed + 5).with_threads(opts.threads);
+    let sampler = RustSampler::new(top.clone(), 32, opts.seed + 5)
+        .with_threads(opts.threads)
+        .with_repr(opts.repr);
     let mut tr = Trainer::new(sampler, dtm, cfg, data.to_vec())?;
     let mut csv = Csv::new(&["epoch", "pfid", "tau_iters"]);
     for epoch in 0..epochs {

@@ -62,6 +62,15 @@ struct ColorTopo {
 /// non-padding slot list the fused statistics pass walks. Independent of the
 /// machine's weights, so one `SweepTopo` serves arbitrarily many
 /// [`SweepPlan`]s (and the `hw::` array emulator) on the same graph + mask.
+///
+/// The topo also fixes the **packed bit layout** shared by every
+/// [`super::packed::SweepPlanPacked`] compiled from it: one bit per node
+/// (clamped nodes included — their bits are read by neighbors), color-major
+/// with color-0 nodes first in ascending id order, then color-1 nodes
+/// starting at the next u64 word boundary. Word-aligning the second block
+/// means the words an updating color writes are disjoint from the words it
+/// reads (edges always cross the bipartition), and per-color neighbor masks
+/// never straddle block boundaries.
 pub struct SweepTopo {
     pub n: usize,
     pub degree: usize,
@@ -71,6 +80,12 @@ pub struct SweepTopo {
     stat_slot: Vec<u32>,
     stat_node: Vec<u32>,
     stat_nbr: Vec<u32>,
+    /// Packed bit position per node id (color-major, see above).
+    bit_pos: Vec<u32>,
+    /// u64 words in a packed row.
+    packed_words: usize,
+    /// Words occupied by the color-0 block (the color-1 block starts here).
+    color0_words: usize,
 }
 
 impl SweepTopo {
@@ -117,6 +132,21 @@ impl SweepTopo {
             }
         }
 
+        let n0 = top.color.iter().filter(|&&c| c == 0).count();
+        let color0_words = n0.div_ceil(64);
+        let mut bit_pos = vec![0u32; n];
+        let (mut p0, mut p1) = (0usize, color0_words * 64);
+        for (i, &c) in top.color.iter().enumerate() {
+            if c == 0 {
+                bit_pos[i] = p0 as u32;
+                p0 += 1;
+            } else {
+                bit_pos[i] = p1 as u32;
+                p1 += 1;
+            }
+        }
+        let packed_words = color0_words + (n - n0).div_ceil(64);
+
         SweepTopo {
             n,
             degree: d,
@@ -124,6 +154,9 @@ impl SweepTopo {
             stat_slot,
             stat_node,
             stat_nbr,
+            bit_pos,
+            packed_words,
+            color0_words,
         }
     }
 
@@ -135,6 +168,23 @@ impl SweepTopo {
     /// Gathered (weight, neighbor) pairs across both colors.
     pub fn gathered_pairs(&self) -> usize {
         self.colors[0].nbr.len() + self.colors[1].nbr.len()
+    }
+
+    /// Packed bit position of every node id (color-major layout; clamped
+    /// nodes included). Public so external tests can assert the layout.
+    pub fn packed_bit_pos(&self) -> &[u32] {
+        &self.bit_pos
+    }
+
+    /// u64 words per packed state row.
+    pub fn packed_words(&self) -> usize {
+        self.packed_words
+    }
+
+    /// Words occupied by the color-0 block; the color-1 block starts at
+    /// this word index.
+    pub fn color0_packed_words(&self) -> usize {
+        self.color0_words
     }
 
     // Crate-internal accessors for alternate executors (the `hw::` emulator
@@ -285,6 +335,19 @@ impl SweepPlan {
     /// Gathered (weight, neighbor) pairs across both colors.
     pub fn gathered_pairs(&self) -> usize {
         self.topo.gathered_pairs()
+    }
+
+    /// Bytes the plan streams per chain sweep (weight + neighbor gathers
+    /// plus per-node scalars) — the shared read-only working set, for
+    /// comparison against the packed backend's.
+    pub fn plan_bytes_per_sweep(&self) -> usize {
+        // w(4) + nbr(4) per pair; bias(4) + gm(4) + off(4) per node.
+        self.gathered_pairs() * 8 + self.updates_per_sweep() * 12
+    }
+
+    /// Bytes of mutable per-chain state (the f32 spin row).
+    pub fn state_bytes_per_chain(&self) -> usize {
+        self.topo.n * 4
     }
 
     #[inline]

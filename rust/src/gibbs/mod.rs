@@ -15,8 +15,10 @@
 //! the scalar sweep chain by chain on per-chain forked RNG streams.
 
 pub mod engine;
+pub mod packed;
 
 pub use engine::SweepPlan;
+pub use packed::{EnginePlan, PackedState, Repr, SweepPlanPacked, WeightGrid};
 
 use crate::graph::Topology;
 use crate::util::rng::Rng;

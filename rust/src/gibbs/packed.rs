@@ -1,0 +1,854 @@
+//! Bit-packed spin representation + masked-popcount local fields — the
+//! second engine backend.
+//!
+//! The paper's energy argument (and every full-stack p-bit machine, e.g.
+//! arXiv:2302.06457) rests on a denoising Gibbs cell needing only a few
+//! bits of state and precision. The f32 engine burns 32 bits per spin and
+//! streams f32 neighbor gathers, so the per-chain working set blows past
+//! L1 exactly at the L=70 scale the paper benchmarks. This module stores
+//! one bit per node and computes pair fields by masked popcount:
+//!
+//! * [`PackedState`] — u64 words, 1 bit/node, in the color-major layout
+//!   fixed by [`SweepTopo`] (`packed_bit_pos`). Clamped nodes keep a bit
+//!   too (neighbors read it); only unclamped nodes are ever written.
+//! * [`SweepPlanPacked`] — compiled from the same `Arc<SweepTopo>` as the
+//!   f32 [`SweepPlan`], valid when the machine's edge weights lie on a
+//!   shared [`crate::hw::quantize`] DAC grid ([`WeightGrid`]). Each color
+//!   carries a table of its distinct quantized weight values; each node's
+//!   neighbors collapse to `(state word, level, mask)` entries, so the
+//!   local field is
+//!
+//!   ```text
+//!   f_i = [h_i - Σ_v w_v c_v] + gm_i·x^t_i + Σ_e 2·w_tab[lv_e]·popcount(word_e & mask_e)
+//!   ```
+//!
+//!   (spins s = 2b − 1, c_v = neighbors of i at level v; the constant is
+//!   folded into the bias at compile time). Same Bernoulli rule and one
+//!   `uniform_f32` draw per update as the f32 half-sweep, so the packed
+//!   engine targets the *same distribution* — agreement is statistical,
+//!   not bit-for-bit, because float summation order differs.
+//! * [`EnginePlan`] — the representation switch threaded through the
+//!   samplers and the CLI (`--repr packed|f32|auto`): `Auto` picks packed
+//!   exactly when [`WeightGrid::detect`] finds the weights on a DAC grid
+//!   (always true for `hw::`-quantized programs, false for raw f32
+//!   trainer weights), `Packed` forces it by first snapping the weights
+//!   to the default 8-bit grid.
+//!
+//! Working set per chain at L=70 G12 (N=4900): f32 row 19,600 B + f32
+//! plan gathers ~8 B/pair; packed row 624 B (~31x smaller state) with
+//! entry lists that merge same-(word, level) neighbors. See
+//! `bench_gibbs`'s packed-vs-f32 rows for the measured effect.
+
+use std::sync::Arc;
+
+use crate::hw::quantize;
+use crate::util::ring::RingBuf;
+use crate::util::rng::Rng;
+
+use super::engine::{chain_rngs, map_chains, SweepPlan, SweepTopo};
+use super::{sigmoid, Chains, Machine, SweepStats};
+
+/// Which engine backend a consumer wants (`--repr` on the CLI).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Repr {
+    /// Always the f32 gather engine.
+    F32,
+    /// Force packed: weights are snapped to the default DAC grid first if
+    /// they are not already on one.
+    Packed,
+    /// Packed when the layer qualifies (weights already on a DAC grid),
+    /// f32 otherwise. The default everywhere.
+    Auto,
+}
+
+impl Repr {
+    pub fn from_name(name: &str) -> Option<Repr> {
+        match name {
+            "f32" => Some(Repr::F32),
+            "packed" => Some(Repr::Packed),
+            "auto" => Some(Repr::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// A DAC weight grid shared with `hw::quantize`: `bits` levels over
+/// ±`full_scale` (midrise ladder, zero not representable).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WeightGrid {
+    pub bits: u32,
+    pub full_scale: f32,
+}
+
+impl Default for WeightGrid {
+    /// The `HwConfig` default coupling DAC: 8 bits over ±2.
+    fn default() -> Self {
+        WeightGrid {
+            bits: 8,
+            full_scale: 2.0,
+        }
+    }
+}
+
+impl WeightGrid {
+    /// Does every non-padding edge weight of `m` already sit on this grid?
+    /// (Quantization is idempotent, so on-grid values are fixed points.)
+    pub fn holds(&self, topo: &SweepTopo, m: &Machine) -> bool {
+        let (slots, _, _) = topo.stat_lists();
+        slots.iter().all(|&s| {
+            let w = m.w_slots[s as usize];
+            quantize(w, self.bits, self.full_scale) == w
+        })
+    }
+
+    /// Find the coarsest standard DAC grid (±2 full scale, 1..=12 bits)
+    /// that reproduces every non-padding weight of `m` exactly. `None`
+    /// means the layer does not qualify for the packed representation
+    /// (e.g. raw f32 trainer weights, or all-zero weights — zero is not a
+    /// midrise level).
+    pub fn detect(topo: &SweepTopo, m: &Machine) -> Option<WeightGrid> {
+        for bits in 1..=12u32 {
+            let g = WeightGrid {
+                bits,
+                full_scale: 2.0,
+            };
+            if g.holds(topo, m) {
+                return Some(g);
+            }
+        }
+        None
+    }
+}
+
+/// Snap `m`'s non-padding edge weights onto `grid` (padding slots stay
+/// exactly 0; biases/gm are untouched — the packed field keeps them f32).
+pub fn quantize_machine(topo: &SweepTopo, m: &Machine, grid: WeightGrid) -> Machine {
+    let mut w = m.w_slots.clone();
+    let (slots, _, _) = topo.stat_lists();
+    for &s in slots {
+        w[s as usize] = quantize(w[s as usize], grid.bits, grid.full_scale);
+    }
+    Machine {
+        w_slots: w,
+        h: m.h.clone(),
+        gm: m.gm.clone(),
+        beta: m.beta,
+    }
+}
+
+/// One chain's spins, 1 bit per node, in the topo's color-major layout.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedState {
+    pub words: Vec<u64>,
+}
+
+impl PackedState {
+    /// Pack a ±1 chain row (bit = 1 iff the spin is up).
+    pub fn from_row(topo: &SweepTopo, row: &[f32]) -> PackedState {
+        assert_eq!(row.len(), topo.n, "row length");
+        let mut words = vec![0u64; topo.packed_words()];
+        let pos = topo.packed_bit_pos();
+        for (i, &v) in row.iter().enumerate() {
+            if v > 0.0 {
+                let p = pos[i] as usize;
+                words[p >> 6] |= 1u64 << (p & 63);
+            }
+        }
+        PackedState { words }
+    }
+
+    #[inline]
+    pub fn bit(&self, pos: usize) -> bool {
+        self.words[pos >> 6] >> (pos & 63) & 1 == 1
+    }
+
+    /// The ±1 spin of node `i` under `topo`'s layout.
+    #[inline]
+    pub fn spin(&self, topo: &SweepTopo, i: usize) -> f32 {
+        if self.bit(topo.packed_bit_pos()[i] as usize) {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    #[inline]
+    fn set(&mut self, pos: usize, up: bool) {
+        let w = &mut self.words[pos >> 6];
+        let m = 1u64 << (pos & 63);
+        if up {
+            *w |= m;
+        } else {
+            *w &= !m;
+        }
+    }
+
+    /// Unpack into a ±1 chain row.
+    pub fn write_row(&self, topo: &SweepTopo, row: &mut [f32]) {
+        assert_eq!(row.len(), topo.n, "row length");
+        let pos = topo.packed_bit_pos();
+        for (i, dst) in row.iter_mut().enumerate() {
+            *dst = if self.bit(pos[i] as usize) { 1.0 } else { -1.0 };
+        }
+    }
+}
+
+/// One color class of a packed plan: the per-color weight table plus each
+/// node's merged `(word, level, mask)` neighbor entries (struct-of-arrays).
+struct PackedColor {
+    /// Node ids to update (the topo's scalar sweep order).
+    nodes: Vec<u32>,
+    /// Packed bit position per listed node (the write target).
+    pos: Vec<u32>,
+    /// Effective bias per listed node: h_i − Σ_v w_v·c_v (constant folded).
+    bias: Vec<f32>,
+    /// Forward coupling per listed node.
+    gm: Vec<f32>,
+    /// Prefix offsets into the entry arrays; len = nodes.len() + 1.
+    off: Vec<u32>,
+    /// Entry: state word index.
+    ew: Vec<u32>,
+    /// Entry: index into `wtab2`.
+    elv: Vec<u16>,
+    /// Entry: neighbor bits within the word.
+    emask: Vec<u64>,
+    /// Per-color weight table, pre-doubled: 2·(distinct quantized values).
+    wtab2: Vec<f32>,
+}
+
+/// A sweep schedule precompiled for one `(SweepTopo, Machine)` pairing
+/// with on-grid edge weights — the packed counterpart of [`SweepPlan`].
+pub struct SweepPlanPacked {
+    pub topo: Arc<SweepTopo>,
+    pub beta: f32,
+    pub grid: WeightGrid,
+    colors: [PackedColor; 2],
+}
+
+impl SweepPlanPacked {
+    /// Compile `m` against a precompiled topo. Panics if any non-padding
+    /// weight is off `grid` — callers either [`WeightGrid::detect`] first
+    /// (`Repr::Auto`) or [`quantize_machine`] first (`Repr::Packed`).
+    pub fn from_topo(topo: Arc<SweepTopo>, m: &Machine, grid: WeightGrid) -> SweepPlanPacked {
+        let (n, d) = (topo.n, topo.degree);
+        assert_eq!(m.w_slots.len(), n * d, "weight table length");
+        assert_eq!(m.h.len(), n, "bias length");
+        assert_eq!(m.gm.len(), n, "gm length");
+        assert!(
+            grid.holds(&topo, m),
+            "SweepPlanPacked requires edge weights on the {}-bit ±{} DAC grid",
+            grid.bits,
+            grid.full_scale
+        );
+        let build = |c: usize| -> PackedColor {
+            let nodes = topo.color_nodes(c).to_vec();
+            let off_t = topo.color_off(c);
+            let nbr = topo.color_nbr(c);
+            let slot = topo.color_slot(c);
+            let bit_pos = topo.packed_bit_pos();
+            // Per-color weight table: distinct quantized values in
+            // first-seen (slot) order, keyed bit-exactly.
+            let mut wtab2: Vec<f32> = Vec::new();
+            let mut level_of = |w: f32| -> u16 {
+                match wtab2.iter().position(|&t| t == 2.0 * w) {
+                    Some(p) => p as u16,
+                    None => {
+                        wtab2.push(2.0 * w);
+                        (wtab2.len() - 1) as u16
+                    }
+                }
+            };
+            let mut pos = Vec::with_capacity(nodes.len());
+            let mut bias = Vec::with_capacity(nodes.len());
+            let mut gm = Vec::with_capacity(nodes.len());
+            let mut off = Vec::with_capacity(nodes.len() + 1);
+            off.push(0u32);
+            let mut ew = Vec::new();
+            let mut elv = Vec::new();
+            let mut emask = Vec::new();
+            // Scratch for one node's (word, level) -> mask merge; degree is
+            // small (<= 24), so a linear scan beats a map.
+            let mut acc: Vec<(u32, u16, u64)> = Vec::with_capacity(d);
+            for (j, &i) in nodes.iter().enumerate() {
+                pos.push(bit_pos[i as usize]);
+                gm.push(m.gm[i as usize]);
+                let mut wsum = 0.0f64;
+                acc.clear();
+                let (a, b) = (off_t[j] as usize, off_t[j + 1] as usize);
+                for t in a..b {
+                    let w = m.w_slots[slot[t] as usize];
+                    wsum += w as f64;
+                    let lv = level_of(w);
+                    let p = bit_pos[nbr[t] as usize];
+                    let (word, bit) = (p >> 6, 1u64 << (p & 63));
+                    match acc.iter_mut().find(|e| e.0 == word && e.1 == lv) {
+                        Some(e) => e.2 |= bit,
+                        None => acc.push((word, lv, bit)),
+                    }
+                }
+                bias.push(m.h[i as usize] - wsum as f32);
+                for &(word, lv, mask) in &acc {
+                    ew.push(word);
+                    elv.push(lv);
+                    emask.push(mask);
+                }
+                off.push(ew.len() as u32);
+            }
+            assert!(
+                wtab2.len() <= u16::MAX as usize + 1,
+                "weight level table overflows u16 ({} levels); quantize to fewer bits",
+                wtab2.len()
+            );
+            PackedColor {
+                nodes,
+                pos,
+                bias,
+                gm,
+                off,
+                ew,
+                elv,
+                emask,
+                wtab2,
+            }
+        };
+        SweepPlanPacked {
+            beta: m.beta,
+            grid,
+            colors: [build(0), build(1)],
+            topo,
+        }
+    }
+
+    /// Nodes updated per full sweep (unclamped nodes of both colors).
+    pub fn updates_per_sweep(&self) -> usize {
+        self.topo.updates_per_sweep()
+    }
+
+    /// Merged `(word, level, mask)` entries across both colors — the packed
+    /// analogue of [`SweepPlan`]'s gathered pairs (never more numerous,
+    /// usually fewer: same-level neighbors sharing a word collapse).
+    pub fn merged_entries(&self) -> usize {
+        self.colors[0].ew.len() + self.colors[1].ew.len()
+    }
+
+    /// Bytes the plan streams per chain sweep (entry lists + per-node
+    /// scalars) — the shared read-only working set.
+    pub fn plan_bytes_per_sweep(&self) -> usize {
+        // ew(4) + elv(2) + emask(8) per entry; pos(4) + bias(4) + gm(4) +
+        // off(4) per node.
+        self.merged_entries() * 14 + self.updates_per_sweep() * 16
+    }
+
+    /// Bytes of mutable per-chain state (the packed row).
+    pub fn state_bytes_per_chain(&self) -> usize {
+        self.topo.packed_words() * 8
+    }
+
+    #[inline]
+    fn half(&self, c: usize, st: &mut PackedState, xt_row: &[f32], rng: &mut Rng) {
+        let pc = &self.colors[c];
+        let two_beta = 2.0 * self.beta;
+        for j in 0..pc.nodes.len() {
+            let i = pc.nodes[j] as usize;
+            let mut f = pc.bias[j] + pc.gm[j] * xt_row[i];
+            let (a, b) = (pc.off[j] as usize, pc.off[j + 1] as usize);
+            for t in a..b {
+                let hits = (st.words[pc.ew[t] as usize] & pc.emask[t]).count_ones();
+                f += pc.wtab2[pc.elv[t] as usize] * hits as f32;
+            }
+            let p = sigmoid(two_beta * f);
+            st.set(pc.pos[j] as usize, rng.uniform_f32() < p);
+        }
+    }
+
+    /// One full two-color sweep of a single packed chain row.
+    #[inline]
+    pub fn sweep_state(&self, st: &mut PackedState, xt_row: &[f32], rng: &mut Rng) {
+        self.half(0, st, xt_row, rng);
+        self.half(1, st, xt_row, rng);
+    }
+}
+
+/// The compiled backend of an [`EnginePlan`].
+enum PlanKind {
+    F32(SweepPlan),
+    Packed(SweepPlanPacked),
+}
+
+/// A compiled engine plan behind the representation switch: the f32 gather
+/// backend or the packed popcount backend, with one run surface. This is
+/// what `RustSampler`/`HwSampler`, the trainer path, MEBM mixing and the
+/// figure harness execute; `Repr::Auto` resolves per layer at compile time
+/// (and again on every [`EnginePlan::reweight`], so a layer can move on or
+/// off the grid across trainer steps).
+pub struct EnginePlan {
+    repr: Repr,
+    kind: PlanKind,
+}
+
+impl EnginePlan {
+    /// Compile `m` against `topo` under the representation policy `repr`.
+    pub fn compile(topo: Arc<SweepTopo>, m: &Machine, repr: Repr) -> EnginePlan {
+        let kind = match repr {
+            Repr::F32 => PlanKind::F32(SweepPlan::from_topo(topo, m)),
+            Repr::Packed => match WeightGrid::detect(&topo, m) {
+                Some(g) => PlanKind::Packed(SweepPlanPacked::from_topo(topo, m, g)),
+                None => {
+                    let g = WeightGrid::default();
+                    let qm = quantize_machine(&topo, m, g);
+                    PlanKind::Packed(SweepPlanPacked::from_topo(topo, &qm, g))
+                }
+            },
+            Repr::Auto => match WeightGrid::detect(&topo, m) {
+                Some(g) => PlanKind::Packed(SweepPlanPacked::from_topo(topo, m, g)),
+                None => PlanKind::F32(SweepPlan::from_topo(topo, m)),
+            },
+        };
+        EnginePlan { repr, kind }
+    }
+
+    /// The representation actually compiled (never `Auto`).
+    pub fn active(&self) -> Repr {
+        match &self.kind {
+            PlanKind::F32(_) => Repr::F32,
+            PlanKind::Packed(_) => Repr::Packed,
+        }
+    }
+
+    /// The policy this plan was compiled under (may be `Auto`).
+    pub fn requested(&self) -> Repr {
+        self.repr
+    }
+
+    pub fn topo(&self) -> &Arc<SweepTopo> {
+        match &self.kind {
+            PlanKind::F32(p) => &p.topo,
+            PlanKind::Packed(p) => &p.topo,
+        }
+    }
+
+    /// Refresh for new weights on the same topology/mask, keeping the
+    /// original *policy*: a pinned-f32 plan reweights in place (no
+    /// allocation); anything involving the packed backend recompiles (the
+    /// entry/level structure depends on the weight values), which also
+    /// re-resolves `Auto` — e.g. an auto plan whose new weights left the
+    /// grid falls back to the f32 gather path.
+    pub fn reweight(&mut self, m: &Machine) {
+        if self.repr == Repr::F32 {
+            if let PlanKind::F32(p) = &mut self.kind {
+                p.reweight(m);
+                return;
+            }
+        }
+        let topo = Arc::clone(self.topo());
+        *self = EnginePlan::compile(topo, m, self.repr);
+    }
+
+    /// Run `k` full sweeps on every chain, chain-parallel across `threads`
+    /// (the [`super::engine::run_sweeps`] contract, repr-dispatched).
+    pub fn run_sweeps(
+        &self,
+        chains: &mut Chains,
+        xt: &[f32],
+        k: usize,
+        threads: usize,
+        rng: &mut Rng,
+    ) {
+        match &self.kind {
+            PlanKind::F32(p) => super::engine::run_sweeps(p, chains, xt, k, threads, rng),
+            PlanKind::Packed(p) => run_sweeps_packed(p, chains, xt, k, threads, rng),
+        }
+    }
+
+    /// Run `k` sweeps per chain with fused statistics after `burn` (the
+    /// [`super::engine::run_stats`] contract, repr-dispatched).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_stats(
+        &self,
+        chains: &mut Chains,
+        xt: &[f32],
+        k: usize,
+        burn: usize,
+        threads: usize,
+        rng: &mut Rng,
+    ) -> SweepStats {
+        match &self.kind {
+            PlanKind::F32(p) => super::engine::run_stats(p, chains, xt, k, burn, threads, rng),
+            PlanKind::Packed(p) => run_stats_packed(p, chains, xt, k, burn, threads, rng),
+        }
+    }
+
+    /// Stream the App. G observable through a ring, returning the final
+    /// `keep` values per chain (the [`super::engine::run_trace_tail`]
+    /// contract, repr-dispatched).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_trace_tail(
+        &self,
+        chains: &mut Chains,
+        xt: &[f32],
+        k: usize,
+        keep: usize,
+        proj: &[f32],
+        stride: usize,
+        threads: usize,
+        rng: &mut Rng,
+    ) -> Vec<Vec<f64>> {
+        match &self.kind {
+            PlanKind::F32(p) => {
+                super::engine::run_trace_tail(p, chains, xt, k, keep, proj, stride, threads, rng)
+            }
+            PlanKind::Packed(p) => {
+                run_trace_tail_packed(p, chains, xt, k, keep, proj, stride, threads, rng)
+            }
+        }
+    }
+}
+
+/// Packed counterpart of `engine::run_sweeps`: per-chain state packs on
+/// entry, sweeps as bits, unpacks on exit. Clamped nodes' bits are carried
+/// but never written, so clamp values survive the round trip.
+pub fn run_sweeps_packed(
+    plan: &SweepPlanPacked,
+    chains: &mut Chains,
+    xt: &[f32],
+    k: usize,
+    threads: usize,
+    rng: &mut Rng,
+) {
+    let n = chains.n;
+    assert_eq!(plan.topo.n, n, "plan/chains node count");
+    assert_eq!(xt.len(), chains.b * n, "xt shape");
+    let rngs = chain_rngs(rng, chains.b);
+    let states = map_chains(chains.b, threads, |bi| {
+        let mut st = PackedState::from_row(&plan.topo, chains.row(bi));
+        let mut r = rngs[bi].clone();
+        let xt_row = &xt[bi * n..(bi + 1) * n];
+        for _ in 0..k {
+            plan.sweep_state(&mut st, xt_row, &mut r);
+        }
+        st
+    });
+    for (bi, st) in states.into_iter().enumerate() {
+        st.write_row(&plan.topo, &mut chains.s[bi * n..(bi + 1) * n]);
+    }
+}
+
+/// Packed counterpart of `engine::run_stats` (fused accumulation from the
+/// bit state over the topo's non-padding slot lists).
+#[allow(clippy::too_many_arguments)]
+pub fn run_stats_packed(
+    plan: &SweepPlanPacked,
+    chains: &mut Chains,
+    xt: &[f32],
+    k: usize,
+    burn: usize,
+    threads: usize,
+    rng: &mut Rng,
+) -> SweepStats {
+    let n = chains.n;
+    let d = plan.topo.degree;
+    let b = chains.b;
+    assert_eq!(plan.topo.n, n, "plan/chains node count");
+    assert_eq!(xt.len(), b * n, "xt shape");
+    let rngs = chain_rngs(rng, b);
+    let (stat_slot, stat_node, stat_nbr) = plan.topo.stat_lists();
+    let pos = plan.topo.packed_bit_pos();
+    let per_chain = map_chains(b, threads, |bi| {
+        let mut st = PackedState::from_row(&plan.topo, chains.row(bi));
+        let mut r = rngs[bi].clone();
+        let xt_row = &xt[bi * n..(bi + 1) * n];
+        let mut pair = vec![0.0f64; n * d];
+        let mut mean = vec![0.0f64; n];
+        for it in 0..k {
+            plan.sweep_state(&mut st, xt_row, &mut r);
+            if it >= burn {
+                for (i, acc) in mean.iter_mut().enumerate() {
+                    *acc += if st.bit(pos[i] as usize) { 1.0 } else { -1.0 };
+                }
+                for t in 0..stat_slot.len() {
+                    let same = st.bit(pos[stat_node[t] as usize] as usize)
+                        == st.bit(pos[stat_nbr[t] as usize] as usize);
+                    pair[stat_slot[t] as usize] += if same { 1.0 } else { -1.0 };
+                }
+            }
+        }
+        (st, pair, mean)
+    });
+    let mut st = SweepStats::new(b, n, d);
+    st.count = k.saturating_sub(burn);
+    for (bi, (state, pair, mean)) in per_chain.into_iter().enumerate() {
+        state.write_row(&plan.topo, &mut chains.s[bi * n..(bi + 1) * n]);
+        for (acc, v) in st.pair.iter_mut().zip(&pair) {
+            *acc += v;
+        }
+        st.mean_b[bi * n..(bi + 1) * n].copy_from_slice(&mean);
+    }
+    st
+}
+
+/// Packed counterpart of `engine::run_trace_tail`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_trace_tail_packed(
+    plan: &SweepPlanPacked,
+    chains: &mut Chains,
+    xt: &[f32],
+    k: usize,
+    keep: usize,
+    proj: &[f32],
+    stride: usize,
+    threads: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<f64>> {
+    let n = chains.n;
+    assert_eq!(plan.topo.n, n, "plan/chains node count");
+    assert_eq!(xt.len(), chains.b * n, "xt shape");
+    assert!(stride >= 1 && proj.len() >= n * stride, "projection shape");
+    let keep = keep.min(k);
+    let rngs = chain_rngs(rng, chains.b);
+    let pos = plan.topo.packed_bit_pos();
+    let per_chain = map_chains(chains.b, threads, |bi| {
+        let mut st = PackedState::from_row(&plan.topo, chains.row(bi));
+        let mut r = rngs[bi].clone();
+        let xt_row = &xt[bi * n..(bi + 1) * n];
+        let mut ring = RingBuf::new(keep.max(1));
+        for _ in 0..k {
+            plan.sweep_state(&mut st, xt_row, &mut r);
+            let mut acc = 0.0f64;
+            for (i, &p) in pos.iter().enumerate() {
+                let v = if st.bit(p as usize) { 1.0f32 } else { -1.0 };
+                acc += (v * proj[i * stride]) as f64;
+            }
+            ring.push(acc);
+        }
+        let series = if keep == 0 { Vec::new() } else { ring.to_vec() };
+        (st, series)
+    });
+    let mut out = Vec::with_capacity(chains.b);
+    for (bi, (state, series)) in per_chain.into_iter().enumerate() {
+        state.write_row(&plan.topo, &mut chains.s[bi * n..(bi + 1) * n]);
+        out.push(series);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph;
+
+    fn quantized_setup(grid_l: usize, pat: &str, seed: u64) -> (graph::Topology, Machine) {
+        let top = graph::build("t", grid_l, pat, (grid_l * grid_l / 4).max(1), 0).unwrap();
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> = (0..top.n_edges()).map(|_| 0.25 * rng.normal() as f32).collect();
+        let h: Vec<f32> = (0..top.n_nodes()).map(|_| 0.2 * rng.normal() as f32).collect();
+        let gm: Vec<f32> = top.data_mask().iter().map(|&x| 0.5 * x).collect();
+        let m = Machine::new(&top, &w, h, gm, 1.0);
+        let topo = SweepTopo::new(&top, &vec![0.0; top.n_nodes()]);
+        let qm = quantize_machine(&topo, &m, WeightGrid::default());
+        (top, qm)
+    }
+
+    #[test]
+    fn packed_layout_color_major_and_word_aligned() {
+        // Node counts deliberately not divisible by 64 (25, 36, 81, 121).
+        for (l, pat, seed) in [(5usize, "G8", 1u64), (6, "G8", 2), (9, "G12", 3), (11, "G12", 4)] {
+            let top = graph::build("t", l, pat, (l * l / 4).max(1), seed).unwrap();
+            let n = top.n_nodes();
+            let topo = SweepTopo::new(&top, &vec![0.0; n]);
+            let pos = topo.packed_bit_pos();
+            let n0 = top.color.iter().filter(|&&c| c == 0).count();
+            let w0 = topo.color0_packed_words();
+            assert_eq!(w0, n0.div_ceil(64));
+            assert_eq!(topo.packed_words(), w0 + (n - n0).div_ceil(64));
+            // Color-0 bits fill [0, n0) in ascending node order; color-1
+            // bits start exactly at the block word boundary.
+            let (mut want0, mut want1) = (0u32, (w0 * 64) as u32);
+            for i in 0..n {
+                if top.color[i] == 0 {
+                    assert_eq!(pos[i], want0);
+                    want0 += 1;
+                } else {
+                    assert_eq!(pos[i], want1);
+                    want1 += 1;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_roundtrip_preserves_rows() {
+        for (l, pat) in [(5usize, "G8"), (9, "G12")] {
+            let top = graph::build("t", l, pat, (l * l / 4).max(1), 0).unwrap();
+            let n = top.n_nodes();
+            let topo = SweepTopo::new(&top, &vec![0.0; n]);
+            let mut rng = Rng::new(7);
+            let row: Vec<f32> = (0..n).map(|_| rng.spin()).collect();
+            let st = PackedState::from_row(&topo, &row);
+            let mut back = vec![0.0f32; n];
+            st.write_row(&topo, &mut back);
+            assert_eq!(row, back);
+            for i in 0..n {
+                assert_eq!(st.spin(&topo, i), row[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn grid_detection_accepts_quantized_rejects_raw() {
+        let top = graph::build("t", 6, "G8", 9, 0).unwrap();
+        let n = top.n_nodes();
+        let topo = Arc::new(SweepTopo::new(&top, &vec![0.0; n]));
+        let mut rng = Rng::new(1);
+        let w: Vec<f32> = (0..top.n_edges()).map(|_| 0.25 * rng.normal() as f32).collect();
+        let m = Machine::new(&top, &w, vec![0.0; n], vec![0.0; n], 1.0);
+        assert_eq!(WeightGrid::detect(&topo, &m), None, "raw f32 weights must not qualify");
+        let qm = quantize_machine(&topo, &m, WeightGrid::default());
+        let g = WeightGrid::detect(&topo, &qm).expect("quantized weights must qualify");
+        assert!(g.bits <= 8);
+        // Policy resolution: auto picks packed iff the grid holds.
+        assert_eq!(EnginePlan::compile(Arc::clone(&topo), &qm, Repr::Auto).active(), Repr::Packed);
+        assert_eq!(EnginePlan::compile(Arc::clone(&topo), &m, Repr::Auto).active(), Repr::F32);
+        assert_eq!(EnginePlan::compile(topo, &m, Repr::Packed).active(), Repr::Packed);
+    }
+
+    #[test]
+    fn packed_entries_never_exceed_pairs() {
+        let (top, qm) = quantized_setup(8, "G12", 5);
+        let topo = Arc::new(SweepTopo::new(&top, &vec![0.0; top.n_nodes()]));
+        let plan = SweepPlanPacked::from_topo(Arc::clone(&topo), &qm, WeightGrid::default());
+        assert!(plan.merged_entries() <= topo.gathered_pairs());
+        // 1 bit/node + at most one padding word per color block: >= ~16x
+        // below the f32 row at any non-trivial N.
+        assert!(plan.state_bytes_per_chain() <= top.n_nodes() / 8 + 16);
+    }
+
+    #[test]
+    fn packed_spins_stay_pm_one_and_clamps_hold() {
+        let (top, qm) = quantized_setup(5, "G8", 3);
+        let n = top.n_nodes();
+        let cmask = top.data_mask();
+        let topo = Arc::new(SweepTopo::new(&top, &cmask));
+        let plan = SweepPlanPacked::from_topo(topo, &qm, WeightGrid::default());
+        let b = 4;
+        let mut rng = Rng::new(9);
+        let mut chains = Chains::random(b, n, &mut rng);
+        let cval: Vec<f32> = (0..b * n).map(|_| rng.spin()).collect();
+        chains.impose_clamps(&cmask, &cval);
+        let xt = vec![0.0f32; b * n];
+        run_sweeps_packed(&plan, &mut chains, &xt, 10, 2, &mut rng);
+        assert!(chains.s.iter().all(|&x| x == 1.0 || x == -1.0));
+        for bi in 0..b {
+            for i in 0..n {
+                if cmask[i] > 0.5 {
+                    assert_eq!(chains.s[bi * n + i], cval[bi * n + i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fully_clamped_color_is_a_noop_for_that_color() {
+        let (top, qm) = quantized_setup(6, "G8", 4);
+        let n = top.n_nodes();
+        // Clamp every color-0 node: its update list is empty, color-1 still
+        // samples against the frozen block.
+        let cmask = top.color_mask(0);
+        let topo = Arc::new(SweepTopo::new(&top, &cmask));
+        assert_eq!(topo.color_nodes(0).len(), 0, "color-0 update list must be empty");
+        let plan = SweepPlanPacked::from_topo(topo, &qm, WeightGrid::default());
+        let b = 3;
+        let mut rng = Rng::new(11);
+        let mut chains = Chains::random(b, n, &mut rng);
+        let frozen = chains.s.clone();
+        let xt = vec![0.0f32; b * n];
+        run_sweeps_packed(&plan, &mut chains, &xt, 8, 2, &mut rng);
+        for bi in 0..b {
+            for i in 0..n {
+                if top.color[i] == 0 {
+                    assert_eq!(chains.s[bi * n + i], frozen[bi * n + i], "clamped color moved");
+                }
+            }
+        }
+        assert!(chains.s.iter().all(|&x| x == 1.0 || x == -1.0));
+    }
+
+    #[test]
+    fn packed_thread_count_does_not_change_results() {
+        let (top, qm) = quantized_setup(6, "G8", 6);
+        let n = top.n_nodes();
+        let topo = Arc::new(SweepTopo::new(&top, &vec![0.0; n]));
+        let plan = SweepPlanPacked::from_topo(topo, &qm, WeightGrid::default());
+        let b = 6;
+        let mut init = Rng::new(13);
+        let start = Chains::random(b, n, &mut init);
+        let xt: Vec<f32> = (0..b * n).map(|_| init.spin()).collect();
+        let mut outs = Vec::new();
+        for threads in [1usize, 2, 8] {
+            let mut chains = start.clone();
+            let st = run_stats_packed(&plan, &mut chains, &xt, 20, 5, threads, &mut Rng::new(99));
+            outs.push((chains.s, st.pair, st.mean_b));
+        }
+        assert_eq!(outs[0], outs[1]);
+        assert_eq!(outs[0], outs[2]);
+    }
+
+    #[test]
+    fn reweight_after_quantization_roundtrips() {
+        let (top, qm0) = quantized_setup(6, "G8", 7);
+        let n = top.n_nodes();
+        let cmask = top.data_mask();
+        let topo = Arc::new(SweepTopo::new(&top, &cmask));
+        let mut plan = EnginePlan::compile(Arc::clone(&topo), &qm0, Repr::Auto);
+        assert_eq!(plan.active(), Repr::Packed);
+
+        // New weights on the same grid (a trainer step followed by DAC
+        // requantization); reweight must equal a fresh compile bit for bit.
+        let mut rng = Rng::new(8);
+        let w1: Vec<f32> = (0..top.n_edges()).map(|_| 0.3 * rng.normal() as f32).collect();
+        let h1: Vec<f32> = (0..n).map(|_| 0.1 * rng.normal() as f32).collect();
+        let m1 = Machine::new(&top, &w1, h1, vec![0.0; n], 0.8);
+        let qm1 = quantize_machine(&topo, &m1, WeightGrid::default());
+        plan.reweight(&qm1);
+        assert_eq!(plan.active(), Repr::Packed, "on-grid reweight must stay packed");
+        let fresh = EnginePlan::compile(Arc::clone(&topo), &qm1, Repr::Auto);
+
+        let b = 4;
+        let mut init = Rng::new(21);
+        let start = Chains::random(b, n, &mut init);
+        let cval: Vec<f32> = (0..b * n).map(|_| init.spin()).collect();
+        let xt: Vec<f32> = (0..b * n).map(|_| init.spin()).collect();
+        let mut ca = start.clone();
+        ca.impose_clamps(&cmask, &cval);
+        let mut cb = ca.clone();
+        plan.run_sweeps(&mut ca, &xt, 8, 2, &mut Rng::new(22));
+        fresh.run_sweeps(&mut cb, &xt, 8, 2, &mut Rng::new(22));
+        assert_eq!(ca.s, cb.s, "reweighted packed plan must equal a fresh compile");
+
+        // Off-grid reweight of an auto-picked plan falls back to f32.
+        plan.reweight(&m1);
+        assert_eq!(plan.active(), Repr::F32);
+    }
+
+    #[test]
+    fn trace_tail_is_suffix_and_repr_consistent() {
+        let (top, qm) = quantized_setup(5, "G8", 9);
+        let n = top.n_nodes();
+        let topo = Arc::new(SweepTopo::new(&top, &vec![0.0; n]));
+        let plan = EnginePlan::compile(topo, &qm, Repr::Auto);
+        let b = 3;
+        let mut init = Rng::new(31);
+        let start = Chains::random(b, n, &mut init);
+        let xt = vec![0.0f32; b * n];
+        let proj: Vec<f32> = (0..n * 2).map(|_| init.normal() as f32).collect();
+        let mut c1 = start.clone();
+        let mut c2 = start.clone();
+        let full = plan.run_trace_tail(&mut c1, &xt, 25, 25, &proj, 2, 2, &mut Rng::new(8));
+        let tail = plan.run_trace_tail(&mut c2, &xt, 25, 10, &proj, 2, 2, &mut Rng::new(8));
+        assert_eq!(c1.s, c2.s);
+        for (f, t) in full.iter().zip(&tail) {
+            assert_eq!(f.len(), 25);
+            assert_eq!(t.len(), 10);
+            assert_eq!(&f[15..], &t[..]);
+        }
+    }
+}

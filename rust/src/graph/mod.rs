@@ -347,7 +347,12 @@ mod tests {
         let edges = json::Value::Arr(
             t.edges
                 .iter()
-                .map(|e| json::Value::Arr(vec![json::Value::Num(e[0] as f64), json::Value::Num(e[1] as f64)]))
+                .map(|e| {
+                    json::Value::Arr(vec![
+                        json::Value::Num(e[0] as f64),
+                        json::Value::Num(e[1] as f64),
+                    ])
+                })
                 .collect(),
         );
         let obj = json::obj(vec![

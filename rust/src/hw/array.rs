@@ -64,6 +64,19 @@ impl HwSchedule {
         self.programs += o.programs;
         self.rng_joules += o.rng_joules;
     }
+
+    /// Meter one run call: `b` chains (one program each) executing `k`
+    /// two-phase sweeps of `ups` cell updates, drawing `rng_j_per_sweep`
+    /// joules of RNG energy per sweep. The ONE accounting rule — shared by
+    /// [`HwArray`] and the packed fast path in `HwSampler`, so the two
+    /// executors cannot drift.
+    pub fn record_run(&mut self, ups: u64, rng_j_per_sweep: f64, b: u64, k: u64) {
+        self.sweeps += b * k;
+        self.phases += 2 * b * k;
+        self.cell_updates += b * k * ups;
+        self.programs += b;
+        self.rng_joules += (b * k) as f64 * rng_j_per_sweep;
+    }
 }
 
 /// One color class's DAC-quantized weights, aligned with the topo's lists.
@@ -213,11 +226,7 @@ impl HwArray {
 
     fn record(&mut self, b: u64, k: u64) {
         let ups = self.topo.updates_per_sweep() as u64;
-        self.sched.sweeps += b * k;
-        self.sched.phases += 2 * b * k;
-        self.sched.cell_updates += b * k * ups;
-        self.sched.programs += b;
-        self.sched.rng_joules += (b * k) as f64 * self.rng_j_per_sweep;
+        self.sched.record_run(ups, self.rng_j_per_sweep, b, k);
     }
 
     /// Run `k` full iterations on every chain, chain-parallel across

@@ -8,17 +8,26 @@
 //! same fabricated mismatch — and every call's executed schedule
 //! accumulates into one [`HwSchedule`], priced through the App. E device
 //! model by [`HwSampler::energy`].
+//!
+//! When the chip is fabricated in the *ideal limit* (zero mismatch, fully
+//! decorrelated RNG draws) the array is an exact chromatic Gibbs sampler
+//! over DAC-quantized weights, and the sampler (under `Repr::Auto`, the
+//! default) executes programs on the bit-packed popcount engine instead
+//! (`gibbs::packed`) — same distribution, ~32x smaller per-chain state —
+//! while metering the schedule exactly as the array would have.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::energy::{self, DeviceParams};
-use crate::gibbs::{self, engine::TopoCache};
+use crate::gibbs::{
+    self, engine::SweepTopo, engine::TopoCache, packed, Repr, SweepPlanPacked, WeightGrid,
+};
 use crate::graph::Topology;
 use crate::model::LayerParams;
 use crate::train::sampler::{LayerSampler, LayerStats};
 use crate::util::rng::Rng;
 
-use super::{CellFabric, HwArray, HwConfig, HwSchedule};
+use super::{quantize, CellFabric, HwArray, HwConfig, HwSchedule};
 
 /// App. E-style breakdown of the energy for an executed schedule [J].
 #[derive(Clone, Copy, Debug)]
@@ -50,6 +59,13 @@ pub struct HwSampler {
     fabric: CellFabric,
     rng: Rng,
     threads: usize,
+    repr: Repr,
+    /// True when the fabricated chip is in the ideal limit (zero comparator
+    /// offsets, fully decorrelated draws): the array then IS an exact
+    /// chromatic Gibbs sampler over DAC-quantized weights, so the packed
+    /// popcount engine can execute the program (same distribution, ~32x
+    /// smaller per-chain state) while the schedule is metered identically.
+    ideal_fabric: bool,
     proj: Vec<f32>, // [N * P] fixed random projection for trace()
     proj_dim: usize,
     topos: TopoCache,
@@ -65,6 +81,8 @@ impl HwSampler {
             .map(|_| (rng.normal() / (n as f64).sqrt()) as f32)
             .collect();
         let fabric = CellFabric::fabricate(n, &cfg);
+        let ideal_fabric =
+            fabric.delta.iter().all(|&d| d == 0.0) && fabric.rho.iter().all(|&r| r == 0.0);
         HwSampler {
             top,
             batch,
@@ -72,6 +90,8 @@ impl HwSampler {
             fabric,
             rng,
             threads: crate::util::threadpool::default_threads(),
+            repr: Repr::Auto,
+            ideal_fabric,
             proj,
             proj_dim,
             topos: TopoCache::new(),
@@ -86,8 +106,22 @@ impl HwSampler {
         self
     }
 
+    /// Set the spin-representation policy. `Auto` (default) runs the packed
+    /// popcount engine whenever the chip qualifies (ideal fabric — see
+    /// [`HwConfig::ideal`]); `Packed` demands it (an error on a chip with
+    /// mismatch or correlated noise, which bits cannot represent); `F32`
+    /// pins the full array emulator.
+    pub fn with_repr(mut self, repr: Repr) -> HwSampler {
+        self.repr = repr;
+        self
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    pub fn repr(&self) -> Repr {
+        self.repr
     }
 
     pub fn config(&self) -> &HwConfig {
@@ -151,6 +185,78 @@ impl HwSampler {
         let topo = self.topos.topo_for(&self.top, cmask);
         HwArray::new(topo, &self.fabric, m, &self.cfg)
     }
+
+    /// Should this call execute on the packed engine instead of the full
+    /// array emulator? Errors when packed is demanded on a chip whose
+    /// nonidealities (offsets, correlated noise) bits cannot represent.
+    fn use_packed(&self) -> Result<bool> {
+        match self.repr {
+            Repr::F32 => Ok(false),
+            // >= 24-bit DACs pass weights through unquantized — the level
+            // table degenerates to one entry per edge, so stay on the array.
+            Repr::Auto => Ok(self.ideal_fabric && self.cfg.dac_bits <= 16),
+            Repr::Packed => {
+                if !self.ideal_fabric {
+                    bail!(
+                        "--repr packed on the hw backend requires the ideal-fabric limit \
+                         (zero mismatch, decorrelated RNG; e.g. --hw-mismatch-mv 0 with a \
+                         large --hw-interval): comparator offsets and correlated noise \
+                         cannot be represented in 1-bit state"
+                    );
+                }
+                if self.cfg.dac_bits > 16 {
+                    bail!(
+                        "--repr packed needs quantized DACs (--hw-bits <= 16): at {} bits \
+                         the programming DACs pass weights through unquantized and the \
+                         per-level popcount tables degenerate",
+                        self.cfg.dac_bits
+                    );
+                }
+                Ok(true)
+            }
+        }
+    }
+
+    /// The machine the DACs actually program: couplings on the
+    /// `(dac_bits, w_full_scale)` grid, bias/forward coupling on the
+    /// `(dac_bits, h_full_scale)` grid — exactly `HwArray`'s gather.
+    fn dac_machine(&self, topo: &SweepTopo, m: &gibbs::Machine) -> gibbs::Machine {
+        let grid = WeightGrid {
+            bits: self.cfg.dac_bits,
+            full_scale: self.cfg.w_full_scale,
+        };
+        let mut qm = packed::quantize_machine(topo, m, grid);
+        for h in qm.h.iter_mut() {
+            *h = quantize(*h, self.cfg.dac_bits, self.cfg.h_full_scale);
+        }
+        for g in qm.gm.iter_mut() {
+            *g = quantize(*g, self.cfg.dac_bits, self.cfg.h_full_scale);
+        }
+        qm
+    }
+
+    /// Compile the packed program for `(machine, cmask)` on this chip.
+    fn packed_plan(&mut self, m: &gibbs::Machine, cmask: &[f32]) -> SweepPlanPacked {
+        let topo = self.topos.topo_for(&self.top, cmask);
+        let qm = self.dac_machine(&topo, m);
+        let grid = WeightGrid {
+            bits: self.cfg.dac_bits,
+            full_scale: self.cfg.w_full_scale,
+        };
+        SweepPlanPacked::from_topo(topo, &qm, grid)
+    }
+
+    /// Meter a packed run through the same accounting rule as the array
+    /// ([`HwSchedule::record_run`]), with the same per-sweep RNG joule sum
+    /// `HwArray::new` computes over the update cells.
+    fn record_packed(&mut self, topo: &SweepTopo, b: u64, k: u64) {
+        let ups = topo.updates_per_sweep() as u64;
+        let rng_j_per_sweep: f64 = (0..2)
+            .flat_map(|c| topo.color_nodes(c).iter())
+            .map(|&i| self.fabric.e_bit[i as usize])
+            .sum();
+        self.sched.record_run(ups, rng_j_per_sweep, b, k);
+    }
 }
 
 impl LayerSampler for HwSampler {
@@ -174,11 +280,27 @@ impl LayerSampler for HwSampler {
         burn: usize,
     ) -> Result<LayerStats> {
         let m = self.machine(params, gm, beta);
-        let mut arr = self.array(&m, cmask);
         let mut chains = gibbs::Chains::random(self.batch, self.top.n_nodes(), &mut self.rng);
         chains.impose_clamps(cmask, cval);
-        let st = arr.run_stats(&mut chains, xt, k, burn, self.threads, &mut self.rng);
-        self.sched.absorb(arr.schedule());
+        let st = if self.use_packed()? {
+            let plan = self.packed_plan(&m, cmask);
+            let st = packed::run_stats_packed(
+                &plan,
+                &mut chains,
+                xt,
+                k,
+                burn,
+                self.threads,
+                &mut self.rng,
+            );
+            self.record_packed(&plan.topo, self.batch as u64, k as u64);
+            st
+        } else {
+            let mut arr = self.array(&m, cmask);
+            let st = arr.run_stats(&mut chains, xt, k, burn, self.threads, &mut self.rng);
+            self.sched.absorb(arr.schedule());
+            st
+        };
         Ok(LayerStats {
             pair: st.pair_mean(),
             mean_b: st.node_mean_b(),
@@ -198,7 +320,6 @@ impl LayerSampler for HwSampler {
         let m = self.machine(params, gm, beta);
         let n = self.top.n_nodes();
         let cmask = vec![0.0f32; n];
-        let mut arr = self.array(&m, &cmask);
         let mut chains = match s0 {
             Some(s) => gibbs::Chains {
                 b: self.batch,
@@ -207,8 +328,15 @@ impl LayerSampler for HwSampler {
             },
             None => gibbs::Chains::random(self.batch, n, &mut self.rng),
         };
-        arr.run_sweeps(&mut chains, xt, k, self.threads, &mut self.rng);
-        self.sched.absorb(arr.schedule());
+        if self.use_packed()? {
+            let plan = self.packed_plan(&m, &cmask);
+            packed::run_sweeps_packed(&plan, &mut chains, xt, k, self.threads, &mut self.rng);
+            self.record_packed(&plan.topo, self.batch as u64, k as u64);
+        } else {
+            let mut arr = self.array(&m, &cmask);
+            arr.run_sweeps(&mut chains, xt, k, self.threads, &mut self.rng);
+            self.sched.absorb(arr.schedule());
+        }
         Ok(chains.s)
     }
 
@@ -235,19 +363,37 @@ impl LayerSampler for HwSampler {
         let m = self.machine(params, gm, beta);
         let n = self.top.n_nodes();
         let cmask = vec![0.0f32; n];
-        let mut arr = self.array(&m, &cmask);
         let mut chains = gibbs::Chains::random(self.batch, n, &mut self.rng);
-        let series = arr.run_trace_tail(
-            &mut chains,
-            xt,
-            k,
-            keep,
-            &self.proj,
-            self.proj_dim,
-            self.threads,
-            &mut self.rng,
-        );
-        self.sched.absorb(arr.schedule());
+        let series = if self.use_packed()? {
+            let plan = self.packed_plan(&m, &cmask);
+            let series = packed::run_trace_tail_packed(
+                &plan,
+                &mut chains,
+                xt,
+                k,
+                keep,
+                &self.proj,
+                self.proj_dim,
+                self.threads,
+                &mut self.rng,
+            );
+            self.record_packed(&plan.topo, self.batch as u64, k as u64);
+            series
+        } else {
+            let mut arr = self.array(&m, &cmask);
+            let series = arr.run_trace_tail(
+                &mut chains,
+                xt,
+                k,
+                keep,
+                &self.proj,
+                self.proj_dim,
+                self.threads,
+                &mut self.rng,
+            );
+            self.sched.absorb(arr.schedule());
+            series
+        };
         Ok(series)
     }
 }
@@ -343,6 +489,55 @@ mod tests {
         assert_eq!(s.schedule().sweeps, 4 * 20);
         s.reset_schedule();
         assert_eq!(s.schedule().sweeps, 0);
+    }
+
+    #[test]
+    fn ideal_fabric_auto_picks_packed_and_meters_identically() {
+        let (top, params) = tiny();
+        let n = top.n_nodes();
+        let gm = vec![0.0f32; n];
+        let xt = vec![0.0f32; 4 * n];
+        let run = |repr: Repr| {
+            let mut s = HwSampler::new(top.clone(), 4, HwConfig::ideal(), 9).with_repr(repr);
+            let _ = s.sample(&params, &gm, 1.0, &xt, None, 12).unwrap();
+            let st = s
+                .stats(&params, &gm, 1.0, &xt, &vec![0.0; n], &vec![0.0; 4 * n], 20, 5)
+                .unwrap();
+            (*s.schedule(), st.pair)
+        };
+        // Auto resolves to packed on an ideal chip => identical draws and
+        // identical metering to a forced packed run.
+        let (sched_auto, pair_auto) = run(Repr::Auto);
+        let (sched_packed, pair_packed) = run(Repr::Packed);
+        assert_eq!(sched_auto, sched_packed);
+        assert_eq!(pair_auto, pair_packed);
+        // The schedule matches what the full array meters for the same
+        // calls (same sweeps/updates/programs and, at the typical corner
+        // with zero mismatch, the same RNG joules).
+        let (sched_arr, pair_arr) = run(Repr::F32);
+        assert_eq!(sched_auto.sweeps, sched_arr.sweeps);
+        assert_eq!(sched_auto.phases, sched_arr.phases);
+        assert_eq!(sched_auto.cell_updates, sched_arr.cell_updates);
+        assert_eq!(sched_auto.programs, sched_arr.programs);
+        assert!((sched_auto.rng_joules - sched_arr.rng_joules).abs() < 1e-18);
+        // Both backends target the same quantized conditional distribution.
+        assert!(pair_arr.iter().all(|x| x.abs() <= 1.0 + 1e-9));
+        assert!(pair_auto.iter().all(|x| x.abs() <= 1.0 + 1e-9));
+    }
+
+    #[test]
+    fn packed_demand_fails_on_nonideal_chip_but_auto_falls_back() {
+        let (top, params) = tiny();
+        let n = top.n_nodes();
+        let gm = vec![0.0f32; n];
+        let xt = vec![0.0f32; 4 * n];
+        // Default config has mismatch + finite phase interval: not packable.
+        let mut forced =
+            HwSampler::new(top.clone(), 4, HwConfig::default(), 3).with_repr(Repr::Packed);
+        assert!(forced.sample(&params, &gm, 1.0, &xt, None, 5).is_err());
+        let mut auto = HwSampler::new(top.clone(), 4, HwConfig::default(), 3);
+        let out = auto.sample(&params, &gm, 1.0, &xt, None, 5).unwrap();
+        assert_eq!(out.len(), 4 * n);
     }
 
     #[test]

@@ -18,6 +18,7 @@ use thermo_dtm::coordinator::batcher::BatcherConfig;
 use thermo_dtm::data::{fashion_dataset, FashionConfig};
 use thermo_dtm::energy::{self, DeviceParams};
 use thermo_dtm::figures::{self, FigOpts};
+use thermo_dtm::gibbs::Repr;
 use thermo_dtm::graph;
 use thermo_dtm::hw::{HwConfig, HwSampler};
 use thermo_dtm::model::Dtm;
@@ -57,13 +58,17 @@ fn run() -> Result<()> {
         }
         "energy-report" => energy_report(),
         "bench-info" => {
-            println!("cargo bench targets: bench_gibbs, bench_hw, bench_pipeline, bench_batcher, bench_metrics, bench_energy");
+            println!(
+                "cargo bench targets: bench_gibbs, bench_hw, bench_pipeline, bench_batcher, \
+                 bench_metrics, bench_energy"
+            );
             Ok(())
         }
-        "help" | _ => {
+        _ => {
             println!(
                 "usage: repro <selfcheck|topology|train|generate|serve|figures|energy-report> [--flags]\n\
                  common flags: --artifacts DIR --config dtm_m32 --fast --seed N --threads N\n\
+                 \x20         --repr packed|f32|auto (spin representation for rust/hw backends)\n\
                  train:    --t-steps 4 --epochs 10 --k-train 30 --out ckpt.json --backend hlo|rust|hw\n\
                  generate: --ckpt ckpt.json --n 64 --k 60 --backend hlo|rust|hw\n\
                  serve:    --ckpt ckpt.json --requests 32 --req-images 8 --linger-ms 5\n\
@@ -74,6 +79,14 @@ fn run() -> Result<()> {
             Ok(())
         }
     }
+}
+
+/// `--repr packed|f32|auto`: the engine spin representation (auto picks the
+/// bit-packed popcount backend when the layer's weights sit on a DAC grid).
+fn repr_from_args(args: &Args) -> Result<Repr> {
+    let name = args.str_opt("repr", "auto");
+    Repr::from_name(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown --repr {name:?} (packed|f32|auto)"))
 }
 
 fn artifacts_dir(args: &Args) -> String {
@@ -130,13 +143,23 @@ fn make_sampler(args: &Args, cfg: &str, seed: u64) -> Result<Box<dyn LayerSample
         "rust" => {
             let top = local_top(args)?;
             let threads = args.usize_opt("threads", default_threads())?;
-            Ok(Box::new(RustSampler::new(top, 32, seed).with_threads(threads)))
+            let repr = repr_from_args(args)?;
+            Ok(Box::new(
+                RustSampler::new(top, 32, seed)
+                    .with_threads(threads)
+                    .with_repr(repr),
+            ))
         }
         "hw" => {
             let top = local_top(args)?;
             let threads = args.usize_opt("threads", default_threads())?;
+            let repr = repr_from_args(args)?;
             let hw_cfg = hw_config_from_args(args)?;
-            Ok(Box::new(HwSampler::new(top, 32, hw_cfg, seed).with_threads(threads)))
+            Ok(Box::new(
+                HwSampler::new(top, 32, hw_cfg, seed)
+                    .with_threads(threads)
+                    .with_repr(repr),
+            ))
         }
         other => bail!("unknown backend {other:?} (hlo|rust|hw)"),
     }
@@ -336,16 +359,22 @@ fn serve(args: &Args) -> Result<()> {
         "rust" => {
             let top = graph::build(&cfg_name, 32, "G12", 256, 7)?;
             let threads = args.usize_opt("threads", default_threads())?;
+            let repr = repr_from_args(args)?;
             Server::spawn(cfg, dtm, move || {
-                Ok(RustSampler::new(top, 32, 13).with_threads(threads))
+                Ok(RustSampler::new(top, 32, 13)
+                    .with_threads(threads)
+                    .with_repr(repr))
             })
         }
         "hw" => {
             let top = graph::build(&cfg_name, 32, "G12", 256, 7)?;
             let threads = args.usize_opt("threads", default_threads())?;
+            let repr = repr_from_args(args)?;
             let hw_cfg = hw_config_from_args(args)?;
             Server::spawn(cfg, dtm, move || {
-                Ok(HwSampler::new(top, 32, hw_cfg, 13).with_threads(threads))
+                Ok(HwSampler::new(top, 32, hw_cfg, 13)
+                    .with_threads(threads)
+                    .with_repr(repr))
             })
         }
         _ => Server::spawn(cfg, dtm, move || {
@@ -386,7 +415,8 @@ fn energy_report() -> Result<()> {
     for pat in graph::PATTERN_NAMES {
         let c = energy::cell_energy(&p, pat)?;
         println!(
-            "{pat:<5} E_cell {:.2} fJ  (rng {:.0} aJ, bias {:.0} aJ, clock {:.0} aJ, comm {:.0} aJ)",
+            "{pat:<5} E_cell {:.2} fJ  (rng {:.0} aJ, bias {:.0} aJ, clock {:.0} aJ, \
+             comm {:.0} aJ)",
             c.total() * 1e15,
             c.e_rng * 1e18,
             c.e_bias * 1e18,
@@ -406,7 +436,12 @@ fn energy_report() -> Result<()> {
         energy::denoising_time_s(8, 250, 100e-9) * 1e6
     );
     println!("== GPU model (App. F) ==");
-    for (name, flops) in [("VAE (decoder)", 7.0e4), ("GAN (generator)", 7.0e4), ("DDPM x50", 3.5e6)] {
+    let gpu_models = [
+        ("VAE (decoder)", 7.0e4),
+        ("GAN (generator)", 7.0e4),
+        ("DDPM x50", 3.5e6),
+    ];
+    for (name, flops) in gpu_models {
         println!(
             "{name:<16} {flops:>10.1e} FLOP/sample -> {:.3e} J/sample",
             energy::gpu::energy_per_sample(flops)

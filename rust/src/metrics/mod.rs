@@ -108,7 +108,13 @@ pub fn frechet_distance(a: &Moments, b: &Moments) -> Result<f64> {
 }
 
 /// Proxy-FID between two image sets (row-major [n, data_dim]).
-pub fn pfid(net: &FeatureNet, real: &[f32], n_real: usize, fake: &[f32], n_fake: usize) -> Result<f64> {
+pub fn pfid(
+    net: &FeatureNet,
+    real: &[f32],
+    n_real: usize,
+    fake: &[f32],
+    n_fake: usize,
+) -> Result<f64> {
     let fr = net.features(real, n_real);
     let ff = net.features(fake, n_fake);
     let mr = moments(&fr, n_real, net.feat_dim);

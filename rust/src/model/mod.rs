@@ -56,8 +56,13 @@ pub struct Dtm {
 }
 
 impl Dtm {
-    pub fn init(config: &str, top: &Topology, t_steps: usize, gamma_total: f64,
-                seed: u64) -> Dtm {
+    pub fn init(
+        config: &str,
+        top: &Topology,
+        t_steps: usize,
+        gamma_total: f64,
+        seed: u64,
+    ) -> Dtm {
         let mut rng = Rng::new(seed);
         Dtm {
             config: config.to_string(),

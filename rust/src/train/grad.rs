@@ -218,7 +218,8 @@ mod tests {
             h: vec![3.0; top.n_nodes()],
         };
         let mut s2 = RustSampler::new(top.clone(), 16, 3);
-        let g1 = estimate_layer_grad(&mut s2, &fitted, &gm, 1.0, &ones, &ones, 40, 10, 0.0).unwrap();
+        let g1 =
+            estimate_layer_grad(&mut s2, &fitted, &gm, 1.0, &ones, &ones, 40, 10, 0.0).unwrap();
         let n0: f64 = g0.h.iter().map(|&x| x.abs() as f64).sum();
         let n1: f64 = g1.h.iter().map(|&x| x.abs() as f64).sum();
         assert!(n1 < 0.5 * n0, "fitted grad {n1} !<< zero-model grad {n0}");
@@ -246,7 +247,8 @@ mod tests {
         let mut s1 = RustSampler::new(top.clone(), 16, 7);
         let g_tc =
             estimate_layer_grad(&mut s1, &strong, &gm, 1.0, &xp, &xt, 80, 15, 5.0).unwrap();
-        let mean_plain: f64 = g_plain.w.iter().map(|&x| x as f64).sum::<f64>() / g_plain.w.len() as f64;
+        let mean_plain: f64 =
+            g_plain.w.iter().map(|&x| x as f64).sum::<f64>() / g_plain.w.len() as f64;
         let mean_tc: f64 = g_tc.w.iter().map(|&x| x as f64).sum::<f64>() / g_tc.w.len() as f64;
         assert!(
             mean_tc > mean_plain + 0.05,

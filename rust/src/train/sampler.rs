@@ -8,8 +8,11 @@
 //!    configurable worker count (`with_threads`, default
 //!    `util::threadpool::default_threads()`); per-chain forked RNG streams
 //!    make results bit-identical for every thread count at a given seed.
-//!    Used for tests, artifact-free operation at arbitrary graph sizes,
-//!    and as the `bench_gibbs` baseline.
+//!    The spin representation is selectable (`with_repr`): `Repr::Auto`
+//!    (default) compiles the bit-packed popcount backend whenever the
+//!    layer's edge weights sit on a `hw::quantize` DAC grid and the f32
+//!    gather backend otherwise. Used for tests, artifact-free operation
+//!    at arbitrary graph sizes, and as the `bench_gibbs` baseline.
 //!
 //! Integration tests assert the two produce statistically identical results
 //! on the same topology/parameters.
@@ -18,7 +21,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::gibbs::{self, engine, engine::SweepPlan, engine::SweepTopo};
+use crate::gibbs::{self, engine, engine::SweepTopo, EnginePlan, Repr};
 use crate::graph::Topology;
 use crate::model::LayerParams;
 use crate::runtime::{DtmExec, LayerInputs, Tensor};
@@ -52,6 +55,7 @@ pub trait LayerSampler {
     /// Run `k` Gibbs iterations from random init (clamps imposed first);
     /// collect statistics after `burn` iterations. `xt`, `cval` are full-node
     /// rows [B, N]; `cmask` is per-node [N].
+    #[allow(clippy::too_many_arguments)]
     fn stats(
         &mut self,
         params: &LayerParams,
@@ -121,20 +125,49 @@ impl<T: LayerSampler + ?Sized> LayerSampler for &mut T {
     fn batch(&self) -> usize {
         (**self).batch()
     }
-    fn stats(&mut self, params: &LayerParams, gm: &[f32], beta: f32, xt: &[f32],
-             cmask: &[f32], cval: &[f32], k: usize, burn: usize) -> Result<LayerStats> {
+    fn stats(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        cmask: &[f32],
+        cval: &[f32],
+        k: usize,
+        burn: usize,
+    ) -> Result<LayerStats> {
         (**self).stats(params, gm, beta, xt, cmask, cval, k, burn)
     }
-    fn sample(&mut self, params: &LayerParams, gm: &[f32], beta: f32, xt: &[f32],
-              s0: Option<&[f32]>, k: usize) -> Result<Vec<f32>> {
+    fn sample(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        s0: Option<&[f32]>,
+        k: usize,
+    ) -> Result<Vec<f32>> {
         (**self).sample(params, gm, beta, xt, s0, k)
     }
-    fn trace(&mut self, params: &LayerParams, gm: &[f32], beta: f32, xt: &[f32],
-             k: usize) -> Result<Vec<Vec<f64>>> {
+    fn trace(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        k: usize,
+    ) -> Result<Vec<Vec<f64>>> {
         (**self).trace(params, gm, beta, xt, k)
     }
-    fn trace_tail(&mut self, params: &LayerParams, gm: &[f32], beta: f32, xt: &[f32],
-                  k: usize, keep: usize) -> Result<Vec<Vec<f64>>> {
+    fn trace_tail(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        k: usize,
+        keep: usize,
+    ) -> Result<Vec<Vec<f64>>> {
         (**self).trace_tail(params, gm, beta, xt, k, keep)
     }
 }
@@ -146,20 +179,49 @@ impl<T: LayerSampler + ?Sized> LayerSampler for Box<T> {
     fn batch(&self) -> usize {
         (**self).batch()
     }
-    fn stats(&mut self, params: &LayerParams, gm: &[f32], beta: f32, xt: &[f32],
-             cmask: &[f32], cval: &[f32], k: usize, burn: usize) -> Result<LayerStats> {
+    fn stats(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        cmask: &[f32],
+        cval: &[f32],
+        k: usize,
+        burn: usize,
+    ) -> Result<LayerStats> {
         (**self).stats(params, gm, beta, xt, cmask, cval, k, burn)
     }
-    fn sample(&mut self, params: &LayerParams, gm: &[f32], beta: f32, xt: &[f32],
-              s0: Option<&[f32]>, k: usize) -> Result<Vec<f32>> {
+    fn sample(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        s0: Option<&[f32]>,
+        k: usize,
+    ) -> Result<Vec<f32>> {
         (**self).sample(params, gm, beta, xt, s0, k)
     }
-    fn trace(&mut self, params: &LayerParams, gm: &[f32], beta: f32, xt: &[f32],
-             k: usize) -> Result<Vec<Vec<f64>>> {
+    fn trace(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        k: usize,
+    ) -> Result<Vec<Vec<f64>>> {
         (**self).trace(params, gm, beta, xt, k)
     }
-    fn trace_tail(&mut self, params: &LayerParams, gm: &[f32], beta: f32, xt: &[f32],
-                  k: usize, keep: usize) -> Result<Vec<Vec<f64>>> {
+    fn trace_tail(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        k: usize,
+        keep: usize,
+    ) -> Result<Vec<Vec<f64>>> {
         (**self).trace_tail(params, gm, beta, xt, k, keep)
     }
 }
@@ -173,6 +235,7 @@ pub struct RustSampler {
     batch: usize,
     rng: Rng,
     threads: usize,
+    repr: Repr,
     proj: Vec<f32>, // [N * P] fixed random projection for trace()
     proj_dim: usize,
     /// Per-cmask compiled topologies, reused across calls so per-call plan
@@ -193,6 +256,7 @@ impl RustSampler {
             batch,
             rng,
             threads: crate::util::threadpool::default_threads(),
+            repr: Repr::Auto,
             proj,
             proj_dim,
             topos: engine::TopoCache::new(),
@@ -206,8 +270,21 @@ impl RustSampler {
         self
     }
 
+    /// Set the spin-representation policy (`--repr` on the CLI). `Auto`
+    /// picks the packed popcount backend exactly when the layer's edge
+    /// weights sit on a DAC grid; `Packed` forces it (snapping weights to
+    /// the default grid first); `F32` pins the gather backend.
+    pub fn with_repr(mut self, repr: Repr) -> RustSampler {
+        self.repr = repr;
+        self
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    pub fn repr(&self) -> Repr {
+        self.repr
     }
 
     fn machine(&self, params: &LayerParams, gm: &[f32], beta: f32) -> gibbs::Machine {
@@ -215,10 +292,11 @@ impl RustSampler {
     }
 
     /// Compiled plan for `(machine, cmask)`: topology gather cached per
-    /// cmask, weights regathered fresh (they change every trainer step).
-    fn plan(&mut self, m: &gibbs::Machine, cmask: &[f32]) -> SweepPlan {
+    /// cmask, weights regathered fresh (they change every trainer step),
+    /// representation resolved per compile under `self.repr`.
+    fn plan(&mut self, m: &gibbs::Machine, cmask: &[f32]) -> EnginePlan {
         let topo: Arc<SweepTopo> = self.topos.topo_for(&self.top, cmask);
-        SweepPlan::from_topo(topo, m)
+        EnginePlan::compile(topo, m, self.repr)
     }
 }
 
@@ -246,7 +324,7 @@ impl LayerSampler for RustSampler {
         let plan = self.plan(&m, cmask);
         let mut chains = gibbs::Chains::random(self.batch, self.top.n_nodes(), &mut self.rng);
         chains.impose_clamps(cmask, cval);
-        let st = engine::run_stats(&plan, &mut chains, xt, k, burn, self.threads, &mut self.rng);
+        let st = plan.run_stats(&mut chains, xt, k, burn, self.threads, &mut self.rng);
         Ok(LayerStats {
             pair: st.pair_mean(),
             mean_b: st.node_mean_b(),
@@ -275,7 +353,7 @@ impl LayerSampler for RustSampler {
             },
             None => gibbs::Chains::random(self.batch, n, &mut self.rng),
         };
-        engine::run_sweeps(&plan, &mut chains, xt, k, self.threads, &mut self.rng);
+        plan.run_sweeps(&mut chains, xt, k, self.threads, &mut self.rng);
         Ok(chains.s)
     }
 
@@ -306,8 +384,7 @@ impl LayerSampler for RustSampler {
         let mut chains = gibbs::Chains::random(self.batch, n, &mut self.rng);
         // First projection component as the scalar observable, streamed
         // through a fixed-size ring (O(keep) memory per chain).
-        let series = engine::run_trace_tail(
-            &plan,
+        let series = plan.run_trace_tail(
             &mut chains,
             xt,
             k,
@@ -634,6 +711,34 @@ mod tests {
             assert_eq!(t.len(), 8);
             assert_eq!(&f[12..], &t[..]);
         }
+    }
+
+    #[test]
+    fn rust_sampler_repr_resolution_and_packed_plumbing() {
+        let top = graph::build("t", 6, "G8", 9, 0).unwrap();
+        let n = top.n_nodes();
+        let mut params = LayerParams::init(&top, &mut Rng::new(4), 0.2);
+        // DAC-quantized weights: the layer qualifies for packed.
+        for w in params.w_edges.iter_mut() {
+            *w = crate::hw::quantize(*w, 8, 2.0);
+        }
+        let gm = vec![0.0f32; n];
+        let xt = vec![0.0f32; 4 * n];
+        let run = |repr: Repr| {
+            let mut s = RustSampler::new(top.clone(), 4, 9).with_repr(repr);
+            let st = s
+                .stats(&params, &gm, 1.0, &xt, &vec![0.0; n], &vec![0.0; 4 * n], 25, 5)
+                .unwrap();
+            let smp = s.sample(&params, &gm, 1.0, &xt, None, 10).unwrap();
+            (st.pair, st.mean_b, smp)
+        };
+        // Auto resolves to packed on on-grid weights: identical backend,
+        // identical seeds => identical results.
+        let auto = run(Repr::Auto);
+        let packed = run(Repr::Packed);
+        assert_eq!(auto, packed);
+        assert!(auto.2.iter().all(|&x| x == 1.0 || x == -1.0));
+        assert!(auto.0.iter().all(|x| x.is_finite() && x.abs() <= 1.0 + 1e-9));
     }
 
     #[test]

@@ -10,12 +10,18 @@
 //!  * the hw emulator's high-fidelity limit (fine DACs, matched die,
 //!    decorrelated RNG) agreeing with both the exact conditional oracle
 //!    and the software engine, and degrading monotonically as the DACs
-//!    coarsen.
+//!    coarsen;
+//!  * the bit-packed popcount backend (`gibbs::packed`) agreeing with the
+//!    f32 gather backend and the exact conditional oracle on the same
+//!    DAC-quantized machine (identical target distribution, different
+//!    arithmetic), including its bit layout against the scalar state over
+//!    random topologies.
 
 use std::sync::Arc;
 
 use thermo_dtm::gibbs::engine::{self, SweepPlan, SweepTopo};
-use thermo_dtm::gibbs::{self, Chains, Machine};
+use thermo_dtm::gibbs::packed::{quantize_machine, PackedState};
+use thermo_dtm::gibbs::{self, Chains, EnginePlan, Machine, Repr, WeightGrid};
 use thermo_dtm::graph::{self, Topology};
 use thermo_dtm::hw::{CellFabric, HwArray, HwConfig};
 use thermo_dtm::util::rng::Rng;
@@ -277,6 +283,169 @@ fn hw_bits_sweep_degrades_monotonically() {
         e2 > e4 + 0.2,
         "2-bit must be strictly worse than 4-bit: {e2:.3} vs {e4:.3}"
     );
+}
+
+/// Packed bit layout against the scalar state, property-style over random
+/// topologies: pack/unpack round-trips every random ±1 row, every bit sits
+/// at the topo's color-major position, and the color-1 block is
+/// word-aligned — including node counts not divisible by 64.
+#[test]
+fn packed_state_layout_matches_scalar_rows_over_random_topologies() {
+    let mut rng = Rng::new(2024);
+    for trial in 0..12u64 {
+        let l = 4 + (trial as usize % 5) * 3; // 4, 7, 10, 13, 16
+        let pat = if trial % 2 == 0 { "G8" } else { "G12" };
+        let top = graph::build("t", l, pat, (l * l / 4).max(1), trial).unwrap();
+        let n = top.n_nodes();
+        // A random clamp mask: the layout covers every node regardless.
+        let cmask: Vec<f32> = (0..n)
+            .map(|_| if rng.uniform_f32() < 0.3 { 1.0 } else { 0.0 })
+            .collect();
+        let topo = SweepTopo::new(&top, &cmask);
+        let pos = topo.packed_bit_pos();
+        let n0 = top.color.iter().filter(|&&c| c == 0).count();
+        assert_eq!(topo.color0_packed_words(), n0.div_ceil(64));
+        assert_eq!(
+            topo.packed_words(),
+            n0.div_ceil(64) + (n - n0).div_ceil(64),
+            "L={l} {pat}: word count"
+        );
+        let row: Vec<f32> = (0..n).map(|_| rng.spin()).collect();
+        let st = PackedState::from_row(&topo, &row);
+        let mut back = vec![0.0f32; n];
+        st.write_row(&topo, &mut back);
+        assert_eq!(row, back, "L={l} {pat}: pack/unpack must round-trip");
+        let boundary = (topo.color0_packed_words() * 64) as u32;
+        for i in 0..n {
+            assert_eq!(st.spin(&topo, i), row[i], "L={l} {pat}: bit {i}");
+            if top.color[i] == 0 {
+                assert!(pos[i] < boundary, "color-0 bit past the block boundary");
+            } else {
+                assert!(pos[i] >= boundary, "color-1 bit before its block");
+            }
+        }
+    }
+}
+
+/// The packed backend targets the same distribution as the f32 backend on
+/// the same quantized machine: both must match the exact conditional
+/// oracle within the established Monte-Carlo tolerance, and each other
+/// within the pairwise budget (each estimate carries independent error).
+#[test]
+fn packed_marginals_agree_with_f32_engine_and_exact() {
+    let top = graph::build("t", 4, "G8", 6, 0).unwrap();
+    let n = top.n_nodes();
+    let m = machine_for(&top, 4);
+    let mut rng = Rng::new(6);
+    let cmask = top.data_mask();
+    let cval_row: Vec<f32> = (0..n)
+        .map(|i| if cmask[i] > 0.5 { rng.spin() } else { 0.0 })
+        .collect();
+    let xt_row = vec![0.0f32; n];
+    let topo = Arc::new(SweepTopo::new(&top, &cmask));
+    // Quantize once; BOTH backends run this machine, so they share one
+    // target distribution and the enumeration oracle sees it too.
+    let qm = quantize_machine(&topo, &m, WeightGrid::default());
+    let exact = gibbs::exact_marginals_clamped(&top, &qm, &xt_row, &cmask, &cval_row);
+
+    let b = 32;
+    let marginals = |plan: &EnginePlan, seed: u64| -> Vec<f64> {
+        let mut r = Rng::new(seed);
+        let mut chains = Chains::random(b, n, &mut r);
+        let cval: Vec<f32> = (0..b).flat_map(|_| cval_row.clone()).collect();
+        chains.impose_clamps(&cmask, &cval);
+        let xt = vec![0.0f32; b * n];
+        let st = plan.run_stats(&mut chains, &xt, 500, 60, 4, &mut r);
+        let mb = st.node_mean_b();
+        (0..n)
+            .map(|i| (0..b).map(|bi| mb[bi * n + i]).sum::<f64>() / b as f64)
+            .collect()
+    };
+    let f32_plan = EnginePlan::compile(Arc::clone(&topo), &qm, Repr::F32);
+    let packed_plan = EnginePlan::compile(Arc::clone(&topo), &qm, Repr::Auto);
+    assert_eq!(packed_plan.active(), Repr::Packed, "quantized machine must qualify");
+    let ef = marginals(&f32_plan, 41);
+    let ep = marginals(&packed_plan, 43);
+    for i in 0..n {
+        assert!(
+            (ep[i] - exact[i]).abs() < 0.08,
+            "node {i}: packed {:.3} vs exact {:.3}",
+            ep[i],
+            exact[i]
+        );
+        assert!(
+            (ep[i] - ef[i]).abs() < 0.12,
+            "node {i}: packed {:.3} vs f32 engine {:.3}",
+            ep[i],
+            ef[i]
+        );
+        if cmask[i] > 0.5 {
+            assert!((ep[i] - cval_row[i] as f64).abs() < 1e-9, "clamp moved");
+        }
+    }
+}
+
+/// Clamping an entire color freezes it exactly while the other color still
+/// mixes to the right conditional (empty update lists are a no-op, not a
+/// crash), on the packed backend.
+#[test]
+fn packed_fully_clamped_color_matches_exact_conditional() {
+    let top = graph::build("t", 4, "G8", 6, 0).unwrap();
+    let n = top.n_nodes();
+    let m = machine_for(&top, 5);
+    let mut rng = Rng::new(9);
+    let cmask = top.color_mask(0);
+    let cval_row: Vec<f32> = (0..n)
+        .map(|i| if cmask[i] > 0.5 { rng.spin() } else { 0.0 })
+        .collect();
+    let xt_row = vec![0.0f32; n];
+    let topo = Arc::new(SweepTopo::new(&top, &cmask));
+    let qm = quantize_machine(&topo, &m, WeightGrid::default());
+    let exact = gibbs::exact_marginals_clamped(&top, &qm, &xt_row, &cmask, &cval_row);
+    let plan = EnginePlan::compile(Arc::clone(&topo), &qm, Repr::Auto);
+    assert_eq!(plan.active(), Repr::Packed);
+
+    let b = 32;
+    let mut chains = Chains::random(b, n, &mut rng);
+    let cval: Vec<f32> = (0..b).flat_map(|_| cval_row.clone()).collect();
+    chains.impose_clamps(&cmask, &cval);
+    let xt = vec![0.0f32; b * n];
+    let st = plan.run_stats(&mut chains, &xt, 500, 60, 2, &mut rng);
+    let mb = st.node_mean_b();
+    for i in 0..n {
+        let emp: f64 = (0..b).map(|bi| mb[bi * n + i]).sum::<f64>() / b as f64;
+        if cmask[i] > 0.5 {
+            assert!((emp - cval_row[i] as f64).abs() < 1e-9, "frozen color moved");
+        } else {
+            assert!(
+                (emp - exact[i]).abs() < 0.08,
+                "node {i}: emp {emp:.3} vs exact {:.3}",
+                exact[i]
+            );
+        }
+    }
+}
+
+/// The packed run loops consume one uniform per update like the f32 loops,
+/// so `run_sweeps`/`run_stats` on the same seed agree with each other
+/// (state after k sweeps is the same whether stats were fused or not).
+#[test]
+fn packed_run_sweeps_and_run_stats_share_the_trajectory() {
+    let top = graph::build("t", 5, "G8", 6, 0).unwrap();
+    let n = top.n_nodes();
+    let m = machine_for(&top, 7);
+    let topo = Arc::new(SweepTopo::new(&top, &vec![0.0; n]));
+    let qm = quantize_machine(&topo, &m, WeightGrid::default());
+    let plan = EnginePlan::compile(topo, &qm, Repr::Packed);
+    let b = 6;
+    let mut init = Rng::new(3);
+    let start = Chains::random(b, n, &mut init);
+    let xt: Vec<f32> = (0..b * n).map(|_| init.spin()).collect();
+    let mut c1 = start.clone();
+    let mut c2 = start.clone();
+    plan.run_sweeps(&mut c1, &xt, 15, 2, &mut Rng::new(77));
+    let _ = plan.run_stats(&mut c2, &xt, 15, 5, 2, &mut Rng::new(77));
+    assert_eq!(c1.s, c2.s, "fused stats must not perturb the trajectory");
 }
 
 #[test]
