@@ -48,7 +48,8 @@ fn main() -> Result<()> {
         .collect();
     let mut total_images = 0usize;
     for w in waiters {
-        let resp = w.recv()?;
+        // Every submission resolves to Ok(Response) or a typed ServeError.
+        let resp = w.recv()??;
         total_images += resp.images.len() / top.data_nodes.len();
     }
     let wall = t0.elapsed().as_secs_f64();

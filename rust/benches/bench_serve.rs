@@ -1,0 +1,153 @@
+//! bench_serve: the fault-tolerant chip-farm serving path under load.
+//!
+//! Spins a 2-chip farm (pure-Rust samplers; the serving overhead under
+//! test — supervision, batching, retries — is backend-independent) and
+//! drives a closed-loop burst of concurrent requests through it twice:
+//! once fault-free and once under a seeded fault schedule (transient
+//! failures on chip 0 plus farm-wide latency spikes) with per-request
+//! deadlines. Reports images/second, latency percentiles and the typed
+//! error rate for both, and writes a machine-readable `BENCH_serve.json`
+//! at the repo root next to `BENCH_{gibbs,hw}.json` for the
+//! `check_bench.py` regression gate (the `images_per_sec` fields are the
+//! gated quantities).
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use thermo_dtm::coordinator::batcher::BatcherConfig;
+use thermo_dtm::coordinator::{Farm, FarmConfig, FaultPlan};
+use thermo_dtm::graph;
+use thermo_dtm::model::Dtm;
+use thermo_dtm::train::sampler::RustSampler;
+use thermo_dtm::util::json::{self, Value};
+use thermo_dtm::util::threadpool::default_threads;
+
+const GRID: usize = 16;
+const N_DATA: usize = 64;
+const DEVICE_BATCH: usize = 16;
+const T_LAYERS: usize = 2;
+const K: usize = 10;
+const CHIPS: usize = 2;
+
+struct Scenario {
+    name: &'static str,
+    faults: &'static str,
+    deadline: Option<Duration>,
+    requests: usize,
+    req_images: usize,
+}
+
+fn run_scenario(sc: &Scenario, threads: usize) -> Value {
+    let top = graph::build("bench_serve", GRID, "G8", N_DATA, 0).unwrap();
+    let dtm = Dtm::init("bench_serve", &top, T_LAYERS, 3.0, 1);
+    let cfg = FarmConfig {
+        chips: CHIPS,
+        batcher: BatcherConfig {
+            device_batch: DEVICE_BATCH,
+            linger: Duration::from_millis(2),
+            max_queue: 4096,
+        },
+        k_inference: K,
+        seed: 7,
+        max_retries: 3,
+        backoff_base: Duration::from_millis(2),
+        ..FarmConfig::default()
+    };
+    let plan = FaultPlan::parse(sc.faults).unwrap();
+    let farm = Farm::spawn(cfg, dtm, plan, move |chip| {
+        Ok(RustSampler::new(
+            graph::build("bench_serve", GRID, "G8", N_DATA, 0).unwrap(),
+            DEVICE_BATCH,
+            31 + chip as u64,
+        )
+        .with_threads(threads))
+    });
+    let client = farm.client();
+
+    let t0 = Instant::now();
+    let waiters: Vec<_> = (0..sc.requests)
+        .map(|_| client.submit(sc.req_images, sc.deadline, 1))
+        .collect();
+    let mut ok = 0usize;
+    let mut hung = 0usize;
+    for w in waiters {
+        // The no-hang contract means this timeout is a tripwire, not a
+        // crutch: every submission must resolve long before it.
+        match w.recv_timeout(Duration::from_secs(120)) {
+            Ok(Ok(_)) => ok += 1,
+            Ok(Err(_)) => {}
+            Err(_) => hung += 1,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = farm.shutdown();
+    assert_eq!(hung, 0, "{}: {} requests failed to resolve", sc.name, hung);
+
+    let images_per_sec = stats.serve.images as f64 / wall.max(1e-9);
+    println!(
+        "{:<24} {ok}/{} ok  {:.1} img/s  p50 {:.1} ms  p99 {:.1} ms  err {:.3}  \
+         retries {}  shed {}",
+        sc.name,
+        sc.requests,
+        images_per_sec,
+        stats.p50_ms(),
+        stats.p99_ms(),
+        stats.error_rate(),
+        stats.retries,
+        stats.shed
+    );
+    json::obj(vec![
+        ("name", Value::Str(sc.name.to_string())),
+        ("chips", Value::Num(CHIPS as f64)),
+        ("requests", Value::Num(sc.requests as f64)),
+        ("req_images", Value::Num(sc.req_images as f64)),
+        ("faults", Value::Str(sc.faults.to_string())),
+        (
+            "deadline_ms",
+            Value::Num(sc.deadline.map(|d| d.as_secs_f64() * 1e3).unwrap_or(0.0)),
+        ),
+        ("images_per_sec", Value::Num(images_per_sec)),
+        ("p50_ms", Value::Num(stats.p50_ms())),
+        ("p99_ms", Value::Num(stats.p99_ms())),
+        ("error_rate", Value::Num(stats.error_rate())),
+        ("retries", Value::Num(stats.retries as f64)),
+        ("hedges", Value::Num(stats.hedges as f64)),
+    ])
+}
+
+fn main() {
+    let threads = default_threads();
+    println!("== bench group: serve (farm, {CHIPS} chips, L{GRID} G8, T{T_LAYERS} K{K}) ==");
+    let scenarios = [
+        Scenario {
+            name: "serve_2chip_clean",
+            faults: "",
+            deadline: None,
+            requests: 24,
+            req_images: 4,
+        },
+        Scenario {
+            name: "serve_2chip_faulted",
+            faults: "chip0=fail:0.3,all=spike:0.2:5",
+            deadline: Some(Duration::from_secs(20)),
+            requests: 24,
+            req_images: 4,
+        },
+    ];
+    let entries: Vec<Value> = scenarios.iter().map(|sc| run_scenario(sc, threads)).collect();
+
+    let root = json::obj(vec![
+        ("bench", Value::Str("serve".into())),
+        ("threads", Value::Num(threads as f64)),
+        ("configs", Value::Arr(entries)),
+    ]);
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| PathBuf::from("."))
+        .join("BENCH_serve.json");
+    match std::fs::write(&path, json::write(&root)) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write {}: {e}", path.display()),
+    }
+}

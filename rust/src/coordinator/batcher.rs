@@ -2,18 +2,66 @@
 //!
 //! Generation requests (each asking for some number of images) arrive
 //! asynchronously; the batcher coalesces them into device-sized batches,
-//! subject to a linger deadline, so the (single-device) denoising pipeline
-//! runs at high occupancy without starving small requests.
+//! subject to a linger deadline, so the denoising pipeline runs at high
+//! occupancy without starving small requests.
+//!
+//! Ordering is **deadline-aware**: the queue is kept sorted by
+//! earliest-deadline-first (requests without a deadline sort after every
+//! request with one), with arrival order — and then admission id — breaking
+//! ties, so plain FIFO fairness is recovered exactly when no deadlines are
+//! in play. The farm supervisor additionally uses:
+//!
+//! * [`Batcher::requeue`] — put the parts of a failed device batch back at
+//!   their deadline-ordered position (bypassing admission control: these
+//!   requests were already admitted once);
+//! * [`Batcher::next_batch_with`] — dispatch under a shrunken effective
+//!   batch cap, the graceful-degradation lever when chip capacity drops;
+//! * [`Batcher::purge`] — drop queued requests whose deadline has already
+//!   expired (their clients have been answered with `DeadlineExceeded`).
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 /// One queued request.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
     pub n_images: usize,
     pub arrived: Instant,
+    /// Absolute completion deadline; `None` = best-effort (sorts last).
+    pub deadline: Option<Instant>,
+    /// Larger = more important; the overload shedder drops priority-0
+    /// requests first.
+    pub priority: u8,
+    /// Dispatch attempts so far (0 = never dispatched). Incremented by the
+    /// farm supervisor on requeue-after-chip-failure.
+    pub attempt: u32,
+}
+
+impl Request {
+    /// A plain best-effort request (no deadline, default priority).
+    pub fn new(id: u64, n_images: usize, arrived: Instant) -> Request {
+        Request {
+            id,
+            n_images,
+            arrived,
+            deadline: None,
+            priority: 1,
+            attempt: 0,
+        }
+    }
+
+    /// EDF ordering: deadline first (no deadline = after everything with
+    /// one), then arrival, then admission id (ids are monotone, so the
+    /// order is total and stable).
+    fn before(&self, other: &Request) -> bool {
+        match (self.deadline, other.deadline) {
+            (Some(a), Some(b)) if a != b => a < b,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            _ => (self.arrived, self.id) < (other.arrived, other.id),
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -37,7 +85,7 @@ impl Default for BatcherConfig {
 }
 
 /// A batch the device should run: request ids with per-request image counts
-/// summing to <= device_batch (large requests are split across batches).
+/// summing to <= the dispatch cap (large requests are split across batches).
 #[derive(Debug, PartialEq)]
 pub struct Batch {
     pub parts: Vec<(u64, usize)>,
@@ -48,7 +96,7 @@ pub struct Batcher {
     cfg: BatcherConfig,
     queue: VecDeque<Request>,
     /// Remaining images for a partially-scheduled head request.
-    head_remaining: Option<(u64, usize, Instant)>,
+    head_remaining: Option<Request>,
 }
 
 impl Batcher {
@@ -64,30 +112,88 @@ impl Batcher {
         self.queue.len() + usize::from(self.head_remaining.is_some())
     }
 
-    /// Enqueue; Err(()) signals back-pressure.
+    pub fn queued_images(&self) -> usize {
+        self.head_remaining.as_ref().map(|r| r.n_images).unwrap_or(0)
+            + self.queue.iter().map(|r| r.n_images).sum::<usize>()
+    }
+
+    pub fn config(&self) -> &BatcherConfig {
+        &self.cfg
+    }
+
+    /// Insert at the deadline-ordered position (stable: FIFO among equal
+    /// keys, because ids are monotone).
+    fn insert_ordered(&mut self, req: Request) {
+        let pos = self.queue.iter().position(|q| req.before(q));
+        match pos {
+            Some(i) => self.queue.insert(i, req),
+            None => self.queue.push_back(req),
+        }
+    }
+
+    /// Enqueue; `Err(req)` signals back-pressure (queue full).
     pub fn push(&mut self, req: Request) -> Result<(), Request> {
         if self.queue_len() >= self.cfg.max_queue {
             return Err(req);
         }
-        self.queue.push_back(req);
+        self.insert_ordered(req);
         Ok(())
+    }
+
+    /// Put already-admitted requests back in the queue (after a chip
+    /// failure). Bypasses `max_queue` — rejecting work that was accepted
+    /// once would turn a chip fault into an admission fault — and lands at
+    /// the same deadline-ordered position the request held before dispatch
+    /// (its original `arrived`/`id` break ties), so retried work is not
+    /// pushed behind newer arrivals.
+    pub fn requeue<I: IntoIterator<Item = Request>>(&mut self, reqs: I) {
+        for req in reqs {
+            self.insert_ordered(req);
+        }
+    }
+
+    /// Drop queued requests selected by `expired` (already answered
+    /// clients); returns the dropped requests.
+    pub fn purge<F: Fn(&Request) -> bool>(&mut self, expired: F) -> Vec<Request> {
+        let mut dropped = Vec::new();
+        if self.head_remaining.as_ref().is_some_and(&expired) {
+            dropped.push(self.head_remaining.take().unwrap());
+        }
+        let mut kept = VecDeque::with_capacity(self.queue.len());
+        for r in self.queue.drain(..) {
+            if expired(&r) {
+                dropped.push(r);
+            } else {
+                kept.push_back(r);
+            }
+        }
+        self.queue = kept;
+        dropped
     }
 
     fn oldest_wait(&self, now: Instant) -> Option<Duration> {
         let head = self
             .head_remaining
             .as_ref()
-            .map(|&(_, _, t)| t)
+            .map(|r| r.arrived)
             .or_else(|| self.queue.front().map(|r| r.arrived));
-        head.map(|t| now.duration_since(t))
+        head.map(|t| now.saturating_duration_since(t))
     }
 
-    /// Decide whether a batch should be dispatched now, and build it.
-    /// Dispatches when a full device batch is available OR the oldest
-    /// request has lingered past the deadline.
+    /// Decide whether a batch should be dispatched now, and build it, at
+    /// the configured device batch size.
     pub fn next_batch(&mut self, now: Instant) -> Option<Batch> {
-        let pending: usize = self.head_remaining.map(|(_, n, _)| n).unwrap_or(0)
-            + self.queue.iter().map(|r| r.n_images).sum::<usize>();
+        self.next_batch_with(now, self.cfg.device_batch)
+    }
+
+    /// Like [`Batcher::next_batch`] but capped at `cap <= device_batch`
+    /// images — the graceful-degradation path: with fewer healthy chips,
+    /// smaller batches cut per-batch latency (and blast radius) at the cost
+    /// of fill. Dispatches when `cap` images are available OR the oldest
+    /// request has lingered past the deadline.
+    pub fn next_batch_with(&mut self, now: Instant, cap: usize) -> Option<Batch> {
+        let cap = cap.clamp(1, self.cfg.device_batch);
+        let pending = self.queued_images();
         if pending == 0 {
             return None;
         }
@@ -95,26 +201,28 @@ impl Batcher {
             .oldest_wait(now)
             .map(|w| w >= self.cfg.linger)
             .unwrap_or(false);
-        if pending < self.cfg.device_batch && !lingered {
+        if pending < cap && !lingered {
             return None;
         }
         let mut parts = Vec::new();
         let mut total = 0usize;
-        if let Some((id, n, arr)) = self.head_remaining.take() {
-            let take = n.min(self.cfg.device_batch);
-            parts.push((id, take));
+        if let Some(mut head) = self.head_remaining.take() {
+            let take = head.n_images.min(cap);
+            parts.push((head.id, take));
             total += take;
-            if take < n {
-                self.head_remaining = Some((id, n - take, arr));
+            if take < head.n_images {
+                head.n_images -= take;
+                self.head_remaining = Some(head);
             }
         }
-        while total < self.cfg.device_batch {
-            let Some(req) = self.queue.pop_front() else { break };
-            let take = req.n_images.min(self.cfg.device_batch - total);
+        while total < cap {
+            let Some(mut req) = self.queue.pop_front() else { break };
+            let take = req.n_images.min(cap - total);
             parts.push((req.id, take));
             total += take;
             if take < req.n_images {
-                self.head_remaining = Some((req.id, req.n_images - take, req.arrived));
+                req.n_images -= take;
+                self.head_remaining = Some(req);
                 break;
             }
         }
@@ -127,11 +235,7 @@ mod tests {
     use super::*;
 
     fn req(id: u64, n: usize, at: Instant) -> Request {
-        Request {
-            id,
-            n_images: n,
-            arrived: at,
-        }
+        Request::new(id, n, at)
     }
 
     #[test]
@@ -212,5 +316,188 @@ mod tests {
         assert_eq!(b1.parts, vec![(1, 5), (2, 3)]);
         let b2 = b.next_batch(t0).unwrap();
         assert_eq!(b2.parts, vec![(2, 2)]);
+    }
+
+    #[test]
+    fn earliest_deadline_dispatches_first() {
+        let mut b = Batcher::new(BatcherConfig {
+            device_batch: 4,
+            linger: Duration::ZERO,
+            max_queue: 16,
+        });
+        let t0 = Instant::now();
+        // Arrival order 1, 2, 3 but deadlines invert it: 3 < 2; 1 has none.
+        b.push(req(1, 4, t0)).unwrap();
+        b.push(Request {
+            deadline: Some(t0 + Duration::from_millis(50)),
+            ..req(2, 4, t0)
+        })
+        .unwrap();
+        b.push(Request {
+            deadline: Some(t0 + Duration::from_millis(10)),
+            ..req(3, 4, t0)
+        })
+        .unwrap();
+        let order: Vec<u64> = (0..3)
+            .map(|_| b.next_batch(t0).unwrap().parts[0].0)
+            .collect();
+        assert_eq!(order, vec![3, 2, 1]);
+    }
+
+    /// Property: without deadlines, requests complete (receive their last
+    /// part) in arrival order, even when large requests split across many
+    /// batches — FIFO fairness survives splitting.
+    #[test]
+    fn fifo_fairness_under_splits_property() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        for trial in 0..20 {
+            let cap = 1 + rng.below(8);
+            let mut b = Batcher::new(BatcherConfig {
+                device_batch: cap,
+                linger: Duration::ZERO,
+                max_queue: 1024,
+            });
+            let t0 = Instant::now();
+            let n_reqs = 2 + rng.below(12);
+            let mut sizes = std::collections::HashMap::new();
+            for id in 0..n_reqs as u64 {
+                let n = 1 + rng.below(3 * cap);
+                sizes.insert(id, n);
+                // Strictly increasing arrivals.
+                b.push(req(id, n, t0 + Duration::from_micros(id))).unwrap();
+            }
+            let mut completion_order = Vec::new();
+            let mut delivered: std::collections::HashMap<u64, usize> = Default::default();
+            let now = t0 + Duration::from_secs(1);
+            while let Some(batch) = b.next_batch(now) {
+                assert!(batch.total <= cap, "trial {trial}: overfull batch");
+                for (id, count) in batch.parts {
+                    let got = delivered.entry(id).or_insert(0);
+                    *got += count;
+                    assert!(*got <= sizes[&id]);
+                    if *got == sizes[&id] {
+                        completion_order.push(id);
+                    }
+                }
+            }
+            let expect: Vec<u64> = (0..n_reqs as u64).collect();
+            assert_eq!(completion_order, expect, "trial {trial}: unfair completion");
+        }
+    }
+
+    /// Property: the linger decision is monotone in the clock. Feeding
+    /// `next_batch` a monotonically-offset `now` (as the farm's dispatch
+    /// loop does between ticks) can only move a queue from "hold" to
+    /// "dispatch", never back.
+    #[test]
+    fn linger_monotone_under_offset_clock() {
+        let t0 = Instant::now();
+        let linger = Duration::from_millis(10);
+        for probe_ms in [0u64, 3, 9, 10, 11, 50] {
+            let mut dispatched_at = None;
+            for offset_ms in 0..=probe_ms {
+                let mut b = Batcher::new(BatcherConfig {
+                    device_batch: 8,
+                    linger,
+                    max_queue: 16,
+                });
+                b.push(req(1, 2, t0)).unwrap();
+                let now = t0 + Duration::from_millis(offset_ms);
+                let got = b.next_batch(now).is_some();
+                let should = offset_ms >= 10;
+                assert_eq!(got, should, "offset {offset_ms} ms");
+                if got && dispatched_at.is_none() {
+                    dispatched_at = Some(offset_ms);
+                }
+                if let Some(first) = dispatched_at {
+                    assert!(got || offset_ms < first, "non-monotone at {offset_ms}");
+                }
+            }
+        }
+    }
+
+    /// Requeued (failed-batch) parts dispatch before anything that arrived
+    /// after them, and in their original relative order.
+    #[test]
+    fn requeue_after_failure_preserves_order() {
+        let mut b = Batcher::new(BatcherConfig {
+            device_batch: 8,
+            linger: Duration::ZERO,
+            max_queue: 16,
+        });
+        let t0 = Instant::now();
+        b.push(req(1, 4, t0)).unwrap();
+        b.push(req(2, 4, t0 + Duration::from_micros(1))).unwrap();
+        let failed = b.next_batch(t0).unwrap();
+        assert_eq!(failed.parts, vec![(1, 4), (2, 4)]);
+        // A newer request lands while the batch is in flight...
+        b.push(req(3, 4, t0 + Duration::from_micros(2))).unwrap();
+        // ...then the chip dies and the batch is requeued.
+        b.requeue(failed.parts.iter().map(|&(id, n)| Request {
+            attempt: 1,
+            ..req(id, n, t0 + Duration::from_micros(id - 1))
+        }));
+        let now = t0 + Duration::from_secs(1);
+        let r1 = b.next_batch_with(now, 4).unwrap();
+        assert_eq!(r1.parts, vec![(1, 4)]);
+        let r2 = b.next_batch_with(now, 4).unwrap();
+        assert_eq!(r2.parts, vec![(2, 4)]);
+        let r3 = b.next_batch_with(now, 4).unwrap();
+        assert_eq!(r3.parts, vec![(3, 4)]);
+    }
+
+    /// Requeue must succeed even when the queue is at max_queue: admission
+    /// control applies to new work, not to retried work.
+    #[test]
+    fn requeue_bypasses_admission_control() {
+        let mut b = Batcher::new(BatcherConfig {
+            device_batch: 4,
+            linger: Duration::ZERO,
+            max_queue: 1,
+        });
+        let t0 = Instant::now();
+        b.push(req(1, 4, t0)).unwrap();
+        assert!(b.push(req(2, 1, t0)).is_err());
+        let failed = b.next_batch(t0).unwrap();
+        b.requeue(failed.parts.iter().map(|&(id, n)| req(id, n, t0)));
+        // Queue length exceeds nothing here, but even at the cap:
+        b.requeue([req(9, 1, t0 + Duration::from_micros(1))]);
+        assert_eq!(b.queue_len(), 2);
+        assert_eq!(b.next_batch(t0).unwrap().parts[0].0, 1);
+    }
+
+    #[test]
+    fn shrunken_cap_and_purge() {
+        let mut b = Batcher::new(BatcherConfig {
+            device_batch: 8,
+            linger: Duration::ZERO,
+            max_queue: 16,
+        });
+        let t0 = Instant::now();
+        b.push(req(1, 6, t0)).unwrap();
+        b.push(req(2, 2, t0)).unwrap();
+        let small = b.next_batch_with(t0, 2).unwrap();
+        assert_eq!(small.parts, vec![(1, 2)]);
+        // Purge the split head (id 1, 4 images left) and the queued id 2.
+        let dropped = b.purge(|r| r.id == 1);
+        assert_eq!(dropped.len(), 1);
+        assert_eq!(dropped[0].n_images, 4);
+        assert_eq!(b.queue_len(), 1);
+        let rest = b.next_batch(t0 + Duration::from_millis(1)).unwrap();
+        assert_eq!(rest.parts, vec![(2, 2)]);
+    }
+
+    #[test]
+    fn deadline_beats_no_deadline_in_ordering() {
+        let t0 = Instant::now();
+        let a = Request {
+            deadline: Some(t0),
+            ..req(1, 1, t0)
+        };
+        let b = req(2, 1, t0);
+        assert!(a.before(&b) && !b.before(&a));
+        // Ties (same deadline state) fall back to (arrived, id).
+        let c = req(3, 1, t0);
+        assert!(b.before(&c) && !c.before(&b));
     }
 }

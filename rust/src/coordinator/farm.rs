@@ -1,0 +1,1061 @@
+//! The supervised chip farm: N emulated chips behind one robust supervisor.
+//!
+//! This is the fleet-scale serving layer. Each chip is a worker thread that
+//! owns its own (non-`Send`) sampler — fabricated with its own corner and
+//! mismatch when the backend is `hw` — plus a seeded [`ChipFaults`] state
+//! machine from the fault-injection layer. The supervisor owns the
+//! robustness policy end to end:
+//!
+//! * **routing** — device batches go to idle, healthy chips only;
+//! * **deadlines** — propagated from the client into the batcher (EDF
+//!   ordering), into the chip (the pipeline aborts between layer programs
+//!   once the work is useless), and enforced at the supervisor: a request
+//!   whose deadline passes resolves `DeadlineExceeded` immediately, even if
+//!   its batch is still in flight;
+//! * **retries** — a failed batch's requests requeue at their original
+//!   queue position with exponential backoff, bounded by `max_retries`,
+//!   then resolve `Failed`;
+//! * **hedging** — at most one re-dispatch of a slow batch to a second
+//!   idle chip (`hedge_after`); first result wins, the loser is discarded;
+//! * **health** — a chip that fails or stalls is quarantined and probed
+//!   with a 1-image generation on `probe_interval`; a probe success
+//!   re-admits it (see the state machine in [`super`]);
+//! * **admission control & graceful degradation** — a full queue answers
+//!   `Rejected` instead of dropping work; when capacity drops (dead or
+//!   quarantined chips) the effective batch shrinks proportionally to cut
+//!   per-batch latency, and priority-0 requests beyond the surviving
+//!   capacity are shed with a typed rejection.
+//!
+//! The invariant the chaos suite enforces: **no request ever hangs** —
+//! every submission resolves to `Ok(Response)` or a typed [`ServeError`],
+//! under any injected fault schedule.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::model::Dtm;
+use crate::train::sampler::{ChipReport, LayerSampler};
+use crate::util::rng::Rng;
+
+use super::batcher::{Batcher, BatcherConfig, Request};
+use super::faults::{ChipFaults, FaultPlan};
+use super::pipeline::generate_images_deadline;
+use super::server::{Response, ServeError, ServeResult, ServerStats};
+
+/// Farm-wide serving configuration.
+#[derive(Clone, Debug)]
+pub struct FarmConfig {
+    /// Number of chips (worker threads) in the farm.
+    pub chips: usize,
+    pub batcher: BatcherConfig,
+    pub k_inference: usize,
+    pub seed: u64,
+    /// Deadline applied to requests submitted without one. This is the
+    /// farm's liveness backstop: with it, even a farm whose every chip is
+    /// dead resolves all requests with a typed error. `None` = best-effort
+    /// requests wait for capacity to recover (or shutdown).
+    pub default_deadline: Option<Duration>,
+    /// Dispatch attempts per request beyond the first before `Failed`.
+    pub max_retries: u32,
+    /// Exponential backoff base for retries: attempt n waits
+    /// `backoff_base * 2^(n-1)`. Zero = immediate requeue.
+    pub backoff_base: Duration,
+    /// Hedge a batch to a second idle chip when the first has held it this
+    /// long (at most one hedge per batch). `None` disables hedging.
+    pub hedge_after: Option<Duration>,
+    /// Quarantined chips are probed (1-image generation) at this cadence.
+    pub probe_interval: Duration,
+    /// A chip busy on one batch for longer than this is declared stalled:
+    /// the batch is requeued elsewhere and the chip quarantined.
+    pub stall_timeout: Duration,
+    /// At shutdown, wait this long for in-flight batches before failing
+    /// their requests with `Shutdown`.
+    pub shutdown_grace: Duration,
+}
+
+impl Default for FarmConfig {
+    fn default() -> Self {
+        FarmConfig {
+            chips: 2,
+            batcher: BatcherConfig::default(),
+            k_inference: 30,
+            seed: 0,
+            default_deadline: Some(Duration::from_secs(30)),
+            max_retries: 2,
+            backoff_base: Duration::from_millis(10),
+            hedge_after: None,
+            probe_interval: Duration::from_millis(100),
+            stall_timeout: Duration::from_secs(2),
+            shutdown_grace: Duration::from_millis(500),
+        }
+    }
+}
+
+/// Per-chip health counters, published in [`FarmStats`].
+#[derive(Clone, Debug, Default)]
+pub struct ChipStats {
+    pub batches: usize,
+    pub images: usize,
+    /// Generation failures (injected or real) observed from this chip.
+    pub failures: usize,
+    /// Times the supervisor declared the chip stalled.
+    pub stalls: usize,
+    /// Times the chip entered quarantine.
+    pub quarantines: usize,
+    pub probes_ok: usize,
+    pub probes_failed: usize,
+    /// Wall-clock the chip spent executing jobs.
+    pub busy_ms: f64,
+    /// Latest device-side meter snapshot (energy, device-seconds) for
+    /// metered backends (`hw`).
+    pub report: Option<ChipReport>,
+}
+
+/// Farm-level serving metrics: the single-chip [`ServerStats`] counters
+/// plus the robustness-policy counters and per-chip health.
+#[derive(Clone, Debug, Default)]
+pub struct FarmStats {
+    pub serve: ServerStats,
+    /// Priority-0 requests shed under degraded capacity (also counted in
+    /// `serve.rejected`).
+    pub shed: usize,
+    /// Requeue-after-failure dispatches.
+    pub retries: usize,
+    /// Hedged re-dispatches.
+    pub hedges: usize,
+    /// Health probes sent to quarantined chips.
+    pub probes: usize,
+    pub chips: Vec<ChipStats>,
+}
+
+impl FarmStats {
+    pub fn p50_ms(&self) -> f64 {
+        self.serve.p50_ms()
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.serve.p99_ms()
+    }
+
+    pub fn error_rate(&self) -> f64 {
+        self.serve.error_rate()
+    }
+}
+
+/// What a chip sends back for one job.
+enum WorkOutcome {
+    Images(Vec<f32>),
+    /// The pipeline aborted because every deadline in the batch passed.
+    DeadlineAbort,
+    Failed(String),
+}
+
+enum FarmMsg {
+    Submit {
+        n_images: usize,
+        deadline: Option<Instant>,
+        priority: u8,
+        reply: mpsc::Sender<ServeResult>,
+    },
+    Shutdown,
+    Done {
+        chip: usize,
+        job: u64,
+        outcome: WorkOutcome,
+        elapsed: Duration,
+        report: Option<ChipReport>,
+    },
+    ChipInitFailed {
+        chip: usize,
+        reason: String,
+    },
+}
+
+struct ChipJob {
+    job: u64,
+    total: usize,
+    /// Abort the pipeline once *every* deadline in the batch has passed.
+    abort_at: Option<Instant>,
+}
+
+/// Clonable handle for submitting requests to the farm.
+#[derive(Clone)]
+pub struct FarmClient {
+    tx: mpsc::Sender<FarmMsg>,
+}
+
+impl FarmClient {
+    /// Fire a request; the receiver always resolves (typed error if the
+    /// farm is down). `deadline` is relative; `priority` 0 = sheddable
+    /// bulk, 1+ = interactive.
+    pub fn submit(
+        &self,
+        n_images: usize,
+        deadline: Option<Duration>,
+        priority: u8,
+    ) -> mpsc::Receiver<ServeResult> {
+        let (rtx, rrx) = mpsc::channel();
+        let msg = FarmMsg::Submit {
+            n_images,
+            deadline: deadline.map(|d| Instant::now() + d),
+            priority,
+            reply: rtx.clone(),
+        };
+        if self.tx.send(msg).is_err() {
+            let _ = rtx.send(Err(ServeError::Shutdown));
+        }
+        rrx
+    }
+
+    /// Blocking generate at normal priority with no explicit deadline (the
+    /// farm's `default_deadline` still applies).
+    pub fn generate(&self, n_images: usize) -> ServeResult {
+        self.submit(n_images, None, 1)
+            .recv()
+            .unwrap_or(Err(ServeError::Shutdown))
+    }
+
+    /// Blocking generate with a deadline; resolves by `deadline + grace`
+    /// even if the supervisor misbehaves (local backstop).
+    pub fn generate_with_deadline(&self, n_images: usize, deadline: Duration) -> ServeResult {
+        let rrx = self.submit(n_images, Some(deadline), 1);
+        match rrx.recv_timeout(deadline + Duration::from_millis(500)) {
+            Ok(res) => res,
+            Err(_) => Err(ServeError::DeadlineExceeded),
+        }
+    }
+}
+
+pub struct Farm {
+    tx: mpsc::Sender<FarmMsg>,
+    join: Option<thread::JoinHandle<FarmStats>>,
+}
+
+impl Farm {
+    /// Spawn the supervisor and `cfg.chips` chip workers. `make_sampler`
+    /// runs on each worker thread (chip index argument), so non-`Send`
+    /// samplers work; per-chip fault schedules come from `plan`, seeded by
+    /// `cfg.seed`.
+    pub fn spawn<S, F>(cfg: FarmConfig, dtm: Dtm, plan: FaultPlan, make_sampler: F) -> Farm
+    where
+        S: LayerSampler,
+        F: Fn(usize) -> Result<S> + Send + Sync + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<FarmMsg>();
+        let make = Arc::new(make_sampler);
+        let mut chip_txs = Vec::with_capacity(cfg.chips);
+        for chip in 0..cfg.chips.max(1) {
+            let (jtx, jrx) = mpsc::channel::<ChipJob>();
+            chip_txs.push(jtx);
+            let make = Arc::clone(&make);
+            let out = tx.clone();
+            let faults = plan.chip_faults(chip, cfg.seed);
+            let dtm = dtm.clone();
+            let k = cfg.k_inference;
+            let seed = cfg.seed;
+            // Handle dropped: workers are detached. A worker blocked in an
+            // injected stall must not block farm shutdown; it exits when
+            // its job channel closes (or the process ends).
+            thread::spawn(move || chip_worker(chip, &*make, faults, dtm, k, seed, jrx, out));
+        }
+        let join = thread::spawn(move || Supervisor::new(cfg, chip_txs).run(rx));
+        Farm {
+            tx,
+            join: Some(join),
+        }
+    }
+
+    pub fn client(&self) -> FarmClient {
+        FarmClient {
+            tx: self.tx.clone(),
+        }
+    }
+
+    /// Stop and collect stats: queued requests are rejected with
+    /// `Shutdown`, in-flight batches get `shutdown_grace` to land, and the
+    /// supervisor never waits on a stalled chip thread.
+    pub fn shutdown(mut self) -> FarmStats {
+        let _ = self.tx.send(FarmMsg::Shutdown);
+        self.join.take().unwrap().join().unwrap_or_default()
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn chip_worker<S: LayerSampler>(
+    chip: usize,
+    make: &(dyn Fn(usize) -> Result<S> + Send + Sync),
+    mut faults: ChipFaults,
+    dtm: Dtm,
+    k: usize,
+    seed: u64,
+    jobs: mpsc::Receiver<ChipJob>,
+    out: mpsc::Sender<FarmMsg>,
+) {
+    let mut sampler = match make(chip) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            let _ = out.send(FarmMsg::ChipInitFailed {
+                chip,
+                reason: format!("{e:#}"),
+            });
+            None
+        }
+    };
+    let mut rng = Rng::new(seed).fork(0x_C41F_0000 + chip as u64);
+    while let Ok(job) = jobs.recv() {
+        let t0 = Instant::now();
+        let decision = faults.before_call();
+        if decision.sleep > Duration::ZERO {
+            thread::sleep(decision.sleep);
+        }
+        let outcome = match (&decision.fail, sampler.as_mut()) {
+            (Some(reason), _) => WorkOutcome::Failed(reason.clone()),
+            (None, None) => WorkOutcome::Failed("chip init failed".into()),
+            (None, Some(s)) => {
+                let t_work = Instant::now();
+                let res = generate_images_deadline(s, &dtm, k, job.total, &mut rng, job.abort_at);
+                // A derated phase clock makes everything the chip does
+                // proportionally slower.
+                if decision.derate > 1.0 {
+                    let extra = t_work.elapsed().mul_f64(decision.derate - 1.0);
+                    thread::sleep(extra);
+                }
+                match res {
+                    Ok(Some(images)) => WorkOutcome::Images(images),
+                    Ok(None) => WorkOutcome::DeadlineAbort,
+                    Err(e) => WorkOutcome::Failed(format!("{e:#}")),
+                }
+            }
+        };
+        let report = sampler.as_ref().and_then(|s| s.chip_report());
+        if out
+            .send(FarmMsg::Done {
+                chip,
+                job: job.job,
+                outcome,
+                elapsed: t0.elapsed(),
+                report,
+            })
+            .is_err()
+        {
+            return; // supervisor gone
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum ChipState {
+    Idle,
+    Busy { job: u64, since: Instant },
+    Quarantined { until: Instant },
+    Dead,
+}
+
+struct Chip {
+    tx: mpsc::Sender<ChipJob>,
+    state: ChipState,
+    stats: ChipStats,
+}
+
+struct Pending {
+    reply: mpsc::Sender<ServeResult>,
+    images: Vec<f32>,
+    n_images: usize,
+    remaining: usize,
+    arrived: Instant,
+    deadline: Option<Instant>,
+    priority: u8,
+    attempt: u32,
+}
+
+struct Job {
+    parts: Vec<(u64, usize)>,
+    total: usize,
+    probe: bool,
+    hedged: bool,
+    dispatched: Vec<usize>,
+}
+
+struct Supervisor {
+    cfg: FarmConfig,
+    chips: Vec<Chip>,
+    batcher: Batcher,
+    pending: HashMap<u64, Pending>,
+    jobs: HashMap<u64, Job>,
+    /// Backoff queue: requests due back into the batcher at an instant.
+    retry: Vec<(Instant, Request)>,
+    stats: FarmStats,
+    next_req: u64,
+    next_job: u64,
+    shutting_down: Option<Instant>,
+}
+
+impl Supervisor {
+    fn new(cfg: FarmConfig, chip_txs: Vec<mpsc::Sender<ChipJob>>) -> Supervisor {
+        let chips = chip_txs
+            .into_iter()
+            .map(|tx| Chip {
+                tx,
+                state: ChipState::Idle,
+                stats: ChipStats::default(),
+            })
+            .collect::<Vec<_>>();
+        let stats = FarmStats {
+            chips: vec![ChipStats::default(); chips.len()],
+            ..FarmStats::default()
+        };
+        Supervisor {
+            batcher: Batcher::new(cfg.batcher.clone()),
+            cfg,
+            chips,
+            pending: HashMap::new(),
+            jobs: HashMap::new(),
+            retry: Vec::new(),
+            stats,
+            next_req: 0,
+            next_job: 0,
+            shutting_down: None,
+        }
+    }
+
+    fn run(mut self, rx: mpsc::Receiver<FarmMsg>) -> FarmStats {
+        let tick = self.cfg.batcher.linger.clamp(
+            Duration::from_millis(1),
+            Duration::from_millis(10),
+        );
+        loop {
+            match rx.recv_timeout(tick) {
+                Ok(FarmMsg::Submit {
+                    n_images,
+                    deadline,
+                    priority,
+                    reply,
+                }) => self.admit(n_images, deadline, priority, reply),
+                Ok(FarmMsg::Shutdown) => self.begin_shutdown(),
+                Ok(FarmMsg::Done {
+                    chip,
+                    job,
+                    outcome,
+                    elapsed,
+                    report,
+                }) => self.on_done(chip, job, outcome, elapsed, report),
+                Ok(FarmMsg::ChipInitFailed { chip, reason }) => {
+                    eprintln!("farm: chip {chip} init failed: {reason}");
+                    self.chips[chip].state = ChipState::Dead;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => self.begin_shutdown(),
+            }
+            let now = Instant::now();
+            self.expire_deadlines(now);
+            self.promote_retries(now);
+            self.detect_stalls(now);
+            self.maybe_hedge(now);
+            self.probe_quarantined(now);
+            self.dispatch(now);
+            if let Some(since) = self.shutting_down {
+                let in_flight = self.jobs.values().any(|j| !j.probe);
+                if !in_flight || now.saturating_duration_since(since) > self.cfg.shutdown_grace {
+                    return self.finish_shutdown();
+                }
+            }
+        }
+    }
+
+    // --- admission -------------------------------------------------------
+
+    fn admit(
+        &mut self,
+        n_images: usize,
+        deadline: Option<Instant>,
+        priority: u8,
+        reply: mpsc::Sender<ServeResult>,
+    ) {
+        self.stats.serve.requests += 1;
+        let now = Instant::now();
+        let deadline = deadline.or_else(|| self.cfg.default_deadline.map(|d| now + d));
+        let p = Pending {
+            reply,
+            images: Vec::new(),
+            n_images,
+            remaining: n_images,
+            arrived: now,
+            deadline,
+            priority,
+            attempt: 0,
+        };
+        if self.shutting_down.is_some() {
+            self.resolve(p, Err(ServeError::Shutdown));
+            return;
+        }
+        if deadline.is_some_and(|d| d <= now) {
+            self.resolve(p, Err(ServeError::DeadlineExceeded));
+            return;
+        }
+        if n_images == 0 {
+            let latency = Duration::ZERO;
+            self.stats.serve.latencies_ms.push(0.0);
+            let _ = p.reply.send(Ok(Response {
+                id: self.next_req,
+                images: Vec::new(),
+                latency,
+            }));
+            self.next_req += 1;
+            return;
+        }
+        // Graceful degradation: under reduced capacity, shed bulk
+        // (priority-0) work beyond what the surviving chips can absorb.
+        let live = self.live_chips();
+        if live < self.chips.len()
+            && priority == 0
+            && self.batcher.queued_images() >= live.max(1) * self.cfg.batcher.device_batch
+        {
+            self.stats.shed += 1;
+            self.resolve(
+                p,
+                Err(ServeError::Rejected {
+                    reason: format!("shed: degraded capacity ({live}/{} chips)", self.chips.len()),
+                }),
+            );
+            return;
+        }
+        let id = self.next_req;
+        self.next_req += 1;
+        let req = Request {
+            deadline,
+            priority,
+            ..Request::new(id, n_images, now)
+        };
+        match self.batcher.push(req) {
+            Ok(()) => {
+                self.pending.insert(id, p);
+            }
+            Err(_) => self.resolve(
+                p,
+                Err(ServeError::Rejected {
+                    reason: format!("queue full ({})", self.cfg.batcher.max_queue),
+                }),
+            ),
+        }
+    }
+
+    // --- chip bookkeeping ------------------------------------------------
+
+    /// Chips that may yet serve work (not permanently dead).
+    fn live_chips(&self) -> usize {
+        self.chips
+            .iter()
+            .filter(|c| matches!(c.state, ChipState::Idle | ChipState::Busy { .. }))
+            .count()
+    }
+
+    fn idle_chip(&self) -> Option<usize> {
+        self.chips.iter().position(|c| c.state == ChipState::Idle)
+    }
+
+    /// Effective dispatch cap: shrink batches proportionally to surviving
+    /// capacity so per-batch latency (and the blast radius of the next
+    /// failure) drops with the fleet.
+    fn effective_cap(&self) -> usize {
+        let total = self.chips.len().max(1);
+        let live = self.live_chips().max(1);
+        (self.cfg.batcher.device_batch * live).div_ceil(total)
+    }
+
+    fn quarantine(&mut self, chip: usize, now: Instant) {
+        if self.chips[chip].state != ChipState::Dead {
+            self.chips[chip].state = ChipState::Quarantined {
+                until: now + self.cfg.probe_interval,
+            };
+            self.chips[chip].stats.quarantines += 1;
+        }
+    }
+
+    // --- resolution ------------------------------------------------------
+
+    fn resolve(&mut self, p: Pending, res: ServeResult) {
+        if let Err(e) = &res {
+            self.stats.serve.record_error(e);
+        }
+        let _ = p.reply.send(res);
+    }
+
+    fn fail_request(&mut self, id: u64, err: ServeError) {
+        if let Some(p) = self.pending.remove(&id) {
+            self.resolve(p, Err(err));
+        }
+    }
+
+    // --- periodic policy -------------------------------------------------
+
+    fn expire_deadlines(&mut self, now: Instant) {
+        let expired: Vec<u64> = self
+            .pending
+            .iter()
+            .filter(|(_, p)| p.deadline.is_some_and(|d| d <= now))
+            .map(|(&id, _)| id)
+            .collect();
+        for id in expired {
+            self.fail_request(id, ServeError::DeadlineExceeded);
+        }
+        // Queued requests whose pending entry is gone (expired, shed at
+        // retry, …) are dead weight: drop them.
+        let pending = &self.pending;
+        self.batcher.purge(|r| !pending.contains_key(&r.id));
+        self.retry.retain(|(_, r)| pending.contains_key(&r.id));
+    }
+
+    fn promote_retries(&mut self, now: Instant) {
+        let due: Vec<Request> = {
+            let (due, keep): (Vec<_>, Vec<_>) =
+                self.retry.drain(..).partition(|(at, _)| *at <= now);
+            self.retry = keep;
+            due.into_iter().map(|(_, r)| r).collect()
+        };
+        if !due.is_empty() {
+            self.batcher.requeue(due);
+        }
+    }
+
+    fn detect_stalls(&mut self, now: Instant) {
+        for chip in 0..self.chips.len() {
+            if let ChipState::Busy { job, since } = self.chips[chip].state {
+                if now.saturating_duration_since(since) >= self.cfg.stall_timeout {
+                    self.chips[chip].stats.stalls += 1;
+                    self.quarantine(chip, now);
+                    if let Some(j) = self.jobs.remove(&job) {
+                        // Another hedge copy may still be running; it wins
+                        // nothing (job is gone) but keeps its chip Busy
+                        // until it reports back.
+                        self.requeue_failed_parts(&j, now, "chip stalled");
+                    }
+                }
+            }
+        }
+    }
+
+    fn maybe_hedge(&mut self, now: Instant) {
+        let Some(hedge_after) = self.cfg.hedge_after else {
+            return;
+        };
+        // A job is hedgeable when one chip has held it past the threshold
+        // and another idle chip exists. At most one hedge per job.
+        let candidates: Vec<u64> = self
+            .jobs
+            .iter()
+            .filter(|(_, j)| !j.probe && !j.hedged && j.dispatched.len() == 1)
+            .map(|(&id, _)| id)
+            .collect();
+        for job_id in candidates {
+            let first = self.jobs[&job_id].dispatched[0];
+            let held = match self.chips[first].state {
+                ChipState::Busy { job, since } if job == job_id => {
+                    now.saturating_duration_since(since)
+                }
+                _ => continue,
+            };
+            if held < hedge_after {
+                continue;
+            }
+            let Some(second) = self.idle_chip().filter(|&c| c != first) else {
+                continue;
+            };
+            {
+                let job = self.jobs.get_mut(&job_id).unwrap();
+                job.hedged = true;
+                job.dispatched.push(second);
+            }
+            let total = self.jobs[&job_id].total;
+            let abort_at = self.job_abort_at(&job_id);
+            self.stats.hedges += 1;
+            self.send_job(second, job_id, total, abort_at, now);
+        }
+    }
+
+    fn probe_quarantined(&mut self, now: Instant) {
+        for chip in 0..self.chips.len() {
+            if let ChipState::Quarantined { until } = self.chips[chip].state {
+                if until <= now {
+                    let job_id = self.next_job;
+                    self.next_job += 1;
+                    self.jobs.insert(
+                        job_id,
+                        Job {
+                            parts: Vec::new(),
+                            total: 1,
+                            probe: true,
+                            hedged: false,
+                            dispatched: vec![chip],
+                        },
+                    );
+                    self.stats.probes += 1;
+                    self.send_job(chip, job_id, 1, None, now);
+                }
+            }
+        }
+    }
+
+    // --- dispatch --------------------------------------------------------
+
+    /// Abort point for a job: the latest deadline among its parts (the
+    /// batch stays useful while any part can still make it); `None` if any
+    /// part is deadline-free.
+    fn job_abort_at(&self, job_id: &u64) -> Option<Instant> {
+        let job = &self.jobs[job_id];
+        let mut latest: Option<Instant> = None;
+        for (id, _) in &job.parts {
+            match self.pending.get(id).and_then(|p| p.deadline) {
+                None => return None,
+                Some(d) => latest = Some(latest.map_or(d, |l| l.max(d))),
+            }
+        }
+        latest
+    }
+
+    fn send_job(
+        &mut self,
+        chip: usize,
+        job_id: u64,
+        total: usize,
+        abort_at: Option<Instant>,
+        now: Instant,
+    ) {
+        let sent = self.chips[chip]
+            .tx
+            .send(ChipJob {
+                job: job_id,
+                total,
+                abort_at,
+            })
+            .is_ok();
+        if sent {
+            self.chips[chip].state = ChipState::Busy {
+                job: job_id,
+                since: now,
+            };
+        } else {
+            // Worker thread is gone: the chip is dead hardware.
+            self.chips[chip].state = ChipState::Dead;
+            if let Some(j) = self.jobs.remove(&job_id) {
+                self.requeue_failed_parts(&j, now, "chip worker exited");
+            }
+        }
+    }
+
+    fn dispatch(&mut self, now: Instant) {
+        if self.shutting_down.is_some() {
+            return;
+        }
+        while let Some(chip) = self.idle_chip() {
+            let cap = self.effective_cap();
+            let Some(batch) = self.batcher.next_batch_with(now, cap) else {
+                return;
+            };
+            let job_id = self.next_job;
+            self.next_job += 1;
+            self.stats.serve.batches += 1;
+            self.stats.serve.total_batch_fill +=
+                batch.total as f64 / self.cfg.batcher.device_batch as f64;
+            self.chips[chip].stats.batches += 1;
+            for (id, _) in &batch.parts {
+                if let Some(p) = self.pending.get_mut(id) {
+                    p.attempt = p.attempt.max(1);
+                }
+            }
+            self.jobs.insert(
+                job_id,
+                Job {
+                    parts: batch.parts,
+                    total: batch.total,
+                    probe: false,
+                    hedged: false,
+                    dispatched: vec![chip],
+                },
+            );
+            let abort_at = self.job_abort_at(&job_id);
+            self.send_job(chip, job_id, self.jobs[&job_id].total, abort_at, now);
+        }
+    }
+
+    // --- completion ------------------------------------------------------
+
+    fn on_done(
+        &mut self,
+        chip: usize,
+        job_id: u64,
+        outcome: WorkOutcome,
+        elapsed: Duration,
+        report: Option<ChipReport>,
+    ) {
+        let now = Instant::now();
+        self.chips[chip].stats.busy_ms += elapsed.as_secs_f64() * 1e3;
+        self.chips[chip].stats.report = report;
+        let job = self.jobs.remove(&job_id);
+        // Chip state transition — conditional on WHICH job this Done
+        // answers. A late Done (a stalled job finally landing, a hedge
+        // loser) must not wipe a Busy entry for a newer job the chip is
+        // already holding.
+        let answers_current = matches!(
+            self.chips[chip].state,
+            ChipState::Busy { job, .. } if job == job_id
+        );
+        let in_quarantine = matches!(self.chips[chip].state, ChipState::Quarantined { .. });
+        match &outcome {
+            WorkOutcome::Images(_) | WorkOutcome::DeadlineAbort => {
+                // Success (or clean abort) proves health: this is the
+                // probe re-admission path, and how a formerly stalled
+                // chip that finally answered gets back in.
+                if answers_current || in_quarantine {
+                    self.chips[chip].state = ChipState::Idle;
+                }
+            }
+            WorkOutcome::Failed(_) => {
+                self.chips[chip].stats.failures += 1;
+                if answers_current || in_quarantine {
+                    self.quarantine(chip, now);
+                }
+            }
+        }
+        let Some(job) = job else {
+            // Hedge loser, stalled-job orphan, or post-shutdown stray: the
+            // state transition above is all there was to do.
+            return;
+        };
+        if job.probe {
+            match outcome {
+                WorkOutcome::Failed(_) => self.chips[chip].stats.probes_failed += 1,
+                _ => self.chips[chip].stats.probes_ok += 1,
+            }
+            return;
+        }
+        match outcome {
+            WorkOutcome::Images(images) => {
+                let nd = images.len() / job.total.max(1);
+                self.chips[chip].stats.images += job.total;
+                let mut cursor = 0usize;
+                for (id, count) in job.parts {
+                    let done = match self.pending.get_mut(&id) {
+                        Some(entry) => {
+                            entry
+                                .images
+                                .extend_from_slice(&images[cursor * nd..(cursor + count) * nd]);
+                            entry.remaining -= count.min(entry.remaining);
+                            entry.remaining == 0
+                        }
+                        None => false, // expired while in flight
+                    };
+                    cursor += count;
+                    if done {
+                        let mut p = self.pending.remove(&id).unwrap();
+                        let latency = p.arrived.elapsed();
+                        if p.deadline.is_some_and(|d| Instant::now() > d) {
+                            self.resolve(p, Err(ServeError::DeadlineExceeded));
+                        } else {
+                            self.stats.serve.images += p.n_images;
+                            self.stats
+                                .serve
+                                .latencies_ms
+                                .push(latency.as_secs_f64() * 1e3);
+                            let images = std::mem::take(&mut p.images);
+                            self.resolve(
+                                p,
+                                Ok(Response {
+                                    id,
+                                    images,
+                                    latency,
+                                }),
+                            );
+                        }
+                    }
+                }
+            }
+            WorkOutcome::DeadlineAbort => {
+                // Every part's deadline passed; expire_deadlines has (or
+                // will have) answered them. Nothing to deliver.
+            }
+            WorkOutcome::Failed(reason) => {
+                self.requeue_failed_parts(&job, now, &reason);
+            }
+        }
+    }
+
+    /// Requeue (with backoff) or fail the parts of a batch its chip could
+    /// not complete.
+    fn requeue_failed_parts(&mut self, job: &Job, now: Instant, reason: &str) {
+        for &(id, count) in &job.parts {
+            let Some(p) = self.pending.get_mut(&id) else {
+                continue; // already expired / resolved
+            };
+            if p.deadline.is_some_and(|d| d <= now) {
+                self.fail_request(id, ServeError::DeadlineExceeded);
+                continue;
+            }
+            if p.attempt > self.cfg.max_retries {
+                self.fail_request(
+                    id,
+                    ServeError::Failed {
+                        reason: format!(
+                            "{reason} (after {} attempts)",
+                            self.cfg.max_retries.saturating_add(1)
+                        ),
+                    },
+                );
+                continue;
+            }
+            let attempt = p.attempt;
+            p.attempt += 1;
+            let req = Request {
+                deadline: p.deadline,
+                priority: p.priority,
+                attempt,
+                ..Request::new(id, count, p.arrived)
+            };
+            self.stats.retries += 1;
+            if self.cfg.backoff_base.is_zero() {
+                self.batcher.requeue([req]);
+            } else {
+                let backoff = self
+                    .cfg
+                    .backoff_base
+                    .saturating_mul(1u32 << attempt.saturating_sub(1).min(16));
+                self.retry.push((now + backoff, req));
+            }
+        }
+    }
+
+    // --- shutdown --------------------------------------------------------
+
+    fn begin_shutdown(&mut self) {
+        if self.shutting_down.is_some() {
+            return;
+        }
+        self.shutting_down = Some(Instant::now());
+        // Reject everything queued; keep entries with in-flight parts so
+        // `shutdown_grace` can still land them.
+        let in_flight: std::collections::HashSet<u64> = self
+            .jobs
+            .values()
+            .flat_map(|j| j.parts.iter().map(|&(id, _)| id))
+            .collect();
+        let queued: Vec<u64> = self
+            .pending
+            .keys()
+            .copied()
+            .filter(|id| !in_flight.contains(id))
+            .collect();
+        for id in queued {
+            self.fail_request(id, ServeError::Shutdown);
+        }
+        self.batcher.purge(|_| true);
+        self.retry.clear();
+    }
+
+    fn finish_shutdown(&mut self) -> FarmStats {
+        // Whatever is still pending missed the grace window.
+        let ids: Vec<u64> = self.pending.keys().copied().collect();
+        for id in ids {
+            self.fail_request(id, ServeError::Shutdown);
+        }
+        for (i, chip) in self.chips.iter().enumerate() {
+            self.stats.chips[i] = chip.stats.clone();
+        }
+        std::mem::take(&mut self.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph;
+    use crate::train::sampler::RustSampler;
+
+    fn tiny_farm(cfg: FarmConfig, plan: FaultPlan) -> Farm {
+        let top = graph::build("t", 4, "G8", 8, 0).unwrap();
+        let dtm = Dtm::init("t", &top, 2, 3.0, 1);
+        Farm::spawn(cfg, dtm, plan, move |chip| {
+            Ok(RustSampler::new(
+                graph::build("t", 4, "G8", 8, 0).unwrap(),
+                4,
+                90 + chip as u64,
+            ))
+        })
+    }
+
+    fn cfg_tiny() -> FarmConfig {
+        FarmConfig {
+            chips: 2,
+            batcher: BatcherConfig {
+                device_batch: 4,
+                linger: Duration::from_millis(1),
+                max_queue: 256,
+            },
+            k_inference: 3,
+            seed: 7,
+            default_deadline: Some(Duration::from_secs(30)),
+            max_retries: 2,
+            backoff_base: Duration::from_millis(1),
+            hedge_after: None,
+            probe_interval: Duration::from_millis(20),
+            stall_timeout: Duration::from_secs(2),
+            shutdown_grace: Duration::from_millis(500),
+        }
+    }
+
+    #[test]
+    fn farm_serves_concurrent_load() {
+        let farm = tiny_farm(cfg_tiny(), FaultPlan::none());
+        let client = farm.client();
+        let waiters: Vec<_> = (0..12).map(|_| client.submit(2, None, 1)).collect();
+        for w in waiters {
+            let r = w
+                .recv_timeout(Duration::from_secs(60))
+                .expect("request hung")
+                .expect("fault-free farm must serve");
+            assert_eq!(r.images.len(), 2 * 8);
+            assert!(r.images.iter().all(|&x| x == 1.0 || x == -1.0));
+        }
+        let stats = farm.shutdown();
+        assert_eq!(stats.serve.requests, 12);
+        assert_eq!(stats.serve.images, 24);
+        assert_eq!(stats.serve.errors(), 0);
+        assert_eq!(stats.chips.len(), 2);
+        // Both chips pulled weight (12 batches of work for 2 idle chips).
+        assert!(stats.chips.iter().all(|c| c.batches > 0), "{:?}", stats.chips);
+    }
+
+    #[test]
+    fn farm_retries_transient_faults_to_success() {
+        // Chip 0 always fails; chip 1 is clean. Retries route around.
+        let plan = FaultPlan::parse("chip0=kill@0").unwrap();
+        let farm = tiny_farm(cfg_tiny(), plan);
+        let client = farm.client();
+        let waiters: Vec<_> = (0..8).map(|_| client.submit(2, None, 1)).collect();
+        let mut ok = 0;
+        for w in waiters {
+            if w.recv_timeout(Duration::from_secs(60))
+                .expect("request hung")
+                .is_ok()
+            {
+                ok += 1;
+            }
+        }
+        assert_eq!(ok, 8, "healthy chip must absorb the killed chip's work");
+        let stats = farm.shutdown();
+        assert!(stats.retries > 0, "killed chip's batches must requeue");
+        assert!(stats.chips[0].quarantines > 0);
+        assert!(stats.chips[1].images >= 16);
+    }
+
+    #[test]
+    fn zero_image_request_resolves_immediately() {
+        let farm = tiny_farm(cfg_tiny(), FaultPlan::none());
+        let r = farm.client().generate(0).unwrap();
+        assert!(r.images.is_empty());
+        farm.shutdown();
+    }
+}

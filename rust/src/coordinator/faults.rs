@@ -1,0 +1,400 @@
+//! Deterministic fault injection for the chip farm.
+//!
+//! The paper's system-level story assumes fleets of *imperfect* chips; this
+//! module makes the imperfection schedulable so the supervisor's robustness
+//! policy (`coordinator::farm`) is testable against seeded, reproducible
+//! fault scenarios instead of whatever the host machine happens to do.
+//!
+//! A [`FaultPlan`] is parsed from a compact spec string
+//! (`repro serve --faults <spec>`) and compiled per chip into a
+//! [`ChipFaults`] state machine, seeded through [`util::rng::Rng`] forks so
+//! the same `(spec, seed)` pair injects the identical fault schedule on
+//! every run — the chaos suite depends on this.
+//!
+//! Spec grammar (comma-separated entries, `chip<i>=` or `all=` targets):
+//!
+//! ```text
+//! chip0=kill@3          calls >= 3 on chip 0 fail permanently (dead die)
+//! chip1=fail:0.5        each call fails with probability 0.5
+//! chip2=stall@2:200     call 2 stalls for 200 ms, then the chip recovers
+//! chip3=derate:4        phase clock derated: every call takes 4x as long
+//! chip4=spike:0.3:50    with probability 0.3 a call takes +50 ms
+//! all=fail:0.1          applied to every chip in the farm
+//! ```
+//!
+//! Faults compose: `chip0=derate:2,chip0=fail:0.2` derates *and* fails.
+//! Call counting includes health probes (a dead chip fails its probes too,
+//! which is exactly what keeps it quarantined).
+//!
+//! [`util::rng::Rng`]: crate::util::rng::Rng
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Rng;
+
+/// One injected fault behavior.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Permanent death: every call with index >= `after_calls` fails.
+    Kill { after_calls: u64 },
+    /// Transient failures: each call fails independently with prob `p`.
+    FailFrac { p: f64 },
+    /// One-time stall: call `at_call` blocks for `dur`, then recovery.
+    Stall { at_call: u64, dur: Duration },
+    /// Derated phase clock: every call takes `factor` x its nominal time.
+    Derate { factor: f64 },
+    /// Latency spikes: with prob `p` a call takes an extra `dur`.
+    Spike { p: f64, dur: Duration },
+}
+
+/// What the fault layer decided for one call, before it runs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultDecision {
+    /// Sleep this long before (stall / spike) the call.
+    pub sleep: Duration,
+    /// Multiply the call's own duration by this factor (derate >= 1.0;
+    /// implemented by the worker as a proportional post-call sleep).
+    pub derate: f64,
+    /// If set, the call fails with this reason instead of running.
+    pub fail: Option<String>,
+}
+
+/// Per-chip fault state machine: owns its fault list, a forked RNG stream
+/// and counters. Deterministic for a given `(plan, base_seed, chip)`.
+#[derive(Debug)]
+pub struct ChipFaults {
+    kinds: Vec<FaultKind>,
+    rng: Rng,
+    /// Calls decided so far (work + probes).
+    pub calls: u64,
+    /// Calls the layer failed.
+    pub injected_failures: u64,
+    /// Calls the layer delayed (stall or spike).
+    pub injected_delays: u64,
+}
+
+impl ChipFaults {
+    /// A fault-free chip (the plan for chips the spec does not mention).
+    pub fn none() -> ChipFaults {
+        ChipFaults {
+            kinds: Vec::new(),
+            rng: Rng::new(0),
+            calls: 0,
+            injected_failures: 0,
+            injected_delays: 0,
+        }
+    }
+
+    pub fn is_fault_free(&self) -> bool {
+        self.kinds.is_empty()
+    }
+
+    /// Decide the fate of the next call. Consumes RNG draws in a fixed
+    /// order (one uniform per probabilistic fault, every call) so the
+    /// schedule depends only on the call index, never on timing.
+    pub fn before_call(&mut self) -> FaultDecision {
+        let call = self.calls;
+        self.calls += 1;
+        let mut d = FaultDecision {
+            derate: 1.0,
+            ..FaultDecision::default()
+        };
+        for k in &self.kinds {
+            match *k {
+                FaultKind::Kill { after_calls } => {
+                    if call >= after_calls && d.fail.is_none() {
+                        d.fail = Some(format!("chip dead (killed at call {after_calls})"));
+                    }
+                }
+                FaultKind::FailFrac { p } => {
+                    // Draw unconditionally to keep the stream aligned.
+                    let u = self.rng.uniform();
+                    if u < p && d.fail.is_none() {
+                        d.fail = Some(format!("injected fault (p={p})"));
+                    }
+                }
+                FaultKind::Stall { at_call, dur } => {
+                    if call == at_call {
+                        d.sleep += dur;
+                    }
+                }
+                FaultKind::Derate { factor } => {
+                    d.derate *= factor.max(1.0);
+                }
+                FaultKind::Spike { p, dur } => {
+                    let u = self.rng.uniform();
+                    if u < p {
+                        d.sleep += dur;
+                    }
+                }
+            }
+        }
+        if d.fail.is_some() {
+            self.injected_failures += 1;
+        }
+        if d.sleep > Duration::ZERO {
+            self.injected_delays += 1;
+        }
+        d
+    }
+}
+
+/// The parsed farm-wide fault schedule: per-chip fault lists plus the
+/// `all=` list prepended to every chip.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    per_chip: Vec<(usize, FaultKind)>,
+    all: Vec<FaultKind>,
+}
+
+impl FaultPlan {
+    /// No faults anywhere.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.per_chip.is_empty() && self.all.is_empty()
+    }
+
+    /// Parse the spec grammar (see the module docs). Empty string = no
+    /// faults.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (target, kind_s) = entry
+                .split_once('=')
+                .with_context(|| format!("fault entry {entry:?}: expected <target>=<kind>"))?;
+            let kind = parse_kind(kind_s.trim())
+                .with_context(|| format!("fault entry {entry:?}"))?;
+            match target.trim() {
+                "all" => plan.all.push(kind),
+                t => {
+                    let idx: usize = t
+                        .strip_prefix("chip")
+                        .and_then(|n| n.parse().ok())
+                        .with_context(|| {
+                            format!("fault target {t:?}: expected chip<N> or all")
+                        })?;
+                    plan.per_chip.push((idx, kind));
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// The fault kinds that apply to `chip` (`all=` entries first, in spec
+    /// order).
+    pub fn kinds_for(&self, chip: usize) -> Vec<FaultKind> {
+        self.all
+            .iter()
+            .cloned()
+            .chain(
+                self.per_chip
+                    .iter()
+                    .filter(|&&(c, _)| c == chip)
+                    .map(|(_, k)| k.clone()),
+            )
+            .collect()
+    }
+
+    /// The combined derate factor for `chip` (1.0 when not derated) — used
+    /// by the CLI to also slow the emulated phase clock of hw chips, so
+    /// `device_seconds` metering agrees with the injected slowdown.
+    pub fn derate_factor(&self, chip: usize) -> f64 {
+        self.kinds_for(chip)
+            .iter()
+            .map(|k| match k {
+                FaultKind::Derate { factor } => factor.max(1.0),
+                _ => 1.0,
+            })
+            .product()
+    }
+
+    /// Compile the per-chip state machine. RNG forked from `base_seed` and
+    /// the chip index: deterministic, and distinct across chips.
+    pub fn chip_faults(&self, chip: usize, base_seed: u64) -> ChipFaults {
+        let kinds = self.kinds_for(chip);
+        let rng = Rng::new(base_seed).fork(0x_FA01_7000 + chip as u64);
+        ChipFaults {
+            kinds,
+            rng,
+            calls: 0,
+            injected_failures: 0,
+            injected_delays: 0,
+        }
+    }
+}
+
+fn parse_ms(s: &str) -> Result<Duration> {
+    let s = s.strip_suffix("ms").unwrap_or(s);
+    let ms: u64 = s.parse().with_context(|| format!("bad millisecond value {s:?}"))?;
+    Ok(Duration::from_millis(ms))
+}
+
+fn parse_prob(s: &str) -> Result<f64> {
+    let p: f64 = s.parse().with_context(|| format!("bad probability {s:?}"))?;
+    if !(0.0..=1.0).contains(&p) {
+        bail!("probability {p} outside [0, 1]");
+    }
+    Ok(p)
+}
+
+fn parse_kind(s: &str) -> Result<FaultKind> {
+    if let Some(rest) = s.strip_prefix("kill") {
+        let after_calls = match rest.strip_prefix('@') {
+            Some(n) => n.parse().with_context(|| format!("bad kill call index {n:?}"))?,
+            None if rest.is_empty() => 0,
+            None => bail!("kill takes '@<call>' (got {s:?})"),
+        };
+        return Ok(FaultKind::Kill { after_calls });
+    }
+    if let Some(rest) = s.strip_prefix("fail:") {
+        return Ok(FaultKind::FailFrac {
+            p: parse_prob(rest)?,
+        });
+    }
+    if let Some(rest) = s.strip_prefix("stall@") {
+        let (call_s, ms_s) = rest
+            .split_once(':')
+            .with_context(|| format!("stall takes '@<call>:<ms>' (got {s:?})"))?;
+        return Ok(FaultKind::Stall {
+            at_call: call_s
+                .parse()
+                .with_context(|| format!("bad stall call index {call_s:?}"))?,
+            dur: parse_ms(ms_s)?,
+        });
+    }
+    if let Some(rest) = s.strip_prefix("derate:") {
+        let factor: f64 = rest.parse().with_context(|| format!("bad derate factor {rest:?}"))?;
+        if factor < 1.0 {
+            bail!("derate factor must be >= 1.0, got {factor}");
+        }
+        return Ok(FaultKind::Derate { factor });
+    }
+    if let Some(rest) = s.strip_prefix("spike:") {
+        let (p_s, ms_s) = rest
+            .split_once(':')
+            .with_context(|| format!("spike takes ':<prob>:<ms>' (got {s:?})"))?;
+        return Ok(FaultKind::Spike {
+            p: parse_prob(p_s)?,
+            dur: parse_ms(ms_s)?,
+        });
+    }
+    bail!("unknown fault kind {s:?} (kill[@N] | fail:P | stall@N:MS | derate:F | spike:P:MS)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_grammar() {
+        let plan = FaultPlan::parse(
+            "chip0=kill@3, chip1=fail:0.5, chip2=stall@2:200ms, chip3=derate:4, \
+             chip4=spike:0.3:50, all=fail:0.1",
+        )
+        .unwrap();
+        assert_eq!(
+            plan.kinds_for(0),
+            vec![
+                FaultKind::FailFrac { p: 0.1 },
+                FaultKind::Kill { after_calls: 3 }
+            ]
+        );
+        assert_eq!(
+            plan.kinds_for(2),
+            vec![
+                FaultKind::FailFrac { p: 0.1 },
+                FaultKind::Stall {
+                    at_call: 2,
+                    dur: Duration::from_millis(200)
+                }
+            ]
+        );
+        assert_eq!(plan.derate_factor(3), 4.0);
+        assert_eq!(plan.derate_factor(0), 1.0);
+        // Chip 7 is not named: only the `all=` entry applies.
+        assert_eq!(plan.kinds_for(7), vec![FaultKind::FailFrac { p: 0.1 }]);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        for bad in [
+            "chip0",             // no '='
+            "chipX=kill",        // bad index
+            "chip0=explode",     // unknown kind
+            "chip0=fail:1.5",    // probability out of range
+            "chip0=derate:0.5",  // speedup is not a fault
+            "chip0=stall@1",     // missing duration
+            "chip0=spike:0.5",   // missing duration
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn kill_is_permanent_from_threshold() {
+        let plan = FaultPlan::parse("chip0=kill@2").unwrap();
+        let mut f = plan.chip_faults(0, 7);
+        assert!(f.before_call().fail.is_none());
+        assert!(f.before_call().fail.is_none());
+        for _ in 0..10 {
+            assert!(f.before_call().fail.is_some());
+        }
+        assert_eq!(f.calls, 12);
+        assert_eq!(f.injected_failures, 10);
+    }
+
+    #[test]
+    fn stall_fires_once_then_recovers() {
+        let plan = FaultPlan::parse("chip1=stall@1:30").unwrap();
+        let mut f = plan.chip_faults(1, 7);
+        assert_eq!(f.before_call().sleep, Duration::ZERO);
+        assert_eq!(f.before_call().sleep, Duration::from_millis(30));
+        assert_eq!(f.before_call().sleep, Duration::ZERO);
+        assert_eq!(f.injected_delays, 1);
+    }
+
+    #[test]
+    fn fail_fraction_is_seeded_and_deterministic() {
+        let plan = FaultPlan::parse("all=fail:0.5").unwrap();
+        let run = |seed: u64| -> Vec<bool> {
+            let mut f = plan.chip_faults(0, seed);
+            (0..64).map(|_| f.before_call().fail.is_some()).collect()
+        };
+        // Identical seed => identical schedule; different seed => different.
+        assert_eq!(run(1), run(1));
+        assert_ne!(run(1), run(2));
+        let hits = run(1).iter().filter(|&&x| x).count();
+        assert!((10..=54).contains(&hits), "p=0.5 over 64 calls hit {hits}");
+        // Distinct chips get distinct streams from the same base seed.
+        let mut a = plan.chip_faults(0, 1);
+        let mut b = plan.chip_faults(1, 1);
+        let va: Vec<bool> = (0..64).map(|_| a.before_call().fail.is_some()).collect();
+        let vb: Vec<bool> = (0..64).map(|_| b.before_call().fail.is_some()).collect();
+        assert_ne!(va, vb);
+    }
+
+    #[test]
+    fn composed_faults_all_apply() {
+        let plan = FaultPlan::parse("chip0=derate:2,chip0=derate:3,chip0=kill@0").unwrap();
+        let mut f = plan.chip_faults(0, 0);
+        let d = f.before_call();
+        assert_eq!(d.derate, 6.0);
+        assert!(d.fail.is_some());
+        assert_eq!(plan.derate_factor(0), 6.0);
+    }
+
+    #[test]
+    fn fault_free_chip() {
+        let mut f = ChipFaults::none();
+        assert!(f.is_fault_free());
+        let d = f.before_call();
+        assert_eq!(d, FaultDecision { derate: 1.0, ..FaultDecision::default() });
+    }
+}

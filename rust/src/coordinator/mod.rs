@@ -1,9 +1,72 @@
-//! L3 coordination: the denoising pipeline, request batching and serving.
+//! L3 coordination: the denoising pipeline, request batching, and the
+//! serving stack — from the minimal single-chip [`server`] to the
+//! fault-tolerant multi-chip [`farm`].
+//!
+//! # Serving architecture
+//!
+//! ```text
+//!   clients ──► FarmClient::submit(n, deadline, priority)
+//!                     │  (mpsc, every submission gets a reply channel)
+//!                     ▼
+//!              ┌─ supervisor ─────────────────────────────────┐
+//!              │  admission control ─► EDF batcher ─► dispatch │
+//!              │  deadlines · retries+backoff · hedging        │
+//!              │  stall detection · quarantine+probes          │
+//!              │  shrink-batch degradation · priority shedding │
+//!              └──────┬───────────────┬───────────────┬────────┘
+//!                 job │           job │           job │   (per-chip mpsc)
+//!                     ▼               ▼               ▼
+//!               chip 0 thread   chip 1 thread   chip 2 thread
+//!               [faults? ► pipeline.generate ► meters]   (non-Send
+//!                samplers are built ON their thread; hw chips carry
+//!                their own fabricated corner + mismatch)
+//!                     │               │               │
+//!                     └────── Done{outcome, report} ──┘
+//!                                     │
+//!                     per-request slices ─► reply channels
+//! ```
+//!
+//! Requests carry an optional **deadline** (EDF-ordered in the batcher,
+//! propagated into the chip so the reverse process aborts between layer
+//! programs once every deadline in the batch has passed) and a
+//! **priority** (0 = sheddable bulk). The contract — enforced by the
+//! `farm_chaos` suite under seeded fault schedules ([`faults`]) — is that
+//! **no request ever hangs**: every submission resolves to `Ok(Response)`
+//! or a typed [`ServeError`] within its deadline.
+//!
+//! # Chip failure state machine
+//!
+//! ```text
+//!            job Done(ok | deadline-abort)
+//!          ┌───────────────────────────────┐
+//!          ▼                               │
+//!        Idle ──── dispatch job ────────► Busy
+//!          ▲                               │ Done(failed)      ──┐
+//!          │                               │ or stall_timeout    │ requeue
+//!          │ probe succeeds                ▼                   ◄─┘ parts
+//!          └───────────────────────── Quarantined ◄──┐
+//!                                          │ probe    │ probe
+//!                                          └─ fails ──┘ (1-image job,
+//!                                                        probe_interval)
+//!
+//!        (worker thread exits / init fails) ──► Dead   (terminal)
+//! ```
+//!
+//! A batch whose chip fails or stalls is requeued at its original EDF
+//! position with exponential backoff, up to `max_retries`, then resolves
+//! `Failed`. A batch held past `hedge_after` is re-dispatched once to a
+//! second idle chip; the first result wins. When capacity drops, the
+//! effective batch shrinks proportionally and priority-0 overflow is shed
+//! with a typed rejection.
 
 pub mod batcher;
+pub mod farm;
+pub mod faults;
 pub mod pipeline;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig};
+pub use farm::{Farm, FarmClient, FarmConfig, FarmStats};
+pub use faults::FaultPlan;
 pub use pipeline::{generate_images, Pipeline};
-pub use server::{Server, ServerConfig, ServerStats};
+pub use server::{Response, ServeError, ServeResult, Server, ServerConfig, ServerStats};

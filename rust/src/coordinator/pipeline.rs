@@ -3,6 +3,8 @@
 //! Gibbs program conditioned on the previous step's output, and read the data
 //! nodes at t = 0.
 
+use std::time::Instant;
+
 use anyhow::Result;
 
 use crate::model::{gather_data, scatter_data, Dtm};
@@ -17,6 +19,21 @@ pub fn generate_batch<S: LayerSampler>(
     k: usize,
     rng: &mut Rng,
 ) -> Result<Vec<f32>> {
+    Ok(generate_batch_deadline(sampler, dtm, k, rng, None)?
+        .expect("no deadline, cannot abort"))
+}
+
+/// Deadline-aware batch generation: the reverse process checks the clock
+/// between layer programs and returns `Ok(None)` when `abort_at` has
+/// passed — a chip serving a deadline-bound request stops burning sweeps
+/// on work nobody will accept. `abort_at = None` never aborts.
+pub fn generate_batch_deadline<S: LayerSampler>(
+    sampler: &mut S,
+    dtm: &Dtm,
+    k: usize,
+    rng: &mut Rng,
+    abort_at: Option<Instant>,
+) -> Result<Option<Vec<f32>>> {
     let top = sampler.topology().clone();
     let b = sampler.batch();
     let nd = top.data_nodes.len();
@@ -24,12 +41,15 @@ pub fn generate_batch<S: LayerSampler>(
     let mut x: Vec<f32> = (0..b * nd).map(|_| rng.spin()).collect();
     // Layers run in reverse: layer t denoises x^{t+1} -> x^t.
     for t in (0..dtm.t_steps()).rev() {
+        if abort_at.is_some_and(|d| Instant::now() >= d) {
+            return Ok(None);
+        }
         let gm = dtm.gm_vec(&top, t);
         let xt_full = scatter_data(&top, &x, b);
         let s_final = sampler.sample(&dtm.layers[t], &gm, dtm.beta, &xt_full, None, k)?;
         x = gather_data(&top, &s_final, b);
     }
-    Ok(x)
+    Ok(Some(x))
 }
 
 /// Generate at least `n` images (multiple batches), truncated to n rows.
@@ -40,13 +60,31 @@ pub fn generate_images<S: LayerSampler>(
     n: usize,
     rng: &mut Rng,
 ) -> Result<Vec<f32>> {
+    Ok(generate_images_deadline(sampler, dtm, k, n, rng, None)?
+        .expect("no deadline, cannot abort"))
+}
+
+/// Deadline-aware [`generate_images`]: `Ok(None)` when `abort_at` passed
+/// before the requested rows were all generated (partial work discarded —
+/// callers answer the request with a typed `DeadlineExceeded`).
+pub fn generate_images_deadline<S: LayerSampler>(
+    sampler: &mut S,
+    dtm: &Dtm,
+    k: usize,
+    n: usize,
+    rng: &mut Rng,
+    abort_at: Option<Instant>,
+) -> Result<Option<Vec<f32>>> {
     let nd = sampler.topology().data_nodes.len();
     let mut out = Vec::with_capacity(n * nd);
     while out.len() < n * nd {
-        out.extend(generate_batch(sampler, dtm, k, rng)?);
+        match generate_batch_deadline(sampler, dtm, k, rng, abort_at)? {
+            Some(batch) => out.extend(batch),
+            None => return Ok(None),
+        }
     }
     out.truncate(n * nd);
-    Ok(out)
+    Ok(Some(out))
 }
 
 /// Generate and also record each intermediate x^t (for Fig. 5a): returns
@@ -155,6 +193,21 @@ mod tests {
         let imgs = generate_images(&mut s, &dtm, 10, 16, &mut rng).unwrap();
         let mean: f64 = imgs.iter().map(|&x| x as f64).sum::<f64>() / imgs.len() as f64;
         assert!(mean > 0.8, "mean {mean}");
+    }
+
+    #[test]
+    fn deadline_abort_between_layers() {
+        let (top, dtm) = tiny();
+        let mut s = RustSampler::new(top, 4, 0);
+        let mut rng = Rng::new(5);
+        // An already-expired abort point aborts before the first layer.
+        let past = Instant::now() - std::time::Duration::from_millis(1);
+        let out = generate_images_deadline(&mut s, &dtm, 5, 8, &mut rng, Some(past)).unwrap();
+        assert!(out.is_none());
+        // A far-future abort point generates normally.
+        let future = Instant::now() + std::time::Duration::from_secs(60);
+        let out = generate_images_deadline(&mut s, &dtm, 5, 8, &mut rng, Some(future)).unwrap();
+        assert_eq!(out.unwrap().len(), 8 * 8);
     }
 
     #[test]

@@ -1,10 +1,26 @@
-//! The serving loop: a device thread owning the (non-Send) pipeline, fed by
-//! a channel of generation requests through the dynamic batcher.
+//! The single-chip serving loop: a device thread owning the (non-Send)
+//! pipeline, fed by a channel of generation requests through the dynamic
+//! batcher. The multi-chip, fault-tolerant layer lives in
+//! [`super::farm`]; this server remains the minimal one-device path (and
+//! the farm's conceptual "one chip" reference).
 //!
 //! Architecture (PJRT wrappers are not `Send`, and physically there is one
 //! DTCA "chip"): client threads -> mpsc -> device thread
 //! [batcher -> pipeline.generate -> per-request slices] -> response channels.
+//!
+//! **No request ever hangs.** Every accepted message resolves its reply
+//! channel with `Ok(Response)` or a typed [`ServeError`]:
+//!
+//! * batcher back-pressure replies `Rejected` (it used to be silently
+//!   dropped, leaving the client blocked forever);
+//! * a `generate_batch` failure fails every request in the affected batch
+//!   with `Failed` (their reply channels used to be orphaned);
+//! * a request whose deadline passes before its batch is dispatched (or
+//!   completed) replies `DeadlineExceeded`;
+//! * `shutdown` rejects everything still queued with `Shutdown` instead of
+//!   waiting for `pending` to happen to drain.
 
+use std::fmt;
 use std::sync::mpsc;
 use std::thread;
 use std::time::{Duration, Instant};
@@ -26,10 +42,41 @@ pub struct Response {
     pub latency: Duration,
 }
 
+/// Typed serving failure — the contract is that every submitted request
+/// resolves to `Ok(Response)` or exactly one of these, within its deadline.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission control: queue full, or shed under degraded capacity.
+    Rejected { reason: String },
+    /// The deadline expired before the request completed.
+    DeadlineExceeded,
+    /// Generation failed (after any configured retries).
+    Failed { reason: String },
+    /// The server shut down before the request completed.
+    Shutdown,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Rejected { reason } => write!(f, "rejected: {reason}"),
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            ServeError::Failed { reason } => write!(f, "generation failed: {reason}"),
+            ServeError::Shutdown => write!(f, "server shut down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// What every reply channel carries.
+pub type ServeResult = std::result::Result<Response, ServeError>;
+
 enum Msg {
     Generate {
         n_images: usize,
-        reply: mpsc::Sender<Response>,
+        deadline: Option<Instant>,
+        reply: mpsc::Sender<ServeResult>,
     },
     Shutdown,
 }
@@ -42,6 +89,12 @@ pub struct ServerStats {
     pub batches: usize,
     pub total_batch_fill: f64,
     pub latencies_ms: Vec<f64>,
+    /// Typed-error counters (each request lands in exactly one bucket or
+    /// in `latencies_ms`).
+    pub rejected: usize,
+    pub deadline_exceeded: usize,
+    pub failed: usize,
+    pub shutdown_rejected: usize,
 }
 
 impl ServerStats {
@@ -60,6 +113,29 @@ impl ServerStats {
     pub fn p99_ms(&self) -> f64 {
         crate::util::percentile(&self.latencies_ms, 0.99)
     }
+
+    pub fn errors(&self) -> usize {
+        self.rejected + self.deadline_exceeded + self.failed + self.shutdown_rejected
+    }
+
+    /// Fraction of finished requests that resolved to a typed error.
+    pub fn error_rate(&self) -> f64 {
+        let done = self.latencies_ms.len() + self.errors();
+        if done == 0 {
+            0.0
+        } else {
+            self.errors() as f64 / done as f64
+        }
+    }
+
+    pub(crate) fn record_error(&mut self, e: &ServeError) {
+        match e {
+            ServeError::Rejected { .. } => self.rejected += 1,
+            ServeError::DeadlineExceeded => self.deadline_exceeded += 1,
+            ServeError::Failed { .. } => self.failed += 1,
+            ServeError::Shutdown => self.shutdown_rejected += 1,
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -76,28 +152,57 @@ pub struct Client {
 }
 
 impl Client {
-    /// Blocking generate.
-    pub fn generate(&self, n_images: usize) -> Result<Response> {
+    fn submit(
+        &self,
+        n_images: usize,
+        deadline: Option<Instant>,
+    ) -> Result<mpsc::Receiver<ServeResult>> {
         let (rtx, rrx) = mpsc::channel();
         self.tx
             .send(Msg::Generate {
                 n_images,
-                reply: rtx,
-            })
-            .map_err(|_| anyhow::anyhow!("server down"))?;
-        Ok(rrx.recv()?)
-    }
-
-    /// Fire a request, returning the receiver (for concurrent load tests).
-    pub fn generate_async(&self, n_images: usize) -> Result<mpsc::Receiver<Response>> {
-        let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(Msg::Generate {
-                n_images,
+                deadline,
                 reply: rtx,
             })
             .map_err(|_| anyhow::anyhow!("server down"))?;
         Ok(rrx)
+    }
+
+    /// Blocking generate (no deadline).
+    pub fn generate(&self, n_images: usize) -> Result<Response> {
+        Ok(self.submit(n_images, None)?.recv()??)
+    }
+
+    /// Blocking generate with a deadline, resolving to the typed result.
+    /// The deadline is propagated to the device thread (which answers
+    /// `DeadlineExceeded` and skips the work if it can't make it);
+    /// `recv_timeout` is a local backstop so the caller unblocks by
+    /// `deadline + grace` even if the server misbehaves.
+    pub fn generate_timeout(&self, n_images: usize, deadline: Duration) -> ServeResult {
+        let rrx = self
+            .submit(n_images, Some(Instant::now() + deadline))
+            .map_err(|_| ServeError::Shutdown)?;
+        // The server enforces the deadline; the small grace keeps the race
+        // between its answer and our clock from manufacturing timeouts.
+        let grace = Duration::from_millis(250);
+        match rrx.recv_timeout(deadline + grace) {
+            Ok(res) => res,
+            Err(_) => Err(ServeError::DeadlineExceeded),
+        }
+    }
+
+    /// Fire a request, returning the receiver (for concurrent load tests).
+    pub fn generate_async(&self, n_images: usize) -> Result<mpsc::Receiver<ServeResult>> {
+        self.submit(n_images, None)
+    }
+
+    /// Fire with a deadline, returning the receiver.
+    pub fn generate_async_deadline(
+        &self,
+        n_images: usize,
+        deadline: Duration,
+    ) -> Result<mpsc::Receiver<ServeResult>> {
+        self.submit(n_images, Some(Instant::now() + deadline))
     }
 }
 
@@ -128,11 +233,23 @@ impl Server {
         }
     }
 
-    /// Stop and collect stats.
+    /// Stop and collect stats. Everything still queued (including messages
+    /// that raced the shutdown into the channel) is rejected with
+    /// [`ServeError::Shutdown`] — the server does not wait for `pending` to
+    /// drain by luck.
     pub fn shutdown(mut self) -> ServerStats {
         let _ = self.tx.send(Msg::Shutdown);
         self.join.take().unwrap().join().unwrap_or_default()
     }
+}
+
+/// Per-request server-side bookkeeping.
+struct Pending {
+    reply: mpsc::Sender<ServeResult>,
+    images: Vec<f32>,
+    n_images: usize,
+    arrived: Instant,
+    deadline: Option<Instant>,
 }
 
 fn device_loop<S, F>(
@@ -145,11 +262,28 @@ where
     S: LayerSampler,
     F: FnOnce() -> Result<S>,
 {
+    let mut stats = ServerStats::default();
     let mut sampler = match make_sampler() {
         Ok(s) => s,
         Err(e) => {
-            eprintln!("server: sampler init failed: {e:#}");
-            return ServerStats::default();
+            // Fail every request that ever arrives instead of hanging
+            // clients on a server that can't serve.
+            let reason = format!("sampler init failed: {e:#}");
+            eprintln!("server: {reason}");
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::Generate { reply, .. } => {
+                        stats.requests += 1;
+                        let err = ServeError::Failed {
+                            reason: reason.clone(),
+                        };
+                        stats.record_error(&err);
+                        let _ = reply.send(Err(err));
+                    }
+                    Msg::Shutdown => break,
+                }
+            }
+            return stats;
         }
     };
     let device_batch = sampler.batch();
@@ -158,14 +292,16 @@ where
         ..cfg.batcher.clone()
     });
     let mut rng = Rng::new(cfg.seed);
-    let mut stats = ServerStats::default();
-    let mut pending: std::collections::HashMap<
-        u64,
-        (mpsc::Sender<Response>, Vec<f32>, usize, Instant),
-    > = std::collections::HashMap::new();
+    let mut pending: std::collections::HashMap<u64, Pending> = std::collections::HashMap::new();
     let mut next_id = 0u64;
     let nd = sampler.topology().data_nodes.len();
-    let mut shutting_down = false;
+
+    let resolve = |stats: &mut ServerStats, p: Pending, res: ServeResult| {
+        if let Err(e) = &res {
+            stats.record_error(e);
+        }
+        let _ = p.reply.send(res);
+    };
 
     loop {
         // Pull messages; block only when the queue is empty.
@@ -174,61 +310,132 @@ where
         } else {
             cfg.batcher.linger
         };
+        let mut shutting_down = false;
         match rx.recv_timeout(timeout) {
-            Ok(Msg::Generate { n_images, reply }) => {
+            Ok(Msg::Generate {
+                n_images,
+                deadline,
+                reply,
+            }) => {
                 let id = next_id;
                 next_id += 1;
                 stats.requests += 1;
                 let now = Instant::now();
-                pending.insert(id, (reply, Vec::with_capacity(n_images * nd), n_images, now));
-                let _ = batcher.push(Request {
-                    id,
+                let p = Pending {
+                    reply,
+                    images: Vec::with_capacity(n_images * nd),
                     n_images,
                     arrived: now,
-                });
+                    deadline,
+                };
+                if deadline.is_some_and(|d| d <= now) {
+                    resolve(&mut stats, p, Err(ServeError::DeadlineExceeded));
+                } else {
+                    let req = Request {
+                        deadline,
+                        ..Request::new(id, n_images, now)
+                    };
+                    match batcher.push(req) {
+                        Ok(()) => {
+                            pending.insert(id, p);
+                        }
+                        // Back-pressure: answer, don't silently drop.
+                        Err(_) => resolve(
+                            &mut stats,
+                            p,
+                            Err(ServeError::Rejected {
+                                reason: format!("queue full ({})", cfg.batcher.max_queue),
+                            }),
+                        ),
+                    }
+                }
             }
             Ok(Msg::Shutdown) => shutting_down = true,
             Err(mpsc::RecvTimeoutError::Timeout) => {}
             Err(mpsc::RecvTimeoutError::Disconnected) => shutting_down = true,
         }
 
-        // Drain whatever is dispatchable.
-        while let Some(batch) = batcher.next_batch(Instant::now()) {
-            let images = match generate_batch(&mut sampler, &dtm, cfg.k_inference, &mut rng) {
-                Ok(v) => v,
-                Err(e) => {
-                    eprintln!("server: generation failed: {e:#}");
-                    break;
+        if shutting_down {
+            // Reject everything still queued — including Generate messages
+            // that raced the Shutdown into the channel.
+            while let Ok(msg) = rx.try_recv() {
+                if let Msg::Generate { reply, .. } = msg {
+                    stats.requests += 1;
+                    stats.shutdown_rejected += 1;
+                    let _ = reply.send(Err(ServeError::Shutdown));
                 }
-            };
-            stats.batches += 1;
-            stats.total_batch_fill += batch.total as f64 / device_batch as f64;
-            let mut cursor = 0usize;
-            for (id, count) in batch.parts {
-                let done = {
-                    let entry = pending.get_mut(&id).expect("unknown request id");
-                    entry
-                        .1
-                        .extend_from_slice(&images[cursor * nd..(cursor + count) * nd]);
-                    cursor += count;
-                    entry.1.len() >= entry.2 * nd
-                };
-                if done {
-                    let (reply, imgs, n, t0) = pending.remove(&id).unwrap();
-                    let latency = t0.elapsed();
-                    stats.images += n;
-                    stats.latencies_ms.push(latency.as_secs_f64() * 1e3);
-                    let _ = reply.send(Response {
-                        id,
-                        images: imgs,
-                        latency,
-                    });
-                }
+            }
+            for (_, p) in pending.drain() {
+                resolve(&mut stats, p, Err(ServeError::Shutdown));
+            }
+            return stats;
+        }
+
+        // Expire queued requests whose deadline passed while they waited.
+        let now = Instant::now();
+        for r in batcher.purge(|r| r.deadline.is_some_and(|d| d <= now)) {
+            if let Some(p) = pending.remove(&r.id) {
+                resolve(&mut stats, p, Err(ServeError::DeadlineExceeded));
             }
         }
 
-        if shutting_down && pending.is_empty() {
-            return stats;
+        // Drain whatever is dispatchable.
+        while let Some(batch) = batcher.next_batch(Instant::now()) {
+            match generate_batch(&mut sampler, &dtm, cfg.k_inference, &mut rng) {
+                Ok(images) => {
+                    stats.batches += 1;
+                    stats.total_batch_fill += batch.total as f64 / device_batch as f64;
+                    let mut cursor = 0usize;
+                    for (id, count) in batch.parts {
+                        let done = {
+                            let entry = pending.get_mut(&id).expect("unknown request id");
+                            entry
+                                .images
+                                .extend_from_slice(&images[cursor * nd..(cursor + count) * nd]);
+                            cursor += count;
+                            entry.images.len() >= entry.n_images * nd
+                        };
+                        if done {
+                            let mut p = pending.remove(&id).unwrap();
+                            let latency = p.arrived.elapsed();
+                            if p.deadline.is_some_and(|d| Instant::now() > d) {
+                                resolve(&mut stats, p, Err(ServeError::DeadlineExceeded));
+                            } else {
+                                stats.images += p.n_images;
+                                stats.latencies_ms.push(latency.as_secs_f64() * 1e3);
+                                let images = std::mem::take(&mut p.images);
+                                resolve(
+                                    &mut stats,
+                                    p,
+                                    Ok(Response {
+                                        id,
+                                        images,
+                                        latency,
+                                    }),
+                                );
+                            }
+                        }
+                    }
+                }
+                Err(e) => {
+                    // Fail the affected requests (their batcher entries are
+                    // already consumed); do NOT leave their reply channels
+                    // orphaned.
+                    let reason = format!("{e:#}");
+                    eprintln!("server: generation failed: {reason}");
+                    for (id, _) in batch.parts {
+                        if let Some(p) = pending.remove(&id) {
+                            resolve(
+                                &mut stats,
+                                p,
+                                Err(ServeError::Failed {
+                                    reason: reason.clone(),
+                                }),
+                            );
+                        }
+                    }
+                }
+            }
         }
     }
 }
@@ -240,13 +447,17 @@ mod tests {
     use crate::train::sampler::RustSampler;
 
     fn spawn_tiny(linger_ms: u64) -> Server {
+        spawn_tiny_queue(linger_ms, 64)
+    }
+
+    fn spawn_tiny_queue(linger_ms: u64, max_queue: usize) -> Server {
         let top = graph::build("t", 4, "G8", 8, 0).unwrap();
         let dtm = Dtm::init("t", &top, 2, 3.0, 1);
         let cfg = ServerConfig {
             batcher: BatcherConfig {
                 device_batch: 4,
                 linger: Duration::from_millis(linger_ms),
-                max_queue: 64,
+                max_queue,
             },
             k_inference: 3,
             seed: 0,
@@ -267,6 +478,7 @@ mod tests {
         assert_eq!(stats.requests, 1);
         assert_eq!(stats.images, 6);
         assert!(stats.batches >= 2); // 6 images at device batch 4
+        assert_eq!(stats.errors(), 0);
     }
 
     #[test]
@@ -275,7 +487,7 @@ mod tests {
         let client = server.client();
         let waiters: Vec<_> = (0..6).map(|_| client.generate_async(2).unwrap()).collect();
         for w in waiters {
-            let r = w.recv().unwrap();
+            let r = w.recv().unwrap().unwrap();
             assert_eq!(r.images.len(), 16);
         }
         let stats = server.shutdown();
@@ -283,5 +495,93 @@ mod tests {
         assert_eq!(stats.images, 12);
         assert!(stats.mean_fill() > 0.4, "fill {}", stats.mean_fill());
         assert!(stats.p99_ms() >= stats.p50_ms());
+    }
+
+    #[test]
+    fn back_pressure_rejects_instead_of_hanging() {
+        // max_queue 1 and a long linger: 1-image requests sit in the queue
+        // waiting for batch-mates, so the flood overflows admission control
+        // and must resolve as Rejected (previously those clients blocked
+        // forever).
+        let server = spawn_tiny_queue(500, 1);
+        let client = server.client();
+        let waiters: Vec<_> = (0..24).map(|_| client.generate_async(1).unwrap()).collect();
+        let mut ok = 0usize;
+        let mut rejected = 0usize;
+        for w in waiters {
+            match w.recv_timeout(Duration::from_secs(30)).expect("request hung") {
+                Ok(_) => ok += 1,
+                Err(ServeError::Rejected { .. }) => rejected += 1,
+                Err(e) => panic!("unexpected error {e}"),
+            }
+        }
+        assert_eq!(ok + rejected, 24);
+        assert!(ok >= 1, "at least the queued requests must complete");
+        assert!(rejected >= 1, "the flood must overflow a queue of 1");
+        let stats = server.shutdown();
+        assert_eq!(stats.rejected, rejected);
+    }
+
+    #[test]
+    fn generate_timeout_resolves_within_deadline() {
+        let server = spawn_tiny(1);
+        let client = server.client();
+        // Generous deadline: should succeed.
+        let resp = client
+            .generate_timeout(2, Duration::from_secs(30))
+            .expect("in-deadline request failed");
+        assert_eq!(resp.images.len(), 16);
+        // Zero deadline: must come back as DeadlineExceeded, quickly.
+        let err = client
+            .generate_timeout(2, Duration::ZERO)
+            .expect_err("zero deadline cannot succeed");
+        assert_eq!(err, ServeError::DeadlineExceeded);
+        let stats = server.shutdown();
+        assert!(stats.deadline_exceeded >= 1);
+    }
+
+    #[test]
+    fn shutdown_rejects_queued_requests() {
+        let server = spawn_tiny(1000); // long linger: work stays queued
+        let client = server.client();
+        let waiters: Vec<_> = (0..8).map(|_| client.generate_async(1).unwrap()).collect();
+        let stats = server.shutdown();
+        let mut resolved = 0usize;
+        for w in waiters {
+            match w.recv_timeout(Duration::from_secs(30)) {
+                Ok(_) => resolved += 1,
+                Err(_) => panic!("request neither served nor rejected at shutdown"),
+            }
+        }
+        assert_eq!(resolved, 8);
+        assert_eq!(stats.requests, 8);
+        assert_eq!(
+            stats.latencies_ms.len() + stats.errors(),
+            8,
+            "every request lands in exactly one bucket"
+        );
+    }
+
+    #[test]
+    fn sampler_init_failure_fails_requests_typed() {
+        let top = graph::build("t", 4, "G8", 8, 0).unwrap();
+        let dtm = Dtm::init("t", &top, 2, 3.0, 1);
+        let cfg = ServerConfig {
+            batcher: BatcherConfig::default(),
+            k_inference: 3,
+            seed: 0,
+        };
+        let server = Server::spawn(cfg, dtm, move || -> Result<RustSampler> {
+            anyhow::bail!("no such chip")
+        });
+        let client = server.client();
+        let res = client
+            .generate_async(2)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(30))
+            .expect("request hung on init-failed server");
+        assert!(matches!(res, Err(ServeError::Failed { .. })));
+        let stats = server.shutdown();
+        assert_eq!(stats.failed, 1);
     }
 }

@@ -24,7 +24,7 @@ use crate::gibbs::{
 };
 use crate::graph::Topology;
 use crate::model::LayerParams;
-use crate::train::sampler::{LayerSampler, LayerStats};
+use crate::train::sampler::{ChipReport, LayerSampler, LayerStats};
 use crate::util::rng::Rng;
 
 use super::{quantize, CellFabric, HwArray, HwConfig, HwSchedule};
@@ -70,6 +70,11 @@ pub struct HwSampler {
     proj_dim: usize,
     topos: TopoCache,
     sched: HwSchedule,
+    /// Device-level fault hook: called with the program index before every
+    /// `sample` call; an `Err` is the chip failing that program (used by
+    /// the farm's chaos tests to break a chip below the supervisor).
+    fault_hook: Option<Box<dyn FnMut(u64) -> Result<()> + Send>>,
+    programs_called: u64,
 }
 
 impl HwSampler {
@@ -96,7 +101,20 @@ impl HwSampler {
             proj_dim,
             topos: TopoCache::new(),
             sched: HwSchedule::default(),
+            fault_hook: None,
+            programs_called: 0,
         }
+    }
+
+    /// Install a device-level fault hook (see the field docs). The hook
+    /// observes a monotone per-sampler program index, so seeded hooks are
+    /// deterministic per chip.
+    pub fn with_fault_hook(
+        mut self,
+        hook: Box<dyn FnMut(u64) -> Result<()> + Send>,
+    ) -> HwSampler {
+        self.fault_hook = Some(hook);
+        self
     }
 
     /// Set the chain-parallel worker count (results are identical for any
@@ -268,6 +286,15 @@ impl LayerSampler for HwSampler {
         self.batch
     }
 
+    fn chip_report(&self) -> Option<ChipReport> {
+        Some(ChipReport {
+            energy_j: self.energy(&DeviceParams::default()).ok().map(|e| e.total()),
+            device_seconds: self.device_seconds(),
+            cell_updates: self.sched.cell_updates,
+            programs: self.sched.programs,
+        })
+    }
+
     fn stats(
         &mut self,
         params: &LayerParams,
@@ -317,6 +344,11 @@ impl LayerSampler for HwSampler {
         s0: Option<&[f32]>,
         k: usize,
     ) -> Result<Vec<f32>> {
+        let call = self.programs_called;
+        self.programs_called += 1;
+        if let Some(hook) = self.fault_hook.as_mut() {
+            hook(call)?;
+        }
         let m = self.machine(params, gm, beta);
         let n = self.top.n_nodes();
         let cmask = vec![0.0f32; n];
@@ -538,6 +570,34 @@ mod tests {
         let mut auto = HwSampler::new(top.clone(), 4, HwConfig::default(), 3);
         let out = auto.sample(&params, &gm, 1.0, &xt, None, 5).unwrap();
         assert_eq!(out.len(), 4 * n);
+    }
+
+    #[test]
+    fn fault_hook_fails_programs_and_chip_report_meters() {
+        let (top, params) = tiny();
+        let n = top.n_nodes();
+        let gm = vec![0.0f32; n];
+        let xt = vec![0.0f32; 4 * n];
+        // Hook: program 1 fails, everything else passes.
+        let mut s = HwSampler::new(top.clone(), 4, HwConfig::default(), 5).with_fault_hook(
+            Box::new(|call| {
+                if call == 1 {
+                    anyhow::bail!("injected: program {call} failed");
+                }
+                Ok(())
+            }),
+        );
+        assert!(s.sample(&params, &gm, 1.0, &xt, None, 5).is_ok());
+        let err = s.sample(&params, &gm, 1.0, &xt, None, 5).unwrap_err();
+        assert!(format!("{err:#}").contains("injected"));
+        assert!(s.sample(&params, &gm, 1.0, &xt, None, 5).is_ok());
+        // The failed program never ran: only 2 calls' worth of sweeps.
+        assert_eq!(s.schedule().sweeps, 2 * 4 * 5);
+        let report = s.chip_report().expect("hw chips are metered");
+        assert_eq!(report.programs, s.schedule().programs);
+        assert_eq!(report.cell_updates, (2 * 4 * 5 * n) as u64);
+        assert!(report.device_seconds > 0.0);
+        assert!(report.energy_j.unwrap() > 0.0);
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //!   topology  <cfg>           print a DTM topology summary
 //!   train     [flags]         train a DTM and save a checkpoint
 //!   generate  [flags]         generate images from a checkpoint
-//!   serve     [flags]         run the batching server demo under load
+//!   serve     [flags]         run the multi-chip farm demo under load
+//!                             (--chips N --faults <spec> --deadline-ms D)
 //!   figures   <id|all>        regenerate a paper figure/table (results/*.csv)
 //!   energy-report             App. E/F energy model summary
 //!   bench-info                print bench targets
@@ -13,8 +14,8 @@
 use anyhow::{bail, Context, Result};
 
 use thermo_dtm::circuit::Corner;
-use thermo_dtm::coordinator::{ServerConfig, Server};
 use thermo_dtm::coordinator::batcher::BatcherConfig;
+use thermo_dtm::coordinator::{Farm, FarmConfig, FaultPlan, ServeError};
 use thermo_dtm::data::{fashion_dataset, FashionConfig};
 use thermo_dtm::energy::{self, DeviceParams};
 use thermo_dtm::figures::{self, FigOpts};
@@ -59,8 +60,8 @@ fn run() -> Result<()> {
         "energy-report" => energy_report(),
         "bench-info" => {
             println!(
-                "cargo bench targets: bench_gibbs, bench_hw, bench_pipeline, bench_batcher, \
-                 bench_metrics, bench_energy"
+                "cargo bench targets: bench_gibbs, bench_hw, bench_serve, bench_pipeline, \
+                 bench_batcher, bench_metrics, bench_energy"
             );
             Ok(())
         }
@@ -72,6 +73,8 @@ fn run() -> Result<()> {
                  train:    --t-steps 4 --epochs 10 --k-train 30 --out ckpt.json --backend hlo|rust|hw\n\
                  generate: --ckpt ckpt.json --n 64 --k 60 --backend hlo|rust|hw\n\
                  serve:    --ckpt ckpt.json --requests 32 --req-images 8 --linger-ms 5\n\
+                 \x20         --chips 2 --deadline-ms 0 (0 = farm default)\n\
+                 \x20         --faults 'chip0=kill@3,chip1=fail:0.2,all=spike:0.1:20' \n\
                  figures:  repro figures <id|all> [--fast] [--out results]\n\
                  hw backend (emulated DTCA): --hw-bits 8 --hw-corner typical --hw-interval 2.0\n\
                            --hw-mismatch-mv 6.0 --hw-seed 0"
@@ -337,31 +340,42 @@ fn generate(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
+    use std::time::Duration;
     let ckpt = args.str_opt("ckpt", "ckpt.json");
     let dtm = Dtm::load(std::path::Path::new(&ckpt))?;
     let requests = args.usize_opt("requests", 32)?;
     let req_images = args.usize_opt("req-images", 8)?;
     let k = args.usize_opt("k", 40)?;
     let linger = args.usize_opt("linger-ms", 5)? as u64;
+    let chips = args.usize_opt("chips", 2)?;
+    if chips == 0 {
+        bail!("--chips must be >= 1");
+    }
+    let plan = FaultPlan::parse(&args.str_opt("faults", ""))
+        .context("parsing --faults (kill[@N] | fail:P | stall@N:MS | derate:F | spike:P:MS)")?;
+    let deadline_ms = args.usize_opt("deadline-ms", 0)?;
+    let deadline = (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms as u64));
     let backend = args.str_opt("backend", "hlo");
     let artifacts = artifacts_dir(args);
     let cfg_name = dtm.config.clone();
-    let cfg = ServerConfig {
+    let cfg = FarmConfig {
+        chips,
         batcher: BatcherConfig {
             device_batch: 32,
-            linger: std::time::Duration::from_millis(linger),
+            linger: Duration::from_millis(linger),
             max_queue: 4096,
         },
         k_inference: k,
         seed: 4,
+        ..FarmConfig::default()
     };
-    let server = match backend.as_str() {
+    let farm = match backend.as_str() {
         "rust" => {
             let top = graph::build(&cfg_name, 32, "G12", 256, 7)?;
             let threads = args.usize_opt("threads", default_threads())?;
             let repr = repr_from_args(args)?;
-            Server::spawn(cfg, dtm, move || {
-                Ok(RustSampler::new(top, 32, 13)
+            Farm::spawn(cfg, dtm, plan, move |chip| {
+                Ok(RustSampler::new(top.clone(), 32, 13 + chip as u64)
                     .with_threads(threads)
                     .with_repr(repr))
             })
@@ -371,41 +385,88 @@ fn serve(args: &Args) -> Result<()> {
             let threads = args.usize_opt("threads", default_threads())?;
             let repr = repr_from_args(args)?;
             let hw_cfg = hw_config_from_args(args)?;
-            Server::spawn(cfg, dtm, move || {
-                Ok(HwSampler::new(top, 32, hw_cfg, 13)
+            let derate_plan = plan.clone();
+            // Each chip in the farm is its own die: cycle the fabrication
+            // corners and fork the mismatch seed, and stretch a derated
+            // chip's phase clock so its device_seconds metering agrees
+            // with the injected slowdown.
+            Farm::spawn(cfg, dtm, plan, move |chip| {
+                let corner = Corner::all()[chip % 3];
+                let chip_cfg = hw_cfg
+                    .clone()
+                    .with_corner(corner)
+                    .with_interval(hw_cfg.phase_interval * derate_plan.derate_factor(chip))
+                    .with_seed(hw_cfg.seed + chip as u64);
+                Ok(HwSampler::new(top.clone(), 32, chip_cfg, 13 + chip as u64)
                     .with_threads(threads)
                     .with_repr(repr))
             })
         }
-        _ => Server::spawn(cfg, dtm, move || {
-            let rt = Runtime::open(artifacts)?;
+        _ => Farm::spawn(cfg, dtm, plan, move |_chip| {
+            let rt = Runtime::open(artifacts.clone())?;
             let exec = rt.dtm_exec(&cfg_name)?;
             Ok(HloSampler::new(exec, 13))
         }),
     };
-    let client = server.client();
+    let client = farm.client();
     let t0 = std::time::Instant::now();
     let waiters: Vec<_> = (0..requests)
-        .map(|_| client.generate_async(req_images).unwrap())
+        .map(|_| client.submit(req_images, deadline, 1))
         .collect();
+    let recv_cap = deadline.unwrap_or(Duration::from_secs(600)) + Duration::from_secs(1);
+    let mut ok = 0usize;
     for w in waiters {
-        let _ = w.recv()?;
+        match w.recv_timeout(recv_cap) {
+            Ok(Ok(_)) => ok += 1,
+            Ok(Err(ServeError::Shutdown)) | Err(_) => {}
+            Ok(Err(e)) => eprintln!("request failed: {e}"),
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
-    let stats = server.shutdown();
+    let stats = farm.shutdown();
     println!(
-        "served {} requests / {} images in {wall:.2}s  ({:.1} img/s)",
-        stats.requests,
-        stats.images,
-        stats.images as f64 / wall
+        "served {ok}/{} requests ({} images) on {chips} chips in {wall:.2}s  ({:.1} img/s)",
+        stats.serve.requests,
+        stats.serve.images,
+        stats.serve.images as f64 / wall
     );
     println!(
-        "batches {}  mean fill {:.2}  p50 {:.1} ms  p99 {:.1} ms",
-        stats.batches,
-        stats.mean_fill(),
+        "batches {}  mean fill {:.2}  p50 {:.1} ms  p99 {:.1} ms  error rate {:.3}",
+        stats.serve.batches,
+        stats.serve.mean_fill(),
         stats.p50_ms(),
-        stats.p99_ms()
+        stats.p99_ms(),
+        stats.error_rate()
     );
+    println!(
+        "errors: rejected {}  deadline {}  failed {}  shutdown {}  | shed {}  retries {}  \
+         hedges {}  probes {}",
+        stats.serve.rejected,
+        stats.serve.deadline_exceeded,
+        stats.serve.failed,
+        stats.serve.shutdown_rejected,
+        stats.shed,
+        stats.retries,
+        stats.hedges,
+        stats.probes
+    );
+    for (i, c) in stats.chips.iter().enumerate() {
+        let meter = match &c.report {
+            Some(r) => format!(
+                "  energy {}  device {:.1} µs",
+                r.energy_j
+                    .map(|j| format!("{:.2} µJ", j * 1e6))
+                    .unwrap_or_else(|| "-".into()),
+                r.device_seconds * 1e6
+            ),
+            None => String::new(),
+        };
+        println!(
+            "chip {i}: batches {}  images {}  failures {}  stalls {}  quarantines {}  \
+             busy {:.0} ms{meter}",
+            c.batches, c.images, c.failures, c.stalls, c.quarantines, c.busy_ms
+        );
+    }
     Ok(())
 }
 

@@ -47,10 +47,33 @@ impl LayerStats {
     }
 }
 
+/// A device-side meter snapshot for one chip, surfaced per completed job
+/// by the farm supervisor (`coordinator::farm`) into its per-chip health
+/// stats. Backends without device metering return `None` from
+/// [`LayerSampler::chip_report`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ChipReport {
+    /// Cumulative energy (J) under the App. E pricing, when priceable.
+    pub energy_j: Option<f64>,
+    /// Cumulative emulated device wall-clock (s) at the chip's phase
+    /// interval.
+    pub device_seconds: f64,
+    /// Cumulative probabilistic-cell update count.
+    pub cell_updates: u64,
+    /// Programs (sample/stats/trace invocations) the chip has run.
+    pub programs: u64,
+}
+
 /// One EBM layer's sampling backend.
 pub trait LayerSampler {
     fn topology(&self) -> &Topology;
     fn batch(&self) -> usize;
+
+    /// Device-health/energy snapshot for metered backends (the `hw`
+    /// emulator). Default: no meters.
+    fn chip_report(&self) -> Option<ChipReport> {
+        None
+    }
 
     /// Run `k` Gibbs iterations from random init (clamps imposed first);
     /// collect statistics after `burn` iterations. `xt`, `cval` are full-node
@@ -125,6 +148,9 @@ impl<T: LayerSampler + ?Sized> LayerSampler for &mut T {
     fn batch(&self) -> usize {
         (**self).batch()
     }
+    fn chip_report(&self) -> Option<ChipReport> {
+        (**self).chip_report()
+    }
     fn stats(
         &mut self,
         params: &LayerParams,
@@ -178,6 +204,9 @@ impl<T: LayerSampler + ?Sized> LayerSampler for Box<T> {
     }
     fn batch(&self) -> usize {
         (**self).batch()
+    }
+    fn chip_report(&self) -> Option<ChipReport> {
+        (**self).chip_report()
     }
     fn stats(
         &mut self,

@@ -1,0 +1,332 @@
+//! Chaos suite for the fault-tolerant chip farm.
+//!
+//! Every test here enforces the same contract under a different seeded
+//! fault schedule: **no request ever hangs** — every submission resolves
+//! to `Ok(Response)` or exactly one typed `ServeError` within a bounded
+//! time. The `recv_timeout` caps are tripwires far above any expected
+//! latency; a test failing on one is a lost client, the precise bug class
+//! this suite exists to catch.
+//!
+//! Fault schedules come from `coordinator::faults` (seeded, deterministic)
+//! so failures reproduce: same spec + same seed = same injected schedule.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use thermo_dtm::coordinator::batcher::BatcherConfig;
+use thermo_dtm::coordinator::{Farm, FarmConfig, FaultPlan, ServeError};
+use thermo_dtm::graph;
+use thermo_dtm::model::Dtm;
+use thermo_dtm::train::sampler::RustSampler;
+
+const ND: usize = 8;
+
+/// A tripwire, not a crutch: orders of magnitude above any expected
+/// end-to-end latency on the tiny test model.
+const HANG_CAP: Duration = Duration::from_secs(60);
+
+fn tiny_dtm() -> Dtm {
+    let top = graph::build("t", 4, "G8", ND, 0).unwrap();
+    Dtm::init("t", &top, 2, 3.0, 1)
+}
+
+fn farm_with(cfg: FarmConfig, plan: FaultPlan) -> Farm {
+    Farm::spawn(cfg, tiny_dtm(), plan, move |chip| {
+        Ok(RustSampler::new(
+            graph::build("t", 4, "G8", ND, 0).unwrap(),
+            4,
+            100 + chip as u64,
+        ))
+    })
+}
+
+fn base_cfg(chips: usize) -> FarmConfig {
+    FarmConfig {
+        chips,
+        batcher: BatcherConfig {
+            device_batch: 4,
+            linger: Duration::from_millis(1),
+            max_queue: 512,
+        },
+        k_inference: 3,
+        seed: 42,
+        default_deadline: Some(Duration::from_secs(30)),
+        max_retries: 2,
+        backoff_base: Duration::from_millis(1),
+        hedge_after: None,
+        probe_interval: Duration::from_millis(10),
+        stall_timeout: Duration::from_secs(1),
+        shutdown_grace: Duration::from_millis(500),
+    }
+}
+
+/// Drain a set of submissions, asserting each resolves within the cap.
+/// Returns (successes, per-error counts as (rejected, deadline, failed,
+/// shutdown)).
+fn drain(
+    waiters: Vec<std::sync::mpsc::Receiver<thermo_dtm::coordinator::ServeResult>>,
+) -> (usize, (usize, usize, usize, usize)) {
+    let mut ok = 0;
+    let mut err = (0, 0, 0, 0);
+    for (i, w) in waiters.into_iter().enumerate() {
+        match w
+            .recv_timeout(HANG_CAP)
+            .unwrap_or_else(|_| panic!("request {i} HUNG: no resolution within {HANG_CAP:?}"))
+        {
+            Ok(resp) => {
+                assert!(
+                    resp.images.iter().all(|&x| x == 1.0 || x == -1.0),
+                    "request {i}: non-spin image values"
+                );
+                ok += 1;
+            }
+            Err(ServeError::Rejected { .. }) => err.0 += 1,
+            Err(ServeError::DeadlineExceeded) => err.1 += 1,
+            Err(ServeError::Failed { .. }) => err.2 += 1,
+            Err(ServeError::Shutdown) => err.3 += 1,
+        }
+    }
+    (ok, err)
+}
+
+#[test]
+fn chip_death_mid_batch_is_absorbed() {
+    // Chip 0 dies permanently after its 2nd call: batches in flight on it
+    // fail, requeue, and complete on chip 1. Everything succeeds.
+    let plan = FaultPlan::parse("chip0=kill@2").unwrap();
+    let farm = farm_with(base_cfg(2), plan);
+    let client = farm.client();
+    let waiters: Vec<_> = (0..16).map(|_| client.submit(2, None, 1)).collect();
+    let (ok, err) = drain(waiters);
+    assert_eq!(ok, 16, "healthy chip must absorb the dead chip's load: {err:?}");
+    let stats = farm.shutdown();
+    assert_eq!(stats.serve.errors(), 0);
+    assert!(
+        stats.chips[0].quarantines > 0,
+        "killed chip must be quarantined: {:?}",
+        stats.chips[0]
+    );
+}
+
+#[test]
+fn total_fault_rate_yields_typed_failures_not_hangs() {
+    // Every call on every chip fails, forever. No request can succeed —
+    // but every one must resolve as a typed error (Failed after retries
+    // exhaust, or DeadlineExceeded at the backstop).
+    let plan = FaultPlan::parse("all=kill@0").unwrap();
+    let mut cfg = base_cfg(2);
+    cfg.default_deadline = Some(Duration::from_secs(10));
+    let farm = farm_with(cfg, plan);
+    let client = farm.client();
+    let waiters: Vec<_> = (0..12).map(|_| client.submit(1, None, 1)).collect();
+    let (ok, (rejected, deadline, failed, shutdown)) = drain(waiters);
+    assert_eq!(ok, 0, "100% fault rate cannot serve anything");
+    assert_eq!(rejected + deadline + failed + shutdown, 12);
+    assert!(
+        failed > 0 || deadline > 0,
+        "errors must be Failed (retries exhausted) or DeadlineExceeded"
+    );
+    let stats = farm.shutdown();
+    assert_eq!(stats.serve.errors(), 12);
+    assert!(stats.retries > 0, "the farm must at least have tried");
+}
+
+#[test]
+fn transient_fault_storm_with_deadlines_resolves_everything() {
+    // 50% transient failure on one chip + farm-wide latency spikes, under
+    // per-request deadlines: a request storm where success, retry-success,
+    // deadline expiry and typed failure all race. The contract is only
+    // that each request lands in exactly one bucket, on time.
+    let plan = FaultPlan::parse("chip0=fail:0.5,all=spike:0.3:10").unwrap();
+    let farm = farm_with(base_cfg(3), plan);
+    let client = farm.client();
+    let waiters: Vec<_> = (0..32)
+        .map(|i| {
+            // Mixed deadlines: some generous, some tight, some absurd.
+            let deadline = match i % 3 {
+                0 => Some(Duration::from_secs(20)),
+                1 => Some(Duration::from_millis(200)),
+                _ => Some(Duration::from_micros(1)),
+            };
+            client.submit(2, deadline, 1)
+        })
+        .collect();
+    let (ok, (rejected, deadline, failed, shutdown)) = drain(waiters);
+    assert_eq!(ok + rejected + deadline + failed + shutdown, 32);
+    assert!(deadline > 0, "the 1µs deadlines cannot be met");
+    let stats = farm.shutdown();
+    assert_eq!(
+        stats.serve.latencies_ms.len() + stats.serve.errors(),
+        32,
+        "every request in exactly one bucket"
+    );
+}
+
+#[test]
+fn stalled_chip_is_quarantined_and_work_rescheduled() {
+    // Chip 0's first call stalls for 3 s — past the 200 ms stall timeout.
+    // The supervisor must declare the stall, requeue the batch on chip 1,
+    // and quarantine chip 0; when the stalled call finally returns, the
+    // chip earns its way back through a probe (or its late Ok).
+    let plan = FaultPlan::parse("chip0=stall@0:3000").unwrap();
+    let mut cfg = base_cfg(2);
+    cfg.stall_timeout = Duration::from_millis(200);
+    let farm = farm_with(cfg, plan);
+    let client = farm.client();
+    let waiters: Vec<_> = (0..8).map(|_| client.submit(2, None, 1)).collect();
+    let (ok, err) = drain(waiters);
+    assert_eq!(ok, 8, "stall must not lose work: {err:?}");
+    let stats = farm.shutdown();
+    assert!(
+        stats.chips[0].stalls >= 1,
+        "stall must be detected: {:?}",
+        stats.chips[0]
+    );
+    assert!(stats.retries >= 1, "stalled batch must be rescheduled");
+}
+
+#[test]
+fn admission_control_sheds_bulk_before_interactive() {
+    // Every chip is dead on arrival: capacity is degraded to nothing.
+    // Once the queue already holds a full device batch, further priority-0
+    // bulk must be shed with a typed rejection, while priority-1
+    // interactive work is still admitted (and resolves at its deadline
+    // backstop). Nothing may hang.
+    let mut cfg = base_cfg(2);
+    cfg.default_deadline = Some(Duration::from_millis(400));
+    let farm = Farm::spawn(
+        cfg,
+        tiny_dtm(),
+        FaultPlan::none(),
+        move |chip| -> Result<RustSampler> { anyhow::bail!("no die bonded at site {chip}") },
+    );
+    let client = farm.client();
+    // Fill the queue to one device batch, then give the supervisor time
+    // to observe both init failures and mark the chips dead.
+    let seeded: Vec<_> = (0..4).map(|_| client.submit(1, None, 0)).collect();
+    std::thread::sleep(Duration::from_millis(100));
+    let bulk: Vec<_> = (0..6).map(|_| client.submit(1, None, 0)).collect();
+    let interactive: Vec<_> = (0..2).map(|_| client.submit(1, None, 1)).collect();
+    let (seeded_ok, _) = drain(seeded);
+    let (bulk_ok, bulk_err) = drain(bulk);
+    let (int_ok, int_err) = drain(interactive);
+    assert_eq!(seeded_ok + bulk_ok + int_ok, 0, "no chips, no service");
+    assert!(bulk_err.0 >= 1, "degraded farm must shed excess bulk: {bulk_err:?}");
+    assert_eq!(int_err.0, 0, "interactive work must never be shed: {int_err:?}");
+    let stats = farm.shutdown();
+    assert!(stats.shed >= 1, "shed counter must record the rejections");
+}
+
+#[test]
+fn hedging_duplicates_slow_batches_without_double_resolution() {
+    // Chip 0 is heavily derated; with an aggressive hedge threshold its
+    // slow batches re-dispatch to chip 1. Every request resolves exactly
+    // once (the mpsc receiver yields one result; a double send would
+    // surface as lost stats accounting).
+    let plan = FaultPlan::parse("chip0=derate:50").unwrap();
+    let mut cfg = base_cfg(2);
+    cfg.hedge_after = Some(Duration::from_millis(20));
+    let farm = farm_with(cfg, plan);
+    let client = farm.client();
+    let waiters: Vec<_> = (0..10).map(|_| client.submit(2, None, 1)).collect();
+    let (ok, err) = drain(waiters);
+    assert_eq!(ok, 10, "hedged farm must serve everything: {err:?}");
+    let stats = farm.shutdown();
+    assert_eq!(
+        stats.serve.latencies_ms.len(),
+        10,
+        "exactly one resolution per request"
+    );
+    assert_eq!(stats.serve.errors(), 0);
+}
+
+#[test]
+fn shutdown_under_load_rejects_everything_still_queued() {
+    // Submit a burst, shut down immediately: requests either completed,
+    // or resolve Shutdown (queued / grace-missed). None hang, even with a
+    // fault schedule running.
+    let plan = FaultPlan::parse("all=spike:0.5:20").unwrap();
+    let mut cfg = base_cfg(2);
+    cfg.batcher.linger = Duration::from_millis(100); // keep work queued
+    let farm = farm_with(cfg, plan);
+    let client = farm.client();
+    let waiters: Vec<_> = (0..20).map(|_| client.submit(1, None, 1)).collect();
+    let stats = farm.shutdown();
+    let (ok, (rejected, deadline, failed, shutdown)) = drain(waiters);
+    assert_eq!(ok + rejected + deadline + failed + shutdown, 20);
+    assert_eq!(
+        stats.serve.latencies_ms.len() + stats.serve.errors(),
+        20,
+        "supervisor accounting must cover the full burst"
+    );
+    // Submissions after shutdown resolve immediately as Shutdown.
+    let late = client.submit(1, None, 1);
+    assert_eq!(
+        late.recv_timeout(HANG_CAP).expect("late submit hung"),
+        Err(ServeError::Shutdown)
+    );
+}
+
+#[test]
+fn all_chips_init_failure_fails_requests_typed() {
+    // Factories that cannot build a sampler: every chip is Dead on
+    // arrival. Requests must resolve (Failed or DeadlineExceeded at the
+    // backstop), not wait for hardware that will never exist.
+    let mut cfg = base_cfg(2);
+    cfg.default_deadline = Some(Duration::from_secs(5));
+    let farm = Farm::spawn(
+        cfg,
+        tiny_dtm(),
+        FaultPlan::none(),
+        move |chip| -> Result<RustSampler> { anyhow::bail!("no die bonded at site {chip}") },
+    );
+    let client = farm.client();
+    let waiters: Vec<_> = (0..6).map(|_| client.submit(1, None, 1)).collect();
+    let (ok, (_, deadline, failed, _)) = drain(waiters);
+    assert_eq!(ok, 0);
+    assert!(
+        deadline + failed >= 1,
+        "dead-on-arrival farm must fail requests with a typed error"
+    );
+    farm.shutdown();
+}
+
+#[test]
+fn deterministic_fault_schedule_reproduces_outcomes() {
+    // The same (spec, seed) pair must inject the same schedule, hence the
+    // same per-request outcome sequence for a serialized workload.
+    // `kill@3` is a pure call-count fault (no random draws), so the
+    // sequence is exact: three batches land, the fourth fails on dispatch
+    // (retries disabled), and the rest expire while the lone chip sits in
+    // quarantine failing its probes.
+    let run = || {
+        let plan = FaultPlan::parse("chip0=kill@3").unwrap();
+        let mut cfg = base_cfg(1);
+        cfg.max_retries = 0; // no rerolls: outcomes mirror the schedule
+        cfg.backoff_base = Duration::ZERO;
+        cfg.default_deadline = Some(Duration::from_millis(400));
+        let farm = farm_with(cfg, plan);
+        let client = farm.client();
+        // Serialized closed loop: one request in flight at a time, so the
+        // chip's call order is deterministic.
+        let outcomes: Vec<u8> = (0..8)
+            .map(|_| {
+                let res = client.submit(4, None, 1).recv_timeout(HANG_CAP);
+                match res.expect("request hung") {
+                    Ok(_) => 0,
+                    Err(ServeError::Failed { .. }) => 1,
+                    Err(ServeError::DeadlineExceeded) => 2,
+                    Err(e) => panic!("unexpected error class: {e}"),
+                }
+            })
+            .collect();
+        farm.shutdown();
+        outcomes
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "same (spec, seed) must reproduce the same outcomes");
+    assert_eq!(&a[..4], &[0, 0, 0, 1], "kill@3: three served, fourth fails");
+    assert!(a[4..].iter().all(|&x| x != 0), "nothing succeeds after the kill");
+}
