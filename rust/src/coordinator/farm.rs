@@ -163,6 +163,11 @@ enum FarmMsg {
         reply: mpsc::Sender<ServeResult>,
     },
     Shutdown,
+    /// Ask the supervisor for a live, non-destructive [`FarmStats`]
+    /// snapshot (the shutdown stats, obtainable mid-flight).
+    StatsNow {
+        reply: mpsc::Sender<FarmStats>,
+    },
     Done {
         chip: usize,
         job: u64,
@@ -229,6 +234,16 @@ impl FarmClient {
             Err(_) => Err(ServeError::DeadlineExceeded),
         }
     }
+
+    /// Live stats snapshot round-trip: the supervisor answers with a copy
+    /// of its current [`FarmStats`] (including per-chip health and the
+    /// latest device meters) without disturbing serving. `None` when the
+    /// farm is already gone or too wedged to answer within 5 s.
+    pub fn stats_now(&self) -> Option<FarmStats> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send(FarmMsg::StatsNow { reply: rtx }).ok()?;
+        rrx.recv_timeout(Duration::from_secs(5)).ok()
+    }
 }
 
 pub struct Farm {
@@ -274,6 +289,13 @@ impl Farm {
         FarmClient {
             tx: self.tx.clone(),
         }
+    }
+
+    /// Live stats snapshot from a running farm (see
+    /// [`FarmClient::stats_now`]). This is the observability seam: before
+    /// it existed, `FarmStats` only materialized at [`Farm::shutdown`].
+    pub fn stats_now(&self) -> Option<FarmStats> {
+        self.client().stats_now()
     }
 
     /// Stop and collect stats: queued requests are rejected with
@@ -437,6 +459,9 @@ impl Supervisor {
                     reply,
                 }) => self.admit(n_images, deadline, priority, reply),
                 Ok(FarmMsg::Shutdown) => self.begin_shutdown(),
+                Ok(FarmMsg::StatsNow { reply }) => {
+                    let _ = reply.send(self.live_stats());
+                }
                 Ok(FarmMsg::Done {
                     chip,
                     job,
@@ -574,6 +599,18 @@ impl Supervisor {
             };
             self.chips[chip].stats.quarantines += 1;
         }
+    }
+
+    /// Non-destructive snapshot of the serving stats: what
+    /// [`Supervisor::finish_shutdown`] would return, minus the teardown.
+    /// Chip stats are copied from the live chips so the snapshot carries
+    /// the latest health counters and device meters.
+    fn live_stats(&self) -> FarmStats {
+        let mut out = self.stats.clone();
+        for (i, chip) in self.chips.iter().enumerate() {
+            out.chips[i] = chip.stats.clone();
+        }
+        out
     }
 
     // --- resolution ------------------------------------------------------
@@ -1049,6 +1086,30 @@ mod tests {
         assert!(stats.retries > 0, "killed chip's batches must requeue");
         assert!(stats.chips[0].quarantines > 0);
         assert!(stats.chips[1].images >= 16);
+    }
+
+    #[test]
+    fn stats_now_snapshots_live_farm_and_matches_shutdown() {
+        let farm = tiny_farm(cfg_tiny(), FaultPlan::none());
+        let client = farm.client();
+        let waiters: Vec<_> = (0..6).map(|_| client.submit(2, None, 1)).collect();
+        for w in waiters {
+            w.recv_timeout(Duration::from_secs(60))
+                .expect("request hung")
+                .expect("fault-free farm must serve");
+        }
+        // Every reply arrived, so the supervisor has fully accounted them:
+        // the live snapshot must agree with the eventual shutdown stats.
+        let live = farm.stats_now().expect("running farm must answer StatsNow");
+        assert_eq!(live.serve.requests, 6);
+        assert_eq!(live.serve.images, 12);
+        assert_eq!(live.chips.len(), 2);
+        assert!(live.chips.iter().map(|c| c.images).sum::<usize>() >= 12);
+        let fin = farm.shutdown();
+        assert_eq!(fin.serve.requests, live.serve.requests);
+        assert_eq!(fin.serve.images, live.serve.images);
+        assert_eq!(fin.serve.batches, live.serve.batches);
+        assert_eq!(fin.serve.latencies_ms.len(), live.serve.latencies_ms.len());
     }
 
     #[test]

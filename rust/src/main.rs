@@ -74,6 +74,7 @@ fn run() -> Result<()> {
                  generate: --ckpt ckpt.json --n 64 --k 60 --backend hlo|rust|hw\n\
                  serve:    --ckpt ckpt.json --requests 32 --req-images 8 --linger-ms 5\n\
                  \x20         --chips 2 --deadline-ms 0 (0 = farm default)\n\
+                 \x20         --metrics-every S (periodic live farm stats)\n\
                  \x20         --faults 'chip0=kill@3,chip1=fail:0.2,all=spike:0.1:20' \n\
                  figures:  repro figures <id|all> [--fast] [--out results]\n\
                  hw backend (emulated DTCA): --hw-bits 8 --hw-corner typical --hw-interval 2.0\n\
@@ -351,6 +352,7 @@ fn serve(args: &Args) -> Result<()> {
     if chips == 0 {
         bail!("--chips must be >= 1");
     }
+    let metrics_every = args.f64_opt("metrics-every", 0.0)?;
     let plan = FaultPlan::parse(&args.str_opt("faults", ""))
         .context("parsing --faults (kill[@N] | fail:P | stall@N:MS | derate:F | spike:P:MS)")?;
     let deadline_ms = args.usize_opt("deadline-ms", 0)?;
@@ -410,6 +412,43 @@ fn serve(args: &Args) -> Result<()> {
     };
     let client = farm.client();
     let t0 = std::time::Instant::now();
+    // Periodic live-stats emission (`--metrics-every S`): a monitor thread
+    // polls the supervisor's StatsNow round-trip while requests are in
+    // flight; the final shutdown stats below must reconcile with the last
+    // snapshot (same counters, same accounting).
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let monitor = (metrics_every > 0.0).then(|| {
+        let mclient = farm.client();
+        let stop = std::sync::Arc::clone(&stop);
+        let period = Duration::from_secs_f64(metrics_every);
+        std::thread::spawn(move || {
+            let mut next = period;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(50));
+                if t0.elapsed() < next {
+                    continue;
+                }
+                next += period;
+                let Some(st) = mclient.stats_now() else {
+                    break;
+                };
+                println!(
+                    "[metrics {:>6.1}s] req {}  img {}  batches {}  p50 {:.1} ms  p99 {:.1} ms  \
+                     err {}  shed {}  retries {}  hedges {}",
+                    t0.elapsed().as_secs_f64(),
+                    st.serve.requests,
+                    st.serve.images,
+                    st.serve.batches,
+                    st.p50_ms(),
+                    st.p99_ms(),
+                    st.serve.errors(),
+                    st.shed,
+                    st.retries,
+                    st.hedges
+                );
+            }
+        })
+    });
     let waiters: Vec<_> = (0..requests)
         .map(|_| client.submit(req_images, deadline, 1))
         .collect();
@@ -423,6 +462,10 @@ fn serve(args: &Args) -> Result<()> {
         }
     }
     let wall = t0.elapsed().as_secs_f64();
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    if let Some(h) = monitor {
+        let _ = h.join();
+    }
     let stats = farm.shutdown();
     println!(
         "served {ok}/{} requests ({} images) on {chips} chips in {wall:.2}s  ({:.1} img/s)",
