@@ -13,8 +13,8 @@ e.g. (what CI runs after the bench smokes):
 
 Rules (stdlib only, exit code is the gate):
   * rows are matched by their "name" field inside "configs";
-  * every numeric field ending in `_per_sec` is compared; a fresh value
-    below baseline * (1 - threshold) is a REGRESSION -> exit 1;
+  * every numeric field ending in `_per_sec` or `_per_joule` is compared; a
+    fresh value below baseline * (1 - threshold) is a REGRESSION -> exit 1;
   * a baseline value of null means "seeded, not yet measured" (the repo is
     bootstrapped from a toolchain-less image): reported, never failing —
     run with --update on a quiet machine and commit the result to arm the
@@ -22,8 +22,8 @@ Rules (stdlib only, exit code is the gate):
   * a baseline row missing from the fresh output is a FAILURE (renaming or
     dropping a bench must be done deliberately, by updating the baseline);
   * new fresh rows/fields simply report "new (no baseline)";
-  * --update rewrites each baseline from the fresh file (all `_per_sec`
-    fields filled in), so refreshing baselines is one command.
+  * --update rewrites each baseline from the fresh file (all gated fields
+    filled in), so refreshing baselines is one command.
 
 A table is printed either way so the numbers land in the CI log.
 """
@@ -54,7 +54,8 @@ def perf_fields(row):
     return sorted(
         k
         for k, v in row.items()
-        if k.endswith("_per_sec") and (v is None or isinstance(v, (int, float)))
+        if k.endswith(("_per_sec", "_per_joule"))
+        and (v is None or isinstance(v, (int, float)))
     )
 
 

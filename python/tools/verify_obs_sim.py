@@ -1,0 +1,207 @@
+#!/usr/bin/env python3
+"""Algorithm-level verification of the obs:: histogram (rust/src/obs/hist.rs).
+
+The dev image has no Rust toolchain, so this re-simulates the
+log-bucketed histogram bit-for-bit from the IEEE-754 bit pattern — the
+same `(bits >> 52) & 0x7ff` exponent extraction and top-3-mantissa-bit
+sub-bucketing the Rust `bucket_index` performs — and property-tests the
+documented contracts:
+
+  * golden bucket indices (1.0 -> 257, range edges, NaN/0/negative/
+    subnormal -> underflow, inf/huge -> overflow);
+  * bucket bounds are contiguous, contain their values, and are monotone;
+  * every in-range bucket midpoint is within REL_ERROR_BOUND = 1/16 of
+    any value in the bucket (the analytic (hi-lo)/(2*lo) bound);
+  * quantile(q) is within REL_ERROR_BOUND of the exact sorted[rank-1]
+    for in-range data, across distributions and q values;
+  * merge is element-wise, associative, and matches recording the union.
+
+Stdlib only. Exit code is the gate; prints ALL OBS CHECKS PASSED.
+"""
+
+import math
+import random
+import struct
+
+SUB_BUCKETS_LOG2 = 3
+SUB_BUCKETS = 1 << SUB_BUCKETS_LOG2
+EXP_MIN = -32
+EXP_MAX = 32
+N_BUCKETS = 2 + (EXP_MAX - EXP_MIN) * SUB_BUCKETS
+REL_ERROR_BOUND = 1.0 / 16.0
+
+
+def f64_bits(v):
+    return struct.unpack("<Q", struct.pack("<d", v))[0]
+
+
+def bucket_index(v):
+    """Mirror of rust/src/obs/hist.rs bucket_index, bit for bit."""
+    if math.isnan(v) or v <= 0.0:
+        return 0
+    bits = f64_bits(v)
+    exp = ((bits >> 52) & 0x7FF) - 1023
+    if exp < EXP_MIN:
+        return 0
+    if exp >= EXP_MAX:
+        return N_BUCKETS - 1
+    sub = (bits >> (52 - SUB_BUCKETS_LOG2)) & (SUB_BUCKETS - 1)
+    return 1 + (exp - EXP_MIN) * SUB_BUCKETS + sub
+
+
+def bucket_bounds(idx):
+    assert 0 <= idx < N_BUCKETS
+    if idx == 0:
+        return (0.0, 2.0**EXP_MIN)
+    if idx == N_BUCKETS - 1:
+        return (2.0**EXP_MAX, math.inf)
+    i = idx - 1
+    base = 2.0 ** (EXP_MIN + i // SUB_BUCKETS)
+    s = i % SUB_BUCKETS
+    return (base * (1.0 + s / SUB_BUCKETS), base * (1.0 + (s + 1) / SUB_BUCKETS))
+
+
+def bucket_mid(idx):
+    lo, hi = bucket_bounds(idx)
+    if idx == 0:
+        return 0.0
+    if idx == N_BUCKETS - 1:
+        return lo
+    return 0.5 * (lo + hi)
+
+
+def record(buckets, v):
+    buckets[bucket_index(v)] += 1
+
+
+def quantile(buckets, q):
+    """Mirror of HistData::quantile."""
+    count = sum(buckets)
+    if count == 0:
+        return 0.0
+    q = min(max(q, 0.0), 1.0)
+    rank = min(max(int(math.ceil(q * count)), 1), count)
+    seen = 0
+    for i, c in enumerate(buckets):
+        seen += c
+        if seen >= rank:
+            return bucket_mid(i)
+    return bucket_mid(N_BUCKETS - 1)
+
+
+def check(cond, msg):
+    if not cond:
+        raise SystemExit(f"OBS CHECK FAILED: {msg}")
+
+
+def check_golden_indices():
+    check(N_BUCKETS == 514, f"N_BUCKETS = {N_BUCKETS}, want 514")
+    check(bucket_index(1.0) == 257, f"bucket_index(1.0) = {bucket_index(1.0)}")
+    check(bucket_index(1.9999) == 264, "1.9999 must land in the last sub-bucket of octave 0")
+    check(bucket_index(2.0) == 265, "2.0 must open octave 1")
+    for v in (0.0, -3.0, math.nan, 1e-300, 2.0 ** (EXP_MIN - 1)):
+        check(bucket_index(v) == 0, f"{v!r} must underflow")
+    for v in (math.inf, 1e300, 2.0**EXP_MAX):
+        check(bucket_index(v) == N_BUCKETS - 1, f"{v!r} must overflow")
+    check(bucket_index(2.0**EXP_MIN) == 1, "2^EXP_MIN opens bucket 1")
+    # Sub-bucket edges are exact: 2^e * (1 + s/8) opens sub-bucket s.
+    for s in range(SUB_BUCKETS):
+        v = 4.0 * (1.0 + s / SUB_BUCKETS)
+        want = 1 + (2 - EXP_MIN) * SUB_BUCKETS + s
+        check(bucket_index(v) == want, f"edge {v}: got {bucket_index(v)}, want {want}")
+    print("golden bucket indices: ok")
+
+
+def check_bounds_and_monotonicity(rng):
+    for idx in range(N_BUCKETS - 1):
+        hi = bucket_bounds(idx)[1]
+        lo2 = bucket_bounds(idx + 1)[0]
+        check(hi == lo2, f"gap between buckets {idx} and {idx + 1}")
+    vals = sorted(
+        2.0 ** (rng.uniform(-40.0, 40.0)) * (1.0 + rng.random()) for _ in range(4000)
+    )
+    prev = -1
+    for v in vals:
+        idx = bucket_index(v)
+        check(idx >= prev, f"bucket_index not monotone at v={v}")
+        prev = idx
+        lo, hi = bucket_bounds(idx)
+        if 0 < idx < N_BUCKETS - 1:
+            check(lo <= v < hi, f"v={v} outside its bucket [{lo},{hi})")
+    print("bounds containment + contiguity + monotonicity: ok")
+
+
+def check_midpoint_bound():
+    # The documented worst case: |mid - v| / v <= (hi - lo) / (2 lo)
+    # <= 1/(2*(SUB_BUCKETS + s)) <= 1/16, for every in-range bucket.
+    worst = 0.0
+    for idx in range(1, N_BUCKETS - 1):
+        lo, hi = bucket_bounds(idx)
+        worst = max(worst, (hi - lo) / (2.0 * lo))
+    check(worst <= REL_ERROR_BOUND + 1e-15, f"analytic midpoint bound {worst} > 1/16")
+    check(worst > REL_ERROR_BOUND - 1e-3, "bound should be tight near 1/16")
+    print(f"analytic midpoint error bound: ok (worst {worst:.6f} <= 1/16)")
+
+
+def check_quantiles(rng):
+    distributions = {
+        "lognormal-latency": lambda: 2.0 ** rng.uniform(-2.0, 10.0) * (1.0 + rng.random()),
+        "uniform-narrow": lambda: 1.0 + rng.random(),
+        "heavy-tail": lambda: rng.paretovariate(1.5),
+        "exponential": lambda: rng.expovariate(0.2) + 1e-6,
+    }
+    for name, draw in distributions.items():
+        vals = [draw() for _ in range(5000)]
+        buckets = [0] * N_BUCKETS
+        for v in vals:
+            record(buckets, v)
+        check(sum(buckets) == len(vals), f"{name}: lost observations")
+        exact = sorted(vals)
+        for q in (0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 0.999, 1.0):
+            rank = min(max(int(math.ceil(q * len(vals))), 1), len(vals))
+            want = exact[rank - 1]
+            got = quantile(buckets, q)
+            if bucket_index(want) in (0, N_BUCKETS - 1):
+                continue  # bound only documented for in-range values
+            rel = abs(got - want) / want
+            check(
+                rel <= REL_ERROR_BOUND + 1e-12,
+                f"{name} q={q}: got {got}, exact {want}, rel {rel}",
+            )
+    print("quantile error bound across distributions: ok")
+
+
+def check_merge(rng):
+    def mk(n):
+        b = [0] * N_BUCKETS
+        for _ in range(n):
+            record(b, 2.0 ** rng.uniform(-10.0, 10.0))
+        return b
+
+    a, b, c = mk(300), mk(500), mk(700)
+    add = lambda x, y: [p + q for p, q in zip(x, y)]
+    check(add(add(a, b), c) == add(a, add(b, c)), "merge must be associative")
+    check(add(a, b) == add(b, a), "merge must be commutative")
+    union = add(a, b)
+    check(sum(union) == sum(a) + sum(b), "merged count must equal union")
+    # Quantiles of the merge agree with re-recording the union's buckets.
+    for q in (0.1, 0.5, 0.9):
+        check(
+            quantile(union, q) == quantile(add(b, a), q),
+            "merge order must not change quantiles",
+        )
+    print("merge associativity/commutativity/union: ok")
+
+
+def main():
+    rng = random.Random(0xD7CA)
+    check_golden_indices()
+    check_bounds_and_monotonicity(rng)
+    check_midpoint_bound()
+    check_quantiles(rng)
+    check_merge(rng)
+    print("ALL OBS CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    main()

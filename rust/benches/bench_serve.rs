@@ -1,23 +1,32 @@
 //! bench_serve: the fault-tolerant chip-farm serving path under load.
 //!
-//! Spins a 2-chip farm (pure-Rust samplers; the serving overhead under
-//! test — supervision, batching, retries — is backend-independent) and
-//! drives a closed-loop burst of concurrent requests through it twice:
-//! once fault-free and once under a seeded fault schedule (transient
-//! failures on chip 0 plus farm-wide latency spikes) with per-request
-//! deadlines. Reports images/second, latency percentiles and the typed
-//! error rate for both, and writes a machine-readable `BENCH_serve.json`
-//! at the repo root next to `BENCH_{gibbs,hw}.json` for the
-//! `check_bench.py` regression gate (the `images_per_sec` fields are the
+//! Spins a 2-chip farm and drives a closed-loop burst of concurrent
+//! requests through it three times: fault-free on pure-Rust samplers,
+//! under a seeded fault schedule (transient failures on chip 0 plus
+//! farm-wide latency spikes) with per-request deadlines, and fault-free
+//! on emulated DTCA chips (ideal corner-cycled dies) so the per-chip
+//! `chip.<k>.energy_j` gauges are live and an images-per-joule figure
+//! can be reported. Each scenario runs against a private
+//! `obs::Registry` handed to the farm via `FarmConfig::registry`;
+//! latency percentiles come from the `farm.latency_ms` histogram in
+//! that registry (documented relative error <= 6.25%), and the
+//! `farm.resolved` counter is cross-checked against the client-side ok
+//! count. Writes a machine-readable `BENCH_serve.json` at the repo root
+//! next to `BENCH_{gibbs,hw}.json` for the `check_bench.py` regression
+//! gate (the `images_per_sec` and `images_per_joule` fields are the
 //! gated quantities).
 
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use thermo_dtm::circuit::Corner;
 use thermo_dtm::coordinator::batcher::BatcherConfig;
 use thermo_dtm::coordinator::{Farm, FarmConfig, FaultPlan};
 use thermo_dtm::graph;
+use thermo_dtm::hw::{HwConfig, HwSampler};
 use thermo_dtm::model::Dtm;
+use thermo_dtm::obs::Registry;
 use thermo_dtm::train::sampler::RustSampler;
 use thermo_dtm::util::json::{self, Value};
 use thermo_dtm::util::threadpool::default_threads;
@@ -35,11 +44,16 @@ struct Scenario {
     deadline: Option<Duration>,
     requests: usize,
     req_images: usize,
+    hw: bool,
 }
 
 fn run_scenario(sc: &Scenario, threads: usize) -> Value {
     let top = graph::build("bench_serve", GRID, "G8", N_DATA, 0).unwrap();
     let dtm = Dtm::init("bench_serve", &top, T_LAYERS, 3.0, 1);
+    // A private registry per scenario keeps each run's farm.* counters and
+    // chip.<k>.* gauges isolated from the process-global registry (and
+    // from the other scenarios in this very process).
+    let reg = Arc::new(Registry::new());
     let cfg = FarmConfig {
         chips: CHIPS,
         batcher: BatcherConfig {
@@ -51,17 +65,35 @@ fn run_scenario(sc: &Scenario, threads: usize) -> Value {
         seed: 7,
         max_retries: 3,
         backoff_base: Duration::from_millis(2),
+        registry: Some(Arc::clone(&reg)),
         ..FarmConfig::default()
     };
     let plan = FaultPlan::parse(sc.faults).unwrap();
-    let farm = Farm::spawn(cfg, dtm, plan, move |chip| {
-        Ok(RustSampler::new(
-            graph::build("bench_serve", GRID, "G8", N_DATA, 0).unwrap(),
-            DEVICE_BATCH,
-            31 + chip as u64,
-        )
-        .with_threads(threads))
-    });
+    let farm = if sc.hw {
+        // Each chip is its own die: cycle the fabrication corners but keep
+        // devices otherwise ideal so throughput stays bench-friendly.
+        Farm::spawn(cfg, dtm, plan, move |chip| {
+            let hw_cfg = HwConfig::ideal()
+                .with_corner(Corner::all()[chip % 3])
+                .with_seed(chip as u64);
+            Ok(HwSampler::new(
+                graph::build("bench_serve", GRID, "G8", N_DATA, 0).unwrap(),
+                DEVICE_BATCH,
+                hw_cfg,
+                31 + chip as u64,
+            )
+            .with_threads(threads))
+        })
+    } else {
+        Farm::spawn(cfg, dtm, plan, move |chip| {
+            Ok(RustSampler::new(
+                graph::build("bench_serve", GRID, "G8", N_DATA, 0).unwrap(),
+                DEVICE_BATCH,
+                31 + chip as u64,
+            )
+            .with_threads(threads))
+        })
+    };
     let client = farm.client();
 
     let t0 = Instant::now();
@@ -83,18 +115,36 @@ fn run_scenario(sc: &Scenario, threads: usize) -> Value {
     let stats = farm.shutdown();
     assert_eq!(hung, 0, "{}: {} requests failed to resolve", sc.name, hung);
 
+    // The farm's own metrics are the report: latency percentiles from the
+    // log-bucketed histogram, energy from the per-chip device meters.
+    let snap = reg.snapshot();
+    assert_eq!(
+        snap.counter("farm.resolved").unwrap_or(0) as usize,
+        ok,
+        "{}: farm.resolved disagrees with client-side ok count",
+        sc.name
+    );
+    let lat = snap.hist("farm.latency_ms");
+    let p50 = lat.map(|h| h.quantile(0.50)).unwrap_or(0.0);
+    let p99 = lat.map(|h| h.quantile(0.99)).unwrap_or(0.0);
+    let energy_j: f64 = (0..CHIPS)
+        .filter_map(|k| snap.gauge(&format!("chip.{k}.energy_j")))
+        .sum();
+    let images_per_joule = (energy_j > 0.0).then(|| stats.serve.images as f64 / energy_j);
+
     let images_per_sec = stats.serve.images as f64 / wall.max(1e-9);
     println!(
         "{:<24} {ok}/{} ok  {:.1} img/s  p50 {:.1} ms  p99 {:.1} ms  err {:.3}  \
-         retries {}  shed {}",
+         retries {}  shed {}{}",
         sc.name,
         sc.requests,
         images_per_sec,
-        stats.p50_ms(),
-        stats.p99_ms(),
+        p50,
+        p99,
         stats.error_rate(),
         stats.retries,
-        stats.shed
+        stats.shed,
+        images_per_joule.map(|v| format!("  {v:.1} img/J")).unwrap_or_default()
     );
     json::obj(vec![
         ("name", Value::Str(sc.name.to_string())),
@@ -107,8 +157,13 @@ fn run_scenario(sc: &Scenario, threads: usize) -> Value {
             Value::Num(sc.deadline.map(|d| d.as_secs_f64() * 1e3).unwrap_or(0.0)),
         ),
         ("images_per_sec", Value::Num(images_per_sec)),
-        ("p50_ms", Value::Num(stats.p50_ms())),
-        ("p99_ms", Value::Num(stats.p99_ms())),
+        (
+            "images_per_joule",
+            images_per_joule.map(Value::Num).unwrap_or(Value::Null),
+        ),
+        ("energy_j", Value::Num(energy_j)),
+        ("p50_ms", Value::Num(p50)),
+        ("p99_ms", Value::Num(p99)),
         ("error_rate", Value::Num(stats.error_rate())),
         ("retries", Value::Num(stats.retries as f64)),
         ("hedges", Value::Num(stats.hedges as f64)),
@@ -125,6 +180,7 @@ fn main() {
             deadline: None,
             requests: 24,
             req_images: 4,
+            hw: false,
         },
         Scenario {
             name: "serve_2chip_faulted",
@@ -132,6 +188,15 @@ fn main() {
             deadline: Some(Duration::from_secs(20)),
             requests: 24,
             req_images: 4,
+            hw: false,
+        },
+        Scenario {
+            name: "serve_2chip_hw_energy",
+            faults: "",
+            deadline: None,
+            requests: 12,
+            req_images: 4,
+            hw: true,
         },
     ];
     let entries: Vec<Value> = scenarios.iter().map(|sc| run_scenario(sc, threads)).collect();

@@ -39,6 +39,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::model::Dtm;
+use crate::obs;
 use crate::train::sampler::{ChipReport, LayerSampler};
 use crate::util::rng::Rng;
 
@@ -76,6 +77,11 @@ pub struct FarmConfig {
     /// At shutdown, wait this long for in-flight batches before failing
     /// their requests with `Shutdown`.
     pub shutdown_grace: Duration,
+    /// Metrics registry the supervisor records `farm.*`/`chip.<k>.*`
+    /// into; `None` = the process-global [`obs::global`]. Benches and
+    /// the chaos suite pass a private registry so farms running under
+    /// parallel `cargo test` do not share counters.
+    pub registry: Option<Arc<obs::Registry>>,
 }
 
 impl Default for FarmConfig {
@@ -92,6 +98,7 @@ impl Default for FarmConfig {
             probe_interval: Duration::from_millis(100),
             stall_timeout: Duration::from_secs(2),
             shutdown_grace: Duration::from_millis(500),
+            registry: None,
         }
     }
 }
@@ -330,6 +337,7 @@ fn chip_worker<S: LayerSampler>(
     };
     let mut rng = Rng::new(seed).fork(0x_C41F_0000 + chip as u64);
     while let Ok(job) = jobs.recv() {
+        let _sp = crate::obs::span("farm.chip_job");
         let t0 = Instant::now();
         let decision = faults.before_call();
         if decision.sleep > Duration::ZERO {
@@ -403,6 +411,64 @@ struct Job {
     dispatched: Vec<usize>,
 }
 
+/// Interned handles into the farm's metrics registry, cached once at
+/// supervisor construction so record sites are single atomic ops. The
+/// resolution counters partition outcomes exactly:
+/// `resolved + deadline_miss + failed + rejected + shutdown_rejected`
+/// equals the number of resolved requests (the chaos suite asserts this
+/// reconciles with observed client outcomes).
+struct FarmObs {
+    requests: Arc<obs::Counter>,
+    resolved: Arc<obs::Counter>,
+    deadline_miss: Arc<obs::Counter>,
+    failed: Arc<obs::Counter>,
+    rejected: Arc<obs::Counter>,
+    shutdown_rejected: Arc<obs::Counter>,
+    shed: Arc<obs::Counter>,
+    retries: Arc<obs::Counter>,
+    hedges: Arc<obs::Counter>,
+    probes: Arc<obs::Counter>,
+    batches: Arc<obs::Counter>,
+    latency_ms: Arc<obs::Histogram>,
+    batch_fill: Arc<obs::Histogram>,
+    queue_depth: Arc<obs::Gauge>,
+    in_flight: Arc<obs::Gauge>,
+    live_chips: Arc<obs::Gauge>,
+    chip_state: Vec<Arc<obs::Gauge>>,
+    chip_energy: Vec<Arc<obs::Gauge>>,
+    chip_device_s: Vec<Arc<obs::Gauge>>,
+    chip_busy_ms: Vec<Arc<obs::Gauge>>,
+}
+
+impl FarmObs {
+    fn new(reg: &obs::Registry, chips: usize) -> FarmObs {
+        let per_chip =
+            |what: &str| (0..chips).map(|k| reg.gauge(&format!("chip.{k}.{what}"))).collect();
+        FarmObs {
+            requests: reg.counter("farm.requests"),
+            resolved: reg.counter("farm.resolved"),
+            deadline_miss: reg.counter("farm.deadline_miss"),
+            failed: reg.counter("farm.failed"),
+            rejected: reg.counter("farm.rejected"),
+            shutdown_rejected: reg.counter("farm.shutdown_rejected"),
+            shed: reg.counter("farm.shed"),
+            retries: reg.counter("farm.retries"),
+            hedges: reg.counter("farm.hedges"),
+            probes: reg.counter("farm.probes"),
+            batches: reg.counter("farm.batches"),
+            latency_ms: reg.histogram("farm.latency_ms"),
+            batch_fill: reg.histogram("farm.batch_fill"),
+            queue_depth: reg.gauge("farm.queue_depth"),
+            in_flight: reg.gauge("farm.in_flight"),
+            live_chips: reg.gauge("farm.live_chips"),
+            chip_state: per_chip("state"),
+            chip_energy: per_chip("energy_j"),
+            chip_device_s: per_chip("device_seconds"),
+            chip_busy_ms: per_chip("busy_ms"),
+        }
+    }
+}
+
 struct Supervisor {
     cfg: FarmConfig,
     chips: Vec<Chip>,
@@ -412,6 +478,7 @@ struct Supervisor {
     /// Backoff queue: requests due back into the batcher at an instant.
     retry: Vec<(Instant, Request)>,
     stats: FarmStats,
+    obs: FarmObs,
     next_req: u64,
     next_job: u64,
     shutting_down: Option<Instant>,
@@ -431,6 +498,10 @@ impl Supervisor {
             chips: vec![ChipStats::default(); chips.len()],
             ..FarmStats::default()
         };
+        let obs = match &cfg.registry {
+            Some(r) => FarmObs::new(r, chips.len()),
+            None => FarmObs::new(obs::global(), chips.len()),
+        };
         Supervisor {
             batcher: Batcher::new(cfg.batcher.clone()),
             cfg,
@@ -439,6 +510,7 @@ impl Supervisor {
             jobs: HashMap::new(),
             retry: Vec::new(),
             stats,
+            obs,
             next_req: 0,
             next_job: 0,
             shutting_down: None,
@@ -483,6 +555,7 @@ impl Supervisor {
             self.maybe_hedge(now);
             self.probe_quarantined(now);
             self.dispatch(now);
+            self.publish_gauges();
             if let Some(since) = self.shutting_down {
                 let in_flight = self.jobs.values().any(|j| !j.probe);
                 if !in_flight || now.saturating_duration_since(since) > self.cfg.shutdown_grace {
@@ -502,6 +575,7 @@ impl Supervisor {
         reply: mpsc::Sender<ServeResult>,
     ) {
         self.stats.serve.requests += 1;
+        self.obs.requests.incr(1);
         let now = Instant::now();
         let deadline = deadline.or_else(|| self.cfg.default_deadline.map(|d| now + d));
         let p = Pending {
@@ -523,14 +597,19 @@ impl Supervisor {
             return;
         }
         if n_images == 0 {
-            let latency = Duration::ZERO;
             self.stats.serve.latencies_ms.push(0.0);
-            let _ = p.reply.send(Ok(Response {
-                id: self.next_req,
-                images: Vec::new(),
-                latency,
-            }));
+            let id = self.next_req;
             self.next_req += 1;
+            // Through resolve() so the farm.resolved counter and latency
+            // histogram see every Ok outcome, zero-image ones included.
+            self.resolve(
+                p,
+                Ok(Response {
+                    id,
+                    images: Vec::new(),
+                    latency: Duration::ZERO,
+                }),
+            );
             return;
         }
         // Graceful degradation: under reduced capacity, shed bulk
@@ -541,6 +620,7 @@ impl Supervisor {
             && self.batcher.queued_images() >= live.max(1) * self.cfg.batcher.device_batch
         {
             self.stats.shed += 1;
+            self.obs.shed.incr(1);
             self.resolve(
                 p,
                 Err(ServeError::Rejected {
@@ -566,6 +646,24 @@ impl Supervisor {
                     reason: format!("queue full ({})", self.cfg.batcher.max_queue),
                 }),
             ),
+        }
+    }
+
+    /// Refresh the point-in-time gauges once per supervisor tick. Cheap
+    /// (a handful of relaxed stores), so no gating here.
+    fn publish_gauges(&self) {
+        self.obs.queue_depth.set(self.batcher.queued_images() as f64);
+        let in_flight = self.jobs.values().filter(|j| !j.probe).count();
+        self.obs.in_flight.set(in_flight as f64);
+        self.obs.live_chips.set(self.live_chips() as f64);
+        for (k, c) in self.chips.iter().enumerate() {
+            let s = match c.state {
+                ChipState::Idle => 0.0,
+                ChipState::Busy { .. } => 1.0,
+                ChipState::Quarantined { .. } => 2.0,
+                ChipState::Dead => 3.0,
+            };
+            self.obs.chip_state[k].set(s);
         }
     }
 
@@ -615,9 +713,25 @@ impl Supervisor {
 
     // --- resolution ------------------------------------------------------
 
+    /// The single choke point every request outcome passes through; the
+    /// `farm.{resolved,deadline_miss,failed,rejected,shutdown_rejected}`
+    /// counters partition outcomes here, so they reconcile exactly with
+    /// what clients observe.
     fn resolve(&mut self, p: Pending, res: ServeResult) {
-        if let Err(e) = &res {
-            self.stats.serve.record_error(e);
+        match &res {
+            Ok(r) => {
+                self.obs.resolved.incr(1);
+                self.obs.latency_ms.record(r.latency.as_secs_f64() * 1e3);
+            }
+            Err(e) => {
+                self.stats.serve.record_error(e);
+                match e {
+                    ServeError::Rejected { .. } => self.obs.rejected.incr(1),
+                    ServeError::DeadlineExceeded => self.obs.deadline_miss.incr(1),
+                    ServeError::Failed { .. } => self.obs.failed.incr(1),
+                    ServeError::Shutdown => self.obs.shutdown_rejected.incr(1),
+                }
+            }
         }
         let _ = p.reply.send(res);
     }
@@ -710,6 +824,7 @@ impl Supervisor {
             let total = self.jobs[&job_id].total;
             let abort_at = self.job_abort_at(&job_id);
             self.stats.hedges += 1;
+            self.obs.hedges.incr(1);
             self.send_job(second, job_id, total, abort_at, now);
         }
     }
@@ -731,6 +846,7 @@ impl Supervisor {
                         },
                     );
                     self.stats.probes += 1;
+                    self.obs.probes.incr(1);
                     self.send_job(chip, job_id, 1, None, now);
                 }
             }
@@ -796,8 +912,10 @@ impl Supervisor {
             let job_id = self.next_job;
             self.next_job += 1;
             self.stats.serve.batches += 1;
-            self.stats.serve.total_batch_fill +=
-                batch.total as f64 / self.cfg.batcher.device_batch as f64;
+            let fill = batch.total as f64 / self.cfg.batcher.device_batch as f64;
+            self.stats.serve.total_batch_fill += fill;
+            self.obs.batches.incr(1);
+            self.obs.batch_fill.record(fill);
             self.chips[chip].stats.batches += 1;
             for (id, _) in &batch.parts {
                 if let Some(p) = self.pending.get_mut(id) {
@@ -831,6 +949,15 @@ impl Supervisor {
     ) {
         let now = Instant::now();
         self.chips[chip].stats.busy_ms += elapsed.as_secs_f64() * 1e3;
+        self.obs.chip_busy_ms[chip].set(self.chips[chip].stats.busy_ms);
+        // Stream the device meters into gauges per tick (not just at
+        // shutdown): this is what makes images/s/J computable live.
+        if let Some(r) = &report {
+            if let Some(j) = r.energy_j {
+                self.obs.chip_energy[chip].set(j);
+            }
+            self.obs.chip_device_s[chip].set(r.device_seconds);
+        }
         self.chips[chip].stats.report = report;
         let job = self.jobs.remove(&job_id);
         // Chip state transition — conditional on WHICH job this Done
@@ -953,6 +1080,7 @@ impl Supervisor {
                 ..Request::new(id, count, p.arrived)
             };
             self.stats.retries += 1;
+            self.obs.retries.incr(1);
             if self.cfg.backoff_base.is_zero() {
                 self.batcher.requeue([req]);
             } else {
@@ -1040,6 +1168,7 @@ mod tests {
             probe_interval: Duration::from_millis(20),
             stall_timeout: Duration::from_secs(2),
             shutdown_grace: Duration::from_millis(500),
+            registry: None,
         }
     }
 

@@ -58,6 +58,31 @@
 //! second idle chip; the first result wins. When capacity drops, the
 //! effective batch shrinks proportionally and priority-0 overflow is shed
 //! with a typed rejection.
+//!
+//! # Observability hook points
+//!
+//! The supervisor records into [`crate::obs`] at three choke points, so
+//! the metrics reconcile exactly with the request outcomes (asserted by
+//! the chaos suite):
+//!
+//! * **admission** — `farm.requests` counts every submission on entry;
+//! * **`resolve()`** — the single exit every reply funnels through:
+//!   `farm.resolved` + the `farm.latency_ms` histogram for `Ok`, and one
+//!   of `farm.{rejected, deadline_miss, failed, shutdown_rejected}` per
+//!   [`ServeError`] variant (so the five counters partition the
+//!   submissions);
+//! * **per tick** — point-in-time gauges (`farm.queue_depth`,
+//!   `farm.in_flight`, `farm.live_chips`, `chip.<k>.state`) plus the
+//!   per-chip device meters streamed off each `Done{report}`
+//!   (`chip.<k>.{energy_j, device_seconds, busy_ms}`).
+//!
+//! Chip workers wrap each job in a `farm.chip_job` span; enable tracing
+//! (`repro ... --trace-out trace.json`) to see them interleaved with the
+//! engine's `gibbs.halfsweep` spans in Perfetto. [`FarmConfig`]'s
+//! `registry` field points the whole farm at a private
+//! [`crate::obs::Registry`] (tests, benches); `None` means the
+//! process-global one. Live totals without shutdown: [`Farm::stats_now`]
+//! or `repro serve --metrics-every <secs>`.
 
 pub mod batcher;
 pub mod farm;

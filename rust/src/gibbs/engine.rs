@@ -368,10 +368,18 @@ impl SweepPlan {
     }
 
     /// One full two-color sweep of a single chain row (`s.len() == n`).
+    /// Each half-sweep is a `gibbs.halfsweep` span (one relaxed load
+    /// apiece when tracing is off).
     #[inline]
     pub fn sweep_row(&self, s: &mut [f32], xt_row: &[f32], rng: &mut Rng) {
-        self.half(0, s, xt_row, rng);
-        self.half(1, s, xt_row, rng);
+        {
+            let _sp = crate::obs::span("gibbs.halfsweep");
+            self.half(0, s, xt_row, rng);
+        }
+        {
+            let _sp = crate::obs::span("gibbs.halfsweep");
+            self.half(1, s, xt_row, rng);
+        }
     }
 }
 
@@ -417,6 +425,7 @@ pub fn run_sweeps(
     for (bi, row) in rows.into_iter().enumerate() {
         chains.s[bi * n..(bi + 1) * n].copy_from_slice(&row);
     }
+    crate::obs::record_engine_run(chains.b, k, plan.updates_per_sweep());
 }
 
 /// Run `k` sweeps per chain, accumulating `SweepStats` after `burn` sweeps
@@ -468,6 +477,7 @@ pub fn run_stats(
         }
         st.mean_b[bi * n..(bi + 1) * n].copy_from_slice(&mean);
     }
+    crate::obs::record_engine_run(b, k, plan.updates_per_sweep());
     st
 }
 
@@ -531,6 +541,7 @@ pub fn run_trace_tail(
         chains.s[bi * n..(bi + 1) * n].copy_from_slice(&row);
         out.push(series);
     }
+    crate::obs::record_engine_run(chains.b, k, plan.updates_per_sweep());
     out
 }
 

@@ -361,11 +361,19 @@ impl SweepPlanPacked {
         }
     }
 
-    /// One full two-color sweep of a single packed chain row.
+    /// One full two-color sweep of a single packed chain row. Each
+    /// half-sweep is a `gibbs.halfsweep` span (one relaxed load apiece
+    /// when tracing is off), matching the f32 path.
     #[inline]
     pub fn sweep_state(&self, st: &mut PackedState, xt_row: &[f32], rng: &mut Rng) {
-        self.half(0, st, xt_row, rng);
-        self.half(1, st, xt_row, rng);
+        {
+            let _sp = crate::obs::span("gibbs.halfsweep");
+            self.half(0, st, xt_row, rng);
+        }
+        {
+            let _sp = crate::obs::span("gibbs.halfsweep");
+            self.half(1, st, xt_row, rng);
+        }
     }
 }
 
@@ -531,6 +539,7 @@ pub fn run_sweeps_packed(
     for (bi, st) in states.into_iter().enumerate() {
         st.write_row(&plan.topo, &mut chains.s[bi * n..(bi + 1) * n]);
     }
+    crate::obs::record_engine_run(chains.b, k, plan.updates_per_sweep());
 }
 
 /// Packed counterpart of `engine::run_stats` (fused accumulation from the
@@ -583,6 +592,7 @@ pub fn run_stats_packed(
         }
         st.mean_b[bi * n..(bi + 1) * n].copy_from_slice(&mean);
     }
+    crate::obs::record_engine_run(b, k, plan.updates_per_sweep());
     st
 }
 
@@ -628,6 +638,7 @@ pub fn run_trace_tail_packed(
         state.write_row(&plan.topo, &mut chains.s[bi * n..(bi + 1) * n]);
         out.push(series);
     }
+    crate::obs::record_engine_run(chains.b, k, plan.updates_per_sweep());
     out
 }
 

@@ -76,6 +76,9 @@ impl HwSchedule {
         self.cell_updates += b * k * ups;
         self.programs += b;
         self.rng_joules += (b * k) as f64 * rng_j_per_sweep;
+        // Live `hw.*` metrics see the same deltas at the same choke
+        // point (the absorb path does not re-meter, so no double count).
+        crate::obs::record_hw_run(ups, rng_j_per_sweep, b, k);
     }
 }
 

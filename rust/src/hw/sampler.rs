@@ -306,6 +306,7 @@ impl LayerSampler for HwSampler {
         k: usize,
         burn: usize,
     ) -> Result<LayerStats> {
+        let _sp = crate::obs::span("sampler.stats");
         let m = self.machine(params, gm, beta);
         let mut chains = gibbs::Chains::random(self.batch, self.top.n_nodes(), &mut self.rng);
         chains.impose_clamps(cmask, cval);
@@ -344,6 +345,7 @@ impl LayerSampler for HwSampler {
         s0: Option<&[f32]>,
         k: usize,
     ) -> Result<Vec<f32>> {
+        let _sp = crate::obs::span("sampler.sample");
         let call = self.programs_called;
         self.programs_called += 1;
         if let Some(hook) = self.fault_hook.as_mut() {

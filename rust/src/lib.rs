@@ -28,6 +28,8 @@
 //!   RNG cells, phase clocking, process corners) behind the sampler trait.
 //! - [`runtime`] — PJRT client, artifact manifest, executable cache.
 //! - [`model`] — DTM parameters, forward process, persistence.
+//! - [`obs`] — metrics registry (counters/gauges/log-bucket histograms),
+//!   scoped spans with Chrome-trace export, snapshot renderers.
 //! - [`train`] — gradient estimation, Adam, ACP, trainers.
 //! - [`coordinator`] — denoising pipeline, batcher, serving loop.
 //! - [`baselines`] — MEBM and VAE/GAN/DDPM/hybrid drivers.
@@ -47,6 +49,7 @@ pub mod hw;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod train;
 pub mod util;

@@ -41,19 +41,48 @@ fn main() {
 fn run() -> Result<()> {
     let args = Args::from_env()?;
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    // Observability plumbing shared by every subcommand: `--metrics-out F`
+    // writes the final registry snapshot as JSON; `--trace-out F` turns on
+    // span capture and writes a Chrome/Perfetto trace_event file.
+    let metrics_out = args.flags.get("metrics-out").cloned();
+    let trace_out = args.flags.get("trace-out").cloned();
+    if metrics_out.is_some() || args.f64_opt("metrics-every", 0.0)? > 0.0 {
+        thermo_dtm::obs::set_metrics_enabled(true);
+    }
+    if trace_out.is_some() {
+        thermo_dtm::obs::set_tracing_enabled(true);
+    }
+    let res = dispatch(cmd, &args);
+    if let Some(path) = &metrics_out {
+        let snap = thermo_dtm::obs::global().snapshot();
+        match thermo_dtm::obs::write_snapshot_json(path, &snap) {
+            Ok(()) => eprintln!("wrote metrics snapshot to {path}"),
+            Err(e) => eprintln!("failed to write --metrics-out {path}: {e}"),
+        }
+    }
+    if let Some(path) = &trace_out {
+        match thermo_dtm::obs::write_chrome_trace(path) {
+            Ok(n) => eprintln!("wrote {n} trace events to {path}"),
+            Err(e) => eprintln!("failed to write --trace-out {path}: {e}"),
+        }
+    }
+    res
+}
+
+fn dispatch(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
-        "selfcheck" => selfcheck(&args),
-        "topology" => topology(&args),
-        "train" => train(&args),
-        "generate" => generate(&args),
-        "serve" => serve(&args),
+        "selfcheck" => selfcheck(args),
+        "topology" => topology(args),
+        "train" => train(args),
+        "generate" => generate(args),
+        "serve" => serve(args),
         "figures" => {
             let id = args
                 .positional
                 .get(1)
                 .map(String::as_str)
                 .unwrap_or("all");
-            let opts = FigOpts::from_args(&args)?;
+            let opts = FigOpts::from_args(args)?;
             std::fs::create_dir_all(&opts.out_dir)?;
             figures::run(id, &opts)
         }
@@ -70,6 +99,8 @@ fn run() -> Result<()> {
                 "usage: repro <selfcheck|topology|train|generate|serve|figures|energy-report> [--flags]\n\
                  common flags: --artifacts DIR --config dtm_m32 --fast --seed N --threads N\n\
                  \x20         --repr packed|f32|auto (spin representation for rust/hw backends)\n\
+                 \x20         --metrics-out F (write final metrics snapshot JSON)\n\
+                 \x20         --trace-out F (capture spans, write Chrome trace JSON)\n\
                  train:    --t-steps 4 --epochs 10 --k-train 30 --out ckpt.json --backend hlo|rust|hw\n\
                  generate: --ckpt ckpt.json --n 64 --k 60 --backend hlo|rust|hw\n\
                  serve:    --ckpt ckpt.json --requests 32 --req-images 8 --linger-ms 5\n\

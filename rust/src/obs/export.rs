@@ -1,0 +1,157 @@
+//! Renderers: snapshot text/JSON and Chrome `trace_event` export.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use crate::util::json::{self, Value};
+
+use super::registry::Snapshot;
+use super::span::{drain_events, SpanEvent};
+
+fn fmt_g(v: f64) -> String {
+    let a = v.abs();
+    if v != 0.0 && (a < 1e-3 || a >= 1e6) {
+        format!("{v:.3e}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+/// Human-readable snapshot: sorted name columns per instrument kind.
+pub fn snapshot_text(s: &Snapshot) -> String {
+    let mut out = String::new();
+    if !s.counters.is_empty() {
+        out.push_str("counters:\n");
+        for (k, v) in &s.counters {
+            let _ = writeln!(out, "  {k:<36} {v}");
+        }
+    }
+    if !s.gauges.is_empty() {
+        out.push_str("gauges:\n");
+        for (k, v) in &s.gauges {
+            let _ = writeln!(out, "  {k:<36} {}", fmt_g(*v));
+        }
+    }
+    if !s.hists.is_empty() {
+        out.push_str("histograms:\n");
+        for (k, h) in &s.hists {
+            let _ = writeln!(
+                out,
+                "  {k:<36} n {}  mean {}  p50 {}  p90 {}  p99 {}",
+                h.count,
+                fmt_g(h.mean()),
+                fmt_g(h.quantile(0.5)),
+                fmt_g(h.quantile(0.9)),
+                fmt_g(h.quantile(0.99))
+            );
+        }
+    }
+    out
+}
+
+/// Machine-readable snapshot. Histograms are summarized (count, sum,
+/// mean, p50/p90/p99) rather than dumped bucket-by-bucket.
+pub fn snapshot_json(s: &Snapshot) -> String {
+    let counters = Value::Obj(
+        s.counters
+            .iter()
+            .map(|(k, v)| (k.clone(), Value::Num(*v as f64)))
+            .collect(),
+    );
+    let gauges = Value::Obj(
+        s.gauges
+            .iter()
+            .map(|(k, v)| (k.clone(), Value::Num(*v)))
+            .collect(),
+    );
+    let hists = Value::Obj(
+        s.hists
+            .iter()
+            .map(|(k, h)| {
+                let summary = json::obj(vec![
+                    ("count", Value::Num(h.count as f64)),
+                    ("sum", Value::Num(h.sum)),
+                    ("mean", Value::Num(h.mean())),
+                    ("p50", Value::Num(h.quantile(0.5))),
+                    ("p90", Value::Num(h.quantile(0.9))),
+                    ("p99", Value::Num(h.quantile(0.99))),
+                ]);
+                (k.clone(), summary)
+            })
+            .collect(),
+    );
+    json::write(&json::obj(vec![
+        ("counters", counters),
+        ("gauges", gauges),
+        ("histograms", hists),
+    ]))
+}
+
+/// Write [`snapshot_json`] to `path`.
+pub fn write_snapshot_json(path: impl AsRef<Path>, s: &Snapshot) -> io::Result<()> {
+    fs::write(path, snapshot_json(s))
+}
+
+/// Chrome/Perfetto `trace_event` JSON ("X" complete events, µs units)
+/// for a batch of closed spans. Loads in chrome://tracing and Perfetto.
+pub fn chrome_trace_json(events: &[SpanEvent]) -> String {
+    let evs: Vec<Value> = events
+        .iter()
+        .map(|e| {
+            json::obj(vec![
+                ("name", Value::Str(e.name.to_string())),
+                ("cat", Value::Str("obs".to_string())),
+                ("ph", Value::Str("X".to_string())),
+                ("ts", Value::Num(e.start_ns as f64 / 1e3)),
+                ("dur", Value::Num(e.dur_ns as f64 / 1e3)),
+                ("pid", Value::Num(1.0)),
+                ("tid", Value::Num(e.tid as f64)),
+            ])
+        })
+        .collect();
+    json::write(&json::obj(vec![
+        ("traceEvents", Value::Arr(evs)),
+        ("displayTimeUnit", Value::Str("ms".to_string())),
+    ]))
+}
+
+/// Drain every thread's spans and write them as Chrome trace JSON.
+/// Returns the number of spans exported.
+pub fn write_chrome_trace(path: impl AsRef<Path>) -> io::Result<usize> {
+    let events = drain_events();
+    fs::write(path, chrome_trace_json(&events))?;
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Registry;
+    use crate::util::json::parse;
+
+    #[test]
+    fn renderers_cover_all_instrument_kinds() {
+        let reg = Registry::new();
+        reg.counter("a.count").incr(7);
+        reg.gauge("a.gauge").set(2.5e-7);
+        let h = reg.histogram("a.lat");
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        let snap = reg.snapshot();
+
+        let text = snapshot_text(&snap);
+        assert!(text.contains("a.count"));
+        assert!(text.contains("2.500e-7"));
+        assert!(text.contains("p99"));
+
+        let v = parse(&snapshot_json(&snap)).unwrap();
+        assert_eq!(v.get("counters").unwrap().get("a.count").unwrap().as_i64().unwrap(), 7);
+        let lat = v.get("histograms").unwrap().get("a.lat").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_i64().unwrap(), 100);
+        let p50 = lat.get("p50").unwrap().as_f64().unwrap();
+        assert!((p50 - 50.0).abs() / 50.0 <= crate::obs::REL_ERROR_BOUND);
+    }
+}

@@ -1,0 +1,369 @@
+//! Log-bucketed histogram with a documented quantile error bound.
+//!
+//! Values are bucketed straight off their IEEE-754 bit pattern: the
+//! unbiased exponent selects an octave `[2^e, 2^{e+1})` and the top
+//! [`SUB_BUCKETS_LOG2`] mantissa bits split each octave into
+//! [`SUB_BUCKETS`] equal-width sub-buckets. Octaves `e in
+//! [EXP_MIN, EXP_MAX)` are resolved; everything below (including zero,
+//! negatives, subnormals down there, and NaN) lands in the underflow
+//! bucket 0 and everything at or above `2^EXP_MAX` (including +inf) in
+//! the overflow bucket [`N_BUCKETS`]` - 1`. That covers `2^-32 ≈
+//! 2.3e-10` through `2^32 ≈ 4.3e9` — nanoseconds to gigajoules when the
+//! recorded units are ms/J as in the `farm.*`/`train.*` metrics.
+//!
+//! ## Quantile error bound
+//!
+//! A quantile query returns the arithmetic midpoint of the bucket
+//! holding the requested rank. For an in-range value `v` in sub-bucket
+//! `s` of octave `e`, the bucket spans `lo = 2^e (1 + s/8)` to
+//! `hi = 2^e (1 + (s+1)/8)`, so the relative error of the midpoint is
+//! at most `(hi - lo) / (2 lo) = 1 / (2 (8 + s)) ≤ 1/16 = 6.25%`
+//! ([`REL_ERROR_BOUND`]). The bound is exact and is property-tested
+//! here and re-simulated bit-for-bit by
+//! `python/tools/verify_obs_sim.py`.
+//!
+//! ## Concurrency
+//!
+//! Buckets are `AtomicU64`s updated with relaxed `fetch_add`; the
+//! running sum is an f64 carried in an `AtomicU64` via a CAS loop.
+//! [`Histogram::data`] therefore sees every completed `record` but is
+//! not a cross-bucket atomic snapshot; [`HistData::count`] is derived
+//! from the bucket array itself so quantiles are always internally
+//! consistent. Merging ([`HistData::merge`]) is element-wise addition,
+//! hence associative and commutative on the bucket counts.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// log2 of the number of sub-buckets per octave.
+pub const SUB_BUCKETS_LOG2: u32 = 3;
+/// Sub-buckets per octave (top mantissa bits used for splitting).
+pub const SUB_BUCKETS: usize = 1 << SUB_BUCKETS_LOG2;
+/// Smallest resolved octave: values below `2^EXP_MIN` underflow.
+pub const EXP_MIN: i32 = -32;
+/// One past the largest resolved octave: values `>= 2^EXP_MAX` overflow.
+pub const EXP_MAX: i32 = 32;
+/// Total buckets: underflow + 64 octaves x 8 sub-buckets + overflow.
+pub const N_BUCKETS: usize = 2 + (EXP_MAX - EXP_MIN) as usize * SUB_BUCKETS;
+/// Worst-case relative error of a reported quantile for in-range values.
+pub const REL_ERROR_BOUND: f64 = 1.0 / 16.0;
+
+/// Bucket index for a value. Monotone in `v` over positive finite
+/// values; NaN and `v <= 0` go to the underflow bucket.
+#[inline]
+pub fn bucket_index(v: f64) -> usize {
+    if v.is_nan() || v <= 0.0 {
+        return 0;
+    }
+    let bits = v.to_bits();
+    let exp = ((bits >> 52) & 0x7ff) as i32 - 1023;
+    if exp < EXP_MIN {
+        return 0;
+    }
+    if exp >= EXP_MAX {
+        return N_BUCKETS - 1;
+    }
+    let sub = ((bits >> (52 - SUB_BUCKETS_LOG2)) & (SUB_BUCKETS as u64 - 1)) as usize;
+    1 + (exp - EXP_MIN) as usize * SUB_BUCKETS + sub
+}
+
+fn exp2i(e: i32) -> f64 {
+    (e as f64).exp2()
+}
+
+/// `[lo, hi)` bounds of a bucket. Underflow is `[0, 2^EXP_MIN)`,
+/// overflow `[2^EXP_MAX, inf)`.
+pub fn bucket_bounds(idx: usize) -> (f64, f64) {
+    assert!(idx < N_BUCKETS, "bucket index out of range");
+    if idx == 0 {
+        return (0.0, exp2i(EXP_MIN));
+    }
+    if idx == N_BUCKETS - 1 {
+        return (exp2i(EXP_MAX), f64::INFINITY);
+    }
+    let i = idx - 1;
+    let base = exp2i(EXP_MIN + (i / SUB_BUCKETS) as i32);
+    let s = (i % SUB_BUCKETS) as f64;
+    let w = SUB_BUCKETS as f64;
+    (base * (1.0 + s / w), base * (1.0 + (s + 1.0) / w))
+}
+
+/// Representative value reported for a bucket: the arithmetic midpoint
+/// (0 for underflow, the finite edge for overflow).
+pub fn bucket_mid(idx: usize) -> f64 {
+    let (lo, hi) = bucket_bounds(idx);
+    if idx == 0 {
+        return 0.0;
+    }
+    if idx == N_BUCKETS - 1 {
+        return lo;
+    }
+    0.5 * (lo + hi)
+}
+
+/// Concurrent log-bucketed histogram (see module docs).
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    /// f64 bits of the running sum of recorded values.
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    /// Record one observation (lock-free; two relaxed atomic RMWs).
+    pub fn record(&self, v: f64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self
+                .sum_bits
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    /// Total observations recorded so far.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Point-in-time plain copy of the contents.
+    pub fn data(&self) -> HistData {
+        let buckets: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let count = buckets.iter().sum();
+        HistData {
+            buckets,
+            count,
+            sum: f64::from_bits(self.sum_bits.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Histogram(count={})", self.count())
+    }
+}
+
+/// Plain (non-atomic) histogram contents; the mergeable snapshot form.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistData {
+    /// Per-bucket counts, length [`N_BUCKETS`].
+    pub buckets: Vec<u64>,
+    /// Sum of bucket counts (kept consistent with `buckets`).
+    pub count: u64,
+    /// Sum of the recorded values (exact mean numerator).
+    pub sum: f64,
+}
+
+impl HistData {
+    pub fn empty() -> HistData {
+        HistData {
+            buckets: vec![0; N_BUCKETS],
+            count: 0,
+            sum: 0.0,
+        }
+    }
+
+    /// Element-wise accumulate another histogram into this one.
+    /// Associative and commutative on the bucket counts.
+    pub fn merge(&mut self, other: &HistData) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Approximate `q`-quantile (`q` clamped to `[0,1]`): the midpoint
+    /// of the bucket containing rank `ceil(q * count)` (1-based), i.e.
+    /// within [`REL_ERROR_BOUND`] relative error of the exact
+    /// `sorted[rank-1]` for in-range values. Returns 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_mid(i);
+            }
+        }
+        bucket_mid(N_BUCKETS - 1)
+    }
+
+    /// Largest non-empty bucket's midpoint (approximate max).
+    pub fn max_mid(&self) -> f64 {
+        for i in (0..N_BUCKETS).rev() {
+            if self.buckets[i] > 0 {
+                return bucket_mid(i);
+            }
+        }
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    #[test]
+    fn bucket_layout_golden_values() {
+        // 1.0 = 2^0 * 1.000 -> first sub-bucket of octave 0.
+        assert_eq!(bucket_index(1.0), 1 + 32 * SUB_BUCKETS);
+        assert_eq!(bucket_index(1.0), 257);
+        // 1.9999 -> last sub-bucket of octave 0; 2.0 -> octave 1.
+        assert_eq!(bucket_index(1.9999), 257 + 7);
+        assert_eq!(bucket_index(2.0), 1 + 33 * SUB_BUCKETS);
+        // Out-of-range and pathological inputs.
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(-3.0), 0);
+        assert_eq!(bucket_index(f64::NAN), 0);
+        assert_eq!(bucket_index(1e-300), 0);
+        assert_eq!(bucket_index(f64::INFINITY), N_BUCKETS - 1);
+        assert_eq!(bucket_index(1e300), N_BUCKETS - 1);
+        // Exact range edges.
+        assert_eq!(bucket_index(exp2i(EXP_MIN)), 1);
+        assert_eq!(bucket_index(exp2i(EXP_MAX)), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn bounds_contain_their_values_and_are_contiguous() {
+        let mut rng = Rng::new(11);
+        for _ in 0..5000 {
+            // Log-uniform over the resolved range (and a bit beyond).
+            let e = rng.uniform() * 68.0 - 34.0;
+            let v = e.exp2() * (1.0 + rng.uniform());
+            let idx = bucket_index(v);
+            let (lo, hi) = bucket_bounds(idx);
+            if idx != 0 && idx != N_BUCKETS - 1 {
+                assert!(lo <= v && v < hi, "v={v} not in [{lo},{hi}) idx={idx}");
+            }
+        }
+        for idx in 0..N_BUCKETS - 1 {
+            let (_, hi) = bucket_bounds(idx);
+            let (lo2, _) = bucket_bounds(idx + 1);
+            assert_eq!(hi, lo2, "gap between buckets {idx} and {}", idx + 1);
+        }
+    }
+
+    #[test]
+    fn bucket_index_is_monotone() {
+        let mut rng = Rng::new(12);
+        let mut vals: Vec<f64> = (0..2000)
+            .map(|_| (rng.uniform() * 80.0 - 40.0).exp2() * (1.0 + rng.uniform()))
+            .collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for w in vals.windows(2) {
+            assert!(bucket_index(w[0]) <= bucket_index(w[1]));
+        }
+    }
+
+    #[test]
+    fn quantiles_within_documented_bound_of_exact() {
+        let mut rng = Rng::new(13);
+        // Latency-like values: lognormal-ish spread over ~4 decades.
+        let vals: Vec<f64> = (0..4000)
+            .map(|_| (rng.uniform() * 12.0 - 2.0).exp2() * (1.0 + rng.uniform()))
+            .collect();
+        let h = Histogram::new();
+        for &v in &vals {
+            h.record(v);
+        }
+        let mut sorted = vals.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let d = h.data();
+        for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+            let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+            let exact = sorted[rank - 1];
+            let got = d.quantile(q);
+            let rel = (got - exact).abs() / exact;
+            assert!(
+                rel <= REL_ERROR_BOUND + 1e-12,
+                "q={q}: got {got}, exact {exact}, rel err {rel}"
+            );
+        }
+        assert!((d.mean() - vals.iter().sum::<f64>() / vals.len() as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_is_associative_and_matches_union() {
+        let mut rng = Rng::new(14);
+        let mk = |rng: &mut Rng, n: usize| {
+            let h = Histogram::new();
+            for _ in 0..n {
+                h.record((rng.uniform() * 20.0 - 10.0).exp2());
+            }
+            h.data()
+        };
+        let (a, b, c) = (mk(&mut rng, 300), mk(&mut rng, 500), mk(&mut rng, 700));
+        // (a + b) + c
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        // a + (b + c)
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left.buckets, right.buckets);
+        assert_eq!(left.count, 1500);
+        assert!((left.sum - right.sum).abs() <= 1e-9 * left.sum.abs().max(1.0));
+        // Union equals recording everything into one histogram.
+        let mut ab = a.clone();
+        ab.merge(&b);
+        assert_eq!(ab.count, a.count + b.count);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let h = Arc::new(Histogram::new());
+        let threads = 4;
+        let per = 5000;
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let h = Arc::clone(&h);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + t as u64);
+                for _ in 0..per {
+                    h.record((rng.uniform() * 16.0 - 8.0).exp2());
+                }
+            }));
+        }
+        for j in handles {
+            j.join().unwrap();
+        }
+        let d = h.data();
+        assert_eq!(d.count, (threads * per) as u64);
+        assert_eq!(d.buckets.iter().sum::<u64>(), d.count);
+        assert!(d.sum > 0.0);
+    }
+}

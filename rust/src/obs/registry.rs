@@ -1,0 +1,240 @@
+//! Named metric registry: counters, gauges, histograms.
+//!
+//! A [`Registry`] is a set of three `name -> Arc<instrument>` maps.
+//! Lookup (`counter`/`gauge`/`histogram`) interns the name on first use
+//! and hands back a shared handle; hot paths cache the `Arc` once and
+//! then touch only lock-free atomics, so the maps' `RwLock`s are never
+//! on a sampling path. `BTreeMap` keeps snapshot output sorted and
+//! stable for text/JSON diffing.
+//!
+//! The process-global registry lives behind [`crate::obs::global`];
+//! components that need isolation (benches, the chaos suite — anything
+//! running under parallel `cargo test`) construct a private `Registry`
+//! and thread it through, e.g. `FarmConfig::registry`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use super::hist::{HistData, Histogram};
+
+/// Monotone event counter (relaxed atomics; merge = read both).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn incr(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-writer-wins f64 gauge (value bits in an `AtomicU64`); [`Gauge::add`]
+/// serves accumulate-style gauges like energy totals.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    pub fn add(&self, dv: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + dv).to_bits();
+            match self
+                .0
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(c) => cur = c,
+            }
+        }
+    }
+}
+
+/// A set of named instruments (see module docs).
+pub struct Registry {
+    counters: RwLock<BTreeMap<String, Arc<Counter>>>,
+    gauges: RwLock<BTreeMap<String, Arc<Gauge>>>,
+    hists: RwLock<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry {
+            counters: RwLock::new(BTreeMap::new()),
+            gauges: RwLock::new(BTreeMap::new()),
+            hists: RwLock::new(BTreeMap::new()),
+        }
+    }
+
+    /// Intern (or fetch) the counter named `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        if let Some(c) = self.counters.read().unwrap().get(name) {
+            return Arc::clone(c);
+        }
+        let mut w = self.counters.write().unwrap();
+        Arc::clone(w.entry(name.to_string()).or_default())
+    }
+
+    /// Intern (or fetch) the gauge named `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        if let Some(g) = self.gauges.read().unwrap().get(name) {
+            return Arc::clone(g);
+        }
+        let mut w = self.gauges.write().unwrap();
+        Arc::clone(w.entry(name.to_string()).or_default())
+    }
+
+    /// Intern (or fetch) the histogram named `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        if let Some(h) = self.hists.read().unwrap().get(name) {
+            return Arc::clone(h);
+        }
+        let mut w = self.hists.write().unwrap();
+        Arc::clone(w.entry(name.to_string()).or_default())
+    }
+
+    /// Point-in-time copy of every instrument, sorted by name.
+    pub fn snapshot(&self) -> Snapshot {
+        let counters = self
+            .counters
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, c)| (k.clone(), c.get()))
+            .collect();
+        let gauges = self
+            .gauges
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, g)| (k.clone(), g.get()))
+            .collect();
+        let hists = self
+            .hists
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, h)| (k.clone(), h.data()))
+            .collect();
+        Snapshot {
+            counters,
+            gauges,
+            hists,
+        }
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}
+
+impl fmt::Debug for Registry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "Registry({} counters, {} gauges, {} hists)",
+            self.counters.read().unwrap().len(),
+            self.gauges.read().unwrap().len(),
+            self.hists.read().unwrap().len()
+        )
+    }
+}
+
+/// A frozen, name-sorted copy of a [`Registry`]'s contents. Renderers
+/// live in [`crate::obs::snapshot_text`] / [`crate::obs::snapshot_json`].
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+    pub hists: Vec<(String, HistData)>,
+}
+
+impl Snapshot {
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        let i = self.counters.binary_search_by(|(k, _)| k.as_str().cmp(name)).ok()?;
+        Some(self.counters[i].1)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        let i = self.gauges.binary_search_by(|(k, _)| k.as_str().cmp(name)).ok()?;
+        Some(self.gauges[i].1)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&HistData> {
+        let i = self.hists.binary_search_by(|(k, _)| k.as_str().cmp(name)).ok()?;
+        Some(&self.hists[i].1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interning_returns_shared_handles() {
+        let reg = Registry::new();
+        let a = reg.counter("x.hits");
+        let b = reg.counter("x.hits");
+        a.incr(3);
+        b.incr(2);
+        assert_eq!(reg.counter("x.hits").get(), 5);
+
+        let g = reg.gauge("x.level");
+        g.set(1.5);
+        g.add(-0.25);
+        assert!((reg.gauge("x.level").get() - 1.25).abs() < 1e-12);
+
+        reg.histogram("x.lat").record(3.0);
+        assert_eq!(reg.histogram("x.lat").count(), 1);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_lookup_works() {
+        let reg = Registry::new();
+        reg.counter("b.two").incr(2);
+        reg.counter("a.one").incr(1);
+        reg.gauge("z.g").set(9.0);
+        reg.histogram("m.h").record(1.0);
+        let s = reg.snapshot();
+        let names: Vec<&str> = s.counters.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(names, vec!["a.one", "b.two"]);
+        assert_eq!(s.counter("a.one"), Some(1));
+        assert_eq!(s.counter("missing"), None);
+        assert_eq!(s.gauge("z.g"), Some(9.0));
+        assert_eq!(s.hist("m.h").unwrap().count, 1);
+    }
+
+    #[test]
+    fn concurrent_interning_and_updates() {
+        let reg = std::sync::Arc::new(Registry::new());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let reg = std::sync::Arc::clone(&reg);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500 {
+                    reg.counter("shared.hits").incr(1);
+                    reg.gauge(&format!("t{t}.last")).set(i as f64);
+                }
+            }));
+        }
+        for j in handles {
+            j.join().unwrap();
+        }
+        assert_eq!(reg.counter("shared.hits").get(), 2000);
+        assert_eq!(reg.snapshot().gauges.len(), 4);
+    }
+}

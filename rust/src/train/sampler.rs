@@ -349,6 +349,7 @@ impl LayerSampler for RustSampler {
         k: usize,
         burn: usize,
     ) -> Result<LayerStats> {
+        let _sp = crate::obs::span("sampler.stats");
         let m = self.machine(params, gm, beta);
         let plan = self.plan(&m, cmask);
         let mut chains = gibbs::Chains::random(self.batch, self.top.n_nodes(), &mut self.rng);
@@ -370,6 +371,7 @@ impl LayerSampler for RustSampler {
         s0: Option<&[f32]>,
         k: usize,
     ) -> Result<Vec<f32>> {
+        let _sp = crate::obs::span("sampler.sample");
         let m = self.machine(params, gm, beta);
         let n = self.top.n_nodes();
         let cmask = vec![0.0f32; n];

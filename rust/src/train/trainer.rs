@@ -228,8 +228,16 @@ impl<S: LayerSampler> Trainer<S> {
     }
 
     /// Run the full schedule against `data` ([rows, n_data] flattened).
+    /// Each epoch streams `train.grad_norm` / `train.epoch_ms` into the
+    /// global metrics registry and runs under a `train.epoch` span.
     pub fn run(&mut self, data: &[f32]) -> Result<()> {
+        let reg = crate::obs::global();
+        let h_gnorm = reg.histogram("train.grad_norm");
+        let h_epoch_ms = reg.histogram("train.epoch_ms");
+        let c_epochs = reg.counter("train.epochs");
         for epoch in 0..self.cfg.epochs {
+            let t_epoch = std::time::Instant::now();
+            let _sp = crate::obs::span("train.epoch");
             let mut gnorm = 0.0;
             for _ in 0..self.cfg.batches_per_epoch {
                 gnorm += self.train_batch(data)?;
@@ -258,6 +266,9 @@ impl<S: LayerSampler> Trainer<S> {
                 lambdas,
                 grad_norm: gnorm,
             });
+            h_gnorm.record(gnorm);
+            h_epoch_ms.record(t_epoch.elapsed().as_secs_f64() * 1e3);
+            c_epochs.incr(1);
         }
         Ok(())
     }

@@ -1,31 +1,33 @@
-//! Fixed-capacity ring buffer for streaming scalar observables.
+//! Fixed-capacity ring buffer for streaming observables.
 //!
 //! Used by the trace paths (`gibbs::engine::run_trace_tail`, the samplers'
 //! `trace_tail`) to keep only the most recent `cap` observations of a long
 //! Gibbs trace window, so Fig. 16-scale autocorrelation windows cost O(cap)
-//! memory per chain instead of O(k).
+//! memory per chain instead of O(k), and by `obs::span` to hold each
+//! thread's most recent trace events. The element type defaults to `f64`
+//! (the scalar-observable case) so existing call sites read unchanged.
 
-/// A fixed-capacity overwrite-oldest ring of `f64` samples.
+/// A fixed-capacity overwrite-oldest ring of samples.
 #[derive(Clone, Debug)]
-pub struct RingBuf {
+pub struct RingBuf<T = f64> {
     cap: usize,
-    buf: Vec<f64>,
+    buf: Vec<T>,
     /// Index of the oldest element once the buffer has wrapped.
     head: usize,
 }
 
-impl RingBuf {
-    pub fn new(cap: usize) -> RingBuf {
+impl<T> RingBuf<T> {
+    pub fn new(cap: usize) -> RingBuf<T> {
         assert!(cap > 0, "RingBuf capacity must be positive");
         RingBuf {
             cap,
-            buf: Vec::with_capacity(cap),
+            buf: Vec::with_capacity(cap.min(1024)),
             head: 0,
         }
     }
 
     /// Append a sample, evicting the oldest once full.
-    pub fn push(&mut self, v: f64) {
+    pub fn push(&mut self, v: T) {
         if self.buf.len() < self.cap {
             self.buf.push(v);
         } else {
@@ -46,8 +48,16 @@ impl RingBuf {
         self.cap
     }
 
+    /// Drop all contents (capacity is kept).
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.head = 0;
+    }
+}
+
+impl<T: Clone> RingBuf<T> {
     /// Contents in arrival order (oldest first).
-    pub fn to_vec(&self) -> Vec<f64> {
+    pub fn to_vec(&self) -> Vec<T> {
         let mut out = Vec::with_capacity(self.buf.len());
         out.extend_from_slice(&self.buf[self.head..]);
         out.extend_from_slice(&self.buf[..self.head]);
@@ -85,8 +95,21 @@ mod tests {
     }
 
     #[test]
+    fn generic_elements_and_clear() {
+        let mut r: RingBuf<(u32, &str)> = RingBuf::new(2);
+        r.push((1, "a"));
+        r.push((2, "b"));
+        r.push((3, "c"));
+        assert_eq!(r.to_vec(), vec![(2, "b"), (3, "c")]);
+        r.clear();
+        assert!(r.is_empty());
+        r.push((4, "d"));
+        assert_eq!(r.to_vec(), vec![(4, "d")]);
+    }
+
+    #[test]
     #[should_panic]
     fn zero_capacity_panics() {
-        let _ = RingBuf::new(0);
+        let _: RingBuf = RingBuf::new(0);
     }
 }

@@ -10,6 +10,7 @@
 //! Fault schedules come from `coordinator::faults` (seeded, deterministic)
 //! so failures reproduce: same spec + same seed = same injected schedule.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
@@ -18,6 +19,7 @@ use thermo_dtm::coordinator::batcher::BatcherConfig;
 use thermo_dtm::coordinator::{Farm, FarmConfig, FaultPlan, ServeError};
 use thermo_dtm::graph;
 use thermo_dtm::model::Dtm;
+use thermo_dtm::obs::Registry;
 use thermo_dtm::train::sampler::RustSampler;
 
 const ND: usize = 8;
@@ -58,6 +60,7 @@ fn base_cfg(chips: usize) -> FarmConfig {
         probe_interval: Duration::from_millis(10),
         stall_timeout: Duration::from_secs(1),
         shutdown_grace: Duration::from_millis(500),
+        registry: None,
     }
 }
 
@@ -290,6 +293,57 @@ fn all_chips_init_failure_fails_requests_typed() {
         "dead-on-arrival farm must fail requests with a typed error"
     );
     farm.shutdown();
+}
+
+#[test]
+fn metrics_reconcile_exactly_with_request_outcomes() {
+    // The obs spine's core invariant: the farm.* outcome counters in a
+    // private registry partition the submissions exactly — every request
+    // lands in precisely one counter (all resolution paths funnel through
+    // the supervisor's resolve()), and the latency histogram sees
+    // precisely the Ok ones. Run under the same storm as the transient
+    // fault test so success, retry-success, deadline expiry and typed
+    // failure all race.
+    let reg = Arc::new(Registry::new());
+    let plan = FaultPlan::parse("chip0=fail:0.5,all=spike:0.3:10").unwrap();
+    let mut cfg = base_cfg(2);
+    cfg.registry = Some(Arc::clone(&reg));
+    let farm = farm_with(cfg, plan);
+    let client = farm.client();
+    let waiters: Vec<_> = (0..24)
+        .map(|i| {
+            let deadline = match i % 3 {
+                0 => Some(Duration::from_secs(20)),
+                1 => Some(Duration::from_millis(200)),
+                _ => Some(Duration::from_micros(1)),
+            };
+            client.submit(2, deadline, 1)
+        })
+        .collect();
+    let (ok, (rejected, deadline, failed, shutdown)) = drain(waiters);
+    farm.shutdown();
+    let snap = reg.snapshot();
+    let c = |name: &str| snap.counter(name).unwrap_or(0) as usize;
+    assert_eq!(c("farm.requests"), 24, "every submission counted on admission");
+    assert_eq!(c("farm.resolved"), ok, "resolved == client-side Ok count");
+    assert_eq!(c("farm.deadline_miss"), deadline);
+    assert_eq!(c("farm.failed"), failed);
+    assert_eq!(c("farm.rejected"), rejected, "sheds surface as Rejected");
+    assert_eq!(c("farm.shutdown_rejected"), shutdown);
+    assert_eq!(
+        c("farm.resolved")
+            + c("farm.deadline_miss")
+            + c("farm.failed")
+            + c("farm.rejected")
+            + c("farm.shutdown_rejected"),
+        24,
+        "outcome counters must partition the submissions exactly"
+    );
+    let lat = snap.hist("farm.latency_ms").expect("farm.latency_ms must exist");
+    assert_eq!(
+        lat.count as usize, ok,
+        "latency histogram records exactly the Ok outcomes"
+    );
 }
 
 #[test]
