@@ -1,4 +1,4 @@
-//! END-TO-END VALIDATION (DESIGN.md / EXPERIMENTS.md):
+//! END-TO-END VALIDATION (see ARCHITECTURE.md for the stack layout):
 //! train a DTM through the full three-layer stack — Rust coordinator →
 //! PJRT-executed HLO (L2 JAX programs wrapping the L1 Pallas Gibbs kernel) —
 //! on the synthetic fashion workload, for a few hundred gradient steps,
@@ -7,7 +7,14 @@
 //! comparison for the trained model.
 //!
 //! Run: `cargo run --release --example e2e_train [-- --epochs N]`
-//! (pass `--backend rust` to run without artifacts).
+//!
+//! Flags to vary: `--epochs N` (default 12) and `--t-steps`/`--k-train`
+//! trade training time against quality; `--backend rust` swaps the HLO
+//! hot path for the pure-Rust engine so the example runs without
+//! `make artifacts`.
+//!
+//! Expected output: per-epoch lines with proxy-FID, mean r_yy[K] and ACP
+//! state, then a final device-vs-GPU energy summary for the trained model.
 
 use anyhow::Result;
 

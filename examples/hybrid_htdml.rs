@@ -3,6 +3,13 @@
 //! space; a DTM models the latents; the decoder maps DTM samples back.
 //!
 //! Run: `cargo run --release --example hybrid_htdml [-- --fast]`.
+//!
+//! Flags to vary: `--fast` shrinks the run for smoke-testing; the shared
+//! figure flags (`--out DIR`, `--seed N`, `--repr`, `--threads`) apply
+//! too, since this drives the same harness as `repro figures fig6`.
+//!
+//! Expected output: progress lines from the Fig. 6 harness and a
+//! `fig6*.csv` table under the output directory (default `results/`).
 
 use anyhow::Result;
 

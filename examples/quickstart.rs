@@ -3,6 +3,13 @@
 //! images, and report quality + the device-model energy cost.
 //!
 //! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+//!
+//! No flags — this is the smallest full tour of the stack. For knobs, see
+//! `e2e_train` (training) and `serve_demo` (serving).
+//!
+//! Expected output: the PJRT platform banner, the dtm_m32 topology line,
+//! three epochs of grad norms, a proxy-FID score, an energy summary, and
+//! a closing `quickstart OK`.
 
 use anyhow::Result;
 

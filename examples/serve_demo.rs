@@ -2,7 +2,15 @@
 //! report latency/throughput under concurrent load — the "serving paper"
 //! face of the L3 coordinator.
 //!
-//! Run: `cargo run --release --example serve_demo` (after `make artifacts`).
+//! Run: `cargo run --release --example serve_demo` (after `make artifacts`;
+//! without artifacts it falls back to a freshly built topology).
+//!
+//! No flags — batching and load are fixed in the source (device_batch 32,
+//! T=4, K=30). For the fault-tolerant multi-chip farm with deadlines,
+//! retries and fault injection, use `repro serve --chips N` instead.
+//!
+//! Expected output: a banner with the config, throughput in images/s, and
+//! latency p50/p99 in milliseconds.
 
 use std::time::{Duration, Instant};
 

@@ -1,0 +1,309 @@
+#!/usr/bin/env python3
+"""Algorithm-level verification of the bit-sliced chain-major engine (PR 8).
+
+The dev container has no Rust toolchain, so this ports `gibbs::bitsliced`'s
+numeric logic 1:1 to Python (stdlib only) and drives it end to end:
+
+  1. chain-major transpose: one int per NODE, bit c = chain slice_base+c;
+     round-trips random batches, including partial slices (B % 64 != 0)
+     with dummy lanes initialized down and masked out;
+  2. the logistic inverse-CDF threshold table: LOGIT_TAB[r] =
+     logit((r+0.5)/2^16) is monotone, and the amortized update rule
+     `tab[r] < z` reproduces P(flip) = sigmoid(z) to the 2^-16 uniform
+     quantization bound (the per-update bias the Rust engine accepts in
+     exchange for dropping exp() from the hot loop), saturating
+     deterministically past the table rails;
+  3. lane-broadcast field algebra: folded bias (h_i - sum_v w_v) plus
+     pre-doubled per-level accumulation over neighbor chain-words equals
+     the direct gather field in every lane, to float tolerance;
+  4. fused statistics identities on random slice states: per-slot pair
+     sums via live-masked XOR popcount (sum_lanes s_i*s_j = live -
+     2*popcount((w_i ^ w_j) & live_mask)) and per-lane node means via
+     up-counts (mean = 2*cnt - kept) both match direct accumulation,
+     exactly, for full and partial slices;
+  5. bit-sliced chromatic Gibbs with clamps — threshold-table updates,
+     all lanes of a node advanced per step — matches clamped conditional
+     marginals from exact enumeration (and clamped lane bits never move).
+
+Run: python3 python/tools/verify_bitsliced_sim.py -> ALL BITSLICED CHECKS PASSED
+"""
+
+import math
+import random
+
+LANES = 64
+LANE_MASK = (1 << LANES) - 1
+
+# ----------------------------------------------------------------- graph --
+
+
+def build(grid, rules):
+    """graph::build connection structure + checkerboard coloring."""
+    n = grid * grid
+    nbrs = [[] for _ in range(n)]
+    for y in range(grid):
+        for x in range(grid):
+            u = y * grid + x
+            for (a, b) in rules:
+                for (dx, dy) in [(a, b), (-b, a), (-a, -b), (b, -a)]:
+                    xx, yy = x + dx, y + dy
+                    if 0 <= xx < grid and 0 <= yy < grid:
+                        nbrs[u].append(yy * grid + xx)
+    color = [((i % grid) + (i // grid)) % 2 for i in range(n)]
+    return nbrs, color
+
+
+G8 = [(0, 1), (4, 1)]
+
+
+def quantize(v, bits, fs):
+    """hw::quantize: midrise ladder, 2^bits levels, rails at +/-fs."""
+    v = max(-fs, min(fs, v))
+    if bits >= 24:
+        return v
+    steps = (1 << bits) - 1
+    q = round((v + fs) * steps / (2 * fs))
+    return q * (2 * fs) / steps - fs
+
+
+# ------------------------------------------------- chain-major transpose --
+
+
+def from_chains(rows, slice_base, live, n):
+    """BitslicedState::from_chains: words[i] bit c = chain sb+c node i up."""
+    words = [0] * n
+    for c in range(live):
+        row = rows[slice_base + c]
+        for i in range(n):
+            if row[i] > 0:
+                words[i] |= 1 << c
+    return words
+
+
+def write_chains(words, rows, slice_base, live, n):
+    for c in range(live):
+        rows[slice_base + c] = [1 if (words[i] >> c) & 1 else -1 for i in range(n)]
+
+
+def check_transpose_roundtrip():
+    rng = random.Random(7)
+    n = 25
+    for b in (3, 64, 70, 128, 130):
+        rows = [[rng.choice([-1, 1]) for _ in range(n)] for _ in range(b)]
+        slices = (b + LANES - 1) // LANES
+        back = [None] * b
+        for si in range(slices):
+            live = b - si * LANES if si == slices - 1 else LANES
+            words = from_chains(rows, si * LANES, live, n)
+            # Dummy lanes (>= live) must be zero-initialized (down).
+            for i in range(n):
+                assert words[i] >> live == 0, "dummy lanes must init down"
+            write_chains(words, back, si * LANES, live, n)
+        assert back == rows, f"B={b}: chain-major transpose must round-trip"
+    print("1. chain-major transpose round-trips (full and partial slices)")
+
+
+# ------------------------------------------------------- threshold table --
+
+
+def logit_table():
+    return [math.log(u / (1.0 - u)) for u in ((r + 0.5) / 65536.0 for r in range(1 << 16))]
+
+
+def check_threshold_table():
+    tab = logit_table()
+    assert all(tab[r] <= tab[r + 1] for r in range(len(tab) - 1)), "monotone"
+    for z in (-8.0, -3.0, -0.5, 0.0, 0.31, 2.7, 6.0):
+        p = sum(1 for t in tab if t < z) / 65536.0
+        sig = 1.0 / (1.0 + math.exp(-z))
+        assert abs(p - sig) <= 1.0 / 65536.0 + 1e-12, f"z={z}: {p} vs {sig}"
+    # Rails: the table spans +/- logit(1/2^17) ~= +/-11.78; any field past
+    # them flips deterministically (strong-bias freeze semantics).
+    rail = math.log(131071.0)
+    assert -rail - 1e-9 < tab[0] and tab[-1] < rail + 1e-9
+    assert all(t < 12.0 for t in tab) and all(t > -12.0 for t in tab)
+    print("2. threshold table inverts sigmoid to 2^-16 (rails at +/-11.78)")
+
+
+# ------------------------------------------------- lane field + stats ----
+
+
+def compile_node(i, nbrs, wt, h):
+    """SweepPlanBitsliced per-node entry: folded bias + (nbr, 2w) list."""
+    wsum = sum(wt(i, j) for j in nbrs[i])
+    return h[i] - wsum, [(j, 2.0 * wt(i, j)) for j in nbrs[i]]
+
+
+def lane_fields(bias, entries, words, live):
+    """The lane-broadcast accumulation the Rust half() performs."""
+    f = [bias] * live
+    for (j, w2) in entries:
+        wj = words[j]
+        for c in range(live):
+            f[c] += w2 * ((wj >> c) & 1)
+    return f
+
+
+def check_field_algebra():
+    rng = random.Random(2)
+    for grid in (5, 8):
+        nbrs, _ = build(grid, G8)
+        n = grid * grid
+        w = {}
+        for u in range(n):
+            for v in nbrs[u]:
+                if u < v:
+                    w[(u, v)] = quantize(rng.gauss(0, 0.25), 8, 2.0)
+        h = [rng.gauss(0, 0.2) for _ in range(n)]
+
+        def wt(u, v):
+            return w[(min(u, v), max(u, v))]
+
+        live = 64
+        rows = [[rng.choice([-1, 1]) for _ in range(n)] for _ in range(live)]
+        words = from_chains(rows, 0, live, n)
+        worst = 0.0
+        for i in range(n):
+            bias, entries = compile_node(i, nbrs, wt, h)
+            fl = lane_fields(bias, entries, words, live)
+            for c in range(live):
+                direct = h[i] + sum(wt(i, j) * rows[c][j] for j in nbrs[i])
+                worst = max(worst, abs(direct - fl[c]))
+        assert worst < 1e-9, f"lane field decomposition error {worst}"
+    print("3. lane-broadcast field == direct gather field in every lane (< 1e-9)")
+
+
+def popcount(x):
+    return bin(x).count("1")
+
+
+def check_stats_identities():
+    rng = random.Random(11)
+    n = 30
+    kept = 5
+    for live in (64, 6):
+        live_mask = (1 << live) - 1
+        pair_xor = 0
+        pair_direct = 0
+        up = [[0] * live for _ in range(n)]
+        mean_direct = [[0] * live for _ in range(n)]
+        i, j = 4, 17
+        for _ in range(kept):
+            words = [rng.getrandbits(LANES) & live_mask for _ in range(n)]
+            # Pair: XOR identity on one (i, j) slot.
+            pair_xor += live - 2 * popcount((words[i] ^ words[j]) & live_mask)
+            for c in range(live):
+                si = 1 if (words[i] >> c) & 1 else -1
+                sj = 1 if (words[j] >> c) & 1 else -1
+                pair_direct += si * sj
+            # Mean: up-count identity per (node, lane).
+            for k in range(n):
+                for c in range(live):
+                    b = (words[k] >> c) & 1
+                    up[k][c] += b
+                    mean_direct[k][c] += 2 * b - 1
+        assert pair_xor == pair_direct, "XOR pair identity must be exact"
+        for k in range(n):
+            for c in range(live):
+                assert 2 * up[k][c] - kept == mean_direct[k][c], "mean identity"
+    print("4. XOR pair sums and up-count means match direct accumulation exactly")
+
+
+# ------------------------------------------- bitsliced Gibbs vs exact ----
+
+
+def exact_marginals(n, wpairs, h, cmask, cval):
+    free = [i for i in range(n) if cmask[i] <= 0.5]
+    logps = []
+    for bits_ in range(1 << len(free)):
+        s = [cval[i] if cmask[i] > 0.5 else 0 for i in range(n)]
+        for k, i in enumerate(free):
+            s[i] = 1 if (bits_ >> k) & 1 else -1
+        pair = sum(w * s[u] * s[v] for (u, v), w in wpairs.items())
+        field = sum(h[i] * s[i] for i in range(n))
+        logps.append((pair + field, s))
+    mx = max(lp for lp, _ in logps)
+    z, marg = 0.0, [0.0] * n
+    for lp, s in logps:
+        p = math.exp(lp - mx)
+        z += p
+        for i in range(n):
+            marg[i] += p * s[i]
+    return [x / z for x in marg]
+
+
+def check_gibbs_vs_enumeration():
+    rng = random.Random(3)
+    grid = 4
+    nbrs, color = build(grid, G8)
+    n = grid * grid
+    wpairs = {}
+    for u in range(n):
+        for v in nbrs[u]:
+            if u < v:
+                wpairs[(u, v)] = quantize(rng.gauss(0, 0.25), 8, 2.0)
+    h = [rng.gauss(0, 0.2) for _ in range(n)]
+
+    def wt(u, v):
+        return wpairs[(min(u, v), max(u, v))]
+
+    data = rng.sample(range(n), 6)
+    cmask = [1.0 if i in data else 0.0 for i in range(n)]
+    cval = [rng.choice([-1, 1]) if cmask[i] > 0.5 else 0 for i in range(n)]
+    exact = exact_marginals(n, wpairs, h, cmask, cval)
+
+    # Compile per-color (node, folded bias, entries) lists like the Rust
+    # plan; run one 64-lane slice plus a partial 6-lane slice (B = 70).
+    plans = {}
+    for c in (0, 1):
+        plans[c] = [
+            (i,) + compile_node(i, nbrs, wt, h)
+            for i in range(n)
+            if color[i] == c and cmask[i] <= 0.5
+        ]
+
+    tab = logit_table()
+    K, burn = 500, 60
+    acc, cnt = [0.0] * n, 0
+    for live in (64, 6):
+        rows = [
+            [cval[i] if cmask[i] > 0.5 else rng.choice([-1, 1]) for i in range(n)]
+            for _ in range(live)
+        ]
+        words = from_chains(rows, 0, live, n)
+        frozen = list(words)
+        live_mask = (1 << live) - 1
+        clamp_bits = [1 if cmask[i] > 0.5 else 0 for i in range(n)]
+        for it in range(K):
+            for c in (0, 1):
+                for (i, bias, entries) in plans[c]:
+                    f = lane_fields(bias, entries, words, live)
+                    # One 16-bit draw per lane; flip iff tab[r] < 2*beta*f,
+                    # the exp-free amortized Bernoulli of the Rust engine.
+                    w_new = 0
+                    for lane in range(live):
+                        r = rng.getrandbits(16)
+                        if tab[r] < 2.0 * f[lane]:
+                            w_new |= 1 << lane
+                    words[i] = w_new
+            if it >= burn:
+                for i in range(n):
+                    # Up-count fold: sum of lane spins = 2*popcount - live.
+                    acc[i] += 2 * popcount(words[i] & live_mask) - live
+                cnt += live
+        for i in range(n):
+            if clamp_bits[i]:
+                assert words[i] == frozen[i], "clamped lanes moved"
+    emp = [a / cnt for a in acc]
+    worst = max(abs(e - x) for e, x, m in zip(emp, exact, cmask) if m <= 0.5)
+    assert worst < 0.08, f"bitsliced Gibbs vs enumeration worst {worst:.3f}"
+    print(f"5. bitsliced Gibbs matches clamped conditional marginals (worst {worst:.4f})")
+
+
+if __name__ == "__main__":
+    check_transpose_roundtrip()
+    check_threshold_table()
+    check_field_algebra()
+    check_stats_identities()
+    check_gibbs_vs_enumeration()
+    print("ALL BITSLICED CHECKS PASSED")

@@ -9,6 +9,9 @@
 //!                     backend on the *same* DAC-quantized machine
 //!                     (identical target distribution), at the paper's
 //!                     L=70 scale and below;
+//!   * `bitsliced_*` — the chain-major bit-sliced backend vs packed on the
+//!                     same quantized L=70 machine at serving batches
+//!                     (B=64/128/256);
 //! plus the HLO/PJRT path when artifacts are present. Writes a
 //! machine-readable `BENCH_gibbs.json` at the repo root; CI compares it
 //! against `baselines/BENCH_gibbs.json` (python/tools/check_bench.py) and
@@ -20,7 +23,7 @@ use std::sync::Arc;
 use thermo_dtm::bench::Bencher;
 use thermo_dtm::gibbs::engine::{self, SweepPlan, SweepTopo};
 use thermo_dtm::gibbs::packed::quantize_machine;
-use thermo_dtm::gibbs::{self, SweepPlanPacked, WeightGrid};
+use thermo_dtm::gibbs::{self, SweepPlanBitsliced, SweepPlanPacked, WeightGrid};
 use thermo_dtm::graph;
 use thermo_dtm::model::LayerParams;
 use thermo_dtm::runtime::Runtime;
@@ -180,6 +183,98 @@ fn main() {
             packed_plan.state_bytes_per_chain(),
             f32_plan.state_bytes_per_chain()
         );
+    }
+
+    // Bit-sliced (chain-major) vs packed (color-major) on the SAME
+    // DAC-quantized L=70 machine — the serving-batch comparison. The
+    // bitsliced engine amortizes per-node work across 64 chains per word
+    // and replaces the per-update sigmoid+uniform with a 16-bit threshold
+    // table compare, so its edge grows with batch; the acceptance target
+    // is >= 2x samples/s over packed at B=256.
+    {
+        let (l, pat) = (70usize, "G12");
+        let top = graph::build("bench_bitsliced", l, pat, l * l / 4, 0).unwrap();
+        let n = top.n_nodes();
+        let mut rng = Rng::new(0);
+        let params = LayerParams::init(&top, &mut rng, 0.2);
+        let m = gibbs::Machine::new(&top, &params.w_edges, params.h.clone(), vec![0.0; n], 1.0);
+        let cmask = vec![0.0f32; n];
+        let topo = Arc::new(SweepTopo::new(&top, &cmask));
+        let qm = quantize_machine(&topo, &m, WeightGrid::default());
+        let packed_plan = SweepPlanPacked::from_topo(Arc::clone(&topo), &qm, WeightGrid::default());
+        let sliced_plan =
+            SweepPlanBitsliced::from_topo(Arc::clone(&topo), &qm, WeightGrid::default());
+
+        for batch in [64usize, 128, 256] {
+            let mt_used = mt.min(batch);
+            let mut chains = gibbs::Chains::random(batch, n, &mut rng);
+            let xt = vec![0.0f32; batch * n];
+            let samples = (batch * k_amort) as f64;
+            let packed_sps = b
+                .iter_items(&format!("repr_packed_L{l}_{pat}_B{batch}"), samples, || {
+                    gibbs::packed::run_sweeps_packed(
+                        &packed_plan,
+                        &mut chains,
+                        &xt,
+                        k_amort,
+                        mt_used,
+                        &mut rng,
+                    );
+                })
+                .throughput();
+            let sliced_sps = b
+                .iter_items(
+                    &format!("repr_bitsliced_L{l}_{pat}_B{batch}"),
+                    samples,
+                    || {
+                        gibbs::bitsliced::run_sweeps_bitsliced(
+                            &sliced_plan,
+                            &mut chains,
+                            &xt,
+                            k_amort,
+                            mt_used,
+                            &mut rng,
+                        );
+                    },
+                )
+                .throughput();
+
+            entries.push(json::obj(vec![
+                ("name", Value::Str(format!("bitsliced_L{l}_{pat}_B{batch}"))),
+                ("grid", Value::Num(l as f64)),
+                ("pattern", Value::Str(pat.to_string())),
+                ("batch", Value::Num(batch as f64)),
+                ("threads", Value::Num(mt_used as f64)),
+                ("sweeps_per_engine_call", Value::Num(k_amort as f64)),
+                ("packed_samples_per_sec", Value::Num(packed_sps)),
+                ("bitsliced_samples_per_sec", Value::Num(sliced_sps)),
+                (
+                    "speedup_bitsliced_vs_packed",
+                    Value::Num(sliced_sps / packed_sps.max(1e-9)),
+                ),
+                (
+                    "packed_state_bytes_per_chain",
+                    Value::Num(packed_plan.state_bytes_per_chain() as f64),
+                ),
+                (
+                    "bitsliced_state_bytes_per_chain",
+                    Value::Num(sliced_plan.state_bytes_per_chain() as f64),
+                ),
+                (
+                    "bitsliced_state_bytes_per_slice",
+                    Value::Num(sliced_plan.state_bytes_per_slice() as f64),
+                ),
+                (
+                    "bitsliced_plan_bytes_per_sweep",
+                    Value::Num(sliced_plan.plan_bytes_per_sweep() as f64),
+                ),
+            ]));
+            println!(
+                "  -> L{l} B{batch} bitsliced/packed speedup {:.2}x  ({} B state per slice)",
+                sliced_sps / packed_sps.max(1e-9),
+                sliced_plan.state_bytes_per_slice()
+            );
+        }
     }
 
     // HLO hot path (chunk iterations per call; report per-iteration rate).

@@ -25,7 +25,8 @@ pub struct FigOpts {
     /// Worker threads for the chain-parallel Gibbs engine (`--threads`).
     pub threads: usize,
     /// Spin representation for the engine-backed figures (`--repr`);
-    /// `Auto` picks packed whenever a layer's weights sit on a DAC grid.
+    /// `Auto` picks a 1-bit backend whenever a layer's weights sit on a
+    /// DAC grid (bit-sliced at batch >= 64, packed below).
     pub repr: Repr,
 }
 
@@ -38,8 +39,9 @@ impl FigOpts {
             artifacts: args.str_opt("artifacts", "artifacts"),
             seed: args.usize_opt("seed", 0)? as u64,
             threads: args.usize_opt("threads", crate::util::threadpool::default_threads())?,
-            repr: Repr::from_name(&repr_name)
-                .ok_or_else(|| anyhow::anyhow!("unknown --repr {repr_name:?} (packed|f32|auto)"))?,
+            repr: Repr::from_name(&repr_name).ok_or_else(|| {
+                anyhow::anyhow!("unknown --repr {repr_name:?} (packed|bitsliced|f32|auto)")
+            })?,
         })
     }
 

@@ -1,0 +1,744 @@
+//! Bit-sliced chain-major spin representation — the third engine backend,
+//! and the raw-speed endgame of the packed popcount engine for large-batch
+//! serving workloads.
+//!
+//! [`super::packed`] transposes the *node* axis into bits: one chain's row
+//! becomes `n/64` words and each update still costs one sigmoid and one
+//! uniform draw per chain. This module transposes the *chain* axis instead:
+//!
+//! ```text
+//!   BitslicedState.words[i]   (one u64 per NODE)
+//!   bit 0 .. bit 63  =  spin of node i in chains sb+0 .. sb+63
+//! ```
+//!
+//! so a slice of 64 chains advances together and every per-node quantity —
+//! the folded bias, the per-level coupling, the threshold compare — is
+//! computed once and applied across 64 lanes:
+//!
+//! * [`SweepPlanBitsliced`] compiles from the same `Arc<SweepTopo>` +
+//!   DAC [`WeightGrid`] as the packed plan (identical folded-bias /
+//!   pre-doubled level-table algebra), but keeps one entry per neighbor
+//!   `(node id, level)` — neighbor *words* are whole nodes here, so the
+//!   per-level accumulation is a lane-broadcast multiply-add over the
+//!   neighbor's chain word instead of a popcount;
+//! * the RNG amortizes per word: 16-bit lane uniforms are unpacked four
+//!   per `next_u64` (16 draws serve 64 lanes) and the Bernoulli flip is a
+//!   *threshold compare* against a precomputed logistic inverse-CDF table
+//!   — `u < sigmoid(z)  ⟺  logit(u) < z` — so the per-update `exp` of the
+//!   f32/packed paths disappears entirely. The table quantizes the uniform
+//!   to 16 bits, biasing each update probability by at most 2^-16 (±1.6e-5,
+//!   invisible at the suite's 0.08 Monte-Carlo tolerance; see
+//!   `python/tools/verify_bitsliced_sim.py` for the executable bound);
+//! * fused pair statistics use the XOR identity
+//!   `Σ_lanes s_i·s_j = live − 2·popcount((w_i ⊕ w_j) & live_mask)`,
+//!   one word-op for 64 chains where the packed path walks 2E bits per
+//!   chain.
+//!
+//! Batches that are not a multiple of 64 pad the last slice with dummy
+//! lanes (initialized down, masked out of statistics and never written
+//! back); [`Repr::Auto`](super::Repr) only engages this backend at B ≥ 64,
+//! where at most half a slice is padding. Chains within a slice share one
+//! forked RNG stream (forked per *slice*, not per chain), so results are
+//! thread-count invariant but differ draw-for-draw from the f32/packed
+//! engines — agreement is statistical, against the same quantized target
+//! distribution (`tests/engine_equivalence.rs`).
+
+use std::sync::{Arc, OnceLock};
+
+use crate::util::ring::RingBuf;
+use crate::util::rng::Rng;
+
+use super::engine::{map_chains, SweepTopo};
+use super::packed::WeightGrid;
+use super::{Chains, Machine, SweepStats};
+
+/// Lanes per slice: the machine word width the representation is sliced to.
+pub const LANES: usize = 64;
+
+/// Logistic inverse-CDF threshold table: `LOGIT_TAB[r] = logit((r+0.5)/2^16)`
+/// for the 16-bit lane uniform `r`, so `logit(u) < z ⟺ u < sigmoid(z)`
+/// without evaluating `exp` per update. 2^16 f32 entries = 256 KiB, built
+/// once per process on first use.
+fn logit_table() -> &'static [f32] {
+    static TAB: OnceLock<Vec<f32>> = OnceLock::new();
+    TAB.get_or_init(|| {
+        (0..1u32 << 16)
+            .map(|r| {
+                let u = (r as f64 + 0.5) / 65536.0;
+                (u / (1.0 - u)).ln() as f32
+            })
+            .collect()
+    })
+}
+
+/// One slice's spins: `words[i]` holds node `i` across up to 64 chains
+/// (bit c = chain `slice_base + c` is up). Indexed directly by node id —
+/// no color-major packing is needed because edges cross the bipartition,
+/// so a half-sweep never reads a word it writes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitslicedState {
+    pub words: Vec<u64>,
+}
+
+impl BitslicedState {
+    /// Transpose `live` chain rows starting at `slice_base` out of the
+    /// row-major [B, N] state (dummy lanes beyond `live` initialize down).
+    pub fn from_chains(chains: &Chains, slice_base: usize, live: usize) -> BitslicedState {
+        let n = chains.n;
+        assert!((1..=LANES).contains(&live), "live lanes");
+        assert!(slice_base + live <= chains.b, "slice bounds");
+        let mut words = vec![0u64; n];
+        for c in 0..live {
+            let row = chains.row(slice_base + c);
+            for (w, &v) in words.iter_mut().zip(row) {
+                *w |= ((v > 0.0) as u64) << c;
+            }
+        }
+        BitslicedState { words }
+    }
+
+    /// The ±1 spin of node `i` in lane `c`.
+    #[inline]
+    pub fn spin(&self, i: usize, c: usize) -> f32 {
+        if self.words[i] >> c & 1 == 1 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Transpose back into the `live` chain rows starting at `slice_base`.
+    pub fn write_chains(&self, chains: &mut Chains, slice_base: usize, live: usize) {
+        let n = chains.n;
+        for c in 0..live {
+            let row = &mut chains.s[(slice_base + c) * n..(slice_base + c + 1) * n];
+            for (dst, &w) in row.iter_mut().zip(&self.words) {
+                *dst = if w >> c & 1 == 1 { 1.0 } else { -1.0 };
+            }
+        }
+    }
+}
+
+/// One color class of a bitsliced plan (struct-of-arrays): per listed node
+/// the folded bias and forward coupling, plus `(neighbor node, level)`
+/// entries into the pre-doubled per-color weight table.
+struct BitslicedColor {
+    /// Node ids to update (the topo's scalar sweep order).
+    nodes: Vec<u32>,
+    /// Effective bias per listed node: h_i − Σ_v w_v (constant folded).
+    bias: Vec<f32>,
+    /// Forward coupling per listed node.
+    gm: Vec<f32>,
+    /// Prefix offsets into `nbr`/`lv`; len = nodes.len() + 1.
+    off: Vec<u32>,
+    /// Entry: neighbor node id (the chain word to read).
+    nbr: Vec<u32>,
+    /// Entry: index into `wtab2`.
+    lv: Vec<u16>,
+    /// Per-color weight table, pre-doubled: 2·(distinct quantized values).
+    wtab2: Vec<f32>,
+    /// Any listed node has gm ≠ 0 (whether per-lane bases must be built).
+    has_gm: bool,
+}
+
+/// A sweep schedule precompiled for one `(SweepTopo, Machine)` pairing with
+/// on-grid edge weights — the chain-major counterpart of
+/// [`super::packed::SweepPlanPacked`].
+pub struct SweepPlanBitsliced {
+    pub topo: Arc<SweepTopo>,
+    pub beta: f32,
+    pub grid: WeightGrid,
+    colors: [BitslicedColor; 2],
+}
+
+impl SweepPlanBitsliced {
+    /// Compile `m` against a precompiled topo. Panics if any non-padding
+    /// weight is off `grid` — callers either [`WeightGrid::detect`] first
+    /// (`Repr::Auto`) or [`super::packed::quantize_machine`] first (forced
+    /// `Repr::Bitsliced`), exactly like the packed plan.
+    pub fn from_topo(topo: Arc<SweepTopo>, m: &Machine, grid: WeightGrid) -> SweepPlanBitsliced {
+        let (n, d) = (topo.n, topo.degree);
+        assert_eq!(m.w_slots.len(), n * d, "weight table length");
+        assert_eq!(m.h.len(), n, "bias length");
+        assert_eq!(m.gm.len(), n, "gm length");
+        assert!(
+            grid.holds(&topo, m),
+            "SweepPlanBitsliced requires edge weights on the {}-bit ±{} DAC grid",
+            grid.bits,
+            grid.full_scale
+        );
+        let build = |c: usize| -> BitslicedColor {
+            let nodes = topo.color_nodes(c).to_vec();
+            let off_t = topo.color_off(c);
+            let nbr_t = topo.color_nbr(c);
+            let slot = topo.color_slot(c);
+            let mut wtab2: Vec<f32> = Vec::new();
+            let mut level_of = |w: f32| -> u16 {
+                match wtab2.iter().position(|&t| t == 2.0 * w) {
+                    Some(p) => p as u16,
+                    None => {
+                        wtab2.push(2.0 * w);
+                        (wtab2.len() - 1) as u16
+                    }
+                }
+            };
+            let mut bias = Vec::with_capacity(nodes.len());
+            let mut gm = Vec::with_capacity(nodes.len());
+            let mut off = Vec::with_capacity(nodes.len() + 1);
+            off.push(0u32);
+            let mut nbr = Vec::new();
+            let mut lv = Vec::new();
+            let mut has_gm = false;
+            for (j, &i) in nodes.iter().enumerate() {
+                gm.push(m.gm[i as usize]);
+                has_gm |= m.gm[i as usize] != 0.0;
+                let mut wsum = 0.0f64;
+                let (a, b) = (off_t[j] as usize, off_t[j + 1] as usize);
+                for t in a..b {
+                    let w = m.w_slots[slot[t] as usize];
+                    wsum += w as f64;
+                    nbr.push(nbr_t[t]);
+                    lv.push(level_of(w));
+                }
+                bias.push(m.h[i as usize] - wsum as f32);
+                off.push(nbr.len() as u32);
+            }
+            assert!(
+                wtab2.len() <= u16::MAX as usize + 1,
+                "weight level table overflows u16 ({} levels); quantize to fewer bits",
+                wtab2.len()
+            );
+            BitslicedColor {
+                nodes,
+                bias,
+                gm,
+                off,
+                nbr,
+                lv,
+                wtab2,
+                has_gm,
+            }
+        };
+        SweepPlanBitsliced {
+            beta: m.beta,
+            grid,
+            colors: [build(0), build(1)],
+            topo,
+        }
+    }
+
+    /// Nodes updated per full sweep (unclamped nodes of both colors).
+    pub fn updates_per_sweep(&self) -> usize {
+        self.topo.updates_per_sweep()
+    }
+
+    /// Bytes of mutable state per chain: one u64 per node shared by 64
+    /// lanes (n/8 B — the same bit-per-node budget as the packed row).
+    pub fn state_bytes_per_chain(&self) -> usize {
+        self.topo.n * 8 / LANES
+    }
+
+    /// Bytes of mutable state per 64-chain slice (the unit a worker owns).
+    pub fn state_bytes_per_slice(&self) -> usize {
+        self.topo.n * 8
+    }
+
+    /// Bytes the plan streams per *slice* sweep (entry lists + per-node
+    /// scalars) — read once for all 64 lanes, so the per-chain share is
+    /// this / 64.
+    pub fn plan_bytes_per_sweep(&self) -> usize {
+        // nbr(4) + lv(2) per entry; bias(4) + gm(4) + off(4) + nodes(4)
+        // per node.
+        let entries = self.colors[0].nbr.len() + self.colors[1].nbr.len();
+        entries * 6 + self.updates_per_sweep() * 16
+    }
+
+    /// Per-lane field bases for one color and one slice, or `None` when
+    /// every listed node has gm = 0 (the common serving case: the scalar
+    /// folded bias broadcasts instead). Built once per run call — the
+    /// strided x^t gather is paid per slice, not per sweep.
+    fn lane_bases(
+        &self,
+        c: usize,
+        xt: &[f32],
+        n: usize,
+        slice_base: usize,
+        live: usize,
+    ) -> Option<Vec<f32>> {
+        let pc = &self.colors[c];
+        if !pc.has_gm {
+            return None;
+        }
+        let mut base = vec![0.0f32; pc.nodes.len() * LANES];
+        for (j, &i) in pc.nodes.iter().enumerate() {
+            let (b0, g) = (pc.bias[j], pc.gm[j]);
+            let row = &mut base[j * LANES..(j + 1) * LANES];
+            if g == 0.0 {
+                row.fill(b0);
+            } else {
+                for (cc, dst) in row.iter_mut().enumerate().take(live) {
+                    *dst = b0 + g * xt[(slice_base + cc) * n + i as usize];
+                }
+                for dst in row.iter_mut().skip(live) {
+                    *dst = b0;
+                }
+            }
+        }
+        Some(base)
+    }
+
+    /// Both colors' lane bases for one slice (see [`Self::lane_bases`]).
+    fn slice_bases(
+        &self,
+        xt: &[f32],
+        n: usize,
+        slice_base: usize,
+        live: usize,
+    ) -> [Option<Vec<f32>>; 2] {
+        [
+            self.lane_bases(0, xt, n, slice_base, live),
+            self.lane_bases(1, xt, n, slice_base, live),
+        ]
+    }
+
+    /// Update every listed node of color `c` across all 64 lanes of `st`.
+    fn half(&self, c: usize, st: &mut BitslicedState, base: Option<&[f32]>, rng: &mut Rng) {
+        let pc = &self.colors[c];
+        let two_beta = 2.0 * self.beta;
+        let tab = logit_table();
+        let mut f = [0.0f32; LANES];
+        for j in 0..pc.nodes.len() {
+            match base {
+                Some(bs) => f.copy_from_slice(&bs[j * LANES..(j + 1) * LANES]),
+                None => f.fill(pc.bias[j]),
+            }
+            let (a, b) = (pc.off[j] as usize, pc.off[j + 1] as usize);
+            for t in a..b {
+                let w = st.words[pc.nbr[t] as usize];
+                let wv = pc.wtab2[pc.lv[t] as usize];
+                // Lane-broadcast accumulate: f_c += 2w · b_c. Branchless
+                // bit-to-float keeps the loop vectorizable.
+                for (cc, fc) in f.iter_mut().enumerate() {
+                    *fc += wv * ((w >> cc) & 1) as f32;
+                }
+            }
+            // 16-bit lane uniforms, four per draw; threshold against the
+            // logistic inverse-CDF instead of sigmoid+compare per lane.
+            let mut word = 0u64;
+            for q in 0..LANES / 4 {
+                let u = rng.next_u64();
+                for h in 0..4 {
+                    let cc = q * 4 + h;
+                    let r = (u >> (16 * h)) as u16;
+                    word |= ((tab[r as usize] < two_beta * f[cc]) as u64) << cc;
+                }
+            }
+            st.words[pc.nodes[j] as usize] = word;
+        }
+    }
+
+    /// One full two-color sweep of a 64-chain slice. Each half-sweep is a
+    /// `gibbs.halfsweep` span, matching the f32/packed paths.
+    #[inline]
+    pub fn sweep_slice(
+        &self,
+        st: &mut BitslicedState,
+        bases: &[Option<Vec<f32>>; 2],
+        rng: &mut Rng,
+    ) {
+        {
+            let _sp = crate::obs::span("gibbs.halfsweep");
+            self.half(0, st, bases[0].as_deref(), rng);
+        }
+        {
+            let _sp = crate::obs::span("gibbs.halfsweep");
+            self.half(1, st, bases[1].as_deref(), rng);
+        }
+    }
+}
+
+/// Slice geometry for a batch: `(number of slices, live lanes in the last)`.
+fn slices_for(b: usize) -> (usize, usize) {
+    let slices = b.div_ceil(LANES);
+    let last = b - (slices - 1) * LANES;
+    (slices, last)
+}
+
+#[inline]
+fn live_of(si: usize, slices: usize, last: usize) -> usize {
+    if si + 1 == slices {
+        last
+    } else {
+        LANES
+    }
+}
+
+/// Fork one RNG stream per 64-chain slice (slice-major, tag = slice id).
+/// Eager forking before dispatch keeps results thread-count invariant,
+/// like [`super::engine::run_sweeps`]'s per-chain forks.
+fn slice_rngs(rng: &mut Rng, slices: usize) -> Vec<Rng> {
+    (0..slices).map(|si| rng.fork(si as u64)).collect()
+}
+
+/// Bitsliced counterpart of `engine::run_sweeps`: each 64-chain slice
+/// transposes on entry, sweeps chain-major, transposes back on exit.
+/// Clamped nodes' words are carried but never written, so clamp values
+/// survive the round trip.
+pub fn run_sweeps_bitsliced(
+    plan: &SweepPlanBitsliced,
+    chains: &mut Chains,
+    xt: &[f32],
+    k: usize,
+    threads: usize,
+    rng: &mut Rng,
+) {
+    let n = chains.n;
+    assert_eq!(plan.topo.n, n, "plan/chains node count");
+    assert_eq!(xt.len(), chains.b * n, "xt shape");
+    let (slices, last) = slices_for(chains.b);
+    let rngs = slice_rngs(rng, slices);
+    let states = map_chains(slices, threads, |si| {
+        let live = live_of(si, slices, last);
+        let mut st = BitslicedState::from_chains(chains, si * LANES, live);
+        let mut r = rngs[si].clone();
+        let bases = plan.slice_bases(xt, n, si * LANES, live);
+        for _ in 0..k {
+            plan.sweep_slice(&mut st, &bases, &mut r);
+        }
+        st
+    });
+    for (si, st) in states.into_iter().enumerate() {
+        st.write_chains(chains, si * LANES, live_of(si, slices, last));
+    }
+    crate::obs::record_engine_run(chains.b, k, plan.updates_per_sweep());
+}
+
+/// Bitsliced counterpart of `engine::run_stats`. Pair sums use the XOR
+/// identity `Σ_lanes s_i·s_j = live − 2·popcount((w_i ⊕ w_j) & live_mask)`
+/// (one word-op per slot per kept sweep, for the whole slice); per-lane
+/// node means accumulate as up-counts and convert via `2·cnt − kept`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_stats_bitsliced(
+    plan: &SweepPlanBitsliced,
+    chains: &mut Chains,
+    xt: &[f32],
+    k: usize,
+    burn: usize,
+    threads: usize,
+    rng: &mut Rng,
+) -> SweepStats {
+    let n = chains.n;
+    let d = plan.topo.degree;
+    let b = chains.b;
+    assert_eq!(plan.topo.n, n, "plan/chains node count");
+    assert_eq!(xt.len(), b * n, "xt shape");
+    let (slices, last) = slices_for(b);
+    let rngs = slice_rngs(rng, slices);
+    let (stat_slot, stat_node, stat_nbr) = plan.topo.stat_lists();
+    let kept = k.saturating_sub(burn);
+    let per_slice = map_chains(slices, threads, |si| {
+        let live = live_of(si, slices, last);
+        let live_mask = if live == LANES { !0u64 } else { (1u64 << live) - 1 };
+        let mut st = BitslicedState::from_chains(chains, si * LANES, live);
+        let mut r = rngs[si].clone();
+        let bases = plan.slice_bases(xt, n, si * LANES, live);
+        let mut pair = vec![0i64; n * d];
+        let mut up = vec![0u32; n * LANES];
+        for it in 0..k {
+            plan.sweep_slice(&mut st, &bases, &mut r);
+            if it >= burn {
+                for (i, &w) in st.words.iter().enumerate() {
+                    let cnt = &mut up[i * LANES..(i + 1) * LANES];
+                    for (cc, acc) in cnt.iter_mut().enumerate().take(live) {
+                        *acc += (w >> cc & 1) as u32;
+                    }
+                }
+                for t in 0..stat_slot.len() {
+                    let x = st.words[stat_node[t] as usize] ^ st.words[stat_nbr[t] as usize];
+                    pair[stat_slot[t] as usize] +=
+                        live as i64 - 2 * (x & live_mask).count_ones() as i64;
+                }
+            }
+        }
+        (st, pair, up)
+    });
+    let mut stats = SweepStats::new(b, n, d);
+    stats.count = kept;
+    for (si, (st, pair, up)) in per_slice.into_iter().enumerate() {
+        let live = live_of(si, slices, last);
+        st.write_chains(chains, si * LANES, live);
+        for (acc, &v) in stats.pair.iter_mut().zip(&pair) {
+            *acc += v as f64;
+        }
+        for cc in 0..live {
+            let bi = si * LANES + cc;
+            for i in 0..n {
+                stats.mean_b[bi * n + i] = (2 * up[i * LANES + cc] as i64 - kept as i64) as f64;
+            }
+        }
+    }
+    crate::obs::record_engine_run(b, k, plan.updates_per_sweep());
+    stats
+}
+
+/// Bitsliced counterpart of `engine::run_trace_tail`: the App. G projection
+/// observable is accumulated lane-parallel per sweep and streamed through
+/// one fixed-size ring per live lane.
+#[allow(clippy::too_many_arguments)]
+pub fn run_trace_tail_bitsliced(
+    plan: &SweepPlanBitsliced,
+    chains: &mut Chains,
+    xt: &[f32],
+    k: usize,
+    keep: usize,
+    proj: &[f32],
+    stride: usize,
+    threads: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<f64>> {
+    let n = chains.n;
+    assert_eq!(plan.topo.n, n, "plan/chains node count");
+    assert_eq!(xt.len(), chains.b * n, "xt shape");
+    assert!(stride >= 1 && proj.len() >= n * stride, "projection shape");
+    let keep = keep.min(k);
+    let (slices, last) = slices_for(chains.b);
+    let rngs = slice_rngs(rng, slices);
+    let per_slice = map_chains(slices, threads, |si| {
+        let live = live_of(si, slices, last);
+        let mut st = BitslicedState::from_chains(chains, si * LANES, live);
+        let mut r = rngs[si].clone();
+        let bases = plan.slice_bases(xt, n, si * LANES, live);
+        let mut rings: Vec<RingBuf> = (0..live).map(|_| RingBuf::new(keep.max(1))).collect();
+        let mut acc = [0.0f64; LANES];
+        for _ in 0..k {
+            plan.sweep_slice(&mut st, &bases, &mut r);
+            acc[..live].fill(0.0);
+            for (i, &w) in st.words.iter().enumerate() {
+                let p = proj[i * stride] as f64;
+                for (cc, a) in acc.iter_mut().enumerate().take(live) {
+                    *a += if w >> cc & 1 == 1 { p } else { -p };
+                }
+            }
+            for (cc, ring) in rings.iter_mut().enumerate() {
+                ring.push(acc[cc]);
+            }
+        }
+        let series: Vec<Vec<f64>> = rings
+            .into_iter()
+            .map(|ring| if keep == 0 { Vec::new() } else { ring.to_vec() })
+            .collect();
+        (st, series)
+    });
+    let mut out = Vec::with_capacity(chains.b);
+    for (si, (st, series)) in per_slice.into_iter().enumerate() {
+        st.write_chains(chains, si * LANES, live_of(si, slices, last));
+        out.extend(series);
+    }
+    crate::obs::record_engine_run(chains.b, k, plan.updates_per_sweep());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::packed::quantize_machine;
+    use super::*;
+    use crate::graph;
+
+    fn quantized_setup(grid_l: usize, pat: &str, seed: u64) -> (graph::Topology, Machine) {
+        let top = graph::build("t", grid_l, pat, (grid_l * grid_l / 4).max(1), 0).unwrap();
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> = (0..top.n_edges()).map(|_| 0.25 * rng.normal() as f32).collect();
+        let h: Vec<f32> = (0..top.n_nodes()).map(|_| 0.2 * rng.normal() as f32).collect();
+        let gm: Vec<f32> = top.data_mask().iter().map(|&x| 0.5 * x).collect();
+        let m = Machine::new(&top, &w, h, gm, 1.0);
+        let topo = SweepTopo::new(&top, &vec![0.0; top.n_nodes()]);
+        let qm = quantize_machine(&topo, &m, WeightGrid::default());
+        (top, qm)
+    }
+
+    #[test]
+    fn logit_table_inverts_sigmoid_to_16_bit_resolution() {
+        let tab = logit_table();
+        assert_eq!(tab.len(), 1 << 16);
+        // Monotone, and P(tab[r] < z) over the uniform 16-bit r reproduces
+        // sigmoid(z) to the 2^-16 quantization bound (+ table rounding).
+        assert!(tab.windows(2).all(|w| w[0] <= w[1]));
+        for &z in &[-6.0f32, -2.5, -0.3, 0.0, 0.7, 3.0, 8.0] {
+            let hits = tab.iter().filter(|&&t| t < z).count();
+            let p = hits as f64 / 65536.0;
+            let sig = 1.0 / (1.0 + (-z as f64).exp());
+            assert!(
+                (p - sig).abs() < 1.0 / 65536.0 + 1e-9,
+                "z={z}: table P {p} vs sigmoid {sig}"
+            );
+        }
+        // Saturation: fields past the table's ±logit(1/2^17) rails always
+        // (never) flip — the strong-bias freeze behavior.
+        assert!(tab.iter().all(|&t| t < 12.0 && t > -12.0));
+    }
+
+    #[test]
+    fn transpose_roundtrip_and_partial_slice() {
+        for b in [3usize, 64, 100, 128] {
+            let top = graph::build("t", 5, "G8", 6, 0).unwrap();
+            let n = top.n_nodes();
+            let mut rng = Rng::new(7);
+            let chains = Chains::random(b, n, &mut rng);
+            let (slices, last) = slices_for(b);
+            assert_eq!(slices, b.div_ceil(64));
+            let mut back = Chains {
+                b,
+                n,
+                s: vec![0.0; b * n],
+            };
+            for si in 0..slices {
+                let live = live_of(si, slices, last);
+                let st = BitslicedState::from_chains(&chains, si * LANES, live);
+                for cc in 0..live {
+                    for i in 0..n {
+                        assert_eq!(st.spin(i, cc), chains.s[(si * LANES + cc) * n + i]);
+                    }
+                }
+                st.write_chains(&mut back, si * LANES, live);
+            }
+            assert_eq!(chains.s, back.s, "B={b}: transpose must round-trip");
+        }
+    }
+
+    #[test]
+    fn bitsliced_spins_stay_pm_one_and_clamps_hold() {
+        let (top, qm) = quantized_setup(5, "G8", 3);
+        let n = top.n_nodes();
+        let cmask = top.data_mask();
+        let topo = Arc::new(SweepTopo::new(&top, &cmask));
+        let plan = SweepPlanBitsliced::from_topo(topo, &qm, WeightGrid::default());
+        // A batch that is deliberately not a lane multiple.
+        let b = 70;
+        let mut rng = Rng::new(9);
+        let mut chains = Chains::random(b, n, &mut rng);
+        let cval: Vec<f32> = (0..b * n).map(|_| rng.spin()).collect();
+        chains.impose_clamps(&cmask, &cval);
+        let xt: Vec<f32> = (0..b * n).map(|_| rng.spin()).collect();
+        run_sweeps_bitsliced(&plan, &mut chains, &xt, 10, 2, &mut rng);
+        assert!(chains.s.iter().all(|&x| x == 1.0 || x == -1.0));
+        for bi in 0..b {
+            for i in 0..n {
+                if cmask[i] > 0.5 {
+                    assert_eq!(chains.s[bi * n + i], cval[bi * n + i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bitsliced_thread_count_does_not_change_results() {
+        let (top, qm) = quantized_setup(6, "G8", 6);
+        let n = top.n_nodes();
+        let topo = Arc::new(SweepTopo::new(&top, &vec![0.0; n]));
+        let plan = SweepPlanBitsliced::from_topo(topo, &qm, WeightGrid::default());
+        let b = 130; // three slices, the last partial
+        let mut init = Rng::new(13);
+        let start = Chains::random(b, n, &mut init);
+        let xt: Vec<f32> = (0..b * n).map(|_| init.spin()).collect();
+        let mut outs = Vec::new();
+        for threads in [1usize, 2, 8] {
+            let mut chains = start.clone();
+            let st =
+                run_stats_bitsliced(&plan, &mut chains, &xt, 20, 5, threads, &mut Rng::new(99));
+            outs.push((chains.s, st.pair, st.mean_b));
+        }
+        assert_eq!(outs[0], outs[1]);
+        assert_eq!(outs[0], outs[2]);
+    }
+
+    #[test]
+    fn bitsliced_run_sweeps_and_run_stats_share_the_trajectory() {
+        let (top, qm) = quantized_setup(5, "G8", 7);
+        let n = top.n_nodes();
+        let topo = Arc::new(SweepTopo::new(&top, &vec![0.0; n]));
+        let plan = SweepPlanBitsliced::from_topo(topo, &qm, WeightGrid::default());
+        let b = 96;
+        let mut init = Rng::new(3);
+        let start = Chains::random(b, n, &mut init);
+        let xt: Vec<f32> = (0..b * n).map(|_| init.spin()).collect();
+        let mut c1 = start.clone();
+        let mut c2 = start.clone();
+        run_sweeps_bitsliced(&plan, &mut c1, &xt, 15, 2, &mut Rng::new(77));
+        let _ = run_stats_bitsliced(&plan, &mut c2, &xt, 15, 5, 2, &mut Rng::new(77));
+        assert_eq!(c1.s, c2.s, "fused stats must not perturb the trajectory");
+    }
+
+    #[test]
+    fn bitsliced_pair_stats_match_direct_accumulation() {
+        let (top, qm) = quantized_setup(5, "G8", 11);
+        let n = top.n_nodes();
+        let d = top.degree;
+        let topo = Arc::new(SweepTopo::new(&top, &vec![0.0; n]));
+        let plan = SweepPlanBitsliced::from_topo(Arc::clone(&topo), &qm, WeightGrid::default());
+        let b = 70;
+        let mut init = Rng::new(5);
+        let start = Chains::random(b, n, &mut init);
+        let xt = vec![0.0f32; b * n];
+        // Fused XOR-popcount stats vs SweepStats::accumulate on the final
+        // state after identical trajectories (k = burn + 1 keeps exactly
+        // the final sweep).
+        let mut c1 = start.clone();
+        let st = run_stats_bitsliced(&plan, &mut c1, &xt, 8, 7, 2, &mut Rng::new(42));
+        let mut direct = SweepStats::new(b, n, d);
+        direct.accumulate(&top, &c1);
+        assert_eq!(st.count, 1);
+        for (got, want) in st.pair.iter().zip(&direct.pair) {
+            assert_eq!(got, want, "XOR pair identity must be exact");
+        }
+        for (got, want) in st.mean_b.iter().zip(&direct.mean_b) {
+            assert_eq!(got, want, "lane mean identity must be exact");
+        }
+    }
+
+    #[test]
+    fn bitsliced_trace_tail_is_suffix_and_shaped() {
+        let (top, qm) = quantized_setup(5, "G8", 9);
+        let n = top.n_nodes();
+        let topo = Arc::new(SweepTopo::new(&top, &vec![0.0; n]));
+        let plan = SweepPlanBitsliced::from_topo(topo, &qm, WeightGrid::default());
+        let b = 66;
+        let mut init = Rng::new(31);
+        let start = Chains::random(b, n, &mut init);
+        let xt = vec![0.0f32; b * n];
+        let proj: Vec<f32> = (0..n * 2).map(|_| init.normal() as f32).collect();
+        let mut c1 = start.clone();
+        let mut c2 = start.clone();
+        let full =
+            run_trace_tail_bitsliced(&plan, &mut c1, &xt, 25, 25, &proj, 2, 2, &mut Rng::new(8));
+        let tail =
+            run_trace_tail_bitsliced(&plan, &mut c2, &xt, 25, 10, &proj, 2, 2, &mut Rng::new(8));
+        assert_eq!(c1.s, c2.s);
+        assert_eq!(full.len(), b);
+        assert_eq!(tail.len(), b);
+        for (f, t) in full.iter().zip(&tail) {
+            assert_eq!(f.len(), 25);
+            assert_eq!(t.len(), 10);
+            assert_eq!(&f[15..], &t[..]);
+        }
+    }
+
+    #[test]
+    fn strong_bias_freezes_all_lanes() {
+        // Fields far past the logit table's rails must saturate: every lane
+        // of every node pins up. h = 100 dwarfs any on-grid coupling sum
+        // (degree 8, |2w| ≤ 4 each), so z = 2βf stays above the table max.
+        let (top, mut qm) = quantized_setup(4, "G8", 3);
+        let n = top.n_nodes();
+        qm.h = vec![100.0; n];
+        qm.gm = vec![0.0; n];
+        let topo = Arc::new(SweepTopo::new(&top, &vec![0.0; n]));
+        let grid = WeightGrid::detect(&topo, &qm).expect("quantized weights stay on grid");
+        let plan = SweepPlanBitsliced::from_topo(topo, &qm, grid);
+        let b = 65;
+        let mut rng = Rng::new(9);
+        let mut chains = Chains::random(b, n, &mut rng);
+        let xt = vec![0.0f32; b * n];
+        run_sweeps_bitsliced(&plan, &mut chains, &xt, 1, 2, &mut rng);
+        assert!(chains.s.iter().all(|&x| x == 1.0));
+    }
+}

@@ -10,13 +10,57 @@
 //!  * the `bench_gibbs` comparison baseline for the hot path.
 //!
 //! The scalar `halfsweep`/`sweep` path below is the *reference oracle*;
-//! production consumers run the precompiled, chain-parallel [`engine`]
-//! (see `engine::SweepPlan`), which is bit-for-bit equivalent to running
-//! the scalar sweep chain by chain on per-chain forked RNG streams.
+//! production consumers run one of **three precompiled representations**
+//! behind the [`EnginePlan`]/[`Repr`] switch (see `ARCHITECTURE.md` at the
+//! repo root for the full matrix):
+//!
+//! 1. **f32 gather** ([`engine::SweepPlan`]) — spins as ±1 f32, fields by
+//!    indexed gather. Works for *any* weights; bit-for-bit equivalent to
+//!    the scalar oracle run chain by chain on per-chain forked RNG
+//!    streams. The only backend that can `reweight` in place.
+//! 2. **packed, color-major** ([`packed::SweepPlanPacked`]) — 1 bit/node
+//!    per chain, fields by masked popcount over per-level neighbor words.
+//!    Requires weights on a DAC [`WeightGrid`]. One word spans *many
+//!    nodes of one chain*:
+//!
+//!    ```text
+//!    packed    word = 64 nodes × 1 chain   (color-major node bits)
+//!              row: [color-0 nodes ...][color-1 nodes ...]  n/64 words
+//!    ```
+//! 3. **bit-sliced, chain-major** ([`bitsliced::SweepPlanBitsliced`]) —
+//!    the transpose: one word spans *one node across 64 chains*, so
+//!    per-node work (bias, level weights, threshold) amortizes over 64
+//!    lanes and the per-update `exp` disappears into a logistic
+//!    inverse-CDF table compare:
+//!
+//!    ```text
+//!    bitsliced word = 1 node × 64 chains   (chain-major lane bits)
+//!              slice: words[0..n], bit c = chain (slice_base + c)
+//!    ```
+//!
+//! [`Repr::Auto`] resolves per compile: bit-sliced when the weights sit on
+//! a grid **and** B ≥ 64, packed for on-grid smaller batches, f32
+//! otherwise.
+//!
+//! Every plan compile preserves the same invariants, so all three
+//! backends target the *same* (possibly quantized) distribution:
+//!
+//! * the update rule is Eq. 10's `p(up) = sigmoid(2β·f)` with
+//!   `f = h_i + gm_i·x^t_i + Σ_e w_e·s_nbr` — constants may be folded
+//!   (packed/bitsliced fold `−Σ_v w_v` into the bias and pre-double the
+//!   level tables) but never approximated beyond f32 summation order and,
+//!   for bitsliced, the 2⁻¹⁶ uniform quantization;
+//! * the two-color schedule and clamp rules are byte-identical: plans are
+//!   compiled from one shared [`engine::SweepTopo`] per `(topology,
+//!   cmask)`, clamped nodes are read by neighbors but never written;
+//! * results are thread-count invariant: RNG streams fork eagerly before
+//!   fan-out — per chain (f32/packed) or per 64-chain slice (bitsliced).
 
+pub mod bitsliced;
 pub mod engine;
 pub mod packed;
 
+pub use bitsliced::{BitslicedState, SweepPlanBitsliced};
 pub use engine::SweepPlan;
 pub use packed::{EnginePlan, PackedState, Repr, SweepPlanPacked, WeightGrid};
 

@@ -45,6 +45,9 @@ use crate::hw::quantize;
 use crate::util::ring::RingBuf;
 use crate::util::rng::Rng;
 
+use super::bitsliced::{
+    run_stats_bitsliced, run_sweeps_bitsliced, run_trace_tail_bitsliced, LANES, SweepPlanBitsliced,
+};
 use super::engine::{chain_rngs, map_chains, SweepPlan, SweepTopo};
 use super::{sigmoid, Chains, Machine, SweepStats};
 
@@ -56,8 +59,15 @@ pub enum Repr {
     /// Force packed: weights are snapped to the default DAC grid first if
     /// they are not already on one.
     Packed,
-    /// Packed when the layer qualifies (weights already on a DAC grid),
-    /// f32 otherwise. The default everywhere.
+    /// Force the chain-major bit-sliced engine
+    /// ([`super::bitsliced::SweepPlanBitsliced`]): weights are snapped to
+    /// the default DAC grid first if they are not already on one. Works at
+    /// any batch size (lanes past B are padding), but only pays off when
+    /// batches fill 64-lane slices.
+    Bitsliced,
+    /// Resolve per compile from the weights *and* the batch size:
+    /// bit-sliced when the weights sit on a DAC grid and B ≥ 64, packed
+    /// for on-grid smaller batches, f32 otherwise. The default everywhere.
     Auto,
 }
 
@@ -66,6 +76,7 @@ impl Repr {
         match name {
             "f32" => Some(Repr::F32),
             "packed" => Some(Repr::Packed),
+            "bitsliced" => Some(Repr::Bitsliced),
             "auto" => Some(Repr::Auto),
             _ => None,
         }
@@ -381,6 +392,7 @@ impl SweepPlanPacked {
 enum PlanKind {
     F32(SweepPlan),
     Packed(SweepPlanPacked),
+    Bitsliced(SweepPlanBitsliced),
 }
 
 /// A compiled engine plan behind the representation switch: the f32 gather
@@ -391,12 +403,17 @@ enum PlanKind {
 /// off the grid across trainer steps).
 pub struct EnginePlan {
     repr: Repr,
+    batch: usize,
     kind: PlanKind,
 }
 
 impl EnginePlan {
-    /// Compile `m` against `topo` under the representation policy `repr`.
-    pub fn compile(topo: Arc<SweepTopo>, m: &Machine, repr: Repr) -> EnginePlan {
+    /// Compile `m` against `topo` under the representation policy `repr`
+    /// for batches of `batch` chains. The batch size only matters to
+    /// `Repr::Auto`, which picks the chain-major bit-sliced backend when
+    /// the weights are on a grid *and* the batch fills at least one
+    /// 64-lane slice (B ≥ [`LANES`]); forced reprs compile regardless.
+    pub fn compile(topo: Arc<SweepTopo>, m: &Machine, repr: Repr, batch: usize) -> EnginePlan {
         let kind = match repr {
             Repr::F32 => PlanKind::F32(SweepPlan::from_topo(topo, m)),
             Repr::Packed => match WeightGrid::detect(&topo, m) {
@@ -407,12 +424,23 @@ impl EnginePlan {
                     PlanKind::Packed(SweepPlanPacked::from_topo(topo, &qm, g))
                 }
             },
+            Repr::Bitsliced => match WeightGrid::detect(&topo, m) {
+                Some(g) => PlanKind::Bitsliced(SweepPlanBitsliced::from_topo(topo, m, g)),
+                None => {
+                    let g = WeightGrid::default();
+                    let qm = quantize_machine(&topo, m, g);
+                    PlanKind::Bitsliced(SweepPlanBitsliced::from_topo(topo, &qm, g))
+                }
+            },
             Repr::Auto => match WeightGrid::detect(&topo, m) {
+                Some(g) if batch >= LANES => {
+                    PlanKind::Bitsliced(SweepPlanBitsliced::from_topo(topo, m, g))
+                }
                 Some(g) => PlanKind::Packed(SweepPlanPacked::from_topo(topo, m, g)),
                 None => PlanKind::F32(SweepPlan::from_topo(topo, m)),
             },
         };
-        EnginePlan { repr, kind }
+        EnginePlan { repr, batch, kind }
     }
 
     /// The representation actually compiled (never `Auto`).
@@ -420,6 +448,7 @@ impl EnginePlan {
         match &self.kind {
             PlanKind::F32(_) => Repr::F32,
             PlanKind::Packed(_) => Repr::Packed,
+            PlanKind::Bitsliced(_) => Repr::Bitsliced,
         }
     }
 
@@ -432,6 +461,7 @@ impl EnginePlan {
         match &self.kind {
             PlanKind::F32(p) => &p.topo,
             PlanKind::Packed(p) => &p.topo,
+            PlanKind::Bitsliced(p) => &p.topo,
         }
     }
 
@@ -449,7 +479,7 @@ impl EnginePlan {
             }
         }
         let topo = Arc::clone(self.topo());
-        *self = EnginePlan::compile(topo, m, self.repr);
+        *self = EnginePlan::compile(topo, m, self.repr, self.batch);
     }
 
     /// Run `k` full sweeps on every chain, chain-parallel across `threads`
@@ -465,6 +495,7 @@ impl EnginePlan {
         match &self.kind {
             PlanKind::F32(p) => super::engine::run_sweeps(p, chains, xt, k, threads, rng),
             PlanKind::Packed(p) => run_sweeps_packed(p, chains, xt, k, threads, rng),
+            PlanKind::Bitsliced(p) => run_sweeps_bitsliced(p, chains, xt, k, threads, rng),
         }
     }
 
@@ -483,6 +514,7 @@ impl EnginePlan {
         match &self.kind {
             PlanKind::F32(p) => super::engine::run_stats(p, chains, xt, k, burn, threads, rng),
             PlanKind::Packed(p) => run_stats_packed(p, chains, xt, k, burn, threads, rng),
+            PlanKind::Bitsliced(p) => run_stats_bitsliced(p, chains, xt, k, burn, threads, rng),
         }
     }
 
@@ -507,6 +539,9 @@ impl EnginePlan {
             }
             PlanKind::Packed(p) => {
                 run_trace_tail_packed(p, chains, xt, k, keep, proj, stride, threads, rng)
+            }
+            PlanKind::Bitsliced(p) => {
+                run_trace_tail_bitsliced(p, chains, xt, k, keep, proj, stride, threads, rng)
             }
         }
     }
@@ -716,10 +751,12 @@ mod tests {
         let qm = quantize_machine(&topo, &m, WeightGrid::default());
         let g = WeightGrid::detect(&topo, &qm).expect("quantized weights must qualify");
         assert!(g.bits <= 8);
-        // Policy resolution: auto picks packed iff the grid holds.
-        assert_eq!(EnginePlan::compile(Arc::clone(&topo), &qm, Repr::Auto).active(), Repr::Packed);
-        assert_eq!(EnginePlan::compile(Arc::clone(&topo), &m, Repr::Auto).active(), Repr::F32);
-        assert_eq!(EnginePlan::compile(topo, &m, Repr::Packed).active(), Repr::Packed);
+        // Policy resolution: at this sub-slice batch, auto picks packed
+        // iff the grid holds (>= 64 chains would pick bitsliced instead).
+        let auto_q = EnginePlan::compile(Arc::clone(&topo), &qm, Repr::Auto, 4);
+        assert_eq!(auto_q.active(), Repr::Packed);
+        assert_eq!(EnginePlan::compile(Arc::clone(&topo), &m, Repr::Auto, 4).active(), Repr::F32);
+        assert_eq!(EnginePlan::compile(topo, &m, Repr::Packed, 4).active(), Repr::Packed);
     }
 
     #[test]
@@ -809,7 +846,7 @@ mod tests {
         let n = top.n_nodes();
         let cmask = top.data_mask();
         let topo = Arc::new(SweepTopo::new(&top, &cmask));
-        let mut plan = EnginePlan::compile(Arc::clone(&topo), &qm0, Repr::Auto);
+        let mut plan = EnginePlan::compile(Arc::clone(&topo), &qm0, Repr::Auto, 4);
         assert_eq!(plan.active(), Repr::Packed);
 
         // New weights on the same grid (a trainer step followed by DAC
@@ -821,7 +858,7 @@ mod tests {
         let qm1 = quantize_machine(&topo, &m1, WeightGrid::default());
         plan.reweight(&qm1);
         assert_eq!(plan.active(), Repr::Packed, "on-grid reweight must stay packed");
-        let fresh = EnginePlan::compile(Arc::clone(&topo), &qm1, Repr::Auto);
+        let fresh = EnginePlan::compile(Arc::clone(&topo), &qm1, Repr::Auto, 4);
 
         let b = 4;
         let mut init = Rng::new(21);
@@ -845,7 +882,7 @@ mod tests {
         let (top, qm) = quantized_setup(5, "G8", 9);
         let n = top.n_nodes();
         let topo = Arc::new(SweepTopo::new(&top, &vec![0.0; n]));
-        let plan = EnginePlan::compile(topo, &qm, Repr::Auto);
+        let plan = EnginePlan::compile(topo, &qm, Repr::Auto, 4);
         let b = 3;
         let mut init = Rng::new(31);
         let start = Chains::random(b, n, &mut init);

@@ -12,15 +12,18 @@
 //! When the chip is fabricated in the *ideal limit* (zero mismatch, fully
 //! decorrelated RNG draws) the array is an exact chromatic Gibbs sampler
 //! over DAC-quantized weights, and the sampler (under `Repr::Auto`, the
-//! default) executes programs on the bit-packed popcount engine instead
-//! (`gibbs::packed`) — same distribution, ~32x smaller per-chain state —
-//! while metering the schedule exactly as the array would have.
+//! default) executes programs on a 1-bit engine instead — the chain-major
+//! bit-sliced engine (`gibbs::bitsliced`) when the batch fills a 64-lane
+//! slice, the bit-packed popcount engine (`gibbs::packed`) otherwise —
+//! same distribution, 1 bit per spin, while metering the schedule exactly
+//! as the array would have.
 
 use anyhow::{bail, Result};
 
 use crate::energy::{self, DeviceParams};
 use crate::gibbs::{
-    self, engine::SweepTopo, engine::TopoCache, packed, Repr, SweepPlanPacked, WeightGrid,
+    self, bitsliced, engine::SweepTopo, engine::TopoCache, packed, Repr, SweepPlanBitsliced,
+    SweepPlanPacked, WeightGrid,
 };
 use crate::graph::Topology;
 use crate::model::LayerParams;
@@ -50,6 +53,18 @@ impl HwEnergy {
     pub fn total(&self) -> f64 {
         self.rng_j + self.bias_j + self.clock_j + self.comm_j + self.io_j
     }
+}
+
+/// The engine a call actually executes on, resolved per call from the
+/// requested [`Repr`], the chip's fabric, and the batch size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ExecRepr {
+    /// The full [`HwArray`] emulator (nonideal fabric, or `Repr::F32`).
+    Array,
+    /// The color-major packed popcount engine (`gibbs::packed`).
+    Packed,
+    /// The chain-major bit-sliced engine (`gibbs::bitsliced`).
+    Bitsliced,
 }
 
 pub struct HwSampler {
@@ -124,9 +139,11 @@ impl HwSampler {
         self
     }
 
-    /// Set the spin-representation policy. `Auto` (default) runs the packed
-    /// popcount engine whenever the chip qualifies (ideal fabric — see
-    /// [`HwConfig::ideal`]); `Packed` demands it (an error on a chip with
+    /// Set the spin-representation policy. `Auto` (default) runs a 1-bit
+    /// engine whenever the chip qualifies (ideal fabric — see
+    /// [`HwConfig::ideal`]): the chain-major bit-sliced engine when the
+    /// batch fills a 64-lane slice, the packed popcount engine otherwise;
+    /// `Packed`/`Bitsliced` demand their engine (an error on a chip with
     /// mismatch or correlated noise, which bits cannot represent); `F32`
     /// pins the full array emulator.
     pub fn with_repr(mut self, repr: Repr) -> HwSampler {
@@ -204,33 +221,53 @@ impl HwSampler {
         HwArray::new(topo, &self.fabric, m, &self.cfg)
     }
 
-    /// Should this call execute on the packed engine instead of the full
-    /// array emulator? Errors when packed is demanded on a chip whose
-    /// nonidealities (offsets, correlated noise) bits cannot represent.
-    fn use_packed(&self) -> Result<bool> {
+    /// Guard a demanded 1-bit representation (`--repr packed|bitsliced`)
+    /// against a chip whose nonidealities (offsets, correlated noise)
+    /// 1-bit state cannot represent, with a typed error naming the demand.
+    fn check_one_bit_demand(&self, name: &str) -> Result<()> {
+        if !self.ideal_fabric {
+            bail!(
+                "--repr {name} on the hw backend requires the ideal-fabric limit \
+                 (zero mismatch, decorrelated RNG; e.g. --hw-mismatch-mv 0 with a \
+                 large --hw-interval): comparator offsets and correlated noise \
+                 cannot be represented in 1-bit state"
+            );
+        }
+        if self.cfg.dac_bits > 16 {
+            bail!(
+                "--repr {name} needs quantized DACs (--hw-bits <= 16): at {} bits \
+                 the programming DACs pass weights through unquantized and the \
+                 per-level weight tables degenerate",
+                self.cfg.dac_bits
+            );
+        }
+        Ok(())
+    }
+
+    /// Which engine should this call execute on? Errors when a 1-bit
+    /// representation is demanded on a chip whose nonidealities (offsets,
+    /// correlated noise) bits cannot represent.
+    fn exec_repr(&self) -> Result<ExecRepr> {
         match self.repr {
-            Repr::F32 => Ok(false),
+            Repr::F32 => Ok(ExecRepr::Array),
             // >= 24-bit DACs pass weights through unquantized — the level
             // table degenerates to one entry per edge, so stay on the array.
-            Repr::Auto => Ok(self.ideal_fabric && self.cfg.dac_bits <= 16),
+            Repr::Auto => Ok(if self.ideal_fabric && self.cfg.dac_bits <= 16 {
+                if self.batch >= bitsliced::LANES {
+                    ExecRepr::Bitsliced
+                } else {
+                    ExecRepr::Packed
+                }
+            } else {
+                ExecRepr::Array
+            }),
             Repr::Packed => {
-                if !self.ideal_fabric {
-                    bail!(
-                        "--repr packed on the hw backend requires the ideal-fabric limit \
-                         (zero mismatch, decorrelated RNG; e.g. --hw-mismatch-mv 0 with a \
-                         large --hw-interval): comparator offsets and correlated noise \
-                         cannot be represented in 1-bit state"
-                    );
-                }
-                if self.cfg.dac_bits > 16 {
-                    bail!(
-                        "--repr packed needs quantized DACs (--hw-bits <= 16): at {} bits \
-                         the programming DACs pass weights through unquantized and the \
-                         per-level popcount tables degenerate",
-                        self.cfg.dac_bits
-                    );
-                }
-                Ok(true)
+                self.check_one_bit_demand("packed")?;
+                Ok(ExecRepr::Packed)
+            }
+            Repr::Bitsliced => {
+                self.check_one_bit_demand("bitsliced")?;
+                Ok(ExecRepr::Bitsliced)
             }
         }
     }
@@ -262,6 +299,18 @@ impl HwSampler {
             full_scale: self.cfg.w_full_scale,
         };
         SweepPlanPacked::from_topo(topo, &qm, grid)
+    }
+
+    /// Compile the chain-major bit-sliced program for `(machine, cmask)`
+    /// on this chip — same DAC gather as [`Self::packed_plan`].
+    fn bitsliced_plan(&mut self, m: &gibbs::Machine, cmask: &[f32]) -> SweepPlanBitsliced {
+        let topo = self.topos.topo_for(&self.top, cmask);
+        let qm = self.dac_machine(&topo, m);
+        let grid = WeightGrid {
+            bits: self.cfg.dac_bits,
+            full_scale: self.cfg.w_full_scale,
+        };
+        SweepPlanBitsliced::from_topo(topo, &qm, grid)
     }
 
     /// Meter a packed run through the same accounting rule as the array
@@ -310,24 +359,41 @@ impl LayerSampler for HwSampler {
         let m = self.machine(params, gm, beta);
         let mut chains = gibbs::Chains::random(self.batch, self.top.n_nodes(), &mut self.rng);
         chains.impose_clamps(cmask, cval);
-        let st = if self.use_packed()? {
-            let plan = self.packed_plan(&m, cmask);
-            let st = packed::run_stats_packed(
-                &plan,
-                &mut chains,
-                xt,
-                k,
-                burn,
-                self.threads,
-                &mut self.rng,
-            );
-            self.record_packed(&plan.topo, self.batch as u64, k as u64);
-            st
-        } else {
-            let mut arr = self.array(&m, cmask);
-            let st = arr.run_stats(&mut chains, xt, k, burn, self.threads, &mut self.rng);
-            self.sched.absorb(arr.schedule());
-            st
+        let st = match self.exec_repr()? {
+            ExecRepr::Packed => {
+                let plan = self.packed_plan(&m, cmask);
+                let st = packed::run_stats_packed(
+                    &plan,
+                    &mut chains,
+                    xt,
+                    k,
+                    burn,
+                    self.threads,
+                    &mut self.rng,
+                );
+                self.record_packed(&plan.topo, self.batch as u64, k as u64);
+                st
+            }
+            ExecRepr::Bitsliced => {
+                let plan = self.bitsliced_plan(&m, cmask);
+                let st = bitsliced::run_stats_bitsliced(
+                    &plan,
+                    &mut chains,
+                    xt,
+                    k,
+                    burn,
+                    self.threads,
+                    &mut self.rng,
+                );
+                self.record_packed(&plan.topo, self.batch as u64, k as u64);
+                st
+            }
+            ExecRepr::Array => {
+                let mut arr = self.array(&m, cmask);
+                let st = arr.run_stats(&mut chains, xt, k, burn, self.threads, &mut self.rng);
+                self.sched.absorb(arr.schedule());
+                st
+            }
         };
         Ok(LayerStats {
             pair: st.pair_mean(),
@@ -362,14 +428,29 @@ impl LayerSampler for HwSampler {
             },
             None => gibbs::Chains::random(self.batch, n, &mut self.rng),
         };
-        if self.use_packed()? {
-            let plan = self.packed_plan(&m, &cmask);
-            packed::run_sweeps_packed(&plan, &mut chains, xt, k, self.threads, &mut self.rng);
-            self.record_packed(&plan.topo, self.batch as u64, k as u64);
-        } else {
-            let mut arr = self.array(&m, &cmask);
-            arr.run_sweeps(&mut chains, xt, k, self.threads, &mut self.rng);
-            self.sched.absorb(arr.schedule());
+        match self.exec_repr()? {
+            ExecRepr::Packed => {
+                let plan = self.packed_plan(&m, &cmask);
+                packed::run_sweeps_packed(&plan, &mut chains, xt, k, self.threads, &mut self.rng);
+                self.record_packed(&plan.topo, self.batch as u64, k as u64);
+            }
+            ExecRepr::Bitsliced => {
+                let plan = self.bitsliced_plan(&m, &cmask);
+                bitsliced::run_sweeps_bitsliced(
+                    &plan,
+                    &mut chains,
+                    xt,
+                    k,
+                    self.threads,
+                    &mut self.rng,
+                );
+                self.record_packed(&plan.topo, self.batch as u64, k as u64);
+            }
+            ExecRepr::Array => {
+                let mut arr = self.array(&m, &cmask);
+                arr.run_sweeps(&mut chains, xt, k, self.threads, &mut self.rng);
+                self.sched.absorb(arr.schedule());
+            }
         }
         Ok(chains.s)
     }
@@ -398,35 +479,54 @@ impl LayerSampler for HwSampler {
         let n = self.top.n_nodes();
         let cmask = vec![0.0f32; n];
         let mut chains = gibbs::Chains::random(self.batch, n, &mut self.rng);
-        let series = if self.use_packed()? {
-            let plan = self.packed_plan(&m, &cmask);
-            let series = packed::run_trace_tail_packed(
-                &plan,
-                &mut chains,
-                xt,
-                k,
-                keep,
-                &self.proj,
-                self.proj_dim,
-                self.threads,
-                &mut self.rng,
-            );
-            self.record_packed(&plan.topo, self.batch as u64, k as u64);
-            series
-        } else {
-            let mut arr = self.array(&m, &cmask);
-            let series = arr.run_trace_tail(
-                &mut chains,
-                xt,
-                k,
-                keep,
-                &self.proj,
-                self.proj_dim,
-                self.threads,
-                &mut self.rng,
-            );
-            self.sched.absorb(arr.schedule());
-            series
+        let series = match self.exec_repr()? {
+            ExecRepr::Packed => {
+                let plan = self.packed_plan(&m, &cmask);
+                let series = packed::run_trace_tail_packed(
+                    &plan,
+                    &mut chains,
+                    xt,
+                    k,
+                    keep,
+                    &self.proj,
+                    self.proj_dim,
+                    self.threads,
+                    &mut self.rng,
+                );
+                self.record_packed(&plan.topo, self.batch as u64, k as u64);
+                series
+            }
+            ExecRepr::Bitsliced => {
+                let plan = self.bitsliced_plan(&m, &cmask);
+                let series = bitsliced::run_trace_tail_bitsliced(
+                    &plan,
+                    &mut chains,
+                    xt,
+                    k,
+                    keep,
+                    &self.proj,
+                    self.proj_dim,
+                    self.threads,
+                    &mut self.rng,
+                );
+                self.record_packed(&plan.topo, self.batch as u64, k as u64);
+                series
+            }
+            ExecRepr::Array => {
+                let mut arr = self.array(&m, &cmask);
+                let series = arr.run_trace_tail(
+                    &mut chains,
+                    xt,
+                    k,
+                    keep,
+                    &self.proj,
+                    self.proj_dim,
+                    self.threads,
+                    &mut self.rng,
+                );
+                self.sched.absorb(arr.schedule());
+                series
+            }
         };
         Ok(series)
     }
@@ -572,6 +672,49 @@ mod tests {
         let mut auto = HwSampler::new(top.clone(), 4, HwConfig::default(), 3);
         let out = auto.sample(&params, &gm, 1.0, &xt, None, 5).unwrap();
         assert_eq!(out.len(), 4 * n);
+    }
+
+    #[test]
+    fn bitsliced_demand_fails_on_nonideal_chip_and_auto_engages_at_wide_batch() {
+        let (top, params) = tiny();
+        let n = top.n_nodes();
+        let gm = vec![0.0f32; n];
+        let xt4 = vec![0.0f32; 4 * n];
+        // Default config has mismatch + finite phase interval: 1-bit state
+        // cannot represent it, so the demand is a typed error (not a panic).
+        let mut forced =
+            HwSampler::new(top.clone(), 4, HwConfig::default(), 3).with_repr(Repr::Bitsliced);
+        let err = forced.sample(&params, &gm, 1.0, &xt4, None, 5).unwrap_err();
+        assert!(format!("{err:#}").contains("--repr bitsliced"), "{err:#}");
+        assert!(format!("{err:#}").contains("ideal-fabric"), "{err:#}");
+        // Unquantized DACs (>= 24 bits) are the other typed refusal.
+        let mut wide = HwSampler::new(top.clone(), 4, HwConfig::ideal().with_bits(24), 3)
+            .with_repr(Repr::Bitsliced);
+        let err = wide.sample(&params, &gm, 1.0, &xt4, None, 5).unwrap_err();
+        assert!(format!("{err:#}").contains("--hw-bits"), "{err:#}");
+
+        // Ideal chip at B >= 64: Auto must take the bitsliced path — its
+        // draws and metering are bit-identical to a forced bitsliced run
+        // (the per-slice RNG forks differ from packed's per-chain forks,
+        // so agreement pins down which engine actually ran).
+        let b = 65;
+        let xt = vec![0.0f32; b * n];
+        let run = |repr: Repr| {
+            let mut s = HwSampler::new(top.clone(), b, HwConfig::ideal(), 9).with_repr(repr);
+            let out = s.sample(&params, &gm, 1.0, &xt, None, 8).unwrap();
+            (out, *s.schedule())
+        };
+        let (out_auto, sched_auto) = run(Repr::Auto);
+        let (out_bs, sched_bs) = run(Repr::Bitsliced);
+        assert_eq!(out_auto, out_bs, "Auto at B >= 64 must run bitsliced");
+        assert_eq!(sched_auto, sched_bs);
+        // Forcing bitsliced below the Auto threshold still works (one
+        // partial slice with 4 live lanes).
+        let mut small =
+            HwSampler::new(top.clone(), 4, HwConfig::ideal(), 9).with_repr(Repr::Bitsliced);
+        let out = small.sample(&params, &gm, 1.0, &xt4, None, 5).unwrap();
+        assert_eq!(out.len(), 4 * n);
+        assert!(out.iter().all(|&x| x == 1.0 || x == -1.0));
     }
 
     #[test]

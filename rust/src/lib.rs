@@ -14,11 +14,14 @@
 //! Pallas Gibbs kernel) through the PJRT CPU client; Python never runs at
 //! request time.
 //!
-//! Module map (see DESIGN.md for the full inventory):
+//! Module map — `ARCHITECTURE.md` at the repo root has the full
+//! paper-section → module correspondence, the train/serve data flow, and
+//! the spin-representation matrix:
 //!
 //! - [`util`] — PRNG, JSON, CLI, thread pool (offline substrates).
 //! - [`graph`] — Table-II grid topologies, bipartite coloring, roles.
-//! - [`gibbs`] — pure-Rust chromatic Gibbs reference sampler.
+//! - [`gibbs`] — chromatic Gibbs engine family: f32 gather, bit-packed
+//!   popcount, and bit-sliced chain-major backends behind one plan.
 //! - [`linalg`] — dense ops + Jacobi eigensolver (Fréchet distance).
 //! - [`metrics`] — proxy-FID, autocorrelation, mixing-time fits.
 //! - [`data`] — synthetic fashion-like / CIFAR-like datasets, App. I embedding.

@@ -98,7 +98,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             println!(
                 "usage: repro <selfcheck|topology|train|generate|serve|figures|energy-report> [--flags]\n\
                  common flags: --artifacts DIR --config dtm_m32 --fast --seed N --threads N\n\
-                 \x20         --repr packed|f32|auto (spin representation for rust/hw backends)\n\
+                 \x20         --repr packed|bitsliced|f32|auto (spin representation for rust/hw backends)\n\
                  \x20         --metrics-out F (write final metrics snapshot JSON)\n\
                  \x20         --trace-out F (capture spans, write Chrome trace JSON)\n\
                  train:    --t-steps 4 --epochs 10 --k-train 30 --out ckpt.json --backend hlo|rust|hw\n\
@@ -116,12 +116,14 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
     }
 }
 
-/// `--repr packed|f32|auto`: the engine spin representation (auto picks the
-/// bit-packed popcount backend when the layer's weights sit on a DAC grid).
+/// `--repr packed|bitsliced|f32|auto`: the engine spin representation
+/// (auto picks the chain-major bit-sliced backend when the layer's weights
+/// sit on a DAC grid and the batch fills a 64-lane slice, the bit-packed
+/// popcount backend for on-grid smaller batches, f32 otherwise).
 fn repr_from_args(args: &Args) -> Result<Repr> {
     let name = args.str_opt("repr", "auto");
     Repr::from_name(&name)
-        .ok_or_else(|| anyhow::anyhow!("unknown --repr {name:?} (packed|f32|auto)"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --repr {name:?} (packed|bitsliced|f32|auto)"))
 }
 
 fn artifacts_dir(args: &Args) -> String {

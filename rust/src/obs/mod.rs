@@ -7,8 +7,9 @@
 //!
 //! - **[`Registry`]** — named [`Counter`]s (monotone `u64`), [`Gauge`]s
 //!   (last-writer-wins `f64`), and log-bucketed [`Histogram`]s (see
-//!   [`hist`] for the bucketing scheme and the 6.25% quantile error
-//!   bound). The process-global instance is [`global`]; components that
+//!   `hist.rs` for the bucketing scheme and the [`REL_ERROR_BOUND`]
+//!   quantile error bound). The process-global instance is [`global`];
+//!   components that
 //!   must not share state across parallel tests take a private
 //!   `Arc<Registry>` (e.g. `FarmConfig::registry`).
 //! - **Spans** — `let _g = span!("gibbs.halfsweep");` RAII guards
@@ -44,7 +45,7 @@
 //! | `chip.<k>.energy_j` | gauge | cumulative device energy (ChipReport) |
 //! | `chip.<k>.device_seconds` | gauge | cumulative device-seconds |
 //! | `chip.<k>.busy_ms` | gauge | wall-clock ms spent busy |
-//! | `gibbs.sweeps` | counter | chain-sweeps executed (f32 + packed) |
+//! | `gibbs.sweeps` | counter | chain-sweeps executed (all engine reprs) |
 //! | `gibbs.node_updates` | counter | node updates executed |
 //! | `hw.sweeps` | counter | emulated array sweeps |
 //! | `hw.phases` | counter | phase-clock half-sweeps (2 per sweep) |

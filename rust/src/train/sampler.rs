@@ -9,10 +9,12 @@
 //!    `util::threadpool::default_threads()`); per-chain forked RNG streams
 //!    make results bit-identical for every thread count at a given seed.
 //!    The spin representation is selectable (`with_repr`): `Repr::Auto`
-//!    (default) compiles the bit-packed popcount backend whenever the
-//!    layer's edge weights sit on a `hw::quantize` DAC grid and the f32
-//!    gather backend otherwise. Used for tests, artifact-free operation
-//!    at arbitrary graph sizes, and as the `bench_gibbs` baseline.
+//!    (default) compiles the chain-major bit-sliced backend when the
+//!    layer's edge weights sit on a `hw::quantize` DAC grid and the batch
+//!    fills a 64-lane slice, the bit-packed popcount backend for on-grid
+//!    smaller batches, and the f32 gather backend otherwise. Used for
+//!    tests, artifact-free operation at arbitrary graph sizes, and as the
+//!    `bench_gibbs` baseline.
 //!
 //! Integration tests assert the two produce statistically identical results
 //! on the same topology/parameters.
@@ -300,9 +302,11 @@ impl RustSampler {
     }
 
     /// Set the spin-representation policy (`--repr` on the CLI). `Auto`
-    /// picks the packed popcount backend exactly when the layer's edge
-    /// weights sit on a DAC grid; `Packed` forces it (snapping weights to
-    /// the default grid first); `F32` pins the gather backend.
+    /// picks the chain-major bit-sliced backend when the layer's edge
+    /// weights sit on a DAC grid and the batch fills a 64-lane slice,
+    /// packed for on-grid smaller batches, f32 otherwise;
+    /// `Packed`/`Bitsliced` force their backend (snapping weights to the
+    /// default grid first); `F32` pins the gather backend.
     pub fn with_repr(mut self, repr: Repr) -> RustSampler {
         self.repr = repr;
         self
@@ -325,7 +329,7 @@ impl RustSampler {
     /// representation resolved per compile under `self.repr`.
     fn plan(&mut self, m: &gibbs::Machine, cmask: &[f32]) -> EnginePlan {
         let topo: Arc<SweepTopo> = self.topos.topo_for(&self.top, cmask);
-        EnginePlan::compile(topo, m, self.repr)
+        EnginePlan::compile(topo, m, self.repr, self.batch)
     }
 }
 

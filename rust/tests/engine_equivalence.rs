@@ -15,7 +15,11 @@
 //!    f32 gather backend and the exact conditional oracle on the same
 //!    DAC-quantized machine (identical target distribution, different
 //!    arithmetic), including its bit layout against the scalar state over
-//!    random topologies.
+//!    random topologies;
+//!  * the bit-sliced chain-major backend (`gibbs::bitsliced`) agreeing
+//!    with the f32 backend and the exact conditional oracle on the same
+//!    quantized machine, and `Repr::Auto` resolving to it exactly when
+//!    the weights are on a DAC grid and the batch fills a 64-lane slice.
 
 use std::sync::Arc;
 
@@ -361,8 +365,8 @@ fn packed_marginals_agree_with_f32_engine_and_exact() {
             .map(|i| (0..b).map(|bi| mb[bi * n + i]).sum::<f64>() / b as f64)
             .collect()
     };
-    let f32_plan = EnginePlan::compile(Arc::clone(&topo), &qm, Repr::F32);
-    let packed_plan = EnginePlan::compile(Arc::clone(&topo), &qm, Repr::Auto);
+    let f32_plan = EnginePlan::compile(Arc::clone(&topo), &qm, Repr::F32, 32);
+    let packed_plan = EnginePlan::compile(Arc::clone(&topo), &qm, Repr::Auto, 32);
     assert_eq!(packed_plan.active(), Repr::Packed, "quantized machine must qualify");
     let ef = marginals(&f32_plan, 41);
     let ep = marginals(&packed_plan, 43);
@@ -385,6 +389,106 @@ fn packed_marginals_agree_with_f32_engine_and_exact() {
     }
 }
 
+/// The bit-sliced chain-major backend targets the same distribution as the
+/// f32 backend on the same quantized machine: both must match the exact
+/// conditional oracle within the established Monte-Carlo tolerance, and
+/// each other within the pairwise budget. At B = 64 `Repr::Auto` must pick
+/// this backend, so the test also pins the dispatch.
+#[test]
+fn bitsliced_marginals_agree_with_f32_engine_and_exact() {
+    let top = graph::build("t", 4, "G8", 6, 0).unwrap();
+    let n = top.n_nodes();
+    let m = machine_for(&top, 4);
+    let mut rng = Rng::new(6);
+    let cmask = top.data_mask();
+    let cval_row: Vec<f32> = (0..n)
+        .map(|i| if cmask[i] > 0.5 { rng.spin() } else { 0.0 })
+        .collect();
+    let xt_row = vec![0.0f32; n];
+    let topo = Arc::new(SweepTopo::new(&top, &cmask));
+    // Quantize once; all three estimates (bitsliced, f32, enumeration)
+    // share one target distribution.
+    let qm = quantize_machine(&topo, &m, WeightGrid::default());
+    let exact = gibbs::exact_marginals_clamped(&top, &qm, &xt_row, &cmask, &cval_row);
+
+    let b = 64;
+    let marginals = |plan: &EnginePlan, seed: u64| -> Vec<f64> {
+        let mut r = Rng::new(seed);
+        let mut chains = Chains::random(b, n, &mut r);
+        let cval: Vec<f32> = (0..b).flat_map(|_| cval_row.clone()).collect();
+        chains.impose_clamps(&cmask, &cval);
+        let xt = vec![0.0f32; b * n];
+        let st = plan.run_stats(&mut chains, &xt, 500, 60, 4, &mut r);
+        let mb = st.node_mean_b();
+        (0..n)
+            .map(|i| (0..b).map(|bi| mb[bi * n + i]).sum::<f64>() / b as f64)
+            .collect()
+    };
+    let f32_plan = EnginePlan::compile(Arc::clone(&topo), &qm, Repr::F32, b);
+    let sliced_plan = EnginePlan::compile(Arc::clone(&topo), &qm, Repr::Auto, b);
+    assert_eq!(
+        sliced_plan.active(),
+        Repr::Bitsliced,
+        "Auto at B = 64 on a quantized machine must go bit-sliced"
+    );
+    let ef = marginals(&f32_plan, 41);
+    let eb = marginals(&sliced_plan, 43);
+    for i in 0..n {
+        assert!(
+            (eb[i] - exact[i]).abs() < 0.08,
+            "node {i}: bitsliced {:.3} vs exact {:.3}",
+            eb[i],
+            exact[i]
+        );
+        assert!(
+            (eb[i] - ef[i]).abs() < 0.12,
+            "node {i}: bitsliced {:.3} vs f32 engine {:.3}",
+            eb[i],
+            ef[i]
+        );
+        if cmask[i] > 0.5 {
+            assert!((eb[i] - cval_row[i] as f64).abs() < 1e-9, "clamp moved");
+        }
+    }
+}
+
+/// The `Repr::Auto` resolution table, property-style: bit-sliced exactly
+/// when the weights sit on a DAC grid AND the batch fills a 64-lane slice;
+/// packed for on-grid smaller batches; f32 whenever the weights are off
+/// every grid (regardless of batch). Forcing a 1-bit repr on an off-grid
+/// machine quantizes to the default grid instead of failing.
+#[test]
+fn auto_selects_bitsliced_only_for_quantized_wide_batches() {
+    let top = graph::build("t", 4, "G8", 6, 0).unwrap();
+    let n = top.n_nodes();
+    let m = machine_for(&top, 4); // raw 0.25-sigma weights: off-grid
+    let topo = Arc::new(SweepTopo::new(&top, &vec![0.0; n]));
+    let qm = quantize_machine(&topo, &m, WeightGrid::default());
+    assert!(WeightGrid::detect(&topo, &qm).is_some());
+    assert!(WeightGrid::detect(&topo, &m).is_none());
+
+    for (batch, want) in [
+        (1usize, Repr::Packed),
+        (63, Repr::Packed),
+        (64, Repr::Bitsliced),
+        (256, Repr::Bitsliced),
+    ] {
+        let plan = EnginePlan::compile(Arc::clone(&topo), &qm, Repr::Auto, batch);
+        assert_eq!(plan.active(), want, "quantized machine, batch {batch}");
+        assert_eq!(plan.requested(), Repr::Auto);
+    }
+    for batch in [1usize, 64, 256] {
+        let plan = EnginePlan::compile(Arc::clone(&topo), &m, Repr::Auto, batch);
+        assert_eq!(plan.active(), Repr::F32, "off-grid machine, batch {batch}");
+    }
+    // Forced 1-bit reprs always compile (off-grid weights are snapped to
+    // the default DAC grid first), at any batch size.
+    for (repr, batch) in [(Repr::Packed, 64), (Repr::Bitsliced, 1), (Repr::Bitsliced, 64)] {
+        let plan = EnginePlan::compile(Arc::clone(&topo), &m, repr, batch);
+        assert_eq!(plan.active(), repr, "forced {repr:?} at batch {batch}");
+    }
+}
+
 /// Clamping an entire color freezes it exactly while the other color still
 /// mixes to the right conditional (empty update lists are a no-op, not a
 /// crash), on the packed backend.
@@ -402,7 +506,7 @@ fn packed_fully_clamped_color_matches_exact_conditional() {
     let topo = Arc::new(SweepTopo::new(&top, &cmask));
     let qm = quantize_machine(&topo, &m, WeightGrid::default());
     let exact = gibbs::exact_marginals_clamped(&top, &qm, &xt_row, &cmask, &cval_row);
-    let plan = EnginePlan::compile(Arc::clone(&topo), &qm, Repr::Auto);
+    let plan = EnginePlan::compile(Arc::clone(&topo), &qm, Repr::Auto, 32);
     assert_eq!(plan.active(), Repr::Packed);
 
     let b = 32;
@@ -436,7 +540,7 @@ fn packed_run_sweeps_and_run_stats_share_the_trajectory() {
     let m = machine_for(&top, 7);
     let topo = Arc::new(SweepTopo::new(&top, &vec![0.0; n]));
     let qm = quantize_machine(&topo, &m, WeightGrid::default());
-    let plan = EnginePlan::compile(topo, &qm, Repr::Packed);
+    let plan = EnginePlan::compile(topo, &qm, Repr::Packed, 32);
     let b = 6;
     let mut init = Rng::new(3);
     let start = Chains::random(b, n, &mut init);
