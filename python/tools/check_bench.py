@@ -15,15 +15,28 @@ Rules (stdlib only, exit code is the gate):
   * rows are matched by their "name" field inside "configs";
   * every numeric field ending in `_per_sec` or `_per_joule` is compared; a
     fresh value below baseline * (1 - threshold) is a REGRESSION -> exit 1;
+  * every numeric field ending in `_ns` is a latency: the gate is reversed,
+    a fresh value above baseline * (1 + threshold) fails;
   * a baseline value of null means "seeded, not yet measured" (the repo is
     bootstrapped from a toolchain-less image): reported, never failing —
     run with --update on a quiet machine and commit the result to arm the
-    gate for that row;
+    gate for that row. Non-null baseline values are two-tier: hand-written
+    conservative floors/ceilings (documented in the baseline's "note") arm
+    catastrophic-regression detection on any host; a measured --update
+    refresh tightens them to real numbers;
+  * a baseline row may carry "min_ratio_vs": [{"row": R, "field": F,
+    "min": M}, ...] — each entry asserts the FRESH value of this row's F is
+    >= M * the FRESH value of row R's F (cross-row ratio gates, e.g.
+    "sharding must not collapse throughput vs the S=1 row"); these compare
+    fresh against fresh, so they bite even while the absolute baselines are
+    still hand-written floors;
   * a baseline row missing from the fresh output is a FAILURE (renaming or
     dropping a bench must be done deliberately, by updating the baseline);
   * new fresh rows/fields simply report "new (no baseline)";
   * --update rewrites each baseline from the fresh file (all gated fields
-    filled in), so refreshing baselines is one command.
+    filled in), so refreshing baselines is one command; the top-level
+    "note" and each row's "min_ratio_vs"/"note" are curated gate config and
+    survive the rewrite.
 
 A table is printed either way so the numbers land in the CI log.
 """
@@ -54,9 +67,14 @@ def perf_fields(row):
     return sorted(
         k
         for k, v in row.items()
-        if k.endswith(("_per_sec", "_per_joule"))
+        if k.endswith(("_per_sec", "_per_joule", "_ns"))
         and (v is None or isinstance(v, (int, float)))
     )
+
+
+def is_latency(field):
+    """Latency fields gate in reverse: bigger fresh values are regressions."""
+    return field.endswith("_ns")
 
 
 def fmt(v):
@@ -102,7 +120,16 @@ def check_pair(fresh_path, base_path, threshold, update):
                 ratio = "-"
             else:
                 ratio = f"{fval / bval:5.2f}x" if bval > 0 else "-"
-                if bval > 0 and fval < bval * (1.0 - threshold):
+                if is_latency(field):
+                    if bval > 0 and fval > bval * (1.0 + threshold):
+                        status = f"REGRESSION (> {threshold:.0%} above baseline latency)"
+                        failures.append(
+                            f"{name}.{field}: {fval:,.1f} > {bval * (1 + threshold):,.1f} "
+                            f"(baseline {bval:,.1f})"
+                        )
+                    else:
+                        status = "ok"
+                elif bval > 0 and fval < bval * (1.0 - threshold):
                     status = f"REGRESSION (> {threshold:.0%} below baseline)"
                     failures.append(
                         f"{name}.{field}: {fval:,.1f} < {bval * (1 - threshold):,.1f} "
@@ -111,6 +138,30 @@ def check_pair(fresh_path, base_path, threshold, update):
                 else:
                     status = "ok"
             print(f"{name:<28} {field:<26} {fmt(bval):>14} {fmt(fval):>14} {ratio:>7}  {status}")
+        for cons in brow.get("min_ratio_vs", []):
+            ref_name, field = cons.get("row"), cons.get("field")
+            m = cons.get("min")
+            fval = frow.get(field)
+            rval = fresh.get(ref_name, {}).get(field)
+            label = f"{field} >= {m}x {ref_name}"
+            if not isinstance(fval, (int, float)) or not isinstance(rval, (int, float)):
+                status = "MISSING fresh value(s) for ratio gate"
+                failures.append(f"{name}: min_ratio_vs {label}: value(s) missing")
+                ratio = "-"
+            else:
+                ratio = f"{fval / rval:5.2f}x" if rval > 0 else "-"
+                if rval > 0 and fval < m * rval:
+                    status = f"RATIO REGRESSION (< {m}x of {ref_name})"
+                    failures.append(
+                        f"{name}: min_ratio_vs {label}: {fval:,.1f} < "
+                        f"{m * rval:,.1f} ({ref_name}.{field} = {rval:,.1f})"
+                    )
+                else:
+                    status = "ok"
+            print(
+                f"{name:<28} {('ratio:' + field)[:26]:<26} {fmt(rval):>14} {fmt(fval):>14} "
+                f"{ratio:>7}  {status}"
+            )
     for name in sorted(set(fresh) - set(base)):
         print(f"{name:<28} {'*':<26} {'-':>14} {'-':>14} {'-':>7}  new (no baseline)")
 
@@ -123,6 +174,20 @@ def write_baseline(fresh_path, base_path):
     os.makedirs(os.path.dirname(base_path) or ".", exist_ok=True)
     with open(fresh_path) as f:
         doc = json.load(f)
+    # Curated gate config survives the rewrite: fresh bench output never
+    # carries the policy note or the cross-row ratio constraints, so pull
+    # them forward from the old baseline.
+    if os.path.exists(base_path):
+        old = load(base_path)
+        if "note" in old:
+            doc["note"] = old["note"]
+        old_rows = rows_by_name(old)
+        for row in doc.get("configs", []):
+            orow = old_rows.get(row.get("name"))
+            if orow:
+                for key in ("min_ratio_vs", "note"):
+                    if key in orow and key not in row:
+                        row[key] = orow[key]
     with open(base_path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")

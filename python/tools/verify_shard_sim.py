@@ -1,0 +1,323 @@
+#!/usr/bin/env python3
+"""Algorithm-level verification of the intra-chain sharded engine (PR 9).
+
+The dev container has no Rust toolchain, so this ports the sharding-specific
+logic of `gibbs::engine` 1:1 to Python (stdlib only) and checks the
+properties the Rust tests assert with `cargo`:
+
+  1. SIMD padding algebra: `SweepPlan::from_topo` pads every node's
+     gathered (weight, neighbor) list to a LANE=8 multiple with
+     zero-weight sentinels and `half()` accumulates the lane products in
+     order. In f32 arithmetic (every operation rounded through a 4-byte
+     struct) the chunked ordered sum equals the unpadded sequential sum
+     for every input: a zero-weight product is +/-0.0 and x + (+/-0.0) == x
+     for all finite x (the lone exception, -0.0 + 0.0 = +0.0, changes the
+     sign bit of a zero field only, and sigmoid(+0.0) == sigmoid(-0.0), so
+     the sampled spin distribution is untouched);
+  2. shard partition: a port of `shard_block_bounds` — the block offsets
+     cover the update list, ascend strictly, respect MAX_SHARD_BLOCKS,
+     stay near the target size, and every interior boundary is
+     word-aligned in the color-major packed bit layout (so the packed
+     sharded twin never has two shards read-modify-writing one u64); and
+     the contiguous assignment shard = blk*S//nb covers all blocks in
+     order at every width S — blocks (and their RNG streams) exist
+     independently of S by construction;
+  3. sharded chromatic Gibbs: a toy bipartite machine driven block by
+     block on per-(color, block) deterministic hash streams reaches a
+     bit-identical state whether the blocks of a color run sequentially,
+     grouped into any shard width, or in any shard execution order —
+     within a color phase, blocks write disjoint nodes and read only the
+     opposite color, so block executions commute (the race-freedom
+     argument `run_chain_sharded` rests on), clamped or free.
+
+Run: python3 python/tools/verify_shard_sim.py -> ALL SHARD CHECKS PASSED
+"""
+
+import math
+import random
+import struct
+
+LANE = 8
+MAX_SHARD_BLOCKS = 64
+
+
+def f32(x):
+    """Round to nearest f32 — every arithmetic op goes through this."""
+    return struct.unpack("f", struct.pack("f", x))[0]
+
+
+def f32_bits(x):
+    return struct.pack("f", x)
+
+
+# ------------------------------------------------- 1. padding algebra --
+
+
+def seq_sum(bias, pairs):
+    acc = f32(bias)
+    for w, s in pairs:
+        acc = f32(acc + f32(w * s))
+    return acc
+
+
+def chunked_padded_sum(bias, pairs, spins):
+    """half()'s loop: pad to a LANE multiple with (0.0, nbr=0) sentinels,
+    form the lane products of each chunk, then fold them in order."""
+    padded = list(pairs)
+    while len(padded) % LANE != 0:
+        padded.append((0.0, spins[0]))  # sentinel reads a live spin
+    acc = f32(bias)
+    for base in range(0, len(padded), LANE):
+        prod = [f32(w * s) for w, s in padded[base : base + LANE]]
+        for p in prod:
+            acc = f32(acc + p)
+    return acc
+
+
+def check_padding_algebra():
+    rng = random.Random(11)
+    cases = 0
+    for trial in range(500):
+        deg = rng.randrange(0, 41)  # includes 0 (isolated node) and odd degrees
+        spins = [rng.choice([-1.0, 1.0]) for _ in range(8)]
+        pairs = [
+            (f32(rng.uniform(-2.0, 2.0)), rng.choice([-1.0, 1.0])) for _ in range(deg)
+        ]
+        bias = f32(rng.uniform(-3.0, 3.0))
+        a = seq_sum(bias, pairs)
+        b = chunked_padded_sum(bias, pairs, spins)
+        assert a == b, f"trial {trial}: chunked {b!r} != sequential {a!r}"
+        # Bitwise identical except possibly the sign of a zero.
+        if a != 0.0:
+            assert f32_bits(a) == f32_bits(b), f"trial {trial}: bit mismatch"
+        cases += 1
+    # The one tolerated exception, pinned: -0.0 + (+0.0 sentinel) = +0.0
+    # flips only the sign bit of a zero, and both signs sigmoid to 0.5.
+    assert f32(-0.0 + 0.0) == 0.0
+    assert 1.0 / (1.0 + math.exp(-0.0)) == 1.0 / (1.0 + math.exp(0.0)) == 0.5
+    print(f"  padding algebra: chunked LANE={LANE} sum == sequential sum "
+          f"on {cases} random gather lists (bitwise, zero-sign caveat pinned)")
+
+
+# ---------------------------------------------- graph + packed layout --
+
+
+def build(grid, rules):
+    """graph::build connection structure + checkerboard coloring."""
+    n = grid * grid
+    nbrs = [[] for _ in range(n)]
+    for y in range(grid):
+        for x in range(grid):
+            u = y * grid + x
+            for (a, b) in rules:
+                for (dx, dy) in [(a, b), (-b, a), (-a, -b), (b, -a)]:
+                    xx, yy = x + dx, y + dy
+                    if 0 <= xx < grid and 0 <= yy < grid:
+                        nbrs[u].append(yy * grid + xx)
+    color = [((i % grid) + (i // grid)) % 2 for i in range(n)]
+    return nbrs, color
+
+
+G8 = [(0, 1), (4, 1)]
+G12 = [(0, 1), (4, 1), (5, 2)]
+
+
+def packed_bit_pos(color):
+    """Color-major packed layout: color-0 nodes (ascending, clamped or
+    not) hold bits 0.., color-1 starts at the next word boundary."""
+    n = len(color)
+    pos = [0] * n
+    i0 = 0
+    for i in range(n):
+        if color[i] == 0:
+            pos[i] = i0
+            i0 += 1
+    base = ((i0 + 63) // 64) * 64
+    i1 = 0
+    for i in range(n):
+        if color[i] == 1:
+            pos[i] = base + i1
+            i1 += 1
+    return pos
+
+
+def shard_block_bounds(nodes, bit_pos):
+    """1:1 port of gibbs::engine::shard_block_bounds."""
+    ln = len(nodes)
+    if ln == 0:
+        return [0]
+    target = max(-(-ln // MAX_SHARD_BLOCKS), 1)
+    off = [0]
+    prev = 0
+    for j in range(1, ln):
+        w = bit_pos[nodes[j]] // 64
+        w_prev = bit_pos[nodes[j - 1]] // 64
+        if j - prev >= target and w != w_prev:
+            off.append(j)
+            prev = j
+    off.append(ln)
+    return off
+
+
+def check_shard_partition():
+    rng = random.Random(7)
+    checked = 0
+    for grid, rules in [(8, G8), (24, G8), (46, G8), (70, G12), (9, G12)]:
+        _, color = build(grid, rules)
+        n = grid * grid
+        pos = packed_bit_pos(color)
+        for clamp_frac in [0.0, 0.3]:
+            cmask = [1.0 if rng.random() < clamp_frac else 0.0 for _ in range(n)]
+            for c in [0, 1]:
+                nodes = [i for i in range(n) if color[i] == c and cmask[i] <= 0.5]
+                off = shard_block_bounds(nodes, pos)
+                ln = len(nodes)
+                # Cover + strict ascent + block-count cap.
+                assert off[0] == 0 and off[-1] == ln, (grid, c, off[:3], off[-3:])
+                assert all(a < b for a, b in zip(off, off[1:])) or ln == 0
+                nb = len(off) - 1
+                assert nb <= MAX_SHARD_BLOCKS, f"{nb} blocks > cap"
+                # Near-equal: word alignment can defer a cut by at most one
+                # word's worth of update-list entries.
+                target = max(-(-ln // MAX_SHARD_BLOCKS), 1) if ln else 1
+                sizes = [b - a for a, b in zip(off, off[1:])]
+                assert all(s <= target + 64 for s in sizes), (target, max(sizes))
+                # Word alignment of every interior boundary.
+                for j in off[1:-1]:
+                    assert pos[nodes[j]] // 64 != pos[nodes[j - 1]] // 64, (
+                        f"boundary {j} splits a word"
+                    )
+                # Word-disjointness across blocks (the packed RMW guarantee).
+                words = [
+                    {pos[i] // 64 for i in nodes[a:b]} for a, b in zip(off, off[1:])
+                ]
+                for x in range(len(words)):
+                    for y in range(x + 1, len(words)):
+                        assert not (words[x] & words[y]), f"blocks {x},{y} share a word"
+                # Shard assignment: contiguous, in-order, covers all blocks
+                # at every width — the block set itself never depends on S.
+                for s_width in list(range(1, 11)) + [nb or 1, 2 * (nb or 1)]:
+                    seen = []
+                    for shard in range(s_width):
+                        mine = [
+                            blk
+                            for blk in range(nb)
+                            if blk * s_width // max(nb, 1) == shard
+                        ]
+                        assert mine == list(range(mine[0], mine[0] + len(mine))) if mine else True
+                        seen.extend(mine)
+                    assert seen == list(range(nb)), (s_width, seen[:5])
+                checked += 1
+    print(f"  shard partition: cover/word-alignment/word-disjointness/"
+          f"assignment checked over {checked} (graph, clamp, color) cases")
+
+
+# ------------------------------------------- 3. sharded toy Gibbs run --
+
+
+def stream(color, first_node):
+    """Deterministic per-(color, block) uniform stream keyed the way
+    `shard_block_rngs` keys its forks (by the block's first node id)."""
+    state = (color * 0x9E3779B97F4A7C15 + first_node * 0xBF58476D1CE4E5B9 + 1) & (
+        (1 << 64) - 1
+    )
+
+    def next_uniform():
+        nonlocal state
+        # splitmix64 step.
+        state = (state + 0x9E3779B97F4A7C15) & ((1 << 64) - 1)
+        z = state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & ((1 << 64) - 1)
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & ((1 << 64) - 1)
+        z ^= z >> 31
+        return (z >> 11) / float(1 << 53)
+
+    return next_uniform
+
+
+def run_block(s, nodes_in_block, nbrs, w, h, beta, draw):
+    """Scalar halfsweep restricted to one block: the per-block oracle."""
+    for i in nodes_in_block:
+        f = h[i]
+        for j, v in enumerate(nbrs[i]):
+            f = f32(f + f32(w[i][j] * s[v]))
+        p = 1.0 / (1.0 + math.exp(-2.0 * beta * f))
+        s[i] = 1.0 if draw[i] < p else -1.0
+
+
+def sharded_run(grid, rules, clamp_frac, s_width, order, seed, sweeps=4):
+    """Run the toy machine with blocks grouped into `s_width` shards and
+    the shards of each phase executed in `order` ('fwd'|'rev'|'rr')."""
+    nbrs, color = build(grid, rules)
+    n = grid * grid
+    rng = random.Random(seed)
+    w = [[f32(rng.uniform(-0.5, 0.5)) for _ in nbrs[i]] for i in range(n)]
+    h = [f32(rng.uniform(-0.3, 0.3)) for i in range(n)]
+    cmask = [1.0 if rng.random() < clamp_frac else 0.0 for _ in range(n)]
+    s = [rng.choice([-1.0, 1.0]) for _ in range(n)]
+    pos = packed_bit_pos(color)
+    beta = 1.0
+
+    per_color = []
+    for c in [0, 1]:
+        nodes = [i for i in range(n) if color[i] == c and cmask[i] <= 0.5]
+        off = shard_block_bounds(nodes, pos)
+        nb = len(off) - 1
+        blocks = [nodes[a:b] for a, b in zip(off, off[1:])]
+        streams = [stream(c, blk[0]) for blk in blocks]
+        per_color.append((blocks, streams, nb))
+
+    for _ in range(sweeps):
+        for c in [0, 1]:
+            blocks, streams, nb = per_color[c]
+            # Pre-draw each block's uniforms from its own stream (the
+            # stream advance is per block, independent of shard grouping).
+            draws = []
+            for blk, st in zip(blocks, streams):
+                draws.append({i: st() for i in blk})
+            shards = [
+                [blk for blk in range(nb) if blk * s_width // max(nb, 1) == sh]
+                for sh in range(s_width)
+            ]
+            if order == "rev":
+                shards = shards[::-1]
+            if order == "rr":  # round-robin across shards, one block each
+                seqd = []
+                k = 0
+                while any(shards):
+                    if shards[k % len(shards)]:
+                        seqd.append(shards[k % len(shards)].pop(0))
+                    k += 1
+                shards = [[blk] for blk in seqd]
+            for mine in shards:
+                for blk in mine:
+                    run_block(s, blocks[blk], nbrs, w, h, beta, draws[blk])
+    return s
+
+
+def check_sharded_gibbs():
+    runs = 0
+    for grid, rules in [(12, G8), (16, G12)]:
+        for clamp_frac in [0.0, 0.25]:
+            ref = sharded_run(grid, rules, clamp_frac, 1, "fwd", seed=5)
+            for s_width in [2, 3, 5, 64]:
+                for order in ["fwd", "rev", "rr"]:
+                    got = sharded_run(grid, rules, clamp_frac, s_width, order, seed=5)
+                    assert got == ref, (
+                        f"grid {grid} clamp {clamp_frac} S={s_width} {order}: "
+                        "sharded state != sequential block oracle"
+                    )
+                    runs += 1
+    print(f"  sharded Gibbs: {runs} (width, order) runs bit-identical to the "
+          f"sequential per-block oracle, clamped and free")
+
+
+def main():
+    check_padding_algebra()
+    check_shard_partition()
+    check_sharded_gibbs()
+    print("ALL SHARD CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    main()

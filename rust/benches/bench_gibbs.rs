@@ -12,6 +12,10 @@
 //!   * `bitsliced_*` — the chain-major bit-sliced backend vs packed on the
 //!                     same quantized L=70 machine at serving batches
 //!                     (B=64/128/256);
+//!   * `sharded_*`   — the intra-chain sharded f32 engine at B=1 on the
+//!                     quantized L=70 machine (single-image serving
+//!                     latency), sweeps/s plus per-halfsweep p50/p99 ns
+//!                     across gang widths S=1/2/4;
 //! plus the HLO/PJRT path when artifacts are present. Writes a
 //! machine-readable `BENCH_gibbs.json` at the repo root; CI compares it
 //! against `baselines/BENCH_gibbs.json` (python/tools/check_bench.py) and
@@ -26,6 +30,7 @@ use thermo_dtm::gibbs::packed::quantize_machine;
 use thermo_dtm::gibbs::{self, SweepPlanBitsliced, SweepPlanPacked, WeightGrid};
 use thermo_dtm::graph;
 use thermo_dtm::model::LayerParams;
+use thermo_dtm::obs::Histogram;
 use thermo_dtm::runtime::Runtime;
 use thermo_dtm::train::sampler::{HloSampler, LayerSampler};
 use thermo_dtm::util::json::{self, Value};
@@ -273,6 +278,60 @@ fn main() {
                 "  -> L{l} B{batch} bitsliced/packed speedup {:.2}x  ({} B state per slice)",
                 sliced_sps / packed_sps.max(1e-9),
                 sliced_plan.state_bytes_per_slice()
+            );
+        }
+    }
+
+    // Intra-chain sharded f32 engine at B=1 on the same quantized L=70
+    // machine — the single-image serving-latency axis. One "sweep" is the
+    // lone chain's full two-color Gibbs iteration; the gang width S splits
+    // each color's shard blocks across barrier-synchronized workers, and
+    // the sampled states are bit-identical at every S (per-block RNG
+    // streams), so the rows differ only in wall clock. Per-halfsweep
+    // latency quantiles come from a local obs histogram over per-call
+    // wall time / 2k (the log-bucketed sketch bounds quantile error to
+    // REL_ERROR_BOUND, plenty for a p50/p99 regression gate).
+    {
+        let (l, pat) = (70usize, "G12");
+        let top = graph::build("bench_sharded", l, pat, l * l / 4, 0).unwrap();
+        let n = top.n_nodes();
+        let mut rng = Rng::new(0);
+        let params = LayerParams::init(&top, &mut rng, 0.2);
+        let m = gibbs::Machine::new(&top, &params.w_edges, params.h.clone(), vec![0.0; n], 1.0);
+        let cmask = vec![0.0f32; n];
+        let topo = Arc::new(SweepTopo::new(&top, &cmask));
+        let qm = quantize_machine(&topo, &m, WeightGrid::default());
+        let plan = SweepPlan::from_topo(Arc::clone(&topo), &qm);
+
+        let batch = 1usize;
+        let mut chains = gibbs::Chains::random(batch, n, &mut rng);
+        let xt = vec![0.0f32; n];
+        let sweeps = (batch * k_amort) as f64;
+        for shards in [1usize, 2, 4] {
+            let name = format!("sharded_L{l}_{pat}_B{batch}_S{shards}");
+            let hist = Histogram::new();
+            let sps = b
+                .iter_items(&name, sweeps, || {
+                    let t0 = std::time::Instant::now();
+                    engine::run_sweeps_sharded(&plan, &mut chains, &xt, k_amort, shards, &mut rng);
+                    hist.record(t0.elapsed().as_nanos() as f64 / (2.0 * k_amort as f64));
+                })
+                .throughput();
+            let d = hist.data();
+            let (p50, p99) = (d.quantile(0.50), d.quantile(0.99));
+            entries.push(json::obj(vec![
+                ("name", Value::Str(name)),
+                ("grid", Value::Num(l as f64)),
+                ("pattern", Value::Str(pat.to_string())),
+                ("batch", Value::Num(batch as f64)),
+                ("shards", Value::Num(shards as f64)),
+                ("sweeps_per_engine_call", Value::Num(k_amort as f64)),
+                ("sweeps_per_sec", Value::Num(sps)),
+                ("halfsweep_p50_ns", Value::Num(p50)),
+                ("halfsweep_p99_ns", Value::Num(p99)),
+            ]));
+            println!(
+                "  -> L{l} B1 S{shards}: {sps:.1} sweeps/s, halfsweep p50 {p50:.0} ns / p99 {p99:.0} ns"
             );
         }
     }

@@ -131,7 +131,8 @@ pub fn hwautocorr(opts: &FigOpts) -> Result<()> {
             .with_mismatch(0.0)
             .with_bits(16);
         let mut s = HwSampler::new(top.clone(), 8, cfg, opts.seed + 1)
-            .with_threads(opts.threads);
+            .with_threads(opts.threads)
+            .with_shards(opts.shards);
         let rep = mebm::measure_mixing(&mut s, &params, 1.0, window)?;
         // Draw-to-draw correlation of a typical cell (2 phase ticks apart).
         let rho = (-2.0 * iv).exp();

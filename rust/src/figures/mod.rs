@@ -28,6 +28,10 @@ pub struct FigOpts {
     /// `Auto` picks a 1-bit backend whenever a layer's weights sit on a
     /// DAC grid (bit-sliced at batch >= 64, packed below).
     pub repr: Repr,
+    /// Intra-chain shard width for small-batch sampling (`--shards`); 0
+    /// resolves per run from `(B, N, threads)` via
+    /// `gibbs::resolve_shards`, 1 pins chain-parallel.
+    pub shards: usize,
 }
 
 impl FigOpts {
@@ -42,6 +46,7 @@ impl FigOpts {
             repr: Repr::from_name(&repr_name).ok_or_else(|| {
                 anyhow::anyhow!("unknown --repr {repr_name:?} (packed|bitsliced|f32|auto)")
             })?,
+            shards: args.usize_opt("shards", 0)?,
         })
     }
 

@@ -63,7 +63,8 @@ pub fn quick_train(
     };
     let sampler = RustSampler::new(top.clone(), 32, opts.seed + 5)
         .with_threads(opts.threads)
-        .with_repr(opts.repr);
+        .with_repr(opts.repr)
+        .with_shards(opts.shards);
     let mut tr = Trainer::new(sampler, dtm, cfg, data.to_vec())?;
     tr.run(data)?;
     Ok(tr)
@@ -372,7 +373,8 @@ pub fn fig18(opts: &FigOpts) -> Result<()> {
     };
     let sampler = RustSampler::new(top.clone(), 32, opts.seed + 5)
         .with_threads(opts.threads)
-        .with_repr(opts.repr);
+        .with_repr(opts.repr)
+        .with_shards(opts.shards);
     let mut tr = Trainer::new(sampler, dtm, cfg, data.to_vec())?;
     let mut csv = Csv::new(&["epoch", "pfid", "tau_iters"]);
     for epoch in 0..epochs {

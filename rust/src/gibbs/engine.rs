@@ -29,6 +29,29 @@
 //! chain on the same forked streams reproduces the engine bit for bit (see
 //! `tests/engine_equivalence.rs`).
 //!
+//! Two further parallelism axes target low-latency small-batch serving,
+//! where chain parallelism alone cannot fill the machine:
+//!
+//! * **SIMD-width inner loop** — [`SweepPlan::from_topo`] pads each node's
+//!   gathered `(weight, neighbor)` pair list to a [`LANE`] multiple with
+//!   zero-weight sentinels (neighbor 0; a 0.0 weight makes the gathered
+//!   spin inert), and the field loop runs chunked over fixed `[f32; LANE]`
+//!   arrays so rustc vectorizes the gather/multiply. Products are
+//!   accumulated *in list order* and `x + ±0.0 == x` for every f32 `x`, so
+//!   the padded field is bit-identical to the scalar oracle's.
+//! * **Intra-chain sharding** — [`run_sweeps_sharded`] splits each color's
+//!   update list into the topo's precomputed shard blocks (boundaries
+//!   word-aligned in the packed bit layout, at most [`MAX_SHARD_BLOCKS`]
+//!   per color) and runs them on a barrier-synchronized gang
+//!   (`util::threadpool::gang_run`), one rendezvous per half-color.
+//!   Bipartite coloring guarantees a shard never reads a node another
+//!   shard writes within a color phase. RNG streams are forked per
+//!   *block*, not per shard ([`shard_block_rngs`]: tag = the block's first
+//!   node id), so states are bit-identical for **any** shard count — and
+//!   equal to the scalar `halfsweep` driven block by block on the same
+//!   streams (each block's nodes unmasked in turn; the oracle consumes no
+//!   draws for masked nodes).
+//!
 //! [`run_stats`] additionally fuses sufficient-statistics accumulation
 //! into each chain's post-burn sweep loop (over the plan's non-padding
 //! slot list), removing the separate O(B·N·D) `SweepStats::accumulate`
@@ -44,6 +67,18 @@ use crate::util::rng::Rng;
 use crate::util::threadpool::pooled_map;
 
 use super::{sigmoid, Chains, Machine, SweepStats};
+
+/// f32 lanes per inner-loop chunk: pair lists are padded to a multiple of
+/// this, and the field loop accumulates `LANE` products at a time (8 × f32
+/// = one AVX2 register, two NEON registers).
+pub const LANE: usize = 8;
+
+/// Upper bound on shard blocks per color class. Blocks are the fixed unit
+/// of intra-chain sharding: each owns a contiguous update-list range and
+/// its own forked RNG stream, so any shard count that groups whole blocks
+/// produces identical states. 64 blocks bound the per-chain RNG-fork setup
+/// at O(128) while still letting `--shards` scale past any realistic host.
+pub const MAX_SHARD_BLOCKS: usize = 64;
 
 /// One color class's compiled topology lists (struct-of-arrays layout).
 struct ColorTopo {
@@ -86,6 +121,36 @@ pub struct SweepTopo {
     packed_words: usize,
     /// Words occupied by the color-0 block (the color-1 block starts here).
     color0_words: usize,
+    /// Per color: update-list index boundaries of the shard blocks
+    /// (ascending, first 0, last = nodes.len(); empty color → `[0]`, i.e.
+    /// zero blocks). Boundaries fall only where the packed word index
+    /// advances, so consecutive blocks touch disjoint packed words — the
+    /// packed sharded twin can commit its bits without word-level races.
+    blocks: [Vec<u32>; 2],
+}
+
+/// Split one color's update list into at most [`MAX_SHARD_BLOCKS`]
+/// near-equal contiguous blocks whose boundaries are word-aligned in the
+/// packed bit layout (clamped nodes hold bit positions too, so alignment
+/// is checked against `bit_pos`, not the list index).
+fn shard_block_bounds(nodes: &[u32], bit_pos: &[u32]) -> Vec<u32> {
+    let len = nodes.len();
+    if len == 0 {
+        return vec![0];
+    }
+    let target = len.div_ceil(MAX_SHARD_BLOCKS).max(1);
+    let mut off = vec![0u32];
+    let mut prev = 0usize;
+    for j in 1..len {
+        let w = bit_pos[nodes[j] as usize] / 64;
+        let w_prev = bit_pos[nodes[j - 1] as usize] / 64;
+        if j - prev >= target && w != w_prev {
+            off.push(j as u32);
+            prev = j;
+        }
+    }
+    off.push(len as u32);
+    off
 }
 
 impl SweepTopo {
@@ -147,16 +212,22 @@ impl SweepTopo {
         }
         let packed_words = color0_words + (n - n0).div_ceil(64);
 
+        let colors = [build_color(0), build_color(1)];
+        let blocks = [
+            shard_block_bounds(&colors[0].nodes, &bit_pos),
+            shard_block_bounds(&colors[1].nodes, &bit_pos),
+        ];
         SweepTopo {
             n,
             degree: d,
-            colors: [build_color(0), build_color(1)],
+            colors,
             stat_slot,
             stat_node,
             stat_nbr,
             bit_pos,
             packed_words,
             color0_words,
+            blocks,
         }
     }
 
@@ -185,6 +256,30 @@ impl SweepTopo {
     /// this word index.
     pub fn color0_packed_words(&self) -> usize {
         self.color0_words
+    }
+
+    /// Update-list index boundaries of color `c`'s shard blocks (see the
+    /// `blocks` field). Public so the equivalence suite can drive the
+    /// scalar oracle block by block.
+    pub fn shard_blocks(&self, c: usize) -> &[u32] {
+        &self.blocks[c]
+    }
+
+    /// Shard blocks in color `c` (0 when the color is fully clamped).
+    pub fn shard_block_count(&self, c: usize) -> usize {
+        self.blocks[c].len().saturating_sub(1)
+    }
+
+    /// Node ids updated by block `blk` of color `c`, ascending.
+    pub fn shard_block_nodes(&self, c: usize, blk: usize) -> &[u32] {
+        let a = self.blocks[c][blk] as usize;
+        let b = self.blocks[c][blk + 1] as usize;
+        &self.colors[c].nodes[a..b]
+    }
+
+    /// Widest gang that still gets work every color phase.
+    pub fn max_shard_width(&self) -> usize {
+        self.shard_block_count(0).max(self.shard_block_count(1)).max(1)
     }
 
     // Crate-internal accessors for alternate executors (the `hw::` emulator
@@ -262,14 +357,24 @@ impl Default for TopoCache {
     }
 }
 
-/// One color class's gathered weights, aligned with the topo's lists.
+/// One color class's gathered weights, padded to the SIMD chunk width.
+///
+/// Unlike the topo's canonical (unpadded) lists, each node's pair run here
+/// is padded to a [`LANE`] multiple: sentinel entries carry weight 0.0 and
+/// neighbor 0, so the chunked field loop reads fixed-width blocks with no
+/// tail branch and the sentinels contribute exactly `±0.0` to the
+/// (order-preserving) accumulation — bit-identical to the unpadded sum.
 struct ColorWeights {
     /// Per listed node: bias h\[i\].
     bias: Vec<f32>,
     /// Per listed node: forward coupling gm\[i\].
     gm: Vec<f32>,
-    /// Gathered non-padding weights, slot order preserved.
+    /// Gathered weights, slot order preserved, zero-padded per node.
     w: Vec<f32>,
+    /// Neighbor indices aligned with `w` (sentinel entries point at 0).
+    nbr: Vec<u32>,
+    /// Padded prefix offsets (all LANE multiples); len = nodes + 1.
+    off: Vec<u32>,
 }
 
 /// A sweep schedule precompiled for one `(SweepTopo, Machine)` pairing.
@@ -284,16 +389,39 @@ impl SweepPlan {
         SweepPlan::from_topo(Arc::new(SweepTopo::new(top, cmask)), m)
     }
 
-    /// Gather `m`'s weights against a precompiled topo (branch-free O(E)).
+    /// Gather `m`'s weights against a precompiled topo (branch-free O(E)),
+    /// padding each node's pair run to a [`LANE`] multiple (see
+    /// [`ColorWeights`]).
     pub fn from_topo(topo: Arc<SweepTopo>, m: &Machine) -> SweepPlan {
         let (n, d) = (topo.n, topo.degree);
         assert_eq!(m.w_slots.len(), n * d, "weight table length");
         assert_eq!(m.h.len(), n, "bias length");
         assert_eq!(m.gm.len(), n, "gm length");
-        let gather = |ct: &ColorTopo| ColorWeights {
-            bias: ct.nodes.iter().map(|&i| m.h[i as usize]).collect(),
-            gm: ct.nodes.iter().map(|&i| m.gm[i as usize]).collect(),
-            w: ct.slot.iter().map(|&s| m.w_slots[s as usize]).collect(),
+        let gather = |ct: &ColorTopo| {
+            let nn = ct.nodes.len();
+            let mut w = Vec::with_capacity(ct.nbr.len() + nn * (LANE - 1));
+            let mut nbr = Vec::with_capacity(w.capacity());
+            let mut off = Vec::with_capacity(nn + 1);
+            off.push(0u32);
+            for j in 0..nn {
+                let (a, b) = (ct.off[j] as usize, ct.off[j + 1] as usize);
+                for t in a..b {
+                    w.push(m.w_slots[ct.slot[t] as usize]);
+                    nbr.push(ct.nbr[t]);
+                }
+                while w.len() % LANE != 0 {
+                    w.push(0.0);
+                    nbr.push(0);
+                }
+                off.push(w.len() as u32);
+            }
+            ColorWeights {
+                bias: ct.nodes.iter().map(|&i| m.h[i as usize]).collect(),
+                gm: ct.nodes.iter().map(|&i| m.gm[i as usize]).collect(),
+                w,
+                nbr,
+                off,
+            }
         };
         let colors = [gather(&topo.colors[0]), gather(&topo.colors[1])];
         SweepPlan {
@@ -305,7 +433,8 @@ impl SweepPlan {
 
     /// Refresh the gathered weights in place from `m` (same topology/mask).
     /// This is the per-iteration cost when reusing a plan across trainer
-    /// steps: no allocation, no pad/color branches.
+    /// steps: no allocation, no pad/color branches. The padded layout is
+    /// fixed by the topo, so sentinel slots stay 0.0 untouched.
     pub fn reweight(&mut self, m: &Machine) {
         let (n, d) = (self.topo.n, self.topo.degree);
         assert_eq!(m.w_slots.len(), n * d, "weight table length");
@@ -320,8 +449,12 @@ impl SweepPlan {
             for (dst, &i) in cw.gm.iter_mut().zip(&ct.nodes) {
                 *dst = m.gm[i as usize];
             }
-            for (dst, &s) in cw.w.iter_mut().zip(&ct.slot) {
-                *dst = m.w_slots[s as usize];
+            for j in 0..ct.nodes.len() {
+                let (a, b) = (ct.off[j] as usize, ct.off[j + 1] as usize);
+                let base = cw.off[j] as usize;
+                for (t, src) in (a..b).enumerate() {
+                    cw.w[base + t] = m.w_slots[ct.slot[src] as usize];
+                }
             }
         }
         self.beta = m.beta;
@@ -337,12 +470,18 @@ impl SweepPlan {
         self.topo.gathered_pairs()
     }
 
-    /// Bytes the plan streams per chain sweep (weight + neighbor gathers
-    /// plus per-node scalars) — the shared read-only working set, for
-    /// comparison against the packed backend's.
+    /// `(weight, neighbor)` pairs including LANE-padding sentinels — the
+    /// entries the chunked inner loop actually streams.
+    pub fn padded_pairs(&self) -> usize {
+        self.colors[0].w.len() + self.colors[1].w.len()
+    }
+
+    /// Bytes the plan streams per chain sweep (weight + neighbor gathers,
+    /// padding included, plus per-node scalars) — the shared read-only
+    /// working set, for comparison against the packed backend's.
     pub fn plan_bytes_per_sweep(&self) -> usize {
-        // w(4) + nbr(4) per pair; bias(4) + gm(4) + off(4) per node.
-        self.gathered_pairs() * 8 + self.updates_per_sweep() * 12
+        // w(4) + nbr(4) per padded pair; bias(4) + gm(4) + off(4) per node.
+        self.padded_pairs() * 8 + self.updates_per_sweep() * 12
     }
 
     /// Bytes of mutable per-chain state (the f32 spin row).
@@ -358,12 +497,65 @@ impl SweepPlan {
         for j in 0..ct.nodes.len() {
             let i = ct.nodes[j] as usize;
             let mut f = cw.bias[j] + cw.gm[j] * xt_row[i];
-            let (a, b) = (ct.off[j] as usize, ct.off[j + 1] as usize);
-            for t in a..b {
-                f += cw.w[t] * s[ct.nbr[t] as usize];
+            let (a, b) = (cw.off[j] as usize, cw.off[j + 1] as usize);
+            // Fixed-width chunks vectorize the gather/multiply; the adds
+            // stay in list order so the field is bit-identical to the
+            // scalar oracle's (sentinels add ±0.0, an f32 identity).
+            let mut t = a;
+            while t < b {
+                let mut prod = [0.0f32; LANE];
+                for (l, p) in prod.iter_mut().enumerate() {
+                    *p = cw.w[t + l] * s[cw.nbr[t + l] as usize];
+                }
+                for &p in &prod {
+                    f += p;
+                }
+                t += LANE;
             }
             let p = sigmoid(two_beta * f);
             s[i] = if rng.uniform_f32() < p { 1.0 } else { -1.0 };
+        }
+    }
+
+    /// Update nodes `[ja, jb)` of color `c`'s update list through a raw
+    /// state-row pointer — the sharded path's inner loop, same chunked
+    /// field math (and draw order per node) as [`Self::half`].
+    ///
+    /// # Safety
+    /// `row` must point at this plan's `n`-length f32 state row, and no
+    /// other thread may concurrently write any entry this block reads or
+    /// writes: guaranteed by the caller's half-color barrier schedule
+    /// (reads touch only opposite-color nodes) and the disjoint block
+    /// partition (writes touch only this block's own nodes).
+    unsafe fn half_block_raw(
+        &self,
+        c: usize,
+        ja: usize,
+        jb: usize,
+        row: *mut f32,
+        xt_row: &[f32],
+        rng: &mut Rng,
+    ) {
+        let ct = &self.topo.colors[c];
+        let cw = &self.colors[c];
+        let two_beta = 2.0 * self.beta;
+        for j in ja..jb {
+            let i = ct.nodes[j] as usize;
+            let mut f = cw.bias[j] + cw.gm[j] * xt_row[i];
+            let (a, b) = (cw.off[j] as usize, cw.off[j + 1] as usize);
+            let mut t = a;
+            while t < b {
+                let mut prod = [0.0f32; LANE];
+                for (l, p) in prod.iter_mut().enumerate() {
+                    *p = cw.w[t + l] * *row.add(cw.nbr[t + l] as usize);
+                }
+                for &p in &prod {
+                    f += p;
+                }
+                t += LANE;
+            }
+            let p = sigmoid(two_beta * f);
+            *row.add(i) = if rng.uniform_f32() < p { 1.0 } else { -1.0 };
         }
     }
 
@@ -426,6 +618,123 @@ pub fn run_sweeps(
         chains.s[bi * n..(bi + 1) * n].copy_from_slice(&row);
     }
     crate::obs::record_engine_run(chains.b, k, plan.updates_per_sweep());
+}
+
+/// Fork one RNG stream per (color, block) in fixed color-major,
+/// block-ascending order, tag = the block's first node id. Blocks — not
+/// shards — own streams, so the forked set (and therefore the sampled
+/// states) is independent of the shard count, and the scalar `halfsweep`
+/// driven block by block on these same streams reproduces the sharded
+/// engine bit for bit (`tests/engine_equivalence.rs`).
+pub fn shard_block_rngs(topo: &SweepTopo, chain_rng: &mut Rng) -> [Vec<Rng>; 2] {
+    let mut out = [Vec::new(), Vec::new()];
+    for (c, streams) in out.iter_mut().enumerate() {
+        *streams = (0..topo.shard_block_count(c))
+            .map(|blk| chain_rng.fork(topo.shard_block_nodes(c, blk)[0] as u64))
+            .collect();
+    }
+    out
+}
+
+/// Shared mutable state row for the gang: shards write disjoint node
+/// indices within a color phase and read only opposite-color entries, so
+/// all access goes through the raw pointer (never overlapping `&mut`
+/// slices) with the barrier providing the inter-phase ordering.
+struct RowPtr(*mut f32);
+unsafe impl Send for RowPtr {}
+unsafe impl Sync for RowPtr {}
+
+/// Run `k` full sweeps on every chain with each chain's color classes
+/// split across `shards` barrier-synchronized gang workers — the
+/// small-batch/low-latency twin of [`run_sweeps`], which parallelizes
+/// across chains instead. Chains are processed sequentially (the regime
+/// this serves is `B < threads`); per-(color, block) RNG streams make the
+/// result bit-identical for any `shards` value, including 1.
+pub fn run_sweeps_sharded(
+    plan: &SweepPlan,
+    chains: &mut Chains,
+    xt: &[f32],
+    k: usize,
+    shards: usize,
+    rng: &mut Rng,
+) {
+    let n = chains.n;
+    assert_eq!(plan.topo.n, n, "plan/chains node count");
+    assert_eq!(xt.len(), chains.b * n, "xt shape");
+    let width = shards.max(1).min(plan.topo.max_shard_width());
+    if crate::obs::metrics_enabled() {
+        crate::obs::global().gauge("gibbs.shards").set(width as f64);
+    }
+    let rngs = chain_rngs(rng, chains.b);
+    for (bi, mut chain_rng) in rngs.into_iter().enumerate() {
+        let block_rngs = shard_block_rngs(&plan.topo, &mut chain_rng);
+        let (row, xt_row) = (
+            &mut chains.s[bi * n..(bi + 1) * n],
+            &xt[bi * n..(bi + 1) * n],
+        );
+        run_chain_sharded(plan, row, xt_row, k, width, block_rngs);
+    }
+    crate::obs::record_engine_run(chains.b, k, plan.updates_per_sweep());
+}
+
+/// One chain's gang schedule: each shard owns a contiguous range of whole
+/// blocks per color (plus their RNG streams) and the gang rendezvouses
+/// once per half-color, 2k barriers per chain run.
+fn run_chain_sharded(
+    plan: &SweepPlan,
+    row: &mut [f32],
+    xt_row: &[f32],
+    k: usize,
+    width: usize,
+    block_rngs: [Vec<Rng>; 2],
+) {
+    // (start_j, end_j, stream) per owned block, per color.
+    struct ShardWork {
+        blocks: [Vec<(u32, u32, Rng)>; 2],
+    }
+    let mut works: Vec<ShardWork> = (0..width)
+        .map(|_| ShardWork {
+            blocks: [Vec::new(), Vec::new()],
+        })
+        .collect();
+    let [streams0, streams1] = block_rngs;
+    for (c, streams) in [streams0, streams1].into_iter().enumerate() {
+        let off = plan.topo.shard_blocks(c);
+        let nb = off.len().saturating_sub(1);
+        for (blk, stream) in streams.into_iter().enumerate() {
+            // Contiguous near-equal split of whole blocks across shards.
+            let shard = blk * width / nb.max(1);
+            works[shard].blocks[c].push((off[blk], off[blk + 1], stream));
+        }
+    }
+    // Each shard locks only its own work (uncontended; one lock per run);
+    // the Mutex moves `Rng` ownership across the gang without `unsafe`.
+    let works: Vec<std::sync::Mutex<ShardWork>> =
+        works.into_iter().map(std::sync::Mutex::new).collect();
+    let ptr = RowPtr(row.as_mut_ptr());
+    let ptr = &ptr;
+    crate::util::threadpool::gang_run(width, |shard, barrier| {
+        let mut work = works[shard].lock().unwrap();
+        for _ in 0..k {
+            for c in 0..2 {
+                for (a, b, stream) in work.blocks[c].iter_mut() {
+                    // SAFETY: blocks partition the color's update list, so
+                    // writes are disjoint across the gang; reads touch only
+                    // opposite-color nodes, which no shard writes in this
+                    // phase; the barrier orders the phases.
+                    unsafe {
+                        plan.half_block_raw(c, *a as usize, *b as usize, ptr.0, xt_row, stream);
+                    }
+                }
+                if shard == 0 {
+                    let _sp = crate::obs::span("gibbs.shard_sync");
+                    barrier.wait();
+                } else {
+                    barrier.wait();
+                }
+            }
+        }
+    });
 }
 
 /// Run `k` sweeps per chain, accumulating `SweepStats` after `burn` sweeps
@@ -671,6 +980,128 @@ mod tests {
             assert_eq!(t.len(), 10);
             assert_eq!(&f[15..], &t[..]);
         }
+    }
+
+    #[test]
+    fn padded_pair_layout_invariants() {
+        let (top, m, _) = setup(10);
+        let n = top.n_nodes();
+        for cmask in [vec![0.0f32; n], top.data_mask()] {
+            let plan = SweepPlan::new(&top, &m, &cmask);
+            for c in 0..2 {
+                let ct = &plan.topo.colors[c];
+                let cw = &plan.colors[c];
+                assert_eq!(cw.off.len(), ct.nodes.len() + 1);
+                for j in 0..ct.nodes.len() {
+                    let (pa, pb) = (cw.off[j] as usize, cw.off[j + 1] as usize);
+                    assert_eq!(pa % LANE, 0);
+                    assert_eq!(pb % LANE, 0);
+                    let (a, b) = (ct.off[j] as usize, ct.off[j + 1] as usize);
+                    let real = b - a;
+                    assert!(pb - pa >= real && pb - pa < real + LANE);
+                    // Real entries preserved in order; sentinels inert.
+                    for t in 0..real {
+                        assert_eq!(cw.nbr[pa + t], ct.nbr[a + t]);
+                        assert_eq!(cw.w[pa + t], m.w_slots[ct.slot[a + t] as usize]);
+                    }
+                    for t in (pa + real)..pb {
+                        assert_eq!(cw.w[t], 0.0);
+                        assert_eq!(cw.nbr[t], 0);
+                    }
+                }
+            }
+            assert!(plan.padded_pairs() >= plan.gathered_pairs());
+            assert_eq!(plan.padded_pairs() % LANE, 0);
+        }
+    }
+
+    #[test]
+    fn shard_blocks_cover_word_aligned_and_bounded() {
+        for (top, _, _) in [setup(11), setup_large(11)] {
+            let n = top.n_nodes();
+            for cmask in [vec![0.0f32; n], top.data_mask()] {
+                let topo = SweepTopo::new(&top, &cmask);
+                for c in 0..2 {
+                    let off = topo.shard_blocks(c);
+                    let nodes = topo.color_nodes(c);
+                    let nb = topo.shard_block_count(c);
+                    assert!(nb <= MAX_SHARD_BLOCKS);
+                    assert_eq!(off[0], 0);
+                    assert_eq!(*off.last().unwrap() as usize, nodes.len());
+                    assert!(off.windows(2).all(|w| w[0] < w[1]) || nodes.is_empty());
+                    // Interior boundaries split packed words: block k's
+                    // last word strictly precedes block k+1's first word.
+                    let bp = topo.packed_bit_pos();
+                    if off.len() >= 2 {
+                        for bnd in &off[1..off.len() - 1] {
+                            let j = *bnd as usize;
+                            assert!(
+                                bp[nodes[j] as usize] / 64 > bp[nodes[j - 1] as usize] / 64,
+                                "boundary {j} not word-aligned"
+                            );
+                        }
+                    }
+                }
+                assert!(topo.max_shard_width() >= 1);
+            }
+        }
+    }
+
+    /// A grid big enough that each color spans several packed words (the
+    /// shard-block granularity): L=24 G8 puts ~4 blocks in each color.
+    fn setup_large(seed: u64) -> (Topology, Machine, Rng) {
+        let top = graph::build("t", 24, "G8", 144, 0).unwrap();
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> = (0..top.n_edges()).map(|_| 0.25 * rng.normal() as f32).collect();
+        let h: Vec<f32> = (0..top.n_nodes()).map(|_| 0.2 * rng.normal() as f32).collect();
+        let gm: Vec<f32> = top.data_mask().iter().map(|&x| 0.5 * x).collect();
+        let m = Machine::new(&top, &w, h, gm, 1.0);
+        (top, m, rng)
+    }
+
+    #[test]
+    fn sharded_states_identical_for_any_shard_count() {
+        let (top, m, mut rng) = setup_large(12);
+        let n = top.n_nodes();
+        assert!(
+            SweepTopo::new(&top, &vec![0.0; n]).max_shard_width() >= 2,
+            "test graph must admit real sharding"
+        );
+        let b = 3;
+        let start = Chains::random(b, n, &mut rng);
+        let xt: Vec<f32> = (0..b * n).map(|_| rng.spin()).collect();
+        let plan = SweepPlan::new(&top, &m, &vec![0.0; n]);
+        let mut outs = Vec::new();
+        for shards in [1usize, 2, 3, 8] {
+            let mut chains = start.clone();
+            run_sweeps_sharded(&plan, &mut chains, &xt, 7, shards, &mut Rng::new(42));
+            outs.push(chains.s);
+        }
+        for o in &outs[1..] {
+            assert_eq!(&outs[0], o);
+        }
+    }
+
+    #[test]
+    fn sharded_respects_clamps_and_spin_domain() {
+        let (top, m, mut rng) = setup_large(13);
+        let n = top.n_nodes();
+        let b = 2;
+        let cmask = top.data_mask();
+        let mut chains = Chains::random(b, n, &mut rng);
+        let cval: Vec<f32> = (0..b * n).map(|_| rng.spin()).collect();
+        chains.impose_clamps(&cmask, &cval);
+        let xt = vec![0.0f32; b * n];
+        let plan = SweepPlan::new(&top, &m, &cmask);
+        run_sweeps_sharded(&plan, &mut chains, &xt, 6, 4, &mut rng);
+        for bi in 0..b {
+            for i in 0..n {
+                if cmask[i] > 0.5 {
+                    assert_eq!(chains.s[bi * n + i], cval[bi * n + i]);
+                }
+            }
+        }
+        assert!(chains.s.iter().all(|&x| x == 1.0 || x == -1.0));
     }
 
     #[test]

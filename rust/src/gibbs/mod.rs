@@ -42,6 +42,26 @@
 //! a grid **and** B ≥ 64, packed for on-grid smaller batches, f32
 //! otherwise.
 //!
+//! Orthogonal to the representation, three **parallelism axes** are
+//! available and composable (the matrix in `ARCHITECTURE.md`):
+//!
+//! 1. *chains* — batch fan-out over the worker pool (every backend; the
+//!    default when B ≥ threads);
+//! 2. *intra-chain shards* — each color class split into word-aligned
+//!    contiguous blocks run by a barrier-synchronized gang
+//!    ([`engine::run_sweeps_sharded`] /
+//!    [`packed::run_sweeps_packed_sharded`]), with one forked RNG stream
+//!    per (color, block) so states are bit-identical at **any** shard
+//!    count — the low-latency path when a small batch cannot fill the
+//!    machine;
+//! 3. *bit-sliced lanes* — 64 chains per word (the bitsliced backend's
+//!    internal axis; it ignores sharding).
+//!
+//! [`resolve_shards`] holds the run-time `(B, N, threads)` policy applied
+//! by [`EnginePlan::run_sweeps`] and the samplers: shard across the thread
+//! budget iff `B < threads` and `N ≥` [`SHARD_MIN_NODES`], chain-parallel
+//! otherwise; CLI `--shards` overrides it.
+//!
 //! Every plan compile preserves the same invariants, so all three
 //! backends target the *same* (possibly quantized) distribution:
 //!
@@ -54,15 +74,21 @@
 //!   compiled from one shared [`engine::SweepTopo`] per `(topology,
 //!   cmask)`, clamped nodes are read by neighbors but never written;
 //! * results are thread-count invariant: RNG streams fork eagerly before
-//!   fan-out — per chain (f32/packed) or per 64-chain slice (bitsliced).
+//!   fan-out — per chain (f32/packed), per 64-chain slice (bitsliced), or
+//!   per (color, block) on the sharded path (which is shard-count and
+//!   thread-count invariant, though a distinct stream family from the
+//!   chain-parallel one).
 
 pub mod bitsliced;
 pub mod engine;
 pub mod packed;
 
 pub use bitsliced::{BitslicedState, SweepPlanBitsliced};
-pub use engine::SweepPlan;
-pub use packed::{EnginePlan, PackedState, Repr, SweepPlanPacked, WeightGrid};
+pub use engine::{run_sweeps_sharded, shard_block_rngs, SweepPlan};
+pub use packed::{
+    resolve_shards, run_sweeps_packed_sharded, EnginePlan, PackedState, Repr, SweepPlanPacked,
+    WeightGrid, SHARD_MIN_NODES,
+};
 
 use crate::graph::Topology;
 use crate::util::rng::Rng;

@@ -38,6 +38,21 @@
 //! plan gathers ~8 B/pair; packed row 624 B (~31x smaller state) with
 //! entry lists that merge same-(word, level) neighbors. See
 //! `bench_gibbs`'s packed-vs-f32 rows for the measured effect.
+//!
+//! Two parallelism refinements mirror the f32 engine. Each node's entry
+//! list is padded to a [`PCHUNK`] multiple with sentinel entries (mask 0
+//! against word 0, level pointing at a 0.0 table slot) so the field loop
+//! runs fixed-width batched-popcount chunks — `popcount(w & 0) = 0` times
+//! `0.0` adds exactly nothing, so fields are unchanged. And the plan
+//! reuses [`SweepTopo`]'s *word-aligned* shard blocks for intra-chain
+//! sharding ([`run_sweeps_packed_sharded`]): blocks of one color never
+//! share a state word, so the bit read-modify-write commits of different
+//! gang shards touch disjoint words, and the same per-(color, block) RNG
+//! streams as the f32 sharded path make the sampled states bit-identical
+//! at any shard count. [`resolve_shards`] holds the run-time `(B, N,
+//! threads)` policy — shard when the batch cannot fill the machine and
+//! the chain is large, chain-parallel otherwise — applied by
+//! [`EnginePlan::run_sweeps`] and both samplers.
 
 use std::sync::Arc;
 
@@ -48,8 +63,42 @@ use crate::util::rng::Rng;
 use super::bitsliced::{
     run_stats_bitsliced, run_sweeps_bitsliced, run_trace_tail_bitsliced, LANES, SweepPlanBitsliced,
 };
-use super::engine::{chain_rngs, map_chains, SweepPlan, SweepTopo};
+use super::engine::{chain_rngs, map_chains, shard_block_rngs, SweepPlan, SweepTopo};
 use super::{sigmoid, Chains, Machine, SweepStats};
+
+/// Entry-chunk width of the packed field loop: entry lists are padded to a
+/// multiple of this with zero sentinels and summed in fixed-width batches
+/// (the popcount analogue of the f32 engine's [`super::engine::LANE`]).
+pub const PCHUNK: usize = 4;
+
+/// Node-count floor for automatic intra-chain sharding: below this the
+/// whole chain fits comfortably in cache and a barrier per half-color
+/// costs more than it recovers.
+pub const SHARD_MIN_NODES: usize = 2048;
+
+/// Resolve the intra-chain shard width for a run from `(B, N, threads)`.
+/// An explicit `requested > 0` (CLI `--shards`, sampler builders) always
+/// wins. Otherwise shard across the full thread budget exactly when chain
+/// parallelism cannot fill the machine (`b < threads`) *and* the chain is
+/// large enough to amortize the barriers (`n >= SHARD_MIN_NODES`) — the
+/// low-latency serving regime — and stay chain-parallel (width 1)
+/// everywhere else. `threads == 0` means the default thread count, as in
+/// [`super::engine::run_sweeps`].
+pub fn resolve_shards(b: usize, n: usize, threads: usize, requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    let t = if threads == 0 {
+        crate::util::threadpool::default_threads()
+    } else {
+        threads
+    };
+    if b < t && n >= SHARD_MIN_NODES {
+        t
+    } else {
+        1
+    }
+}
 
 /// Which engine backend a consumer wants (`--repr` on the CLI).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -68,6 +117,8 @@ pub enum Repr {
     /// Resolve per compile from the weights *and* the batch size:
     /// bit-sliced when the weights sit on a DAC grid and B ≥ 64, packed
     /// for on-grid smaller batches, f32 otherwise. The default everywhere.
+    /// (Intra-chain shard width is a separate *run-time* resolution from
+    /// `(B, N, threads)` — see [`resolve_shards`].)
     Auto,
 }
 
@@ -215,16 +266,20 @@ struct PackedColor {
     bias: Vec<f32>,
     /// Forward coupling per listed node.
     gm: Vec<f32>,
-    /// Prefix offsets into the entry arrays; len = nodes.len() + 1.
+    /// Prefix offsets into the entry arrays; len = nodes.len() + 1, every
+    /// value a [`PCHUNK`] multiple (lists are sentinel-padded).
     off: Vec<u32>,
-    /// Entry: state word index.
+    /// Entry: state word index (0 for padding sentinels).
     ew: Vec<u32>,
-    /// Entry: index into `wtab2`.
+    /// Entry: index into `wtab2` (a 0.0 slot for padding sentinels).
     elv: Vec<u16>,
-    /// Entry: neighbor bits within the word.
+    /// Entry: neighbor bits within the word (0 for padding sentinels).
     emask: Vec<u64>,
-    /// Per-color weight table, pre-doubled: 2·(distinct quantized values).
+    /// Per-color weight table, pre-doubled: 2·(distinct quantized values),
+    /// plus the 0.0 sentinel slot.
     wtab2: Vec<f32>,
+    /// Merged entries excluding padding sentinels.
+    real_entries: usize,
 }
 
 /// A sweep schedule precompiled for one `(SweepTopo, Machine)` pairing
@@ -269,6 +324,9 @@ impl SweepPlanPacked {
                     }
                 }
             };
+            // Level 0 is the padding sentinel: 2·0.0 = 0.0, so a sentinel
+            // entry contributes wtab2[0]·popcount(word & 0) = 0.0 exactly.
+            let zlv = level_of(0.0);
             let mut pos = Vec::with_capacity(nodes.len());
             let mut bias = Vec::with_capacity(nodes.len());
             let mut gm = Vec::with_capacity(nodes.len());
@@ -280,6 +338,7 @@ impl SweepPlanPacked {
             // Scratch for one node's (word, level) -> mask merge; degree is
             // small (<= 24), so a linear scan beats a map.
             let mut acc: Vec<(u32, u16, u64)> = Vec::with_capacity(d);
+            let mut real_entries = 0usize;
             for (j, &i) in nodes.iter().enumerate() {
                 pos.push(bit_pos[i as usize]);
                 gm.push(m.gm[i as usize]);
@@ -298,10 +357,18 @@ impl SweepPlanPacked {
                     }
                 }
                 bias.push(m.h[i as usize] - wsum as f32);
+                real_entries += acc.len();
                 for &(word, lv, mask) in &acc {
                     ew.push(word);
                     elv.push(lv);
                     emask.push(mask);
+                }
+                // Pad this node's list to a PCHUNK multiple with zero
+                // sentinels so the chunked field loop needs no tail.
+                while ew.len() % PCHUNK != 0 {
+                    ew.push(0);
+                    elv.push(zlv);
+                    emask.push(0);
                 }
                 off.push(ew.len() as u32);
             }
@@ -320,6 +387,7 @@ impl SweepPlanPacked {
                 elv,
                 emask,
                 wtab2,
+                real_entries,
             }
         };
         SweepPlanPacked {
@@ -335,10 +403,17 @@ impl SweepPlanPacked {
         self.topo.updates_per_sweep()
     }
 
-    /// Merged `(word, level, mask)` entries across both colors — the packed
-    /// analogue of [`SweepPlan`]'s gathered pairs (never more numerous,
-    /// usually fewer: same-level neighbors sharing a word collapse).
+    /// Merged `(word, level, mask)` entries across both colors, excluding
+    /// padding sentinels — the packed analogue of [`SweepPlan`]'s gathered
+    /// pairs (never more numerous, usually fewer: same-level neighbors
+    /// sharing a word collapse).
     pub fn merged_entries(&self) -> usize {
+        self.colors[0].real_entries + self.colors[1].real_entries
+    }
+
+    /// Entries actually stored (sentinels included); always a [`PCHUNK`]
+    /// multiple per node.
+    pub fn padded_entries(&self) -> usize {
         self.colors[0].ew.len() + self.colors[1].ew.len()
     }
 
@@ -347,7 +422,7 @@ impl SweepPlanPacked {
     pub fn plan_bytes_per_sweep(&self) -> usize {
         // ew(4) + elv(2) + emask(8) per entry; pos(4) + bias(4) + gm(4) +
         // off(4) per node.
-        self.merged_entries() * 14 + self.updates_per_sweep() * 16
+        self.padded_entries() * 14 + self.updates_per_sweep() * 16
     }
 
     /// Bytes of mutable per-chain state (the packed row).
@@ -363,12 +438,74 @@ impl SweepPlanPacked {
             let i = pc.nodes[j] as usize;
             let mut f = pc.bias[j] + pc.gm[j] * xt_row[i];
             let (a, b) = (pc.off[j] as usize, pc.off[j + 1] as usize);
-            for t in a..b {
-                let hits = (st.words[pc.ew[t] as usize] & pc.emask[t]).count_ones();
-                f += pc.wtab2[pc.elv[t] as usize] * hits as f32;
+            // Entry lists are PCHUNK-padded, so fixed-width chunks need no
+            // tail; sentinel terms are exactly 0.0 and the accumulation
+            // order matches the scalar loop, so fields are unchanged.
+            let mut t = a;
+            while t < b {
+                let mut prod = [0.0f32; PCHUNK];
+                for (l, p) in prod.iter_mut().enumerate() {
+                    let hits = (st.words[pc.ew[t + l] as usize] & pc.emask[t + l]).count_ones();
+                    *p = pc.wtab2[pc.elv[t + l] as usize] * hits as f32;
+                }
+                for &p in &prod {
+                    f += p;
+                }
+                t += PCHUNK;
             }
             let p = sigmoid(two_beta * f);
             st.set(pc.pos[j] as usize, rng.uniform_f32() < p);
+        }
+    }
+
+    /// Update nodes `[ja, jb)` of color `c`'s update list through a raw
+    /// packed-word pointer — the sharded path's inner loop, same chunked
+    /// field math (and draw order per node) as [`Self::half`].
+    ///
+    /// # Safety
+    /// `words` must point at this plan's `topo.packed_words()`-length u64
+    /// state, and no other thread may concurrently touch any word this
+    /// block writes or read any word it writes: guaranteed by the
+    /// word-aligned shard-block partition (blocks of one color never share
+    /// a word, so read-modify-write bit commits are disjoint across the
+    /// gang) plus the caller's half-color barrier (field reads touch only
+    /// opposite-color words, frozen during this phase).
+    unsafe fn half_block_raw(
+        &self,
+        c: usize,
+        ja: usize,
+        jb: usize,
+        words: *mut u64,
+        xt_row: &[f32],
+        rng: &mut Rng,
+    ) {
+        let pc = &self.colors[c];
+        let two_beta = 2.0 * self.beta;
+        for j in ja..jb {
+            let i = pc.nodes[j] as usize;
+            let mut f = pc.bias[j] + pc.gm[j] * xt_row[i];
+            let (a, b) = (pc.off[j] as usize, pc.off[j + 1] as usize);
+            let mut t = a;
+            while t < b {
+                let mut prod = [0.0f32; PCHUNK];
+                for (l, p) in prod.iter_mut().enumerate() {
+                    let hits = (*words.add(pc.ew[t + l] as usize) & pc.emask[t + l]).count_ones();
+                    *p = pc.wtab2[pc.elv[t + l] as usize] * hits as f32;
+                }
+                for &p in &prod {
+                    f += p;
+                }
+                t += PCHUNK;
+            }
+            let p = sigmoid(two_beta * f);
+            let pos = pc.pos[j] as usize;
+            let w = words.add(pos >> 6);
+            let m = 1u64 << (pos & 63);
+            if rng.uniform_f32() < p {
+                *w |= m;
+            } else {
+                *w &= !m;
+            }
         }
     }
 
@@ -482,19 +619,40 @@ impl EnginePlan {
         *self = EnginePlan::compile(topo, m, self.repr, self.batch);
     }
 
-    /// Run `k` full sweeps on every chain, chain-parallel across `threads`
-    /// (the [`super::engine::run_sweeps`] contract, repr-dispatched).
+    /// Run `k` full sweeps on every chain. Parallelism is resolved at run
+    /// time from `(B, N, threads, shards)` via [`resolve_shards`]: a width
+    /// above 1 runs each chain's color classes across a barrier-
+    /// synchronized gang (low-latency small-batch serving), width 1 keeps
+    /// the chain-parallel [`super::engine::run_sweeps`] contract
+    /// (bit-identical at any thread count). `shards == 0` means auto;
+    /// `shards == 1` pins chain-parallel. The bit-sliced backend ignores
+    /// sharding — its 64 chain lanes already fill the word, and its
+    /// chain-major layout has no per-chain node axis to split.
     pub fn run_sweeps(
         &self,
         chains: &mut Chains,
         xt: &[f32],
         k: usize,
         threads: usize,
+        shards: usize,
         rng: &mut Rng,
     ) {
+        let width = resolve_shards(chains.b, chains.n, threads, shards);
         match &self.kind {
-            PlanKind::F32(p) => super::engine::run_sweeps(p, chains, xt, k, threads, rng),
-            PlanKind::Packed(p) => run_sweeps_packed(p, chains, xt, k, threads, rng),
+            PlanKind::F32(p) => {
+                if width > 1 {
+                    super::engine::run_sweeps_sharded(p, chains, xt, k, width, rng)
+                } else {
+                    super::engine::run_sweeps(p, chains, xt, k, threads, rng)
+                }
+            }
+            PlanKind::Packed(p) => {
+                if width > 1 {
+                    run_sweeps_packed_sharded(p, chains, xt, k, width, rng)
+                } else {
+                    run_sweeps_packed(p, chains, xt, k, threads, rng)
+                }
+            }
             PlanKind::Bitsliced(p) => run_sweeps_bitsliced(p, chains, xt, k, threads, rng),
         }
     }
@@ -575,6 +733,103 @@ pub fn run_sweeps_packed(
         st.write_row(&plan.topo, &mut chains.s[bi * n..(bi + 1) * n]);
     }
     crate::obs::record_engine_run(chains.b, k, plan.updates_per_sweep());
+}
+
+/// Shared mutable packed state for the gang: word-aligned shard blocks
+/// make every bit commit land in a word no other shard touches within a
+/// phase, so all access goes through the raw pointer (never overlapping
+/// `&mut`) with the barrier providing the inter-phase ordering.
+struct WordPtr(*mut u64);
+unsafe impl Send for WordPtr {}
+unsafe impl Sync for WordPtr {}
+
+/// Packed twin of [`super::engine::run_sweeps_sharded`]: each chain packs
+/// on entry, runs its color classes split across `shards`
+/// barrier-synchronized gang workers, and unpacks on exit. Uses the same
+/// per-(color, block) RNG streams as the f32 sharded path, so results are
+/// bit-identical for any `shards` value, including 1.
+pub fn run_sweeps_packed_sharded(
+    plan: &SweepPlanPacked,
+    chains: &mut Chains,
+    xt: &[f32],
+    k: usize,
+    shards: usize,
+    rng: &mut Rng,
+) {
+    let n = chains.n;
+    assert_eq!(plan.topo.n, n, "plan/chains node count");
+    assert_eq!(xt.len(), chains.b * n, "xt shape");
+    let width = shards.max(1).min(plan.topo.max_shard_width());
+    if crate::obs::metrics_enabled() {
+        crate::obs::global().gauge("gibbs.shards").set(width as f64);
+    }
+    let rngs = chain_rngs(rng, chains.b);
+    for (bi, mut chain_rng) in rngs.into_iter().enumerate() {
+        let block_rngs = shard_block_rngs(&plan.topo, &mut chain_rng);
+        let mut st = PackedState::from_row(&plan.topo, chains.row(bi));
+        let xt_row = &xt[bi * n..(bi + 1) * n];
+        run_chain_packed_sharded(plan, &mut st, xt_row, k, width, block_rngs);
+        st.write_row(&plan.topo, &mut chains.s[bi * n..(bi + 1) * n]);
+    }
+    crate::obs::record_engine_run(chains.b, k, plan.updates_per_sweep());
+}
+
+/// One packed chain's gang schedule — block-to-shard assignment and
+/// barrier cadence identical to the f32 `run_chain_sharded` (2k barriers
+/// per chain run, one per half-color).
+fn run_chain_packed_sharded(
+    plan: &SweepPlanPacked,
+    st: &mut PackedState,
+    xt_row: &[f32],
+    k: usize,
+    width: usize,
+    block_rngs: [Vec<Rng>; 2],
+) {
+    // (start_j, end_j, stream) per owned block, per color.
+    struct ShardWork {
+        blocks: [Vec<(u32, u32, Rng)>; 2],
+    }
+    let mut works: Vec<ShardWork> = (0..width)
+        .map(|_| ShardWork {
+            blocks: [Vec::new(), Vec::new()],
+        })
+        .collect();
+    let [streams0, streams1] = block_rngs;
+    for (c, streams) in [streams0, streams1].into_iter().enumerate() {
+        let off = plan.topo.shard_blocks(c);
+        let nb = off.len().saturating_sub(1);
+        for (blk, stream) in streams.into_iter().enumerate() {
+            let shard = blk * width / nb.max(1);
+            works[shard].blocks[c].push((off[blk], off[blk + 1], stream));
+        }
+    }
+    let works: Vec<std::sync::Mutex<ShardWork>> =
+        works.into_iter().map(std::sync::Mutex::new).collect();
+    let ptr = WordPtr(st.words.as_mut_ptr());
+    let ptr = &ptr;
+    crate::util::threadpool::gang_run(width, |shard, barrier| {
+        let mut work = works[shard].lock().unwrap();
+        for _ in 0..k {
+            for c in 0..2 {
+                for (a, b, stream) in work.blocks[c].iter_mut() {
+                    // SAFETY: word-aligned blocks partition the color's
+                    // update list, so bit commits hit disjoint words across
+                    // the gang; field reads touch only opposite-color
+                    // words, which no shard writes in this phase; the
+                    // barrier orders the phases.
+                    unsafe {
+                        plan.half_block_raw(c, *a as usize, *b as usize, ptr.0, xt_row, stream);
+                    }
+                }
+                if shard == 0 {
+                    let _sp = crate::obs::span("gibbs.shard_sync");
+                    barrier.wait();
+                } else {
+                    barrier.wait();
+                }
+            }
+        }
+    });
 }
 
 /// Packed counterpart of `engine::run_stats` (fused accumulation from the
@@ -868,13 +1123,166 @@ mod tests {
         let mut ca = start.clone();
         ca.impose_clamps(&cmask, &cval);
         let mut cb = ca.clone();
-        plan.run_sweeps(&mut ca, &xt, 8, 2, &mut Rng::new(22));
-        fresh.run_sweeps(&mut cb, &xt, 8, 2, &mut Rng::new(22));
+        plan.run_sweeps(&mut ca, &xt, 8, 2, 1, &mut Rng::new(22));
+        fresh.run_sweeps(&mut cb, &xt, 8, 2, 1, &mut Rng::new(22));
         assert_eq!(ca.s, cb.s, "reweighted packed plan must equal a fresh compile");
 
         // Off-grid reweight of an auto-picked plan falls back to f32.
         plan.reweight(&m1);
         assert_eq!(plan.active(), Repr::F32);
+    }
+
+    #[test]
+    fn packed_entry_padding_invariants() {
+        for (l, pat, seed) in [(6usize, "G8", 3u64), (8, "G12", 5)] {
+            let (top, qm) = quantized_setup(l, pat, seed);
+            let topo = Arc::new(SweepTopo::new(&top, &top.data_mask()));
+            let plan = SweepPlanPacked::from_topo(Arc::clone(&topo), &qm, WeightGrid::default());
+            assert_eq!(plan.padded_entries() % PCHUNK, 0);
+            assert!(plan.padded_entries() >= plan.merged_entries());
+            for pc in &plan.colors {
+                let mut real = 0usize;
+                for j in 0..pc.nodes.len() {
+                    let (a, b) = (pc.off[j] as usize, pc.off[j + 1] as usize);
+                    assert_eq!(a % PCHUNK, 0, "offsets must be chunk-aligned");
+                    assert_eq!((b - a) % PCHUNK, 0, "per-node lists must be chunk multiples");
+                    // Real entries (nonzero mask) first, then sentinels that
+                    // contribute exactly 0.0 to the field.
+                    let mut in_pad = false;
+                    for t in a..b {
+                        if pc.emask[t] == 0 {
+                            in_pad = true;
+                            assert_eq!(pc.ew[t], 0, "sentinel word");
+                            assert_eq!(pc.wtab2[pc.elv[t] as usize], 0.0, "sentinel level");
+                        } else {
+                            assert!(!in_pad, "real entry after a sentinel");
+                            real += 1;
+                        }
+                    }
+                }
+                assert_eq!(real, pc.real_entries);
+            }
+        }
+    }
+
+    /// Larger quantized setup with several shard blocks per color (n = 576,
+    /// 288 color bits -> 5 packed words -> 5 blocks per color).
+    fn sharded_setup(seed: u64) -> (graph::Topology, Machine) {
+        quantized_setup(24, "G8", seed)
+    }
+
+    #[test]
+    fn packed_sharded_states_identical_for_any_shard_count() {
+        let (top, qm) = sharded_setup(17);
+        let n = top.n_nodes();
+        let topo = Arc::new(SweepTopo::new(&top, &vec![0.0; n]));
+        assert!(topo.max_shard_width() >= 2, "need a multi-block topo");
+        let plan = SweepPlanPacked::from_topo(topo, &qm, WeightGrid::default());
+        let b = 3;
+        let mut init = Rng::new(5);
+        let start = Chains::random(b, n, &mut init);
+        let xt: Vec<f32> = (0..b * n).map(|_| init.spin()).collect();
+        let mut outs = Vec::new();
+        for shards in [1usize, 2, 3, 8] {
+            let mut chains = start.clone();
+            run_sweeps_packed_sharded(&plan, &mut chains, &xt, 7, shards, &mut Rng::new(42));
+            outs.push(chains.s);
+        }
+        for o in &outs[1..] {
+            assert_eq!(&outs[0], o, "sharded packed states must not depend on S");
+        }
+        assert!(outs[0].iter().all(|&x| x == 1.0 || x == -1.0));
+    }
+
+    #[test]
+    fn packed_sharded_matches_sequential_block_oracle() {
+        let (top, qm) = sharded_setup(23);
+        let n = top.n_nodes();
+        let topo = Arc::new(SweepTopo::new(&top, &vec![0.0; n]));
+        let plan = SweepPlanPacked::from_topo(Arc::clone(&topo), &qm, WeightGrid::default());
+        let (b, k) = (2usize, 5usize);
+        let mut init = Rng::new(8);
+        let start = Chains::random(b, n, &mut init);
+        let xt: Vec<f32> = (0..b * n).map(|_| init.spin()).collect();
+
+        let mut sharded = start.clone();
+        run_sweeps_packed_sharded(&plan, &mut sharded, &xt, k, 3, &mut Rng::new(91));
+
+        // Independent reference: same chain/block RNG forking, but a plain
+        // sequential scalar field loop over each block in order.
+        let mut oracle = start.clone();
+        let mut root = Rng::new(91);
+        let rngs = chain_rngs(&mut root, b);
+        for (bi, mut chain_rng) in rngs.into_iter().enumerate() {
+            let mut streams = shard_block_rngs(&topo, &mut chain_rng);
+            let mut st = PackedState::from_row(&topo, &oracle.s[bi * n..(bi + 1) * n]);
+            let xt_row = &xt[bi * n..(bi + 1) * n];
+            for _ in 0..k {
+                for c in 0..2 {
+                    let pc = &plan.colors[c];
+                    let off = topo.shard_blocks(c);
+                    for blk in 0..off.len() - 1 {
+                        let r = &mut streams[c][blk];
+                        for j in off[blk] as usize..off[blk + 1] as usize {
+                            let i = pc.nodes[j] as usize;
+                            let mut f = pc.bias[j] + pc.gm[j] * xt_row[i];
+                            for t in pc.off[j] as usize..pc.off[j + 1] as usize {
+                                let hits =
+                                    (st.words[pc.ew[t] as usize] & pc.emask[t]).count_ones();
+                                f += pc.wtab2[pc.elv[t] as usize] * hits as f32;
+                            }
+                            let p = sigmoid(2.0 * plan.beta * f);
+                            st.set(pc.pos[j] as usize, r.uniform_f32() < p);
+                        }
+                    }
+                }
+            }
+            st.write_row(&topo, &mut oracle.s[bi * n..(bi + 1) * n]);
+        }
+        assert_eq!(sharded.s, oracle.s, "gang must reproduce the block oracle bit for bit");
+    }
+
+    #[test]
+    fn packed_sharded_respects_clamps() {
+        let (top, qm) = sharded_setup(29);
+        let n = top.n_nodes();
+        let cmask = top.data_mask();
+        let topo = Arc::new(SweepTopo::new(&top, &cmask));
+        let plan = SweepPlanPacked::from_topo(topo, &qm, WeightGrid::default());
+        let b = 3;
+        let mut rng = Rng::new(12);
+        let mut chains = Chains::random(b, n, &mut rng);
+        let cval: Vec<f32> = (0..b * n).map(|_| rng.spin()).collect();
+        chains.impose_clamps(&cmask, &cval);
+        let xt = vec![0.0f32; b * n];
+        run_sweeps_packed_sharded(&plan, &mut chains, &xt, 6, 4, &mut rng);
+        assert!(chains.s.iter().all(|&x| x == 1.0 || x == -1.0));
+        for bi in 0..b {
+            for i in 0..n {
+                if cmask[i] > 0.5 {
+                    assert_eq!(chains.s[bi * n + i], cval[bi * n + i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_shards_policy() {
+        // Explicit request always wins.
+        assert_eq!(resolve_shards(1, 100_000, 8, 3), 3);
+        assert_eq!(resolve_shards(64, 10, 2, 5), 5);
+        assert_eq!(resolve_shards(1, 100_000, 8, 1), 1);
+        // Auto: shard across the thread budget iff the batch cannot fill
+        // the machine and the chain is large enough.
+        assert_eq!(resolve_shards(1, SHARD_MIN_NODES, 8, 0), 8);
+        assert_eq!(resolve_shards(7, SHARD_MIN_NODES, 8, 0), 8);
+        assert_eq!(resolve_shards(8, SHARD_MIN_NODES, 8, 0), 1, "batch fills the machine");
+        assert_eq!(resolve_shards(1, SHARD_MIN_NODES - 1, 8, 0), 1, "chain too small");
+        assert_eq!(resolve_shards(1, SHARD_MIN_NODES, 1, 0), 1, "single-threaded");
+        // threads == 0 means the default thread count.
+        let t = crate::util::threadpool::default_threads();
+        let want = if t > 1 { t } else { 1 };
+        assert_eq!(resolve_shards(1, SHARD_MIN_NODES, 0, 0), want);
     }
 
     #[test]

@@ -75,6 +75,12 @@ pub struct HwSampler {
     rng: Rng,
     threads: usize,
     repr: Repr,
+    /// Intra-chain shard width for `sample()` on the 1-bit engines (0 =
+    /// resolve per run from `(B, N, threads)` via
+    /// [`packed::resolve_shards`]; 1 pins chain-parallel). The full array
+    /// emulator is untouched — its nonideal phase clocking is inherently
+    /// sequential per chain.
+    shards: usize,
     /// True when the fabricated chip is in the ideal limit (zero comparator
     /// offsets, fully decorrelated draws): the array then IS an exact
     /// chromatic Gibbs sampler over DAC-quantized weights, so the packed
@@ -111,6 +117,7 @@ impl HwSampler {
             rng,
             threads: crate::util::threadpool::default_threads(),
             repr: Repr::Auto,
+            shards: 0,
             ideal_fabric,
             proj,
             proj_dim,
@@ -133,9 +140,22 @@ impl HwSampler {
     }
 
     /// Set the chain-parallel worker count (results are identical for any
-    /// value at a given seed; this only trades wall-clock).
+    /// value at a given seed — except when automatic intra-chain sharding
+    /// engages on a 1-bit-engine `sample()` call, whose `(B < threads, N
+    /// large)` rule reads the thread budget; pass `with_shards(1)` to pin
+    /// chain-parallel and recover exact thread invariance there too).
     pub fn with_threads(mut self, threads: usize) -> HwSampler {
         self.threads = threads.max(1);
+        self
+    }
+
+    /// Set the intra-chain shard width for `sample()` on the 1-bit engines
+    /// (`--shards` on the CLI): 0 resolves per run from `(B, N, threads)`
+    /// via [`packed::resolve_shards`], 1 pins chain-parallel, an explicit
+    /// width forces a gang of that size. Results are bit-identical across
+    /// widths >= 1 at a given seed.
+    pub fn with_shards(mut self, shards: usize) -> HwSampler {
+        self.shards = shards;
         self
     }
 
@@ -157,6 +177,10 @@ impl HwSampler {
 
     pub fn repr(&self) -> Repr {
         self.repr
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
     }
 
     pub fn config(&self) -> &HwConfig {
@@ -431,7 +455,26 @@ impl LayerSampler for HwSampler {
         match self.exec_repr()? {
             ExecRepr::Packed => {
                 let plan = self.packed_plan(&m, &cmask);
-                packed::run_sweeps_packed(&plan, &mut chains, xt, k, self.threads, &mut self.rng);
+                let width = packed::resolve_shards(self.batch, n, self.threads, self.shards);
+                if width > 1 {
+                    packed::run_sweeps_packed_sharded(
+                        &plan,
+                        &mut chains,
+                        xt,
+                        k,
+                        width,
+                        &mut self.rng,
+                    );
+                } else {
+                    packed::run_sweeps_packed(
+                        &plan,
+                        &mut chains,
+                        xt,
+                        k,
+                        self.threads,
+                        &mut self.rng,
+                    );
+                }
                 self.record_packed(&plan.topo, self.batch as u64, k as u64);
             }
             ExecRepr::Bitsliced => {

@@ -99,6 +99,8 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 "usage: repro <selfcheck|topology|train|generate|serve|figures|energy-report> [--flags]\n\
                  common flags: --artifacts DIR --config dtm_m32 --fast --seed N --threads N\n\
                  \x20         --repr packed|bitsliced|f32|auto (spin representation for rust/hw backends)\n\
+                 \x20         --shards N (intra-chain gang width for small-batch sampling; 0 = auto\n\
+                 \x20          from (B, N, threads), 1 = chain-parallel only)\n\
                  \x20         --metrics-out F (write final metrics snapshot JSON)\n\
                  \x20         --trace-out F (capture spans, write Chrome trace JSON)\n\
                  train:    --t-steps 4 --epochs 10 --k-train 30 --out ckpt.json --backend hlo|rust|hw\n\
@@ -181,21 +183,25 @@ fn make_sampler(args: &Args, cfg: &str, seed: u64) -> Result<Box<dyn LayerSample
             let top = local_top(args)?;
             let threads = args.usize_opt("threads", default_threads())?;
             let repr = repr_from_args(args)?;
+            let shards = args.usize_opt("shards", 0)?;
             Ok(Box::new(
                 RustSampler::new(top, 32, seed)
                     .with_threads(threads)
-                    .with_repr(repr),
+                    .with_repr(repr)
+                    .with_shards(shards),
             ))
         }
         "hw" => {
             let top = local_top(args)?;
             let threads = args.usize_opt("threads", default_threads())?;
             let repr = repr_from_args(args)?;
+            let shards = args.usize_opt("shards", 0)?;
             let hw_cfg = hw_config_from_args(args)?;
             Ok(Box::new(
                 HwSampler::new(top, 32, hw_cfg, seed)
                     .with_threads(threads)
-                    .with_repr(repr),
+                    .with_repr(repr)
+                    .with_shards(shards),
             ))
         }
         other => bail!("unknown backend {other:?} (hlo|rust|hw)"),
@@ -409,16 +415,19 @@ fn serve(args: &Args) -> Result<()> {
             let top = graph::build(&cfg_name, 32, "G12", 256, 7)?;
             let threads = args.usize_opt("threads", default_threads())?;
             let repr = repr_from_args(args)?;
+            let shards = args.usize_opt("shards", 0)?;
             Farm::spawn(cfg, dtm, plan, move |chip| {
                 Ok(RustSampler::new(top.clone(), 32, 13 + chip as u64)
                     .with_threads(threads)
-                    .with_repr(repr))
+                    .with_repr(repr)
+                    .with_shards(shards))
             })
         }
         "hw" => {
             let top = graph::build(&cfg_name, 32, "G12", 256, 7)?;
             let threads = args.usize_opt("threads", default_threads())?;
             let repr = repr_from_args(args)?;
+            let shards = args.usize_opt("shards", 0)?;
             let hw_cfg = hw_config_from_args(args)?;
             let derate_plan = plan.clone();
             // Each chip in the farm is its own die: cycle the fabrication
@@ -434,7 +443,8 @@ fn serve(args: &Args) -> Result<()> {
                     .with_seed(hw_cfg.seed + chip as u64);
                 Ok(HwSampler::new(top.clone(), 32, chip_cfg, 13 + chip as u64)
                     .with_threads(threads)
-                    .with_repr(repr))
+                    .with_repr(repr)
+                    .with_shards(shards))
             })
         }
         _ => Farm::spawn(cfg, dtm, plan, move |_chip| {

@@ -47,6 +47,7 @@
 //! | `chip.<k>.busy_ms` | gauge | wall-clock ms spent busy |
 //! | `gibbs.sweeps` | counter | chain-sweeps executed (all engine reprs) |
 //! | `gibbs.node_updates` | counter | node updates executed |
+//! | `gibbs.shards` | gauge | gang width of the last sharded engine run |
 //! | `hw.sweeps` | counter | emulated array sweeps |
 //! | `hw.phases` | counter | phase-clock half-sweeps (2 per sweep) |
 //! | `hw.cell_updates` | counter | cell updates across the array |
@@ -56,8 +57,9 @@
 //! | `train.grad_norm` | histogram | per-epoch gradient norm series |
 //! | `train.epoch_ms` | histogram | per-epoch wall time |
 //!
-//! Span names in use: `gibbs.halfsweep`, `farm.chip_job`, `train.epoch`,
-//! `sampler.sample`, `sampler.stats`.
+//! Span names in use: `gibbs.halfsweep`, `gibbs.shard_sync` (shard 0's
+//! barrier rendezvous per half-color in the sharded engine),
+//! `farm.chip_job`, `train.epoch`, `sampler.sample`, `sampler.stats`.
 //!
 //! ## Overhead
 //!

@@ -12,9 +12,12 @@
 //!    (default) compiles the chain-major bit-sliced backend when the
 //!    layer's edge weights sit on a `hw::quantize` DAC grid and the batch
 //!    fills a 64-lane slice, the bit-packed popcount backend for on-grid
-//!    smaller batches, and the f32 gather backend otherwise. Used for
-//!    tests, artifact-free operation at arbitrary graph sizes, and as the
-//!    `bench_gibbs` baseline.
+//!    smaller batches, and the f32 gather backend otherwise. `sample()`
+//!    additionally resolves an intra-chain shard width per run
+//!    (`with_shards` / `gibbs::resolve_shards`) so small-batch serving
+//!    splits each chain's color classes across a barrier-synchronized
+//!    gang instead of idling. Used for tests, artifact-free operation at
+//!    arbitrary graph sizes, and as the `bench_gibbs` baseline.
 //!
 //! Integration tests assert the two produce statistically identical results
 //! on the same topology/parameters.
@@ -267,6 +270,10 @@ pub struct RustSampler {
     rng: Rng,
     threads: usize,
     repr: Repr,
+    /// Intra-chain shard width for `sample()` (0 = resolve per run from
+    /// `(B, N, threads)`, see [`gibbs::resolve_shards`]; 1 pins
+    /// chain-parallel).
+    shards: usize,
     proj: Vec<f32>, // [N * P] fixed random projection for trace()
     proj_dim: usize,
     /// Per-cmask compiled topologies, reused across calls so per-call plan
@@ -288,6 +295,7 @@ impl RustSampler {
             rng,
             threads: crate::util::threadpool::default_threads(),
             repr: Repr::Auto,
+            shards: 0,
             proj,
             proj_dim,
             topos: engine::TopoCache::new(),
@@ -295,9 +303,25 @@ impl RustSampler {
     }
 
     /// Set the chain-parallel worker count (results are identical for any
-    /// value at a given seed; this only trades wall-clock).
+    /// value at a given seed — except when automatic intra-chain sharding
+    /// engages on a `sample()` call, whose `(B < threads, N large)` rule
+    /// reads the thread budget; pass `with_shards(1)` to pin chain-parallel
+    /// and recover exact thread invariance there too).
     pub fn with_threads(mut self, threads: usize) -> RustSampler {
         self.threads = threads.max(1);
+        self
+    }
+
+    /// Set the intra-chain shard width for `sample()` (`--shards` on the
+    /// CLI): 0 resolves per run from `(B, N, threads)` via
+    /// [`gibbs::resolve_shards`] — sharding exactly when the batch cannot
+    /// fill the machine and the chain is large — 1 pins the chain-parallel
+    /// path, and an explicit width forces a gang of that size. Results are
+    /// bit-identical across widths >= 1 at a given seed (per-block RNG
+    /// streams), but the sharded family differs from the chain-parallel
+    /// one.
+    pub fn with_shards(mut self, shards: usize) -> RustSampler {
+        self.shards = shards;
         self
     }
 
@@ -318,6 +342,10 @@ impl RustSampler {
 
     pub fn repr(&self) -> Repr {
         self.repr
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
     }
 
     fn machine(&self, params: &LayerParams, gm: &[f32], beta: f32) -> gibbs::Machine {
@@ -388,7 +416,7 @@ impl LayerSampler for RustSampler {
             },
             None => gibbs::Chains::random(self.batch, n, &mut self.rng),
         };
-        plan.run_sweeps(&mut chains, xt, k, self.threads, &mut self.rng);
+        plan.run_sweeps(&mut chains, xt, k, self.threads, self.shards, &mut self.rng);
         Ok(chains.s)
     }
 

@@ -72,6 +72,26 @@ mod tests {
         }
     }
 
+    /// Accuracy bound on the lattice the sampler would actually feed a
+    /// polynomial sigmoid: local fields of a DAC-quantized machine are
+    /// sums of grid weights, i.e. multiples of half the default coupling
+    /// quantum (8 bits over ±2 → q/2 = 2*2/256/2 = 0.0078125). Sweep
+    /// every lattice point over ±64 (far past any realistic field at
+    /// beta <= 4) and bound the absolute error against f64 libm — the
+    /// flip-probability bias a diagnostic path would inherit.
+    #[test]
+    fn sigmoid_error_bounded_on_dac_field_lattice() {
+        let half_quantum = 2.0f32 * 2.0 / 256.0 / 2.0;
+        let mut worst = 0.0f64;
+        for k in -8192i32..=8192 {
+            let x = k as f32 * half_quantum; // lattice over [-64, 64]
+            let exact = 1.0 / (1.0 + (-(x as f64)).exp());
+            let err = (fast_sigmoid(x) as f64 - exact).abs();
+            worst = worst.max(err);
+        }
+        assert!(worst <= 1.5e-4, "worst |fast_sigmoid - sigmoid| = {worst}");
+    }
+
     #[test]
     fn sigmoid_close_to_libm_everywhere() {
         for i in -400..400 {

@@ -6,10 +6,17 @@
 //! one process-wide pool ([`ThreadPool::shared`]) instead of spawning and
 //! joining scoped OS threads on every engine call — the per-call overhead
 //! that small-k serving workloads used to pay.
+//!
+//! [`gang_run`] is the second primitive: fork-join maps hand each worker an
+//! *independent* item, but intra-chain sharded sweeps need `S` workers
+//! executing the *same* closure in lockstep phases with a barrier between
+//! half-colors. A persistent [`Gang`] of dedicated members (plus the caller
+//! as shard 0) runs the closure with a [`SpinBarrier`]; panics poison the
+//! barrier so sibling shards unwind instead of spinning forever.
 
 use std::cell::Cell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex, OnceLock};
 use std::thread;
@@ -221,6 +228,230 @@ where
     }
 }
 
+/// Sense-reversing spin barrier for gang phases. `width` participants call
+/// [`SpinBarrier::wait`] once per phase; the last arriver releases the rest
+/// and publishes every participant's preceding writes to all of them
+/// (release/acquire through the generation counter), which is exactly the
+/// ordering a sharded half-sweep needs between half-colors. Spinning (with
+/// a yield fallback for oversubscribed hosts) keeps the per-phase cost in
+/// the sub-microsecond range a per-half-color rendezvous demands; a
+/// condvar-based `std::sync::Barrier` would cost a syscall per phase.
+pub struct SpinBarrier {
+    width: usize,
+    count: AtomicUsize,
+    generation: AtomicUsize,
+    poisoned: AtomicBool,
+}
+
+impl SpinBarrier {
+    pub fn new(width: usize) -> SpinBarrier {
+        SpinBarrier {
+            width: width.max(1),
+            count: AtomicUsize::new(0),
+            generation: AtomicUsize::new(0),
+            poisoned: AtomicBool::new(false),
+        }
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Block until all `width` participants have arrived. Panics if the
+    /// barrier is poisoned (a sibling shard panicked) so the caller's own
+    /// `catch_unwind` harness can unwind instead of spinning forever.
+    #[inline]
+    pub fn wait(&self) {
+        if self.width <= 1 {
+            return;
+        }
+        if self.poisoned.load(Ordering::Acquire) {
+            panic!("gang barrier poisoned (a sibling shard panicked)");
+        }
+        let gen = self.generation.load(Ordering::Acquire);
+        let arrived = self.count.fetch_add(1, Ordering::AcqRel) + 1;
+        if arrived == self.width {
+            // Reset before release: woken spinners re-arrive immediately.
+            self.count.store(0, Ordering::Relaxed);
+            self.generation.store(gen.wrapping_add(1), Ordering::Release);
+        } else {
+            let mut spins = 0u32;
+            while self.generation.load(Ordering::Acquire) == gen {
+                if self.poisoned.load(Ordering::Acquire) {
+                    panic!("gang barrier poisoned (a sibling shard panicked)");
+                }
+                spins += 1;
+                if spins < 128 {
+                    std::hint::spin_loop();
+                } else {
+                    thread::yield_now();
+                }
+            }
+        }
+    }
+
+    /// Mark the barrier dead and release current spinners (they panic out
+    /// of `wait`). Called by the gang harness when a shard panics.
+    pub fn poison(&self) {
+        self.poisoned.store(true, Ordering::Release);
+        self.generation.fetch_add(1, Ordering::Release);
+    }
+}
+
+thread_local! {
+    /// True on `Gang` member threads — a nested `gang_run` from inside a
+    /// shard closure must not wait on the members it is running on.
+    static IS_GANG_MEMBER: Cell<bool> = const { Cell::new(false) };
+}
+
+type GangJob = Box<dyn FnOnce() + Send + 'static>;
+
+/// Persistent gang of dedicated worker threads for barrier-synchronized
+/// shard execution (see [`gang_run`]). Members are separate from the
+/// [`ThreadPool`] workers on purpose: a gang member blocked at a barrier
+/// must never queue behind an unrelated fork-join job, and vice versa.
+/// Members block on their dispatch channels between runs (no idle spin).
+pub struct Gang {
+    txs: Vec<mpsc::Sender<GangJob>>,
+    members: Vec<thread::JoinHandle<()>>,
+    /// Serializes concurrent `gang_run` calls: two runs interleaving their
+    /// jobs on the same members' queues could each hold members the other
+    /// is spinning for — a deadlock the mutex makes impossible.
+    dispatch: Mutex<()>,
+}
+
+impl Gang {
+    fn new(members: usize) -> Gang {
+        let mut txs = Vec::with_capacity(members);
+        let handles = (0..members)
+            .map(|_| {
+                let (tx, rx) = mpsc::channel::<GangJob>();
+                txs.push(tx);
+                thread::spawn(move || {
+                    IS_GANG_MEMBER.with(|c| c.set(true));
+                    while let Ok(job) = rx.recv() {
+                        job();
+                    }
+                })
+            })
+            .collect();
+        Gang {
+            txs,
+            members: handles,
+            dispatch: Mutex::new(()),
+        }
+    }
+
+    /// The process-wide gang, sized so members + the participating caller
+    /// cover [`default_threads`] shards.
+    pub fn shared() -> &'static Gang {
+        static GANG: OnceLock<Gang> = OnceLock::new();
+        GANG.get_or_init(|| Gang::new(default_threads().saturating_sub(1)))
+    }
+
+    /// Widest `gang_run` the persistent members can serve (caller included).
+    pub fn size(&self) -> usize {
+        self.members.len() + 1
+    }
+}
+
+impl Drop for Gang {
+    fn drop(&mut self) {
+        self.txs.clear();
+        for m in self.members.drain(..) {
+            let _ = m.join();
+        }
+    }
+}
+
+/// Run `f(shard, barrier)` on `width` workers in lockstep: shard 0 on the
+/// calling thread, shards 1.. on persistent [`Gang`] members. The closure
+/// synchronizes its phases itself via `barrier.wait()` (one rendezvous per
+/// half-color in the sharded sweep engine); `gang_run` returns once every
+/// shard has finished, with all shard writes visible to the caller. Width
+/// requests the persistent gang cannot serve (oversubscription, nested
+/// calls from a gang member or pool worker) fall back to scoped OS threads
+/// so the requested width is always honored. A panic in any shard poisons
+/// the barrier, unwinds the siblings, and re-raises here.
+pub fn gang_run<F>(width: usize, f: F)
+where
+    F: Fn(usize, &SpinBarrier) + Sync,
+{
+    let width = width.max(1);
+    let barrier = SpinBarrier::new(width);
+    if width == 1 {
+        f(0, &barrier);
+        return;
+    }
+    let gang = Gang::shared();
+    let nested =
+        IS_GANG_MEMBER.with(|c| c.get()) || ThreadPool::on_worker_thread();
+    if nested || width > gang.size() {
+        scoped_gang(width, &barrier, &f);
+        return;
+    }
+    let _serial = gang.dispatch.lock().unwrap_or_else(|e| e.into_inner());
+    let ok = AtomicBool::new(true);
+    let (done_tx, done_rx) = mpsc::channel::<()>();
+    {
+        let barrier = &barrier;
+        let f = &f;
+        let ok = &ok;
+        for shard in 1..width {
+            let tx = done_tx.clone();
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                if catch_unwind(AssertUnwindSafe(|| f(shard, barrier))).is_err() {
+                    ok.store(false, Ordering::SeqCst);
+                    barrier.poison();
+                }
+                let _ = tx.send(());
+            });
+            // SAFETY: the borrows captured by `job` (barrier/f/ok) stay
+            // alive until this function returns, and we block below (after
+            // running shard 0 ourselves) until every member job has
+            // signalled completion — including on panic, which
+            // `catch_unwind` converts into a signal — so no job can outlive
+            // the borrows despite the 'static erasure.
+            let job: GangJob = unsafe { std::mem::transmute(job) };
+            gang.txs[shard - 1].send(job).expect("gang member disappeared");
+        }
+    }
+    drop(done_tx);
+    if catch_unwind(AssertUnwindSafe(|| f(0, &barrier))).is_err() {
+        ok.store(false, Ordering::SeqCst);
+        barrier.poison();
+    }
+    for _ in 1..width {
+        done_rx.recv().expect("gang member disappeared");
+    }
+    assert!(ok.load(Ordering::SeqCst), "gang shard panicked");
+}
+
+/// Scoped-thread fallback for [`gang_run`]: same contract, fresh OS
+/// threads per call (shard 0 still runs on the caller).
+fn scoped_gang<F>(width: usize, barrier: &SpinBarrier, f: &F)
+where
+    F: Fn(usize, &SpinBarrier) + Sync,
+{
+    let ok = AtomicBool::new(true);
+    thread::scope(|scope| {
+        for shard in 1..width {
+            let ok = &ok;
+            scope.spawn(move || {
+                if catch_unwind(AssertUnwindSafe(|| f(shard, barrier))).is_err() {
+                    ok.store(false, Ordering::SeqCst);
+                    barrier.poison();
+                }
+            });
+        }
+        if catch_unwind(AssertUnwindSafe(|| f(0, barrier))).is_err() {
+            ok.store(false, Ordering::SeqCst);
+            barrier.poison();
+        }
+    });
+    assert!(ok.load(Ordering::SeqCst), "gang shard panicked");
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -314,5 +545,91 @@ mod tests {
         let p2 = ThreadPool::shared() as *const ThreadPool;
         assert_eq!(p1, p2);
         assert!(ThreadPool::shared().size() >= 1);
+    }
+
+    #[test]
+    fn gang_run_width_one_is_inline() {
+        let mut hit = false;
+        // Width 1 runs on the caller thread; the closure may take &mut
+        // state through the Fn bound only via interior mutability, so use
+        // an atomic to keep the test representative of real call sites.
+        let flag = AtomicBool::new(false);
+        gang_run(1, |shard, barrier| {
+            assert_eq!(shard, 0);
+            barrier.wait(); // width-1 barrier is a no-op
+            flag.store(true, Ordering::SeqCst);
+        });
+        hit |= flag.load(Ordering::SeqCst);
+        assert!(hit);
+    }
+
+    #[test]
+    fn gang_phases_publish_writes_across_shards() {
+        // Phase 1: shard s writes slot s. Barrier. Phase 2: every shard
+        // must observe every phase-1 write. Repeat over generations to
+        // exercise barrier reuse (sense reversal).
+        for width in [2usize, 3, 4, 7] {
+            let slots: Vec<AtomicU64> = (0..width).map(|_| AtomicU64::new(0)).collect();
+            let bad = AtomicUsize::new(0);
+            gang_run(width, |shard, barrier| {
+                for round in 1..=5u64 {
+                    slots[shard].store(round * 100 + shard as u64, Ordering::Relaxed);
+                    barrier.wait();
+                    for (s, slot) in slots.iter().enumerate() {
+                        if slot.load(Ordering::Relaxed) != round * 100 + s as u64 {
+                            bad.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                    barrier.wait();
+                }
+            });
+            assert_eq!(bad.load(Ordering::SeqCst), 0, "width {width}");
+        }
+    }
+
+    #[test]
+    fn gang_panic_poisons_barrier_and_propagates() {
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            gang_run(3, |shard, barrier| {
+                if shard == 1 {
+                    panic!("shard down");
+                }
+                // Siblings park at the barrier; poison must unwind them.
+                barrier.wait();
+            });
+        }));
+        assert!(r.is_err());
+        // The gang survives and serves the next run.
+        let count = AtomicU64::new(0);
+        gang_run(3, |_, barrier| {
+            count.fetch_add(1, Ordering::SeqCst);
+            barrier.wait();
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn gang_oversubscribed_width_falls_back_to_scoped() {
+        let width = Gang::shared().size() + 3;
+        let count = AtomicU64::new(0);
+        gang_run(width, |_, barrier| {
+            count.fetch_add(1, Ordering::SeqCst);
+            barrier.wait();
+        });
+        assert_eq!(count.load(Ordering::SeqCst), width as u64);
+    }
+
+    #[test]
+    fn gang_nested_from_pool_worker_falls_back() {
+        let pool = ThreadPool::new(2);
+        let out = pool.scoped_map(2, 2, |i| {
+            let count = AtomicU64::new(0);
+            gang_run(2, |_, barrier| {
+                count.fetch_add(1, Ordering::SeqCst);
+                barrier.wait();
+            });
+            count.load(Ordering::SeqCst) + i as u64
+        });
+        assert_eq!(out, vec![2, 3]);
     }
 }

@@ -19,7 +19,12 @@
 //!  * the bit-sliced chain-major backend (`gibbs::bitsliced`) agreeing
 //!    with the f32 backend and the exact conditional oracle on the same
 //!    quantized machine, and `Repr::Auto` resolving to it exactly when
-//!    the weights are on a DAC grid and the batch fills a 64-lane slice.
+//!    the weights are on a DAC grid and the batch fills a 64-lane slice;
+//!  * the intra-chain sharded engine (`run_sweeps_sharded`) agreeing bit
+//!    for bit with the scalar `halfsweep` oracle driven block by block on
+//!    the same per-(color, block) forked streams, at every shard count,
+//!    and the run-time `resolve_shards` rule picking the sharded family
+//!    exactly when `B < threads` and `N` clears the size floor.
 
 use std::sync::Arc;
 
@@ -547,9 +552,163 @@ fn packed_run_sweeps_and_run_stats_share_the_trajectory() {
     let xt: Vec<f32> = (0..b * n).map(|_| init.spin()).collect();
     let mut c1 = start.clone();
     let mut c2 = start.clone();
-    plan.run_sweeps(&mut c1, &xt, 15, 2, &mut Rng::new(77));
+    plan.run_sweeps(&mut c1, &xt, 15, 2, 1, &mut Rng::new(77));
     let _ = plan.run_stats(&mut c2, &xt, 15, 5, 2, &mut Rng::new(77));
     assert_eq!(c1.s, c2.s, "fused stats must not perturb the trajectory");
+}
+
+/// The intra-chain sharded engine against the scalar `halfsweep` oracle
+/// driven block by block: mask everything outside one shard block so the
+/// legacy reference updates exactly that block's nodes (masked nodes
+/// consume no draws), feed it the same per-(color, block) forked streams
+/// the gang uses, and the trajectories must match bit for bit — clamped
+/// or free, at a shard count that splits the blocks unevenly.
+#[test]
+fn sharded_bit_identical_to_blockwise_halfsweep_oracle() {
+    for (l, pat) in [(24usize, "G8"), (32, "G12")] {
+        let top = graph::build("t", l, pat, l * l / 4, 0).unwrap();
+        let n = top.n_nodes();
+        let m = machine_for(&top, 11);
+        for clamp in [false, true] {
+            let cmask = if clamp { top.data_mask() } else { vec![0.0f32; n] };
+            let b = 2;
+            let mut init_rng = Rng::new(33);
+            let mut start = Chains::random(b, n, &mut init_rng);
+            let cval: Vec<f32> = (0..b * n).map(|_| init_rng.spin()).collect();
+            start.impose_clamps(&cmask, &cval);
+            let xt: Vec<f32> = (0..b * n).map(|_| init_rng.spin()).collect();
+            let plan = SweepPlan::new(&top, &m, &cmask);
+            assert!(
+                plan.topo.max_shard_width() >= 3,
+                "L={l} {pat}: graph too small to exercise sharding"
+            );
+            let k = 5;
+
+            let mut sharded = start.clone();
+            engine::run_sweeps_sharded(&plan, &mut sharded, &xt, k, 3, &mut Rng::new(77));
+
+            let mut oracle = start.clone();
+            let mut root = Rng::new(77);
+            let forks: Vec<Rng> = (0..b).map(|bi| root.fork(bi as u64)).collect();
+            for (bi, mut chain_rng) in forks.into_iter().enumerate() {
+                let mut streams = engine::shard_block_rngs(&plan.topo, &mut chain_rng);
+                let mut one = Chains {
+                    b: 1,
+                    n,
+                    s: oracle.row(bi).to_vec(),
+                };
+                let xt_row = xt[bi * n..(bi + 1) * n].to_vec();
+                for _ in 0..k {
+                    for c in 0..2usize {
+                        for blk in 0..plan.topo.shard_block_count(c) {
+                            let mut only = vec![1.0f32; n];
+                            for &i in plan.topo.shard_block_nodes(c, blk) {
+                                only[i as usize] = 0.0;
+                            }
+                            gibbs::halfsweep(
+                                &top,
+                                &m,
+                                &mut one,
+                                &xt_row,
+                                &only,
+                                c as u8,
+                                &mut streams[c][blk],
+                            );
+                        }
+                    }
+                }
+                oracle.s[bi * n..(bi + 1) * n].copy_from_slice(&one.s);
+            }
+            assert_eq!(
+                sharded.s, oracle.s,
+                "sharded != blockwise halfsweep oracle (L={l} {pat} clamp {clamp})"
+            );
+        }
+    }
+}
+
+/// Block streams belong to blocks, not shards, so the sharded engine's
+/// states are identical at every shard count — including widths past the
+/// block supply (clamped) and past the machine's core count (the gang
+/// falls back to a scoped pool).
+#[test]
+fn sharded_states_invariant_across_shard_counts() {
+    let top = graph::build("t", 24, "G8", 30, 0).unwrap();
+    let n = top.n_nodes();
+    let m = machine_for(&top, 12);
+    let cmask = vec![0.0f32; n];
+    let b = 3;
+    let mut init_rng = Rng::new(8);
+    let start = Chains::random(b, n, &mut init_rng);
+    let xt: Vec<f32> = (0..b * n).map(|_| init_rng.spin()).collect();
+    let plan = SweepPlan::new(&top, &m, &cmask);
+    let mut outs: Vec<Vec<f32>> = Vec::new();
+    for s in [1usize, 2, 3, 8, 64] {
+        let mut chains = start.clone();
+        engine::run_sweeps_sharded(&plan, &mut chains, &xt, 6, s, &mut Rng::new(55));
+        outs.push(chains.s);
+    }
+    for (i, o) in outs.iter().enumerate().skip(1) {
+        assert_eq!(&outs[0], o, "shard count #{i} diverged");
+    }
+}
+
+/// The run-time shard resolution rule, property-style: an explicit request
+/// always wins; otherwise shard exactly when the batch undershoots the
+/// thread budget AND the graph clears the node floor.
+#[test]
+fn auto_shard_resolution_follows_batch_node_thread_rule() {
+    use thermo_dtm::gibbs::{resolve_shards, SHARD_MIN_NODES};
+    for threads in [1usize, 2, 4, 8] {
+        for b in [1usize, 2, 7, 8, 64] {
+            for n in [64usize, SHARD_MIN_NODES - 1, SHARD_MIN_NODES, 4 * SHARD_MIN_NODES] {
+                assert_eq!(resolve_shards(b, n, threads, 3), 3, "explicit request must win");
+                let got = resolve_shards(b, n, threads, 0);
+                if b < threads && n >= SHARD_MIN_NODES {
+                    assert_eq!(got, threads, "must shard (b={b} n={n} t={threads})");
+                } else {
+                    assert_eq!(got, 1, "must stay chain-parallel (b={b} n={n} t={threads})");
+                }
+            }
+        }
+    }
+    // threads = 0 resolves the machine default first; a batch wider than
+    // any plausible core count therefore never shards.
+    assert_eq!(resolve_shards(1024, 1 << 20, 0, 0), 1);
+}
+
+/// Through `EnginePlan::run_sweeps`: `shards = 0` at B = 1 on a large
+/// graph must resolve to the thread budget — bit-identical to the same
+/// width requested explicitly — while a batch matching the budget resolves
+/// to the chain-parallel family (bit-identical to `shards = 1`).
+#[test]
+fn engineplan_auto_shards_match_explicit_width_small_batch() {
+    let top = graph::build("t", 46, "G8", 40, 0).unwrap();
+    let n = top.n_nodes();
+    assert!(n >= thermo_dtm::gibbs::SHARD_MIN_NODES, "graph under the shard floor");
+    let m = machine_for(&top, 8);
+    let topo = Arc::new(SweepTopo::new(&top, &vec![0.0; n]));
+    let plan = EnginePlan::compile(Arc::clone(&topo), &m, Repr::F32, 4);
+    let threads = 4;
+    let mut init = Rng::new(3);
+
+    // B = 1 < threads: auto resolves to `threads` shards.
+    let start = Chains::random(1, n, &mut init);
+    let xt: Vec<f32> = (0..n).map(|_| init.spin()).collect();
+    let mut auto = start.clone();
+    plan.run_sweeps(&mut auto, &xt, 4, threads, 0, &mut Rng::new(9));
+    let mut explicit = start.clone();
+    plan.run_sweeps(&mut explicit, &xt, 4, threads, threads, &mut Rng::new(9));
+    assert_eq!(auto.s, explicit.s, "auto at B=1 must equal the explicit thread-wide gang");
+
+    // B = threads: auto stays chain-parallel.
+    let start = Chains::random(threads, n, &mut init);
+    let xt: Vec<f32> = (0..threads * n).map(|_| init.spin()).collect();
+    let mut auto = start.clone();
+    plan.run_sweeps(&mut auto, &xt, 3, threads, 0, &mut Rng::new(9));
+    let mut pinned = start.clone();
+    plan.run_sweeps(&mut pinned, &xt, 3, threads, 1, &mut Rng::new(9));
+    assert_eq!(auto.s, pinned.s, "auto at B=threads must stay chain-parallel");
 }
 
 #[test]
