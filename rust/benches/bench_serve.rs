@@ -1,12 +1,15 @@
 //! bench_serve: the fault-tolerant chip-farm serving path under load.
 //!
 //! Spins a 2-chip farm and drives a closed-loop burst of concurrent
-//! requests through it three times: fault-free on pure-Rust samplers,
+//! requests through it four times: fault-free on pure-Rust samplers,
 //! under a seeded fault schedule (transient failures on chip 0 plus
-//! farm-wide latency spikes) with per-request deadlines, and fault-free
+//! farm-wide latency spikes) with per-request deadlines, fault-free
 //! on emulated DTCA chips (ideal corner-cycled dies) so the per-chip
 //! `chip.<k>.energy_j` gauges are live and an images-per-joule figure
-//! can be reported. Each scenario runs against a private
+//! can be reported, and a mixed inpaint/free stream on the hw chips
+//! (alternating evidence shapes, so the shape-keyed batcher and the
+//! per-step clamp programs are in the measured path). Each scenario
+//! runs against a private
 //! `obs::Registry` handed to the farm via `FarmConfig::registry`;
 //! latency percentiles come from the `farm.latency_ms` histogram in
 //! that registry (documented relative error <= 6.25%), and the
@@ -22,7 +25,7 @@ use std::time::{Duration, Instant};
 
 use thermo_dtm::circuit::Corner;
 use thermo_dtm::coordinator::batcher::BatcherConfig;
-use thermo_dtm::coordinator::{Farm, FarmConfig, FaultPlan};
+use thermo_dtm::coordinator::{Farm, FarmConfig, FaultPlan, JobSpec};
 use thermo_dtm::graph;
 use thermo_dtm::hw::{HwConfig, HwSampler};
 use thermo_dtm::model::Dtm;
@@ -45,6 +48,10 @@ struct Scenario {
     requests: usize,
     req_images: usize,
     hw: bool,
+    /// Every `inpaint_every`-th request is an inpainting job (0 = none):
+    /// the stream alternates evidence shapes, exercising shape-keyed
+    /// batching end-to-end.
+    inpaint_every: usize,
 }
 
 fn run_scenario(sc: &Scenario, threads: usize) -> Value {
@@ -96,9 +103,21 @@ fn run_scenario(sc: &Scenario, threads: usize) -> Value {
     };
     let client = farm.client();
 
+    // Inpaint-mix evidence: hold the top half of the 8x8 image to a fixed
+    // checker row (all inpaint requests share one mask, values per-image).
+    let mask: Vec<bool> = (0..N_DATA).map(|j| j < N_DATA / 2).collect();
+    let vals: Vec<f32> = (0..N_DATA).map(|j| if j % 2 == 0 { 1.0 } else { -1.0 }).collect();
+
     let t0 = Instant::now();
     let waiters: Vec<_> = (0..sc.requests)
-        .map(|_| client.submit(sc.req_images, sc.deadline, 1))
+        .map(|i| {
+            if sc.inpaint_every > 0 && i % sc.inpaint_every == 0 {
+                let spec = JobSpec::inpaint(sc.req_images, mask.clone(), &vals).unwrap();
+                client.submit_spec(spec, sc.deadline, 1)
+            } else {
+                client.submit(sc.req_images, sc.deadline, 1)
+            }
+        })
         .collect();
     let mut ok = 0usize;
     let mut hung = 0usize;
@@ -114,6 +133,12 @@ fn run_scenario(sc: &Scenario, threads: usize) -> Value {
     let wall = t0.elapsed().as_secs_f64();
     let stats = farm.shutdown();
     assert_eq!(hung, 0, "{}: {} requests failed to resolve", sc.name, hung);
+    assert_eq!(
+        stats.jobs_free + stats.jobs_inpaint,
+        stats.serve.requests,
+        "{}: per-kind admission counters must partition the submissions",
+        sc.name
+    );
 
     // The farm's own metrics are the report: latency percentiles from the
     // log-bucketed histogram, energy from the per-chip device meters.
@@ -167,6 +192,7 @@ fn run_scenario(sc: &Scenario, threads: usize) -> Value {
         ("error_rate", Value::Num(stats.error_rate())),
         ("retries", Value::Num(stats.retries as f64)),
         ("hedges", Value::Num(stats.hedges as f64)),
+        ("jobs_inpaint", Value::Num(stats.jobs_inpaint as f64)),
     ])
 }
 
@@ -181,6 +207,7 @@ fn main() {
             requests: 24,
             req_images: 4,
             hw: false,
+            inpaint_every: 0,
         },
         Scenario {
             name: "serve_2chip_faulted",
@@ -189,6 +216,7 @@ fn main() {
             requests: 24,
             req_images: 4,
             hw: false,
+            inpaint_every: 0,
         },
         Scenario {
             name: "serve_2chip_hw_energy",
@@ -197,6 +225,16 @@ fn main() {
             requests: 12,
             req_images: 4,
             hw: true,
+            inpaint_every: 0,
+        },
+        Scenario {
+            name: "inpaint_mix_2chip",
+            faults: "",
+            deadline: None,
+            requests: 24,
+            req_images: 4,
+            hw: true,
+            inpaint_every: 2,
         },
     ];
     let entries: Vec<Value> = scenarios.iter().map(|sc| run_scenario(sc, threads)).collect();

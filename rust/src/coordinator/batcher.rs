@@ -9,7 +9,19 @@
 //! earliest-deadline-first (requests without a deadline sort after every
 //! request with one), with arrival order — and then admission id — breaking
 //! ties, so plain FIFO fairness is recovered exactly when no deadlines are
-//! in play. The farm supervisor additionally uses:
+//! in play.
+//!
+//! Batching is additionally **shape-keyed**: every request carries a
+//! [`ShapeKey`] (its evidence mask, packed — see
+//! [`crate::coordinator::jobspec`]), and a device batch only ever holds
+//! requests with the same key, because one compiled Gibbs program has
+//! exactly one clamp mask (per-image evidence *values* vary freely inside
+//! a batch). Each dispatch targets the EDF head's shape and fills from
+//! later same-shape requests, skipping the rest; the linger flush keys off
+//! the globally oldest request, so every forced dispatch retires head-shape
+//! work and rare shapes cannot be starved by a busy majority shape.
+//! Free-run requests all share [`ShapeKey::free`], which reduces this to
+//! plain EDF batching. The farm supervisor additionally uses:
 //!
 //! * [`Batcher::requeue`] — put the parts of a failed device batch back at
 //!   their deadline-ordered position (bypassing admission control: these
@@ -19,6 +31,7 @@
 //! * [`Batcher::purge`] — drop queued requests whose deadline has already
 //!   expired (their clients have been answered with `DeadlineExceeded`).
 
+use crate::coordinator::jobspec::ShapeKey;
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
@@ -36,10 +49,12 @@ pub struct Request {
     /// Dispatch attempts so far (0 = never dispatched). Incremented by the
     /// farm supervisor on requeue-after-chip-failure.
     pub attempt: u32,
+    /// Evidence-mask key; only same-shape requests coalesce into a batch.
+    pub shape: ShapeKey,
 }
 
 impl Request {
-    /// A plain best-effort request (no deadline, default priority).
+    /// A plain best-effort free-run request (no deadline, default priority).
     pub fn new(id: u64, n_images: usize, arrived: Instant) -> Request {
         Request {
             id,
@@ -48,6 +63,7 @@ impl Request {
             deadline: None,
             priority: 1,
             attempt: 0,
+            shape: ShapeKey::free(),
         }
     }
 
@@ -86,10 +102,12 @@ impl Default for BatcherConfig {
 
 /// A batch the device should run: request ids with per-request image counts
 /// summing to <= the dispatch cap (large requests are split across batches).
+/// All parts share `shape` — the clamp mask the device program compiles.
 #[derive(Debug, PartialEq)]
 pub struct Batch {
     pub parts: Vec<(u64, usize)>,
     pub total: usize,
+    pub shape: ShapeKey,
 }
 
 pub struct Batcher {
@@ -180,6 +198,21 @@ impl Batcher {
         head.map(|t| now.saturating_duration_since(t))
     }
 
+    /// Images queued for one shape (only those can fill one device batch).
+    fn pending_for(&self, shape: &ShapeKey) -> usize {
+        self.head_remaining
+            .as_ref()
+            .filter(|r| r.shape == *shape)
+            .map(|r| r.n_images)
+            .unwrap_or(0)
+            + self
+                .queue
+                .iter()
+                .filter(|r| r.shape == *shape)
+                .map(|r| r.n_images)
+                .sum::<usize>()
+    }
+
     /// Decide whether a batch should be dispatched now, and build it, at
     /// the configured device batch size.
     pub fn next_batch(&mut self, now: Instant) -> Option<Batch> {
@@ -189,14 +222,28 @@ impl Batcher {
     /// Like [`Batcher::next_batch`] but capped at `cap <= device_batch`
     /// images — the graceful-degradation path: with fewer healthy chips,
     /// smaller batches cut per-batch latency (and blast radius) at the cost
-    /// of fill. Dispatches when `cap` images are available OR the oldest
-    /// request has lingered past the deadline.
+    /// of fill.
+    ///
+    /// The dispatch target is the EDF head's shape (a split head pins it
+    /// until its remainder drains). Dispatches when `cap` images of that
+    /// shape are available OR the globally oldest request has lingered past
+    /// the deadline; the batch then fills with same-shape requests in EDF
+    /// order, skipping the rest. A split of the queue *front* parks the
+    /// remainder in `head_remaining` (it stays the next target, exactly the
+    /// unconditional behavior); a split of a same-shape request found
+    /// behind other shapes shrinks it in place, so the remainder keeps its
+    /// EDF slot and the next target reverts to the true EDF head.
     pub fn next_batch_with(&mut self, now: Instant, cap: usize) -> Option<Batch> {
         let cap = cap.clamp(1, self.cfg.device_batch);
-        let pending = self.queued_images();
-        if pending == 0 {
+        if self.queued_images() == 0 {
             return None;
         }
+        let target = self
+            .head_remaining
+            .as_ref()
+            .or_else(|| self.queue.front())
+            .map(|r| r.shape.clone())?;
+        let pending = self.pending_for(&target);
         let lingered = self
             .oldest_wait(now)
             .map(|w| w >= self.cfg.linger)
@@ -215,18 +262,36 @@ impl Batcher {
                 self.head_remaining = Some(head);
             }
         }
-        while total < cap {
-            let Some(mut req) = self.queue.pop_front() else { break };
-            let take = req.n_images.min(cap - total);
-            parts.push((req.id, take));
-            total += take;
-            if take < req.n_images {
+        let mut i = 0;
+        while total < cap && i < self.queue.len() {
+            if self.queue[i].shape != target {
+                i += 1;
+                continue;
+            }
+            let take = self.queue[i].n_images.min(cap - total);
+            if take == self.queue[i].n_images {
+                let req = self.queue.remove(i).unwrap();
+                parts.push((req.id, take));
+                total += take;
+            } else if i == 0 {
+                let mut req = self.queue.remove(0).unwrap();
+                parts.push((req.id, take));
+                total += take;
                 req.n_images -= take;
                 self.head_remaining = Some(req);
                 break;
+            } else {
+                parts.push((self.queue[i].id, take));
+                total += take;
+                self.queue[i].n_images -= take;
+                break;
             }
         }
-        Some(Batch { parts, total })
+        Some(Batch {
+            parts,
+            total,
+            shape: target,
+        })
     }
 }
 
@@ -485,6 +550,159 @@ mod tests {
         assert_eq!(b.queue_len(), 1);
         let rest = b.next_batch(t0 + Duration::from_millis(1)).unwrap();
         assert_eq!(rest.parts, vec![(2, 2)]);
+    }
+
+    /// Property (the shape-keying contract): under random mixes of free and
+    /// inpaint shapes, sizes, and deadlines — (a) no batch ever mixes
+    /// evidence shapes, (b) the batch head is the EDF-min survivor (or the
+    /// parked continuation of a front split), and (c) the queue fully
+    /// drains: no images are lost and no shape hangs.
+    #[test]
+    fn shape_keyed_batches_never_mix_and_preserve_edf_property() {
+        let mask_a: Vec<bool> = (0..8).map(|j| j % 2 == 0).collect();
+        let mask_b: Vec<bool> = (0..8).map(|j| j < 4).collect();
+        let shapes = [
+            ShapeKey::free(),
+            ShapeKey::from_mask(&mask_a),
+            ShapeKey::from_mask(&mask_b),
+        ];
+        let mut rng = crate::util::rng::Rng::new(23);
+        for trial in 0..20 {
+            let cap = 1 + rng.below(8);
+            let mut b = Batcher::new(BatcherConfig {
+                device_batch: cap,
+                linger: Duration::ZERO,
+                max_queue: 1024,
+            });
+            let t0 = Instant::now();
+            let n_reqs = 2 + rng.below(12);
+            let mut remaining = std::collections::HashMap::new();
+            let mut meta = Vec::new();
+            for id in 0..n_reqs as u64 {
+                let n = 1 + rng.below(3 * cap);
+                let deadline = match rng.below(3) {
+                    0 => None,
+                    d => Some(t0 + Duration::from_millis(d as u64 * 7)),
+                };
+                let r = Request {
+                    deadline,
+                    shape: shapes[rng.below(shapes.len())].clone(),
+                    ..req(id, n, t0 + Duration::from_micros(id))
+                };
+                remaining.insert(id, n);
+                meta.push(r.clone());
+                b.push(r).unwrap();
+            }
+            let now = t0 + Duration::from_secs(1);
+            let edf_min = |rem: &std::collections::HashMap<u64, usize>| {
+                meta.iter()
+                    .filter(|r| rem[&r.id] > 0)
+                    .fold(None::<&Request>, |best, r| match best {
+                        Some(q) if q.before(r) => Some(q),
+                        _ => Some(r),
+                    })
+                    .map(|r| r.id)
+            };
+            let mut parked: Option<u64> = None;
+            let mut rounds = 0usize;
+            while b.queued_images() > 0 {
+                rounds += 1;
+                assert!(rounds <= 1000, "trial {trial}: batcher hung");
+                let batch = b.next_batch(now).expect("lingered work must dispatch");
+                assert!(batch.total <= cap, "trial {trial}: overfull batch");
+                for &(id, _) in &batch.parts {
+                    let m = &meta[id as usize];
+                    assert_eq!(m.shape, batch.shape, "trial {trial}: mixed shapes");
+                }
+                match parked {
+                    Some(id) => {
+                        assert_eq!(batch.parts[0].0, id, "trial {trial}: split jumped");
+                    }
+                    None => {
+                        let head = edf_min(&remaining);
+                        assert_eq!(Some(batch.parts[0].0), head, "trial {trial}: EDF violated");
+                    }
+                }
+                for &(id, count) in &batch.parts {
+                    let rem = remaining.get_mut(&id).unwrap();
+                    assert!(count <= *rem, "trial {trial}: over-delivered {id}");
+                    *rem -= count;
+                }
+                // The remainder of a split is parked in head_remaining only
+                // when the split request was the queue front — i.e. it is
+                // still the EDF-min of everything left. A mid-queue split
+                // keeps its EDF slot instead.
+                let (last_id, _) = *batch.parts.last().unwrap();
+                let still = remaining[&last_id] > 0;
+                parked = (still && edf_min(&remaining) == Some(last_id)).then_some(last_id);
+            }
+            assert!(remaining.values().all(|&n| n == 0), "trial {trial}: images lost");
+        }
+    }
+
+    /// A lone rare-shape request still flushes on linger, and never rides in
+    /// a batch with the other shape.
+    #[test]
+    fn linger_flushes_rare_shape_without_mixing() {
+        let mut b = Batcher::new(BatcherConfig {
+            device_batch: 8,
+            linger: Duration::from_millis(5),
+            max_queue: 16,
+        });
+        let t0 = Instant::now();
+        let mask: Vec<bool> = (0..6).map(|j| j < 3).collect();
+        b.push(req(1, 2, t0)).unwrap();
+        b.push(Request {
+            shape: ShapeKey::from_mask(&mask),
+            ..req(2, 3, t0 + Duration::from_micros(1))
+        })
+        .unwrap();
+        assert!(b.next_batch(t0).is_none(), "neither shape fills a batch yet");
+        let later = t0 + Duration::from_millis(6);
+        let first = b.next_batch(later).unwrap();
+        assert_eq!(first.parts, vec![(1, 2)]);
+        assert!(first.shape.is_free());
+        let second = b.next_batch(later).unwrap();
+        assert_eq!(second.parts, vec![(2, 3)]);
+        assert_eq!(second.shape, ShapeKey::from_mask(&mask));
+        assert!(b.next_batch(later).is_none());
+    }
+
+    /// A same-shape request split from *behind* another shape keeps its EDF
+    /// slot: the next dispatch reverts to the true EDF head instead of the
+    /// split remainder jumping the queue.
+    #[test]
+    fn mid_queue_split_keeps_edf_slot() {
+        let mut b = Batcher::new(BatcherConfig {
+            device_batch: 4,
+            linger: Duration::ZERO,
+            max_queue: 16,
+        });
+        let t0 = Instant::now();
+        let mask: Vec<bool> = (0..6).map(|j| j % 2 == 0).collect();
+        let key = ShapeKey::from_mask(&mask);
+        b.push(Request {
+            shape: key.clone(),
+            ..req(1, 2, t0)
+        })
+        .unwrap();
+        b.push(req(2, 10, t0 + Duration::from_micros(1))).unwrap();
+        b.push(Request {
+            shape: key.clone(),
+            ..req(3, 5, t0 + Duration::from_micros(2))
+        })
+        .unwrap();
+        // Target = EDF head (id 1, masked): fills past the free id 2 and
+        // splits id 3 in place.
+        let b1 = b.next_batch(t0).unwrap();
+        assert_eq!(b1.parts, vec![(1, 2), (3, 2)]);
+        assert_eq!(b1.shape, key);
+        // Next target reverts to id 2 (free), which drains over 3 batches
+        // before the masked remainder comes back around.
+        for expect in [vec![(2, 4)], vec![(2, 4)], vec![(2, 2)], vec![(3, 3)]] {
+            assert_eq!(b.next_batch(t0).unwrap().parts, expect);
+        }
+        assert!(b.next_batch(t0).is_none());
     }
 
     #[test]

@@ -6,6 +6,10 @@
 //! machine from the fault-injection layer. The supervisor owns the
 //! robustness policy end to end:
 //!
+//! * **typed jobs** — every submission is a [`JobSpec`] (free-run or
+//!   inpainting evidence); the batcher coalesces same-shape evidence
+//!   only, and a dispatched job carries its [`JobEvidence`] through
+//!   retries and hedges so a re-run re-clamps the same pixels;
 //! * **routing** — device batches go to idle, healthy chips only;
 //! * **deadlines** — propagated from the client into the batcher (EDF
 //!   ordering), into the chip (the pipeline aborts between layer programs
@@ -43,8 +47,9 @@ use crate::obs;
 use crate::train::sampler::{ChipReport, LayerSampler};
 use crate::util::rng::Rng;
 
-use super::batcher::{Batcher, BatcherConfig, Request};
+use super::batcher::{Batch, Batcher, BatcherConfig, Request};
 use super::faults::{ChipFaults, FaultPlan};
+use super::jobspec::{Condition, JobEvidence, JobSpec};
 use super::pipeline::generate_images_deadline;
 use super::server::{Response, ServeError, ServeResult, ServerStats};
 
@@ -137,6 +142,10 @@ pub struct FarmStats {
     pub hedges: usize,
     /// Health probes sent to quarantined chips.
     pub probes: usize,
+    /// Submissions by condition class (free-run vs inpainting); together
+    /// they equal `serve.requests`.
+    pub jobs_free: usize,
+    pub jobs_inpaint: usize,
     pub chips: Vec<ChipStats>,
 }
 
@@ -164,7 +173,7 @@ enum WorkOutcome {
 
 enum FarmMsg {
     Submit {
-        n_images: usize,
+        spec: JobSpec,
         deadline: Option<Instant>,
         priority: u8,
         reply: mpsc::Sender<ServeResult>,
@@ -193,6 +202,9 @@ struct ChipJob {
     total: usize,
     /// Abort the pipeline once *every* deadline in the batch has passed.
     abort_at: Option<Instant>,
+    /// Shared evidence for the whole job (`None` = free-run). `Arc` so a
+    /// hedge re-dispatch ships the same evidence without copying rows.
+    evidence: Option<Arc<JobEvidence>>,
 }
 
 /// Clonable handle for submitting requests to the farm.
@@ -202,18 +214,29 @@ pub struct FarmClient {
 }
 
 impl FarmClient {
-    /// Fire a request; the receiver always resolves (typed error if the
-    /// farm is down). `deadline` is relative; `priority` 0 = sheddable
-    /// bulk, 1+ = interactive.
+    /// Fire a free-run request; the receiver always resolves (typed error
+    /// if the farm is down). `deadline` is relative; `priority` 0 =
+    /// sheddable bulk, 1+ = interactive.
     pub fn submit(
         &self,
         n_images: usize,
         deadline: Option<Duration>,
         priority: u8,
     ) -> mpsc::Receiver<ServeResult> {
+        self.submit_spec(JobSpec::free(n_images), deadline, priority)
+    }
+
+    /// Fire a typed request ([`JobSpec`]: free-run or inpainting); the
+    /// receiver always resolves (typed error if the farm is down).
+    pub fn submit_spec(
+        &self,
+        spec: JobSpec,
+        deadline: Option<Duration>,
+        priority: u8,
+    ) -> mpsc::Receiver<ServeResult> {
         let (rtx, rrx) = mpsc::channel();
         let msg = FarmMsg::Submit {
-            n_images,
+            spec,
             deadline: deadline.map(|d| Instant::now() + d),
             priority,
             reply: rtx.clone(),
@@ -228,6 +251,25 @@ impl FarmClient {
     /// farm's `default_deadline` still applies).
     pub fn generate(&self, n_images: usize) -> ServeResult {
         self.submit(n_images, None, 1)
+            .recv()
+            .unwrap_or(Err(ServeError::Shutdown))
+    }
+
+    /// Blocking inpaint beside [`FarmClient::generate`]: `data_mask[j]`
+    /// pins pixel `j` to `data_vals[j]` (spins) in every generated image;
+    /// free pixels are denoised around the evidence. `Err` only for a
+    /// malformed condition — serving failures come back as the
+    /// [`ServeResult`]'s own typed error.
+    pub fn inpaint(&self, n_images: usize, data_mask: Vec<bool>, data_vals: &[f32]) -> ServeResult {
+        let spec = match JobSpec::inpaint(n_images, data_mask, data_vals) {
+            Ok(s) => s,
+            Err(e) => {
+                return Err(ServeError::Rejected {
+                    reason: format!("{e:#}"),
+                })
+            }
+        };
+        self.submit_spec(spec, None, 1)
             .recv()
             .unwrap_or(Err(ServeError::Shutdown))
     }
@@ -348,7 +390,9 @@ fn chip_worker<S: LayerSampler>(
             (None, None) => WorkOutcome::Failed("chip init failed".into()),
             (None, Some(s)) => {
                 let t_work = Instant::now();
-                let res = generate_images_deadline(s, &dtm, k, job.total, &mut rng, job.abort_at);
+                let ev = job.evidence.as_deref();
+                let res =
+                    generate_images_deadline(s, &dtm, k, job.total, &mut rng, job.abort_at, ev);
                 // A derated phase clock makes everything the chip does
                 // proportionally slower.
                 if decision.derate > 1.0 {
@@ -401,6 +445,10 @@ struct Pending {
     deadline: Option<Instant>,
     priority: u8,
     attempt: u32,
+    /// The request's condition: evidence source at dispatch (and after a
+    /// retry — the requeued parts keep their shape), kind label for the
+    /// per-kind metrics.
+    condition: Condition,
 }
 
 struct Job {
@@ -409,6 +457,8 @@ struct Job {
     probe: bool,
     hedged: bool,
     dispatched: Vec<usize>,
+    /// Evidence shipped with every dispatch of this job (hedges included).
+    evidence: Option<Arc<JobEvidence>>,
 }
 
 /// Interned handles into the farm's metrics registry, cached once at
@@ -429,7 +479,11 @@ struct FarmObs {
     hedges: Arc<obs::Counter>,
     probes: Arc<obs::Counter>,
     batches: Arc<obs::Counter>,
+    jobs_free: Arc<obs::Counter>,
+    jobs_inpaint: Arc<obs::Counter>,
     latency_ms: Arc<obs::Histogram>,
+    latency_free: Arc<obs::Histogram>,
+    latency_inpaint: Arc<obs::Histogram>,
     batch_fill: Arc<obs::Histogram>,
     queue_depth: Arc<obs::Gauge>,
     in_flight: Arc<obs::Gauge>,
@@ -456,7 +510,11 @@ impl FarmObs {
             hedges: reg.counter("farm.hedges"),
             probes: reg.counter("farm.probes"),
             batches: reg.counter("farm.batches"),
+            jobs_free: reg.counter("serve.jobs.free"),
+            jobs_inpaint: reg.counter("serve.jobs.inpaint"),
             latency_ms: reg.histogram("farm.latency_ms"),
+            latency_free: reg.histogram("serve.latency_ms.free"),
+            latency_inpaint: reg.histogram("serve.latency_ms.inpaint"),
             batch_fill: reg.histogram("farm.batch_fill"),
             queue_depth: reg.gauge("farm.queue_depth"),
             in_flight: reg.gauge("farm.in_flight"),
@@ -525,11 +583,11 @@ impl Supervisor {
         loop {
             match rx.recv_timeout(tick) {
                 Ok(FarmMsg::Submit {
-                    n_images,
+                    spec,
                     deadline,
                     priority,
                     reply,
-                }) => self.admit(n_images, deadline, priority, reply),
+                }) => self.admit(spec, deadline, priority, reply),
                 Ok(FarmMsg::Shutdown) => self.begin_shutdown(),
                 Ok(FarmMsg::StatsNow { reply }) => {
                     let _ = reply.send(self.live_stats());
@@ -569,13 +627,22 @@ impl Supervisor {
 
     fn admit(
         &mut self,
-        n_images: usize,
+        spec: JobSpec,
         deadline: Option<Instant>,
         priority: u8,
         reply: mpsc::Sender<ServeResult>,
     ) {
         self.stats.serve.requests += 1;
         self.obs.requests.incr(1);
+        let n_images = spec.n_images;
+        let shape = spec.shape_key();
+        if matches!(spec.condition, Condition::Free) {
+            self.stats.jobs_free += 1;
+            self.obs.jobs_free.incr(1);
+        } else {
+            self.stats.jobs_inpaint += 1;
+            self.obs.jobs_inpaint.incr(1);
+        }
         let now = Instant::now();
         let deadline = deadline.or_else(|| self.cfg.default_deadline.map(|d| now + d));
         let p = Pending {
@@ -587,6 +654,7 @@ impl Supervisor {
             deadline,
             priority,
             attempt: 0,
+            condition: spec.condition,
         };
         if self.shutting_down.is_some() {
             self.resolve(p, Err(ServeError::Shutdown));
@@ -634,6 +702,7 @@ impl Supervisor {
         let req = Request {
             deadline,
             priority,
+            shape,
             ..Request::new(id, n_images, now)
         };
         match self.batcher.push(req) {
@@ -721,7 +790,13 @@ impl Supervisor {
         match &res {
             Ok(r) => {
                 self.obs.resolved.incr(1);
-                self.obs.latency_ms.record(r.latency.as_secs_f64() * 1e3);
+                let ms = r.latency.as_secs_f64() * 1e3;
+                self.obs.latency_ms.record(ms);
+                if matches!(p.condition, Condition::Free) {
+                    self.obs.latency_free.record(ms);
+                } else {
+                    self.obs.latency_inpaint.record(ms);
+                }
             }
             Err(e) => {
                 self.stats.serve.record_error(e);
@@ -843,6 +918,7 @@ impl Supervisor {
                             probe: true,
                             hedged: false,
                             dispatched: vec![chip],
+                            evidence: None,
                         },
                     );
                     self.stats.probes += 1;
@@ -878,12 +954,14 @@ impl Supervisor {
         abort_at: Option<Instant>,
         now: Instant,
     ) {
+        let evidence = self.jobs.get(&job_id).and_then(|j| j.evidence.clone());
         let sent = self.chips[chip]
             .tx
             .send(ChipJob {
                 job: job_id,
                 total,
                 abort_at,
+                evidence,
             })
             .is_ok();
         if sent {
@@ -900,6 +978,26 @@ impl Supervisor {
         }
     }
 
+    /// Evidence for a dispatched batch, assembled from its parts' pending
+    /// conditions (shape-pure by the batcher's contract). A part whose
+    /// pending entry vanished mid-tick borrows a surviving part's
+    /// condition — its rows are never delivered, only the mask must stay
+    /// consistent.
+    fn batch_evidence(&self, batch: &Batch) -> Result<Option<JobEvidence>> {
+        if batch.shape.is_free() {
+            return Ok(None);
+        }
+        let Some(fb) = batch.parts.iter().find_map(|(id, _)| self.pending.get(id)) else {
+            return Ok(None);
+        };
+        let mut conds: Vec<(usize, &Condition)> = Vec::with_capacity(batch.parts.len());
+        for (id, n) in &batch.parts {
+            let cond = self.pending.get(id).map_or(&fb.condition, |p| &p.condition);
+            conds.push((*n, cond));
+        }
+        JobEvidence::from_parts(conds)
+    }
+
     fn dispatch(&mut self, now: Instant) {
         if self.shutting_down.is_some() {
             return;
@@ -908,6 +1006,22 @@ impl Supervisor {
             let cap = self.effective_cap();
             let Some(batch) = self.batcher.next_batch_with(now, cap) else {
                 return;
+            };
+            // A batch whose evidence cannot be assembled (mask width
+            // disagreement that slipped past shape-keying) fails typed
+            // instead of dispatching a misclamped job.
+            let evidence = match self.batch_evidence(&batch) {
+                Ok(ev) => ev.map(Arc::new),
+                Err(e) => {
+                    let reason = format!("bad evidence: {e:#}");
+                    for &(id, _) in &batch.parts {
+                        let err = ServeError::Failed {
+                            reason: reason.clone(),
+                        };
+                        self.fail_request(id, err);
+                    }
+                    continue;
+                }
             };
             let job_id = self.next_job;
             self.next_job += 1;
@@ -930,6 +1044,7 @@ impl Supervisor {
                     probe: false,
                     hedged: false,
                     dispatched: vec![chip],
+                    evidence,
                 },
             );
             let abort_at = self.job_abort_at(&job_id);
@@ -1077,6 +1192,7 @@ impl Supervisor {
                 deadline: p.deadline,
                 priority: p.priority,
                 attempt,
+                shape: p.condition.shape_key(),
                 ..Request::new(id, count, p.arrived)
             };
             self.stats.retries += 1;
@@ -1239,6 +1355,30 @@ mod tests {
         assert_eq!(fin.serve.images, live.serve.images);
         assert_eq!(fin.serve.batches, live.serve.batches);
         assert_eq!(fin.serve.latencies_ms.len(), live.serve.latencies_ms.len());
+    }
+
+    #[test]
+    fn farm_inpaints_with_evidence_held() {
+        let farm = tiny_farm(cfg_tiny(), FaultPlan::none());
+        let client = farm.client();
+        let mask: Vec<bool> = (0..8).map(|j| j % 2 == 0).collect();
+        let vals = [1.0, 0.0, -1.0, 0.0, 1.0, 0.0, -1.0, 0.0];
+        let r = client.inpaint(3, mask.clone(), &vals).expect("inpaint must serve");
+        assert_eq!(r.images.len(), 3 * 8);
+        for i in 0..3 {
+            for (j, &m) in mask.iter().enumerate() {
+                let px = r.images[i * 8 + j];
+                if m {
+                    assert_eq!(px, vals[j], "evidence pixel {j} of image {i} must hold");
+                } else {
+                    assert!(px == 1.0 || px == -1.0, "free pixel must be a spin");
+                }
+            }
+        }
+        let stats = farm.shutdown();
+        assert_eq!(stats.jobs_inpaint, 1);
+        assert_eq!(stats.jobs_free, 0);
+        assert_eq!(stats.serve.errors(), 0);
     }
 
     #[test]

@@ -1,0 +1,409 @@
+//! Typed job specifications: what a serving request *is*, beyond an
+//! image count.
+//!
+//! The paper's hardware is at its best on **conditional** inference —
+//! clamped evidence nodes are exactly what the Gibbs cells natively
+//! support — and the lower layers (per-cmask `TopoCache`, clamp-aware
+//! plans, `impose_clamps`) already handle arbitrary evidence. This
+//! module is the vocabulary that carries such evidence end-to-end
+//! through the serving stack:
+//!
+//! * [`JobSpec`] — `n_images` plus a [`Condition`] (`Free` or
+//!   `Inpaint`), submitted by clients and stored with the pending
+//!   request;
+//! * [`ShapeKey`] — the packed evidence-mask bits the batcher groups
+//!   by, so one device batch never mixes incompatible clamp masks (a
+//!   compiled plan has exactly one cmask);
+//! * [`JobEvidence`] — job-level, data-space evidence for one device
+//!   batch (per-image value rows under one shared mask), built by the
+//!   farm supervisor at dispatch where no topology is in scope;
+//! * [`Evidence`] — the full-node `cmask`/`cval` tensors one reverse
+//!   step feeds into `LayerSampler::sample_cond`, scattered chip-side
+//!   via [`JobEvidence::batch_evidence`].
+//!
+//! Evidence lives over **data nodes** (the visible pixels): a mask bit
+//! marks a pixel as known, its value is a spin (±1). Latent nodes are
+//! never clamped by a request — they are the machine's workspace.
+
+use anyhow::{bail, Result};
+
+use crate::graph::Topology;
+
+/// What a generation request asks for beyond an image count.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Condition {
+    /// Unconditional generation: denoise from pure noise.
+    Free,
+    /// Inpainting: `data_mask[j]` marks data node `j` as evidence with
+    /// spin value `data_vals[j]`; masked pixels are clamped at every
+    /// reverse step (and in the noise init) while free pixels are
+    /// denoised around them.
+    Inpaint {
+        data_mask: Vec<bool>,
+        data_vals: Vec<f32>,
+    },
+}
+
+impl Condition {
+    /// Build an inpainting condition, normalizing values to spins
+    /// (`v > 0` → `+1`, else `-1`).
+    pub fn inpaint(data_mask: Vec<bool>, data_vals: &[f32]) -> Result<Condition> {
+        if data_mask.len() != data_vals.len() {
+            bail!(
+                "inpaint mask/values length mismatch: {} vs {}",
+                data_mask.len(),
+                data_vals.len()
+            );
+        }
+        let data_vals: Vec<f32> = data_vals
+            .iter()
+            .map(|&v| if v > 0.0 { 1.0 } else { -1.0 })
+            .collect();
+        Ok(Condition::Inpaint {
+            data_mask,
+            data_vals,
+        })
+    }
+
+    /// Metric label for this condition class (`serve.jobs.<kind>`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Condition::Free => "free",
+            Condition::Inpaint { .. } => "inpaint",
+        }
+    }
+
+    /// True when the condition carries no evidence at all: `Free`, or an
+    /// `Inpaint` whose mask is all-false. Such requests batch together.
+    pub fn is_free_shaped(&self) -> bool {
+        match self {
+            Condition::Free => true,
+            Condition::Inpaint { data_mask, .. } => !data_mask.iter().any(|&m| m),
+        }
+    }
+
+    /// The batching shape of this condition (see [`ShapeKey`]).
+    pub fn shape_key(&self) -> ShapeKey {
+        match self {
+            Condition::Free => ShapeKey::free(),
+            Condition::Inpaint { data_mask, .. } => ShapeKey::from_mask(data_mask),
+        }
+    }
+}
+
+/// A request: how many images, under what condition.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    pub n_images: usize,
+    pub condition: Condition,
+}
+
+impl JobSpec {
+    /// An unconditional request for `n_images`.
+    pub fn free(n_images: usize) -> JobSpec {
+        JobSpec {
+            n_images,
+            condition: Condition::Free,
+        }
+    }
+
+    /// An inpainting request (see [`Condition::inpaint`]).
+    pub fn inpaint(n_images: usize, data_mask: Vec<bool>, data_vals: &[f32]) -> Result<JobSpec> {
+        Ok(JobSpec {
+            n_images,
+            condition: Condition::inpaint(data_mask, data_vals)?,
+        })
+    }
+
+    pub fn shape_key(&self) -> ShapeKey {
+        self.condition.shape_key()
+    }
+}
+
+/// The evidence-mask identity a device batch is keyed on: mask bits
+/// packed into u64 words, trailing zero words trimmed so `Free` and an
+/// all-false `Inpaint` mask share the (empty) key and coalesce. Two
+/// requests may share a batch iff their keys are equal — the compiled
+/// sweep plan has exactly one clamp mask, while per-image *values* are
+/// free to differ (`cval` is per-chain).
+#[derive(Clone, Debug, Default, PartialEq, Eq, Hash)]
+pub struct ShapeKey(Vec<u64>);
+
+impl ShapeKey {
+    /// The unconditional (empty-evidence) shape.
+    pub fn free() -> ShapeKey {
+        ShapeKey(Vec::new())
+    }
+
+    /// Pack a data-node mask into words.
+    pub fn from_mask(mask: &[bool]) -> ShapeKey {
+        let mut words = vec![0u64; mask.len().div_ceil(64)];
+        for (j, &m) in mask.iter().enumerate() {
+            if m {
+                words[j / 64] |= 1u64 << (j % 64);
+            }
+        }
+        while words.last() == Some(&0) {
+            words.pop();
+        }
+        ShapeKey(words)
+    }
+
+    /// True for the unconditional (no evidence) shape.
+    pub fn is_free(&self) -> bool {
+        self.0.is_empty()
+    }
+}
+
+/// Job-level evidence for one device batch: a shared data-node mask and
+/// one value row per image (`rows[i * nd + j]`). Built supervisor-side
+/// from the batch's parts — the supervisor has no topology in scope, so
+/// everything here stays in data space; the chip scatters it to
+/// full-node tensors with [`JobEvidence::batch_evidence`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobEvidence {
+    pub data_mask: Vec<bool>,
+    /// [total * nd] per-image evidence values (only masked entries read).
+    pub rows: Vec<f32>,
+    pub total: usize,
+}
+
+impl JobEvidence {
+    /// Assemble a job's evidence from its parts: each part contributes
+    /// `count` images under its condition. Returns `Ok(None)` when the
+    /// job carries no evidence (all parts free-shaped) and fails if the
+    /// parts disagree on the mask — the batcher's shape-keying makes
+    /// that unreachable, but a typed error beats a misclamped batch.
+    pub fn from_parts<'a, I>(parts: I) -> Result<Option<JobEvidence>>
+    where
+        I: IntoIterator<Item = (usize, &'a Condition)>,
+    {
+        let parts: Vec<(usize, &Condition)> = parts.into_iter().collect();
+        if parts.iter().all(|(_, c)| c.is_free_shaped()) {
+            return Ok(None);
+        }
+        let mask = parts
+            .iter()
+            .find_map(|(_, c)| match c {
+                Condition::Inpaint { data_mask, .. } if !c.is_free_shaped() => Some(data_mask),
+                _ => None,
+            })
+            .expect("non-free-shaped part exists");
+        let nd = mask.len();
+        let mut rows = Vec::new();
+        let mut total = 0usize;
+        for (count, cond) in &parts {
+            match cond {
+                Condition::Inpaint { data_mask, data_vals } if data_mask == mask => {
+                    for _ in 0..*count {
+                        rows.extend_from_slice(data_vals);
+                    }
+                }
+                _ => bail!("batch mixes evidence shapes: {} vs inpaint mask", cond.kind()),
+            }
+            total += count;
+        }
+        if total == 0 {
+            return Ok(None);
+        }
+        debug_assert_eq!(rows.len(), total * nd);
+        Ok(Some(JobEvidence {
+            data_mask: mask.clone(),
+            rows,
+            total,
+        }))
+    }
+
+    /// Evidence for a single spec (the CLI's one-shot path).
+    pub fn from_spec(spec: &JobSpec) -> Result<Option<JobEvidence>> {
+        JobEvidence::from_parts([(spec.n_images, &spec.condition)])
+    }
+
+    /// Scatter the window of `b` image rows starting at image `offset`
+    /// into full-node clamp tensors for one device batch. Windows past
+    /// `total` (padding chains whose output is discarded) repeat the
+    /// last real row, so every chain is clamped consistently. Fails —
+    /// rather than panics, a chip worker must stay alive — when the
+    /// mask width does not match the model's data nodes.
+    pub fn batch_evidence(&self, top: &Topology, b: usize, offset: usize) -> Result<Evidence> {
+        let nd = top.data_nodes.len();
+        if self.data_mask.len() != nd {
+            bail!(
+                "evidence mask width {} does not match model data nodes {}",
+                self.data_mask.len(),
+                nd
+            );
+        }
+        if self.total == 0 || self.rows.len() != self.total * nd {
+            bail!("malformed evidence rows: {} values for {} images", self.rows.len(), self.total);
+        }
+        let n = top.n_nodes();
+        let mut cmask = vec![0.0f32; n];
+        for (j, &node) in top.data_nodes.iter().enumerate() {
+            if self.data_mask[j] {
+                cmask[node as usize] = 1.0;
+            }
+        }
+        let mut cval = vec![0.0f32; b * n];
+        for bi in 0..b {
+            let row = (offset + bi).min(self.total - 1);
+            for (j, &node) in top.data_nodes.iter().enumerate() {
+                if self.data_mask[j] {
+                    cval[bi * n + node as usize] = self.rows[row * nd + j];
+                }
+            }
+        }
+        Ok(Evidence { b, cmask, cval })
+    }
+}
+
+/// Full-node clamp tensors for one device batch: the exact shapes the
+/// sampler layer consumes (`cmask` [N] shared across chains, `cval`
+/// [B, N] per-chain values), fed to `LayerSampler::sample_cond` at
+/// every reverse step and re-imposed on the noise init.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Evidence {
+    pub b: usize,
+    pub cmask: Vec<f32>,
+    pub cval: Vec<f32>,
+}
+
+impl Evidence {
+    /// The `(cmask, cval)` pair in the form `sample_cond` takes.
+    pub fn cond(&self) -> (&[f32], &[f32]) {
+        (&self.cmask, &self.cval)
+    }
+
+    /// Overwrite evidence pixels in data-space rows `x` [b, nd] — the
+    /// reverse process starts from noise *consistent with the evidence*,
+    /// not from noise that contradicts it.
+    pub fn impose_on_data(&self, top: &Topology, x: &mut [f32], b: usize) {
+        let n = top.n_nodes();
+        let nd = top.data_nodes.len();
+        debug_assert_eq!(x.len(), b * nd);
+        for bi in 0..b {
+            for (j, &node) in top.data_nodes.iter().enumerate() {
+                if self.cmask[node as usize] > 0.5 {
+                    x[bi * nd + j] = self.cval[bi * n + node as usize];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph;
+    use crate::model::{gather_data, scatter_data};
+
+    fn mask8(set: &[usize]) -> Vec<bool> {
+        let mut m = vec![false; 8];
+        for &j in set {
+            m[j] = true;
+        }
+        m
+    }
+
+    #[test]
+    fn shape_key_free_and_all_false_coalesce() {
+        let free = Condition::Free;
+        let blank = Condition::inpaint(mask8(&[]), &[1.0; 8]).unwrap();
+        let masked = Condition::inpaint(mask8(&[0, 3]), &[1.0; 8]).unwrap();
+        assert_eq!(free.shape_key(), blank.shape_key());
+        assert!(blank.is_free_shaped() && free.is_free_shaped());
+        assert_ne!(free.shape_key(), masked.shape_key());
+        assert!(!masked.is_free_shaped());
+    }
+
+    #[test]
+    fn shape_key_packs_bits_and_trims() {
+        let mut long = vec![false; 130];
+        long[1] = true;
+        long[64] = true;
+        let k = ShapeKey::from_mask(&long);
+        assert_eq!(k, ShapeKey(vec![2, 1]), "bit j lands in word j/64, bit j%64");
+        // Trailing all-false words trim away: key is the evidence set.
+        let mut short = vec![false; 70];
+        short[1] = true;
+        short[64] = true;
+        assert_eq!(ShapeKey::from_mask(&short), k);
+        assert!(ShapeKey::from_mask(&[false; 200]).is_free());
+    }
+
+    #[test]
+    fn inpaint_normalizes_values_and_checks_lengths() {
+        let c = Condition::inpaint(mask8(&[0]), &[0.3, -2.0, 0.0, 1.0, -1.0, 5.0, -0.1, 1.0]);
+        match c.unwrap() {
+            Condition::Inpaint { data_vals, .. } => {
+                assert_eq!(data_vals, vec![1.0, -1.0, -1.0, 1.0, -1.0, 1.0, -1.0, 1.0]);
+            }
+            Condition::Free => panic!("not free"),
+        }
+        assert!(Condition::inpaint(mask8(&[0]), &[1.0; 3]).is_err());
+    }
+
+    /// Satellite: evidence survives the `scatter_data`/`gather_data`
+    /// round trip — the full-node tensors the sampler sees gather back
+    /// to exactly the data-space evidence the request carried.
+    #[test]
+    fn evidence_round_trips_through_scatter_gather() {
+        let top = graph::build("t", 4, "G8", 8, 0).unwrap();
+        let mask = mask8(&[1, 4, 6]);
+        let vals_a = [1.0, -1.0, 1.0, 1.0, -1.0, -1.0, 1.0, -1.0];
+        let vals_b = [-1.0, 1.0, -1.0, -1.0, 1.0, 1.0, -1.0, 1.0];
+        let a = Condition::inpaint(mask.clone(), &vals_a).unwrap();
+        let b = Condition::inpaint(mask.clone(), &vals_b).unwrap();
+        let je = JobEvidence::from_parts([(1, &a), (1, &b)]).unwrap().unwrap();
+        assert_eq!(je.total, 2);
+        let ev = je.batch_evidence(&top, 2, 0).unwrap();
+        // cmask is exactly the scattered mask row.
+        let mask_row: Vec<f32> = mask.iter().map(|&m| if m { 1.0 } else { 0.0 }).collect();
+        assert_eq!(ev.cmask, scatter_data(&top, &mask_row, 1));
+        // cval gathers back to the per-image evidence on masked pixels.
+        let back = gather_data(&top, &ev.cval, 2);
+        for (j, &m) in mask.iter().enumerate() {
+            if m {
+                assert_eq!(back[j], vals_a[j]);
+                assert_eq!(back[8 + j], vals_b[j]);
+            }
+        }
+        // ...and imposes the same values on a data-space noise init.
+        let mut x = vec![0.0f32; 2 * 8];
+        ev.impose_on_data(&top, &mut x, 2);
+        for (j, &m) in mask.iter().enumerate() {
+            assert_eq!(x[j], if m { vals_a[j] } else { 0.0 });
+            assert_eq!(x[8 + j], if m { vals_b[j] } else { 0.0 });
+        }
+    }
+
+    #[test]
+    fn padded_window_repeats_last_row_and_offsets_slice() {
+        let top = graph::build("t", 4, "G8", 8, 0).unwrap();
+        let mask = mask8(&[2]);
+        let mk = |v: f32| Condition::inpaint(mask.clone(), &[v; 8]).unwrap();
+        let (a, b, c) = (mk(1.0), mk(-1.0), mk(1.0));
+        let je = JobEvidence::from_parts([(1, &a), (1, &b), (1, &c)]).unwrap().unwrap();
+        // Second device batch of b=2 over 3 images: rows [2, pad(=2)].
+        let ev = je.batch_evidence(&top, 2, 2).unwrap();
+        let back = gather_data(&top, &ev.cval, 2);
+        assert_eq!(back[2], 1.0, "offset window starts at image 2");
+        assert_eq!(back[8 + 2], 1.0, "padding chain repeats the last real row");
+    }
+
+    #[test]
+    fn free_shaped_jobs_have_no_evidence_and_mismatches_are_typed() {
+        let spec = JobSpec::free(4);
+        assert!(JobEvidence::from_spec(&spec).unwrap().is_none());
+        let blank = Condition::inpaint(mask8(&[]), &[1.0; 8]).unwrap();
+        assert!(JobEvidence::from_parts([(2, &blank)]).unwrap().is_none());
+        // Mask width mismatch against the model is an Err, not a panic.
+        let top = graph::build("t", 4, "G8", 8, 0).unwrap();
+        let wide = Condition::inpaint(vec![true; 9], &[1.0; 9]).unwrap();
+        let je = JobEvidence::from_parts([(1, &wide)]).unwrap().unwrap();
+        assert!(je.batch_evidence(&top, 1, 0).is_err());
+        // Mixing a free part under a masked job is a typed error too.
+        let masked = Condition::inpaint(mask8(&[0]), &[1.0; 8]).unwrap();
+        assert!(JobEvidence::from_parts([(1, &masked), (1, &Condition::Free)]).is_err());
+    }
+}

@@ -4,22 +4,32 @@
 //!
 //! # Serving architecture
 //!
+//! Requests are typed end-to-end: a [`jobspec::JobSpec`] carries
+//! `n_images` plus a [`jobspec::Condition`] (`Free`, or `Inpaint` with
+//! per-pixel evidence over the data nodes), and that spec rides the whole
+//! path — admission, batching, dispatch, retry/hedge, and the chip's
+//! reverse process, where the evidence becomes per-layer clamp programs.
+//!
 //! ```text
-//!   clients ──► FarmClient::submit(n, deadline, priority)
+//!   clients ──► FarmClient::{submit, submit_spec, inpaint}
+//!                     │  JobSpec{n_images, condition} + deadline/priority
 //!                     │  (mpsc, every submission gets a reply channel)
 //!                     ▼
 //!              ┌─ supervisor ─────────────────────────────────┐
-//!              │  admission control ─► EDF batcher ─► dispatch │
+//!              │  admission ─► EDF batcher ─► dispatch         │
+//!              │     │   (shape-keyed: one batch = one         │
+//!              │     │    evidence mask; values per-image)     │
 //!              │  deadlines · retries+backoff · hedging        │
 //!              │  stall detection · quarantine+probes          │
 //!              │  shrink-batch degradation · priority shedding │
 //!              └──────┬───────────────┬───────────────┬────────┘
-//!                 job │           job │           job │   (per-chip mpsc)
+//!        job+evidence │           job │           job │   (per-chip mpsc)
 //!                     ▼               ▼               ▼
 //!               chip 0 thread   chip 1 thread   chip 2 thread
-//!               [faults? ► pipeline.generate ► meters]   (non-Send
-//!                samplers are built ON their thread; hw chips carry
-//!                their own fabricated corner + mismatch)
+//!               [faults? ► pipeline reverse core ► meters]
+//!                (JobEvidence ► per-batch cmask/cval clamps; non-Send
+//!                 samplers are built ON their thread; hw chips carry
+//!                 their own fabricated corner + mismatch)
 //!                     │               │               │
 //!                     └────── Done{outcome, report} ──┘
 //!                                     │
@@ -28,11 +38,18 @@
 //!
 //! Requests carry an optional **deadline** (EDF-ordered in the batcher,
 //! propagated into the chip so the reverse process aborts between layer
-//! programs once every deadline in the batch has passed) and a
-//! **priority** (0 = sheddable bulk). The contract — enforced by the
-//! `farm_chaos` suite under seeded fault schedules ([`faults`]) — is that
-//! **no request ever hangs**: every submission resolves to `Ok(Response)`
-//! or a typed [`ServeError`] within its deadline.
+//! programs once every deadline in the batch has passed), a **priority**
+//! (0 = sheddable bulk), and a **shape**: the batcher coalesces requests
+//! into a device batch only when their evidence masks agree
+//! ([`jobspec::ShapeKey`] — a compiled Gibbs plan has exactly one clamp
+//! mask, while per-image evidence *values* vary freely within a batch).
+//! The dispatch target is always the EDF head's shape and the linger
+//! flush keys off the globally oldest request, so rare shapes cannot be
+//! starved by a busy majority shape. The contract — enforced by the
+//! `farm_chaos` suite under seeded fault schedules ([`faults`]) — is
+//! that **no request ever hangs**: every submission, free or inpaint,
+//! resolves to `Ok(Response)` or a typed [`ServeError`] within its
+//! deadline.
 //!
 //! # Chip failure state machine
 //!
@@ -41,7 +58,7 @@
 //!          ┌───────────────────────────────┐
 //!          ▼                               │
 //!        Idle ──── dispatch job ────────► Busy
-//!          ▲                               │ Done(failed)      ──┐
+//!          ▲      (spec + evidence)        │ Done(failed)      ──┐
 //!          │                               │ or stall_timeout    │ requeue
 //!          │ probe succeeds                ▼                   ◄─┘ parts
 //!          └───────────────────────── Quarantined ◄──┐
@@ -53,11 +70,12 @@
 //! ```
 //!
 //! A batch whose chip fails or stalls is requeued at its original EDF
-//! position with exponential backoff, up to `max_retries`, then resolves
-//! `Failed`. A batch held past `hedge_after` is re-dispatched once to a
-//! second idle chip; the first result wins. When capacity drops, the
-//! effective batch shrinks proportionally and priority-0 overflow is shed
-//! with a typed rejection.
+//! position with exponential backoff — condition included, so a retried
+//! inpaint job re-clamps the same evidence — up to `max_retries`, then
+//! resolves `Failed`. A batch held past `hedge_after` is re-dispatched
+//! once (same evidence) to a second idle chip; the first result wins.
+//! When capacity drops, the effective batch shrinks proportionally and
+//! priority-0 overflow is shed with a typed rejection.
 //!
 //! # Observability hook points
 //!
@@ -65,10 +83,13 @@
 //! the metrics reconcile exactly with the request outcomes (asserted by
 //! the chaos suite):
 //!
-//! * **admission** — `farm.requests` counts every submission on entry;
+//! * **admission** — `farm.requests` counts every submission on entry,
+//!   and `serve.jobs.<kind>` (`free` / `inpaint`) splits them by
+//!   condition class;
 //! * **`resolve()`** — the single exit every reply funnels through:
-//!   `farm.resolved` + the `farm.latency_ms` histogram for `Ok`, and one
-//!   of `farm.{rejected, deadline_miss, failed, shutdown_rejected}` per
+//!   `farm.latency_ms` plus the per-kind `serve.latency_ms.<kind>`
+//!   histogram and `farm.resolved` for `Ok`, and one of
+//!   `farm.{rejected, deadline_miss, failed, shutdown_rejected}` per
 //!   [`ServeError`] variant (so the five counters partition the
 //!   submissions);
 //! * **per tick** — point-in-time gauges (`farm.queue_depth`,
@@ -87,11 +108,13 @@
 pub mod batcher;
 pub mod farm;
 pub mod faults;
+pub mod jobspec;
 pub mod pipeline;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use farm::{Farm, FarmClient, FarmConfig, FarmStats};
 pub use faults::FaultPlan;
+pub use jobspec::{Condition, Evidence, JobEvidence, JobSpec, ShapeKey};
 pub use pipeline::{generate_images, Pipeline};
 pub use server::{Response, ServeError, ServeResult, Server, ServerConfig, ServerStats};

@@ -2,14 +2,65 @@
 //! (paper Fig. 3b): start from uniform random bits at t = T, run each layer's
 //! Gibbs program conditioned on the previous step's output, and read the data
 //! nodes at t = 0.
+//!
+//! Every entry point funnels into one evidence-aware core: conditional
+//! generation ([`jobspec::Evidence`] clamps applied at every reverse step
+//! *and* to the noise init), deadline-aborted serving, and trajectory
+//! recording are the same loop with different knobs — there is exactly
+//! one reverse process in the codebase.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::coordinator::jobspec::{self, Evidence, JobEvidence};
 use crate::model::{gather_data, scatter_data, Dtm};
 use crate::train::sampler::LayerSampler;
 use crate::util::rng::Rng;
+
+/// The one reverse process. Draws x^T from uniform spins (with evidence
+/// pixels re-imposed — the walk starts *consistent* with the evidence,
+/// not contradicting it), then runs layer t = T-1..0, clamping evidence
+/// nodes inside every layer program via the sampler's cmask/cval path.
+/// Checks `abort_at` between layer programs; pushes every intermediate
+/// x^t (init included) into `traj` when recording.
+fn reverse_core<S: LayerSampler>(
+    sampler: &mut S,
+    dtm: &Dtm,
+    k: usize,
+    rng: &mut Rng,
+    abort_at: Option<Instant>,
+    ev: Option<&Evidence>,
+    mut traj: Option<&mut Vec<Vec<f32>>>,
+) -> Result<Option<Vec<f32>>> {
+    let top = sampler.topology().clone();
+    let b = sampler.batch();
+    let nd = top.data_nodes.len();
+    // x^T: uniform random bits (the forward process stationary law).
+    let mut x: Vec<f32> = (0..b * nd).map(|_| rng.spin()).collect();
+    if let Some(e) = ev {
+        debug_assert_eq!(e.b, b, "evidence built for a different device batch");
+        e.impose_on_data(&top, &mut x, b);
+    }
+    if let Some(tr) = traj.as_deref_mut() {
+        tr.push(x.clone());
+    }
+    // Layers run in reverse: layer t denoises x^{t+1} -> x^t.
+    for t in (0..dtm.t_steps()).rev() {
+        if abort_at.is_some_and(|d| Instant::now() >= d) {
+            return Ok(None);
+        }
+        let gm = dtm.gm_vec(&top, t);
+        let xt_full = scatter_data(&top, &x, b);
+        let cond = ev.map(Evidence::cond);
+        let s_final = sampler.sample_cond(&dtm.layers[t], &gm, dtm.beta, &xt_full, cond, None, k)?;
+        x = gather_data(&top, &s_final, b);
+        if let Some(tr) = traj.as_deref_mut() {
+            tr.push(x.clone());
+        }
+    }
+    Ok(Some(x))
+}
 
 /// Generate one batch of images from pure noise. Returns data-node values
 /// [B, n_data]. `k` is the Gibbs iteration budget per layer (K_inference).
@@ -19,37 +70,25 @@ pub fn generate_batch<S: LayerSampler>(
     k: usize,
     rng: &mut Rng,
 ) -> Result<Vec<f32>> {
-    Ok(generate_batch_deadline(sampler, dtm, k, rng, None)?
+    Ok(generate_batch_deadline(sampler, dtm, k, rng, None, None)?
         .expect("no deadline, cannot abort"))
 }
 
-/// Deadline-aware batch generation: the reverse process checks the clock
-/// between layer programs and returns `Ok(None)` when `abort_at` has
-/// passed — a chip serving a deadline-bound request stops burning sweeps
-/// on work nobody will accept. `abort_at = None` never aborts.
+/// Deadline-aware, optionally conditional batch generation: the reverse
+/// process checks the clock between layer programs and returns `Ok(None)`
+/// when `abort_at` has passed — a chip serving a deadline-bound request
+/// stops burning sweeps on work nobody will accept. `abort_at = None`
+/// never aborts. `ev` carries one device batch's evidence clamps
+/// (`None` = free-run).
 pub fn generate_batch_deadline<S: LayerSampler>(
     sampler: &mut S,
     dtm: &Dtm,
     k: usize,
     rng: &mut Rng,
     abort_at: Option<Instant>,
+    ev: Option<&Evidence>,
 ) -> Result<Option<Vec<f32>>> {
-    let top = sampler.topology().clone();
-    let b = sampler.batch();
-    let nd = top.data_nodes.len();
-    // x^T: uniform random bits (the forward process stationary law).
-    let mut x: Vec<f32> = (0..b * nd).map(|_| rng.spin()).collect();
-    // Layers run in reverse: layer t denoises x^{t+1} -> x^t.
-    for t in (0..dtm.t_steps()).rev() {
-        if abort_at.is_some_and(|d| Instant::now() >= d) {
-            return Ok(None);
-        }
-        let gm = dtm.gm_vec(&top, t);
-        let xt_full = scatter_data(&top, &x, b);
-        let s_final = sampler.sample(&dtm.layers[t], &gm, dtm.beta, &xt_full, None, k)?;
-        x = gather_data(&top, &s_final, b);
-    }
-    Ok(Some(x))
+    reverse_core(sampler, dtm, k, rng, abort_at, ev, None)
 }
 
 /// Generate at least `n` images (multiple batches), truncated to n rows.
@@ -60,13 +99,17 @@ pub fn generate_images<S: LayerSampler>(
     n: usize,
     rng: &mut Rng,
 ) -> Result<Vec<f32>> {
-    Ok(generate_images_deadline(sampler, dtm, k, n, rng, None)?
+    Ok(generate_images_deadline(sampler, dtm, k, n, rng, None, None)?
         .expect("no deadline, cannot abort"))
 }
 
 /// Deadline-aware [`generate_images`]: `Ok(None)` when `abort_at` passed
 /// before the requested rows were all generated (partial work discarded —
-/// callers answer the request with a typed `DeadlineExceeded`).
+/// callers answer the request with a typed `DeadlineExceeded`). When `ev`
+/// carries job evidence ([`jobspec::JobEvidence`], one value row per
+/// image), each device batch scatters its own window of rows, so a job
+/// split across batches clamps each image to *its* evidence.
+#[allow(clippy::too_many_arguments)]
 pub fn generate_images_deadline<S: LayerSampler>(
     sampler: &mut S,
     dtm: &Dtm,
@@ -74,14 +117,23 @@ pub fn generate_images_deadline<S: LayerSampler>(
     n: usize,
     rng: &mut Rng,
     abort_at: Option<Instant>,
+    ev: Option<&JobEvidence>,
 ) -> Result<Option<Vec<f32>>> {
-    let nd = sampler.topology().data_nodes.len();
+    let top = sampler.topology().clone();
+    let b = sampler.batch();
+    let nd = top.data_nodes.len();
     let mut out = Vec::with_capacity(n * nd);
+    let mut chunk = 0usize;
     while out.len() < n * nd {
-        match generate_batch_deadline(sampler, dtm, k, rng, abort_at)? {
+        let bev = match ev {
+            Some(je) => Some(je.batch_evidence(&top, b, chunk * b)?),
+            None => None,
+        };
+        match generate_batch_deadline(sampler, dtm, k, rng, abort_at, bev.as_ref())? {
             Some(batch) => out.extend(batch),
             None => return Ok(None),
         }
+        chunk += 1;
     }
     out.truncate(n * nd);
     Ok(Some(out))
@@ -89,24 +141,16 @@ pub fn generate_images_deadline<S: LayerSampler>(
 
 /// Generate and also record each intermediate x^t (for Fig. 5a): returns
 /// states[t] = data rows at time t, t = T..0 inclusive (T+1 entries).
+/// Same core as [`generate_batch_deadline`] with recording on.
 pub fn generate_trajectory<S: LayerSampler>(
     sampler: &mut S,
     dtm: &Dtm,
     k: usize,
     rng: &mut Rng,
 ) -> Result<Vec<Vec<f32>>> {
-    let top = sampler.topology().clone();
-    let b = sampler.batch();
-    let nd = top.data_nodes.len();
-    let mut x: Vec<f32> = (0..b * nd).map(|_| rng.spin()).collect();
-    let mut traj = vec![x.clone()];
-    for t in (0..dtm.t_steps()).rev() {
-        let gm = dtm.gm_vec(&top, t);
-        let xt_full = scatter_data(&top, &x, b);
-        let s_final = sampler.sample(&dtm.layers[t], &gm, dtm.beta, &xt_full, None, k)?;
-        x = gather_data(&top, &s_final, b);
-        traj.push(x.clone());
-    }
+    let mut traj = Vec::with_capacity(dtm.t_steps() + 1);
+    reverse_core(sampler, dtm, k, rng, None, None, Some(&mut traj))?
+        .expect("no deadline, cannot abort");
     Ok(traj)
 }
 
@@ -140,6 +184,22 @@ impl<S: LayerSampler> Pipeline<S> {
         generate_images(&mut self.sampler, &self.dtm, self.k_inference, n, &mut self.rng)
     }
 
+    /// Conditional generation: denoise `spec.n_images` images under the
+    /// spec's evidence (free specs reduce to [`Pipeline::generate`]).
+    pub fn generate_spec(&mut self, spec: &jobspec::JobSpec) -> Result<Vec<f32>> {
+        let ev = JobEvidence::from_spec(spec)?;
+        Ok(generate_images_deadline(
+            &mut self.sampler,
+            &self.dtm,
+            self.k_inference,
+            spec.n_images,
+            &mut self.rng,
+            None,
+            ev.as_ref(),
+        )?
+        .expect("no deadline, cannot abort"))
+    }
+
     /// Total Gibbs iterations per generated batch (T * K) — the quantity the
     /// App. E energy model charges for.
     pub fn iterations_per_batch(&self) -> usize {
@@ -150,6 +210,7 @@ impl<S: LayerSampler> Pipeline<S> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::jobspec::{Condition, JobSpec};
     use crate::graph;
     use crate::model::Dtm;
     use crate::train::sampler::RustSampler;
@@ -202,12 +263,66 @@ mod tests {
         let mut rng = Rng::new(5);
         // An already-expired abort point aborts before the first layer.
         let past = Instant::now() - std::time::Duration::from_millis(1);
-        let out = generate_images_deadline(&mut s, &dtm, 5, 8, &mut rng, Some(past)).unwrap();
+        let out =
+            generate_images_deadline(&mut s, &dtm, 5, 8, &mut rng, Some(past), None).unwrap();
         assert!(out.is_none());
         // A far-future abort point generates normally.
         let future = Instant::now() + std::time::Duration::from_secs(60);
-        let out = generate_images_deadline(&mut s, &dtm, 5, 8, &mut rng, Some(future)).unwrap();
+        let out =
+            generate_images_deadline(&mut s, &dtm, 5, 8, &mut rng, Some(future), None).unwrap();
         assert_eq!(out.unwrap().len(), 8 * 8);
+    }
+
+    #[test]
+    fn inpainting_holds_evidence_against_a_biased_model() {
+        // The model pulls every pixel to +1; evidence pins half of them to
+        // -1. Generated images must keep the evidence pixels exactly and
+        // (overwhelmingly) follow the bias on the free ones — across a job
+        // split over multiple device batches.
+        let (top, mut dtm) = tiny();
+        for t in 0..dtm.t_steps() {
+            for &dn in top.data_nodes.iter() {
+                dtm.layers[t].h[dn as usize] = 4.0;
+            }
+        }
+        let mask: Vec<bool> = (0..8).map(|j| j % 2 == 0).collect();
+        let vals = vec![-1.0f32; 8];
+        let spec = JobSpec::inpaint(10, mask.clone(), &vals).unwrap();
+        let je = JobEvidence::from_spec(&spec).unwrap().unwrap();
+        let mut s = RustSampler::new(top, 4, 0);
+        let mut rng = Rng::new(6);
+        let imgs = generate_images_deadline(&mut s, &dtm, 6, 10, &mut rng, None, Some(&je))
+            .unwrap()
+            .unwrap();
+        assert_eq!(imgs.len(), 10 * 8);
+        let mut free_sum = 0.0f64;
+        let mut free_n = 0usize;
+        for r in 0..10 {
+            for (j, &m) in mask.iter().enumerate() {
+                let v = imgs[r * 8 + j];
+                if m {
+                    assert_eq!(v, -1.0, "evidence pixel drifted (row {r}, pixel {j})");
+                } else {
+                    free_sum += v as f64;
+                    free_n += 1;
+                }
+            }
+        }
+        assert!(free_sum / free_n as f64 > 0.8, "free pixels must follow the bias");
+    }
+
+    #[test]
+    fn free_shaped_spec_generates_like_generate() {
+        let (top, dtm) = tiny();
+        let s = RustSampler::new(top, 4, 0);
+        let mut p = Pipeline::new(s, dtm, 5, 0);
+        let spec = JobSpec {
+            n_images: 6,
+            condition: Condition::Free,
+        };
+        let imgs = p.generate_spec(&spec).unwrap();
+        assert_eq!(imgs.len(), 6 * 8);
+        assert!(imgs.iter().all(|&x| x == 1.0 || x == -1.0));
     }
 
     #[test]

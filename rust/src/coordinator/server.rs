@@ -6,7 +6,11 @@
 //!
 //! Architecture (PJRT wrappers are not `Send`, and physically there is one
 //! DTCA "chip"): client threads -> mpsc -> device thread
-//! [batcher -> pipeline.generate -> per-request slices] -> response channels.
+//! [batcher -> pipeline reverse core -> per-request slices] -> response
+//! channels. Requests are typed [`JobSpec`]s: free-run and inpainting
+//! submissions share the queue, the batcher keeps evidence shapes from
+//! mixing inside a device batch, and a batch's evidence is scattered to
+//! clamp tensors right before its reverse pass.
 //!
 //! **No request ever hangs.** Every accepted message resolves its reply
 //! channel with `Ok(Response)` or a typed [`ServeError`]:
@@ -32,7 +36,8 @@ use crate::train::sampler::LayerSampler;
 use crate::util::rng::Rng;
 
 use super::batcher::{Batcher, BatcherConfig, Request};
-use super::pipeline::generate_batch;
+use super::jobspec::{Condition, JobEvidence, JobSpec};
+use super::pipeline::generate_batch_deadline;
 
 /// A client-visible generation response.
 #[derive(Debug)]
@@ -74,7 +79,7 @@ pub type ServeResult = std::result::Result<Response, ServeError>;
 
 enum Msg {
     Generate {
-        n_images: usize,
+        spec: JobSpec,
         deadline: Option<Instant>,
         reply: mpsc::Sender<ServeResult>,
     },
@@ -154,13 +159,13 @@ pub struct Client {
 impl Client {
     fn submit(
         &self,
-        n_images: usize,
+        spec: JobSpec,
         deadline: Option<Instant>,
     ) -> Result<mpsc::Receiver<ServeResult>> {
         let (rtx, rrx) = mpsc::channel();
         self.tx
             .send(Msg::Generate {
-                n_images,
+                spec,
                 deadline,
                 reply: rtx,
             })
@@ -170,7 +175,20 @@ impl Client {
 
     /// Blocking generate (no deadline).
     pub fn generate(&self, n_images: usize) -> Result<Response> {
-        Ok(self.submit(n_images, None)?.recv()??)
+        Ok(self.submit(JobSpec::free(n_images), None)?.recv()??)
+    }
+
+    /// Blocking inpaint beside [`Client::generate`]: `data_mask[j]` pins
+    /// data pixel `j` to `data_vals[j]` (spins) in every generated image;
+    /// free pixels are denoised around the evidence.
+    pub fn inpaint(
+        &self,
+        n_images: usize,
+        data_mask: Vec<bool>,
+        data_vals: &[f32],
+    ) -> Result<Response> {
+        let spec = JobSpec::inpaint(n_images, data_mask, data_vals)?;
+        Ok(self.submit(spec, None)?.recv()??)
     }
 
     /// Blocking generate with a deadline, resolving to the typed result.
@@ -180,7 +198,7 @@ impl Client {
     /// `deadline + grace` even if the server misbehaves.
     pub fn generate_timeout(&self, n_images: usize, deadline: Duration) -> ServeResult {
         let rrx = self
-            .submit(n_images, Some(Instant::now() + deadline))
+            .submit(JobSpec::free(n_images), Some(Instant::now() + deadline))
             .map_err(|_| ServeError::Shutdown)?;
         // The server enforces the deadline; the small grace keeps the race
         // between its answer and our clock from manufacturing timeouts.
@@ -193,7 +211,7 @@ impl Client {
 
     /// Fire a request, returning the receiver (for concurrent load tests).
     pub fn generate_async(&self, n_images: usize) -> Result<mpsc::Receiver<ServeResult>> {
-        self.submit(n_images, None)
+        self.submit(JobSpec::free(n_images), None)
     }
 
     /// Fire with a deadline, returning the receiver.
@@ -202,7 +220,7 @@ impl Client {
         n_images: usize,
         deadline: Duration,
     ) -> Result<mpsc::Receiver<ServeResult>> {
-        self.submit(n_images, Some(Instant::now() + deadline))
+        self.submit(JobSpec::free(n_images), Some(Instant::now() + deadline))
     }
 }
 
@@ -250,6 +268,7 @@ struct Pending {
     n_images: usize,
     arrived: Instant,
     deadline: Option<Instant>,
+    condition: Condition,
 }
 
 fn device_loop<S, F>(
@@ -294,7 +313,8 @@ where
     let mut rng = Rng::new(cfg.seed);
     let mut pending: std::collections::HashMap<u64, Pending> = std::collections::HashMap::new();
     let mut next_id = 0u64;
-    let nd = sampler.topology().data_nodes.len();
+    let top = sampler.topology().clone();
+    let nd = top.data_nodes.len();
 
     let resolve = |stats: &mut ServerStats, p: Pending, res: ServeResult| {
         if let Err(e) = &res {
@@ -313,7 +333,7 @@ where
         let mut shutting_down = false;
         match rx.recv_timeout(timeout) {
             Ok(Msg::Generate {
-                n_images,
+                spec,
                 deadline,
                 reply,
             }) => {
@@ -321,18 +341,22 @@ where
                 next_id += 1;
                 stats.requests += 1;
                 let now = Instant::now();
+                let n_images = spec.n_images;
+                let shape = spec.shape_key();
                 let p = Pending {
                     reply,
                     images: Vec::with_capacity(n_images * nd),
                     n_images,
                     arrived: now,
                     deadline,
+                    condition: spec.condition,
                 };
                 if deadline.is_some_and(|d| d <= now) {
                     resolve(&mut stats, p, Err(ServeError::DeadlineExceeded));
                 } else {
                     let req = Request {
                         deadline,
+                        shape,
                         ..Request::new(id, n_images, now)
                     };
                     match batcher.push(req) {
@@ -379,9 +403,29 @@ where
             }
         }
 
-        // Drain whatever is dispatchable.
+        // Drain whatever is dispatchable. Each batch is shape-pure, so its
+        // evidence (if any) scatters to one clamp-tensor set for the whole
+        // reverse pass; free batches pass no evidence at all.
         while let Some(batch) = batcher.next_batch(Instant::now()) {
-            match generate_batch(&mut sampler, &dtm, cfg.k_inference, &mut rng) {
+            let mut conds: Vec<(usize, &Condition)> = Vec::with_capacity(batch.parts.len());
+            for (id, n) in &batch.parts {
+                let p = pending.get(id).expect("unknown request id");
+                conds.push((*n, &p.condition));
+            }
+            let evidence = match JobEvidence::from_parts(conds) {
+                Ok(None) => Ok(None),
+                Ok(Some(je)) => je.batch_evidence(&top, device_batch, 0).map(Some),
+                Err(e) => Err(e),
+            };
+            let gen = match evidence {
+                Ok(ev) => {
+                    let k = cfg.k_inference;
+                    generate_batch_deadline(&mut sampler, &dtm, k, &mut rng, None, ev.as_ref())
+                        .and_then(|r| r.ok_or_else(|| anyhow::anyhow!("aborted w/o deadline")))
+                }
+                Err(e) => Err(e),
+            };
+            match gen {
                 Ok(images) => {
                     stats.batches += 1;
                     stats.total_batch_fill += batch.total as f64 / device_batch as f64;
@@ -495,6 +539,30 @@ mod tests {
         assert_eq!(stats.images, 12);
         assert!(stats.mean_fill() > 0.4, "fill {}", stats.mean_fill());
         assert!(stats.p99_ms() >= stats.p50_ms());
+    }
+
+    #[test]
+    fn serves_inpaint_beside_free() {
+        let server = spawn_tiny(1);
+        let client = server.client();
+        let mask: Vec<bool> = (0..8).map(|j| j < 4).collect();
+        let vals = [1.0, -1.0, 1.0, -1.0, 0.0, 0.0, 0.0, 0.0];
+        let r = client.inpaint(3, mask.clone(), &vals).unwrap();
+        assert_eq!(r.images.len(), 3 * 8);
+        for i in 0..3 {
+            for j in 0..4 {
+                assert_eq!(r.images[i * 8 + j], vals[j], "evidence pixel {j} of image {i}");
+            }
+            for j in 4..8 {
+                let px = r.images[i * 8 + j];
+                assert!(px == 1.0 || px == -1.0, "free pixel must be a spin");
+            }
+        }
+        let free = client.generate(2).unwrap();
+        assert_eq!(free.images.len(), 16);
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 2);
+        assert_eq!(stats.errors(), 0);
     }
 
     #[test]

@@ -5,6 +5,10 @@
 //! binarized to spins. Multi-modal and class-structured, which is what drives
 //! the mixing-expressivity tradeoff the paper studies.
 //!
+//! `mnist_like` — 10 seven-segment digit glyphs under the same deformation
+//! model (the `repro inpaint --dataset mnist` stand-in; no real MNIST files
+//! in the container).
+//!
 //! `cifar_like` — 3-channel color-blob images for the hybrid HTDML
 //! experiment (Fig. 6), real-valued in [-1, 1].
 //!
@@ -81,8 +85,13 @@ impl Default for FashionConfig {
     }
 }
 
-/// Render one sample of `class` with random deformation.
-pub fn fashion_sample(cfg: &FashionConfig, class: usize, rng: &mut Rng) -> BinaryImage {
+/// Rasterize one silhouette predicate with random translate/scale/flip
+/// deformation (shared by the fashion and mnist-like generators).
+fn render_shape(
+    cfg: &FashionConfig,
+    rng: &mut Rng,
+    shape: impl Fn(f64, f64) -> bool,
+) -> BinaryImage {
     let s = cfg.side;
     let dx = (rng.uniform() * 2.0 - 1.0) * cfg.jitter;
     let dy = (rng.uniform() * 2.0 - 1.0) * cfg.jitter;
@@ -92,7 +101,7 @@ pub fn fashion_sample(cfg: &FashionConfig, class: usize, rng: &mut Rng) -> Binar
         for px in 0..s {
             let u = ((px as f64 + 0.5) / s as f64 - 0.5 - dx) / sc + 0.5;
             let v = ((py as f64 + 0.5) / s as f64 - 0.5 - dy) / sc + 0.5;
-            let mut on = class_shape(class, u, v);
+            let mut on = shape(u, v);
             if rng.uniform() < cfg.flip_prob {
                 on = !on;
             }
@@ -100,6 +109,11 @@ pub fn fashion_sample(cfg: &FashionConfig, class: usize, rng: &mut Rng) -> Binar
         }
     }
     img
+}
+
+/// Render one sample of `class` with random deformation.
+pub fn fashion_sample(cfg: &FashionConfig, class: usize, rng: &mut Rng) -> BinaryImage {
+    render_shape(cfg, rng, |u, v| class_shape(class, u, v))
 }
 
 /// A full dataset: images are concatenated rows [n, side*side], labels 0..10.
@@ -118,6 +132,59 @@ pub fn fashion_dataset(cfg: &FashionConfig, n: usize, seed: u64) -> Dataset {
     for i in 0..n {
         let class = i % 10;
         images.extend(fashion_sample(cfg, class, &mut rng));
+        labels.push(class as u8);
+    }
+    Dataset {
+        images,
+        labels,
+        n,
+        dim,
+    }
+}
+
+/// Seven-segment encoding of digit `d`: which of
+/// [top, top-left, top-right, middle, bottom-left, bottom-right, bottom]
+/// strokes are lit.
+fn digit_segments(d: usize) -> [bool; 7] {
+    match d % 10 {
+        0 => [true, true, true, false, true, true, true],
+        1 => [false, false, true, false, false, true, false],
+        2 => [true, false, true, true, true, false, true],
+        3 => [true, false, true, true, false, true, true],
+        4 => [false, true, true, true, false, true, false],
+        5 => [true, true, false, true, false, true, true],
+        6 => [true, true, false, true, true, true, true],
+        7 => [true, false, true, false, false, true, false],
+        8 => [true, true, true, true, true, true, true],
+        _ => [true, true, true, true, false, true, true],
+    }
+}
+
+/// Paint digit `d` as thick seven-segment strokes in [0,1]^2 (v down).
+fn digit_shape(d: usize, u: f64, v: f64) -> bool {
+    let seg = digit_segments(d);
+    let t = 0.09; // stroke half-thickness
+    let horiz = |vc: f64| (v - vc).abs() <= t && (0.25..=0.75).contains(&u);
+    let vert = |uc: f64, v0: f64, v1: f64| (u - uc).abs() <= t && v >= v0 && v <= v1;
+    (seg[0] && horiz(0.15))
+        || (seg[1] && vert(0.25, 0.15, 0.5))
+        || (seg[2] && vert(0.75, 0.15, 0.5))
+        || (seg[3] && horiz(0.5))
+        || (seg[4] && vert(0.25, 0.5, 0.85))
+        || (seg[5] && vert(0.75, 0.5, 0.85))
+        || (seg[6] && horiz(0.85))
+}
+
+/// MNIST-like stand-in: ten deformed seven-segment digit glyphs, same
+/// config and augmentation as [`fashion_dataset`], labels 0..10 cycling.
+pub fn mnist_like_dataset(cfg: &FashionConfig, n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let dim = cfg.side * cfg.side;
+    let mut images = Vec::with_capacity(n * dim);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = i % 10;
+        images.extend(render_shape(cfg, &mut rng, |u, v| digit_shape(class, u, v)));
         labels.push(class as u8);
     }
     Dataset {
@@ -263,6 +330,24 @@ mod tests {
         assert_eq!(a.images, b.images);
         let c = fashion_dataset(&cfg, 20, 43);
         assert_ne!(a.images, c.images);
+    }
+
+    #[test]
+    fn mnist_like_digits_are_spins_and_distinct() {
+        let cfg = FashionConfig {
+            flip_prob: 0.0,
+            ..FashionConfig::default()
+        };
+        let ds = mnist_like_dataset(&cfg, 10, 3);
+        assert_eq!(ds.images.len(), 10 * 256);
+        assert!(ds.images.iter().all(|&x| x == 1.0 || x == -1.0));
+        let on = |i: usize| ds.image(i).iter().filter(|&&x| x > 0.0).count();
+        // '8' lights every segment, '1' only two — counts must reflect it,
+        // and every glyph paints a nontrivial band of the image.
+        assert!(on(8) > on(1), "8 paints {} px, 1 paints {}", on(8), on(1));
+        for d in 0..10 {
+            assert!(on(d) > 8 && on(d) < 200, "digit {d} paints {} px", on(d));
+        }
     }
 
     #[test]

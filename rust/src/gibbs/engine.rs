@@ -308,38 +308,86 @@ impl SweepTopo {
 /// A small cmask-keyed cache of compiled [`SweepTopo`]s. Samplers hold one
 /// per instance so repeated `stats()`/`sample()` calls (trainer iterations,
 /// serving requests) skip the O(N·D) branchy topology gather when only the
-/// weights change between calls — the ROADMAP plan-reuse item. The clamp
-/// masks in play per sampler are few (free, data-clamped), so a bounded
-/// linear scan is cheaper than hashing.
+/// weights change between calls — the ROADMAP plan-reuse item. Keys are
+/// the thresholded clamp mask packed into u64 words (so a lookup compares
+/// N/64 words, not N bytes); entries sit in LRU order — a hit moves to the
+/// back, evictions pop the front — bounded by a capacity knob so a serving
+/// mix with many distinct inpainting masks degrades to recompiles instead
+/// of unbounded growth. Traffic is metered into
+/// `gibbs.topo_cache.{hits,misses,evictions}` when metrics are enabled.
 pub struct TopoCache {
-    entries: Vec<(Vec<u8>, Arc<SweepTopo>)>,
+    entries: Vec<(Vec<u64>, Arc<SweepTopo>)>,
+    cap: usize,
 }
 
 impl TopoCache {
+    /// Default plan capacity. Steady-state serving sees few masks (free
+    /// plus a handful of evidence shapes), so 8 covers the common mix.
+    pub const DEFAULT_CAP: usize = 8;
+
     pub fn new() -> TopoCache {
-        TopoCache { entries: Vec::new() }
+        TopoCache::with_capacity(TopoCache::DEFAULT_CAP)
+    }
+
+    /// A cache holding at most `cap` compiled plans (clamped to >= 1).
+    pub fn with_capacity(cap: usize) -> TopoCache {
+        TopoCache {
+            entries: Vec::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Threshold the mask at 0.5 and pack it into u64 words, bit j =
+    /// node j clamped. Trailing words are zero for free tails, so equal
+    /// masks always pack to equal keys.
+    fn pack_key(cmask: &[f32]) -> Vec<u64> {
+        let mut words = vec![0u64; cmask.len().div_ceil(64)];
+        for (j, &x) in cmask.iter().enumerate() {
+            if x > 0.5 {
+                words[j / 64] |= 1 << (j % 64);
+            }
+        }
+        words
     }
 
     /// The compiled topo for `(top, cmask)`, reusing a cached one when the
-    /// mask matches (masks are compared as thresholded bit rows). A cache
-    /// instance belongs to ONE topology — hits are only keyed on the mask,
-    /// so reusing a cache across graphs would return lists compiled for the
-    /// wrong edge set (asserted where detectable).
+    /// mask matches (masks are compared as packed thresholded bit rows). A
+    /// cache instance belongs to ONE topology — hits are only keyed on the
+    /// mask, so reusing a cache across graphs would return lists compiled
+    /// for the wrong edge set (asserted where detectable).
     pub fn topo_for(&mut self, top: &Topology, cmask: &[f32]) -> Arc<SweepTopo> {
-        let key: Vec<u8> = cmask.iter().map(|&x| (x > 0.5) as u8).collect();
-        if let Some((_, t)) = self.entries.iter().find(|(k, _)| *k == key) {
+        let key = TopoCache::pack_key(cmask);
+        let metered = crate::obs::metrics_enabled();
+        if let Some(i) = self.entries.iter().position(|(k, _)| *k == key) {
+            let ent = self.entries.remove(i);
             assert!(
-                t.n == top.n_nodes() && t.degree == top.degree,
+                ent.1.n == top.n_nodes() && ent.1.degree == top.degree,
                 "TopoCache reused across different topologies"
             );
-            return Arc::clone(t);
+            let t = Arc::clone(&ent.1);
+            self.entries.push(ent);
+            if metered {
+                crate::obs::topo_cache_counters().hits.incr(1);
+            }
+            return t;
         }
         let t = Arc::new(SweepTopo::new(top, cmask));
-        if self.entries.len() >= 8 {
+        if metered {
+            crate::obs::topo_cache_counters().misses.incr(1);
+        }
+        while self.entries.len() >= self.cap {
             self.entries.remove(0);
+            if metered {
+                crate::obs::topo_cache_counters().evictions.incr(1);
+            }
         }
         self.entries.push((key, Arc::clone(&t)));
         t
+    }
+
+    /// Maximum number of plans held.
+    pub fn capacity(&self) -> usize {
+        self.cap
     }
 
     pub fn len(&self) -> usize {
@@ -885,6 +933,35 @@ mod tests {
         assert_eq!(clamped.updates_per_sweep(), n - n_clamped);
         // Stats still cover every real slot regardless of clamping.
         assert_eq!(clamped.topo.stat_slot.len(), 2 * top.n_edges());
+    }
+
+    #[test]
+    fn topo_cache_is_lru_bounded() {
+        let (top, _, _) = setup(7);
+        let n = top.n_nodes();
+        let free = vec![0.0f32; n];
+        let data = top.data_mask();
+        let mut one = vec![0.0f32; n];
+        one[0] = 1.0;
+
+        let mut cache = TopoCache::with_capacity(2);
+        assert_eq!(cache.capacity(), 2);
+        let t_free = cache.topo_for(&top, &free);
+        let t_data = cache.topo_for(&top, &data);
+        assert_eq!(cache.len(), 2);
+
+        // A hit reuses the compiled plan and moves it to the LRU back...
+        let again = cache.topo_for(&top, &free);
+        assert!(Arc::ptr_eq(&t_free, &again), "hit must reuse the compiled plan");
+        assert_eq!(cache.len(), 2, "lookup must not grow the cache");
+
+        // ...so a third mask evicts `data` (the LRU front), not `free`.
+        let _ = cache.topo_for(&top, &one);
+        assert_eq!(cache.len(), 2);
+        let still = cache.topo_for(&top, &free);
+        assert!(Arc::ptr_eq(&t_free, &still), "recently-used plan must survive eviction");
+        let re = cache.topo_for(&top, &data);
+        assert!(!Arc::ptr_eq(&t_data, &re), "evicted plan must recompile");
     }
 
     #[test]

@@ -426,12 +426,13 @@ impl LayerSampler for HwSampler {
         })
     }
 
-    fn sample(
+    fn sample_cond(
         &mut self,
         params: &LayerParams,
         gm: &[f32],
         beta: f32,
         xt: &[f32],
+        ev: Option<(&[f32], &[f32])>,
         s0: Option<&[f32]>,
         k: usize,
     ) -> Result<Vec<f32>> {
@@ -443,7 +444,17 @@ impl LayerSampler for HwSampler {
         }
         let m = self.machine(params, gm, beta);
         let n = self.top.n_nodes();
-        let cmask = vec![0.0f32; n];
+        // Evidence clamps compile into the per-cmask program (clamped cells
+        // drop out of the phase schedule but keep driving their neighbors),
+        // exactly like the training-side stats() clamp path.
+        let free;
+        let cmask: &[f32] = match ev {
+            Some((cm, _)) => cm,
+            None => {
+                free = vec![0.0f32; n];
+                &free
+            }
+        };
         let mut chains = match s0 {
             Some(s) => gibbs::Chains {
                 b: self.batch,
@@ -452,9 +463,12 @@ impl LayerSampler for HwSampler {
             },
             None => gibbs::Chains::random(self.batch, n, &mut self.rng),
         };
+        if let Some((cm, cv)) = ev {
+            chains.impose_clamps(cm, cv);
+        }
         match self.exec_repr()? {
             ExecRepr::Packed => {
-                let plan = self.packed_plan(&m, &cmask);
+                let plan = self.packed_plan(&m, cmask);
                 let width = packed::resolve_shards(self.batch, n, self.threads, self.shards);
                 if width > 1 {
                     packed::run_sweeps_packed_sharded(
@@ -478,7 +492,7 @@ impl LayerSampler for HwSampler {
                 self.record_packed(&plan.topo, self.batch as u64, k as u64);
             }
             ExecRepr::Bitsliced => {
-                let plan = self.bitsliced_plan(&m, &cmask);
+                let plan = self.bitsliced_plan(&m, cmask);
                 bitsliced::run_sweeps_bitsliced(
                     &plan,
                     &mut chains,
@@ -490,7 +504,7 @@ impl LayerSampler for HwSampler {
                 self.record_packed(&plan.topo, self.batch as u64, k as u64);
             }
             ExecRepr::Array => {
-                let mut arr = self.array(&m, &cmask);
+                let mut arr = self.array(&m, cmask);
                 arr.run_sweeps(&mut chains, xt, k, self.threads, &mut self.rng);
                 self.sched.absorb(arr.schedule());
             }
@@ -758,6 +772,41 @@ mod tests {
         let out = small.sample(&params, &gm, 1.0, &xt4, None, 5).unwrap();
         assert_eq!(out.len(), 4 * n);
         assert!(out.iter().all(|&x| x == 1.0 || x == -1.0));
+    }
+
+    #[test]
+    fn hw_sampler_sample_cond_holds_evidence_on_all_reprs() {
+        let (top, params) = tiny();
+        let n = top.n_nodes();
+        let gm = vec![0.0f32; n];
+        let xt = vec![0.0f32; 4 * n];
+        let cmask = top.data_mask();
+        let mut cval = vec![0.0f32; 4 * n];
+        for bi in 0..4 {
+            for i in 0..n {
+                if cmask[i] > 0.5 {
+                    cval[bi * n + i] = if (bi + i) % 2 == 0 { 1.0 } else { -1.0 };
+                }
+            }
+        }
+        // Default config -> array emulator; ideal -> packed engine. Both
+        // must pin evidence and keep free nodes on spins.
+        for cfg in [HwConfig::default(), HwConfig::ideal()] {
+            let mut s = HwSampler::new(top.clone(), 4, cfg, 8);
+            let out = s
+                .sample_cond(&params, &gm, 1.0, &xt, Some((&cmask, &cval)), None, 6)
+                .unwrap();
+            for bi in 0..4 {
+                for i in 0..n {
+                    if cmask[i] > 0.5 {
+                        assert_eq!(out[bi * n + i], cval[bi * n + i], "evidence must hold");
+                    } else {
+                        let v = out[bi * n + i];
+                        assert!(v == 1.0 || v == -1.0);
+                    }
+                }
+            }
+        }
     }
 
     #[test]

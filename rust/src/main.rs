@@ -5,8 +5,12 @@
 //!   topology  <cfg>           print a DTM topology summary
 //!   train     [flags]         train a DTM and save a checkpoint
 //!   generate  [flags]         generate images from a checkpoint
+//!   inpaint   [flags]         conditional generation: hold every pixel
+//!                             outside --mask-rect as evidence and denoise
+//!                             the rect (--dataset fashion|mnist)
 //!   serve     [flags]         run the multi-chip farm demo under load
-//!                             (--chips N --faults <spec> --deadline-ms D)
+//!                             (--chips N --faults <spec> --deadline-ms D
+//!                              --inpaint-frac F for a conditional mix)
 //!   figures   <id|all>        regenerate a paper figure/table (results/*.csv)
 //!   energy-report             App. E/F energy model summary
 //!   bench-info                print bench targets
@@ -15,8 +19,8 @@ use anyhow::{bail, Context, Result};
 
 use thermo_dtm::circuit::Corner;
 use thermo_dtm::coordinator::batcher::BatcherConfig;
-use thermo_dtm::coordinator::{Farm, FarmConfig, FaultPlan, ServeError};
-use thermo_dtm::data::{fashion_dataset, FashionConfig};
+use thermo_dtm::coordinator::{Farm, FarmConfig, FaultPlan, JobEvidence, JobSpec, ServeError};
+use thermo_dtm::data::{fashion_dataset, mnist_like_dataset, Dataset, FashionConfig};
 use thermo_dtm::energy::{self, DeviceParams};
 use thermo_dtm::figures::{self, FigOpts};
 use thermo_dtm::gibbs::Repr;
@@ -75,6 +79,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "topology" => topology(args),
         "train" => train(args),
         "generate" => generate(args),
+        "inpaint" => inpaint(args),
         "serve" => serve(args),
         "figures" => {
             let id = args
@@ -96,7 +101,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         }
         _ => {
             println!(
-                "usage: repro <selfcheck|topology|train|generate|serve|figures|energy-report> [--flags]\n\
+                "usage: repro <selfcheck|topology|train|generate|inpaint|serve|figures|energy-report> [--flags]\n\
                  common flags: --artifacts DIR --config dtm_m32 --fast --seed N --threads N\n\
                  \x20         --repr packed|bitsliced|f32|auto (spin representation for rust/hw backends)\n\
                  \x20         --shards N (intra-chain gang width for small-batch sampling; 0 = auto\n\
@@ -105,8 +110,13 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                  \x20         --trace-out F (capture spans, write Chrome trace JSON)\n\
                  train:    --t-steps 4 --epochs 10 --k-train 30 --out ckpt.json --backend hlo|rust|hw\n\
                  generate: --ckpt ckpt.json --n 64 --k 60 --backend hlo|rust|hw\n\
+                 inpaint:  --ckpt ckpt.json --images 4 --k 60 --dataset fashion|mnist --class 0\n\
+                 \x20         --mask-rect r,c,h,w (region to FILL; pixels outside it are held\n\
+                 \x20          as evidence; default = lower half of the image)\n\
                  serve:    --ckpt ckpt.json --requests 32 --req-images 8 --linger-ms 5\n\
                  \x20         --chips 2 --deadline-ms 0 (0 = farm default)\n\
+                 \x20         --inpaint-frac F (fraction of requests sent as inpainting jobs,\n\
+                 \x20          evidence per --mask-rect/--dataset) \n\
                  \x20         --metrics-every S (periodic live farm stats)\n\
                  \x20         --faults 'chip0=kill@3,chip1=fail:0.2,all=spike:0.1:20' \n\
                  figures:  repro figures <id|all> [--fast] [--out results]\n\
@@ -379,6 +389,130 @@ fn generate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--mask-rect r,c,h,w`: the region the model must FILL; every
+/// pixel outside it is held as evidence. Defaults to the lower half of
+/// the image. Returns the data-node evidence mask (true = held).
+fn mask_from_args(args: &Args, side: usize) -> Result<Vec<bool>> {
+    let spec = args.str_opt("mask-rect", "");
+    let (r0, c0, h, w) = if spec.is_empty() {
+        (side / 2, 0, side - side / 2, side)
+    } else {
+        let parts: Vec<usize> = spec
+            .split(',')
+            .map(|p| p.trim().parse::<usize>())
+            .collect::<std::result::Result<_, _>>()
+            .with_context(|| format!("parsing --mask-rect {spec:?} (want r,c,h,w)"))?;
+        if parts.len() != 4 {
+            bail!("--mask-rect wants 4 comma-separated integers r,c,h,w, got {spec:?}");
+        }
+        (parts[0], parts[1], parts[2], parts[3])
+    };
+    if h == 0 || w == 0 || r0 + h > side || c0 + w > side {
+        bail!("--mask-rect {r0},{c0},{h},{w} does not fit a {side}x{side} image");
+    }
+    let mut mask = vec![true; side * side];
+    for r in r0..r0 + h {
+        for c in c0..c0 + w {
+            mask[r * side + c] = false;
+        }
+    }
+    if mask.iter().all(|&m| !m) {
+        bail!("--mask-rect covers the whole image; nothing to condition on (use generate)");
+    }
+    Ok(mask)
+}
+
+/// Source images for evidence pixels (`--dataset fashion|mnist`; both are
+/// the offline procedural stand-ins from `data::`).
+fn evidence_dataset(args: &Args, side: usize, n: usize, seed: u64) -> Result<Dataset> {
+    let cfg = FashionConfig {
+        side,
+        ..FashionConfig::default()
+    };
+    match args.str_opt("dataset", "fashion").as_str() {
+        "fashion" => Ok(fashion_dataset(&cfg, n, seed)),
+        "mnist" => Ok(mnist_like_dataset(&cfg, n, seed)),
+        other => bail!("unknown --dataset {other:?} (fashion|mnist)"),
+    }
+}
+
+/// `repro inpaint` — conditional generation through the evidence-aware
+/// pipeline: hold every pixel outside `--mask-rect` from a dataset image
+/// and denoise the rect around it.
+fn inpaint(args: &Args) -> Result<()> {
+    let ckpt = args.str_opt("ckpt", "ckpt.json");
+    let dtm = Dtm::load(std::path::Path::new(&ckpt))?;
+    let mut sampler = make_sampler(args, &dtm.config, 9)?;
+    let n = args.usize_opt("images", 4)?;
+    let k = args.usize_opt("k", 60)?;
+    let seed = args.usize_opt("seed", 1)? as u64;
+    let class = args.usize_opt("class", 0)?;
+    if class >= 10 {
+        bail!("--class must be in 0..=9, got {class}");
+    }
+    let nd = sampler.topology().data_nodes.len();
+    let side = (nd as f64).sqrt() as usize;
+    if side * side != nd {
+        bail!("checkpoint config {} has non-square n_data={nd}", dtm.config);
+    }
+    let mask = mask_from_args(args, side)?;
+    let ds = evidence_dataset(args, side, class + 1, seed + 21)?;
+    let src = ds.image(class).to_vec();
+    let spec = JobSpec::inpaint(n, mask.clone(), &src)?;
+    let ev = JobEvidence::from_spec(&spec)?;
+    let mut rng = Rng::new(seed);
+    let t0 = std::time::Instant::now();
+    let imgs = thermo_dtm::coordinator::pipeline::generate_images_deadline(
+        &mut sampler,
+        &dtm,
+        k,
+        n,
+        &mut rng,
+        None,
+        ev.as_ref(),
+    )?
+    .expect("no deadline, cannot abort");
+    let dt = t0.elapsed();
+    // Evidence must come back verbatim (clamped at every reverse step);
+    // only the fill rect is sampled.
+    for i in 0..n {
+        for (j, &held) in mask.iter().enumerate() {
+            let want = if src[j] > 0.0 { 1.0 } else { -1.0 };
+            if held && imgs[i * nd + j] != want {
+                bail!("evidence pixel {j} of image {i} was not held by the reverse process");
+            }
+        }
+    }
+    let n_ev = mask.iter().filter(|&&m| m).count();
+    println!(
+        "inpainted {n} images ({nd} px, {n_ev} evidence px) in {:.2}s ({:.1} img/s)",
+        dt.as_secs_f64(),
+        n as f64 / dt.as_secs_f64()
+    );
+    let render = |x: &[f32], show_hole: bool| {
+        for r in 0..side {
+            let line: String = (0..side)
+                .map(|c| {
+                    let j = r * side + c;
+                    if show_hole && !mask[j] {
+                        '?'
+                    } else if x[j] > 0.0 {
+                        '#'
+                    } else {
+                        '.'
+                    }
+                })
+                .collect();
+            println!("  {line}");
+        }
+    };
+    println!("evidence (fill region '?'):");
+    render(&src, true);
+    println!("completed (first image):");
+    render(&imgs[..nd], false);
+    Ok(())
+}
+
 fn serve(args: &Args) -> Result<()> {
     use std::time::Duration;
     let ckpt = args.str_opt("ckpt", "ckpt.json");
@@ -399,6 +533,27 @@ fn serve(args: &Args) -> Result<()> {
     let backend = args.str_opt("backend", "hlo");
     let artifacts = artifacts_dir(args);
     let cfg_name = dtm.config.clone();
+    // Conditional mix (`--inpaint-frac F`): that fraction of the request
+    // stream is sent as inpainting jobs, holding the pixels outside
+    // `--mask-rect` from dataset images as evidence.
+    let inpaint_frac = args.f64_opt("inpaint-frac", 0.0)?;
+    if !(0.0..=1.0).contains(&inpaint_frac) {
+        bail!("--inpaint-frac must be in 0..=1, got {inpaint_frac}");
+    }
+    let inpaint_src = if inpaint_frac > 0.0 {
+        let top = match Runtime::open(artifacts.clone()) {
+            Ok(rt) => rt.topology(&cfg_name)?,
+            Err(_) => graph::build(&cfg_name, 32, "G12", 256, 7)?,
+        };
+        let nd = top.data_nodes.len();
+        let side = (nd as f64).sqrt() as usize;
+        if side * side != nd {
+            bail!("config {cfg_name} has non-square n_data={nd}; cannot build --mask-rect");
+        }
+        Some((mask_from_args(args, side)?, evidence_dataset(args, side, 10, 77)?))
+    } else {
+        None
+    };
     let cfg = FarmConfig {
         chips,
         batcher: BatcherConfig {
@@ -492,9 +647,20 @@ fn serve(args: &Args) -> Result<()> {
             }
         })
     });
-    let waiters: Vec<_> = (0..requests)
-        .map(|_| client.submit(req_images, deadline, 1))
-        .collect();
+    let mut acc = 0.0f64;
+    let mut waiters = Vec::with_capacity(requests);
+    for i in 0..requests {
+        acc += inpaint_frac;
+        let w = match &inpaint_src {
+            Some((mask, ds)) if acc >= 1.0 - 1e-9 => {
+                acc -= 1.0;
+                let spec = JobSpec::inpaint(req_images, mask.clone(), ds.image(i % ds.n))?;
+                client.submit_spec(spec, deadline, 1)
+            }
+            _ => client.submit(req_images, deadline, 1),
+        };
+        waiters.push(w);
+    }
     let recv_cap = deadline.unwrap_or(Duration::from_secs(600)) + Duration::from_secs(1);
     let mut ok = 0usize;
     for w in waiters {
@@ -516,6 +682,7 @@ fn serve(args: &Args) -> Result<()> {
         stats.serve.images,
         stats.serve.images as f64 / wall
     );
+    println!("job mix: free {}  inpaint {}", stats.jobs_free, stats.jobs_inpaint);
     println!(
         "batches {}  mean fill {:.2}  p50 {:.1} ms  p99 {:.1} ms  error rate {:.3}",
         stats.serve.batches,

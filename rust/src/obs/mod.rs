@@ -41,6 +41,10 @@
 //! | `farm.live_chips` | gauge | chips not quarantined/dead |
 //! | `farm.latency_ms` | histogram | end-to-end latency of `Ok` requests |
 //! | `farm.batch_fill` | histogram | dispatched batch fill fraction |
+//! | `serve.jobs.free` | counter | free-run submissions admitted |
+//! | `serve.jobs.inpaint` | counter | inpainting submissions admitted |
+//! | `serve.latency_ms.free` | histogram | `Ok` latency, free-run requests |
+//! | `serve.latency_ms.inpaint` | histogram | `Ok` latency, inpainting requests |
 //! | `chip.<k>.state` | gauge | 0 idle / 1 busy / 2 quarantined / 3 dead |
 //! | `chip.<k>.energy_j` | gauge | cumulative device energy (ChipReport) |
 //! | `chip.<k>.device_seconds` | gauge | cumulative device-seconds |
@@ -48,6 +52,9 @@
 //! | `gibbs.sweeps` | counter | chain-sweeps executed (all engine reprs) |
 //! | `gibbs.node_updates` | counter | node updates executed |
 //! | `gibbs.shards` | gauge | gang width of the last sharded engine run |
+//! | `gibbs.topo_cache.hits` | counter | per-cmask plan-cache hits |
+//! | `gibbs.topo_cache.misses` | counter | plan-cache misses (topo compiles) |
+//! | `gibbs.topo_cache.evictions` | counter | LRU evictions from the plan cache |
 //! | `hw.sweeps` | counter | emulated array sweeps |
 //! | `hw.phases` | counter | phase-clock half-sweeps (2 per sweep) |
 //! | `hw.cell_updates` | counter | cell updates across the array |
@@ -192,6 +199,23 @@ pub fn hw_counters() -> &'static HwCounters {
         cell_updates: global().counter("hw.cell_updates"),
         programs: global().counter("hw.programs"),
         rng_joules: global().gauge("hw.rng_joules"),
+    })
+}
+
+/// Cached handles for the per-cmask topo-plan cache counters (see
+/// `gibbs::engine::TopoCache`).
+pub struct TopoCacheCounters {
+    pub hits: Arc<Counter>,
+    pub misses: Arc<Counter>,
+    pub evictions: Arc<Counter>,
+}
+
+pub fn topo_cache_counters() -> &'static TopoCacheCounters {
+    static C: OnceLock<TopoCacheCounters> = OnceLock::new();
+    C.get_or_init(|| TopoCacheCounters {
+        hits: global().counter("gibbs.topo_cache.hits"),
+        misses: global().counter("gibbs.topo_cache.misses"),
+        evictions: global().counter("gibbs.topo_cache.evictions"),
     })
 }
 

@@ -97,13 +97,35 @@ pub trait LayerSampler {
     ) -> Result<LayerStats>;
 
     /// Run `k` iterations from `s0` (or random if None); return final states
-    /// [B, N].
+    /// [B, N]. Unconditional shorthand for [`LayerSampler::sample_cond`].
     fn sample(
         &mut self,
         params: &LayerParams,
         gm: &[f32],
         beta: f32,
         xt: &[f32],
+        s0: Option<&[f32]>,
+        k: usize,
+    ) -> Result<Vec<f32>> {
+        self.sample_cond(params, gm, beta, xt, None, s0, k)
+    }
+
+    /// Like [`LayerSampler::sample`] but with optional evidence clamps
+    /// `ev = (cmask [N], cval [B, N])`: clamped nodes (`cmask > 0.5`) are
+    /// pinned to their per-chain `cval` spin — imposed on the initial
+    /// state and held through every update — while free nodes sample
+    /// around them. This is the serving path for conditional workloads
+    /// (`coordinator::jobspec`): the per-request cmask flows into the
+    /// per-cmask plan cache, so steady-state conditional traffic reuses
+    /// compiled topologies instead of recompiling.
+    #[allow(clippy::too_many_arguments)]
+    fn sample_cond(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        ev: Option<(&[f32], &[f32])>,
         s0: Option<&[f32]>,
         k: usize,
     ) -> Result<Vec<f32>>;
@@ -180,6 +202,18 @@ impl<T: LayerSampler + ?Sized> LayerSampler for &mut T {
     ) -> Result<Vec<f32>> {
         (**self).sample(params, gm, beta, xt, s0, k)
     }
+    fn sample_cond(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        ev: Option<(&[f32], &[f32])>,
+        s0: Option<&[f32]>,
+        k: usize,
+    ) -> Result<Vec<f32>> {
+        (**self).sample_cond(params, gm, beta, xt, ev, s0, k)
+    }
     fn trace(
         &mut self,
         params: &LayerParams,
@@ -236,6 +270,18 @@ impl<T: LayerSampler + ?Sized> LayerSampler for Box<T> {
         k: usize,
     ) -> Result<Vec<f32>> {
         (**self).sample(params, gm, beta, xt, s0, k)
+    }
+    fn sample_cond(
+        &mut self,
+        params: &LayerParams,
+        gm: &[f32],
+        beta: f32,
+        xt: &[f32],
+        ev: Option<(&[f32], &[f32])>,
+        s0: Option<&[f32]>,
+        k: usize,
+    ) -> Result<Vec<f32>> {
+        (**self).sample_cond(params, gm, beta, xt, ev, s0, k)
     }
     fn trace(
         &mut self,
@@ -394,20 +440,28 @@ impl LayerSampler for RustSampler {
         })
     }
 
-    fn sample(
+    fn sample_cond(
         &mut self,
         params: &LayerParams,
         gm: &[f32],
         beta: f32,
         xt: &[f32],
+        ev: Option<(&[f32], &[f32])>,
         s0: Option<&[f32]>,
         k: usize,
     ) -> Result<Vec<f32>> {
         let _sp = crate::obs::span("sampler.sample");
         let m = self.machine(params, gm, beta);
         let n = self.top.n_nodes();
-        let cmask = vec![0.0f32; n];
-        let plan = self.plan(&m, &cmask);
+        let free;
+        let cmask: &[f32] = match ev {
+            Some((cm, _)) => cm,
+            None => {
+                free = vec![0.0f32; n];
+                &free
+            }
+        };
+        let plan = self.plan(&m, cmask);
         let mut chains = match s0 {
             Some(s) => gibbs::Chains {
                 b: self.batch,
@@ -416,6 +470,9 @@ impl LayerSampler for RustSampler {
             },
             None => gibbs::Chains::random(self.batch, n, &mut self.rng),
         };
+        if let Some((cm, cv)) = ev {
+            chains.impose_clamps(cm, cv);
+        }
         plan.run_sweeps(&mut chains, xt, k, self.threads, self.shards, &mut self.rng);
         Ok(chains.s)
     }
@@ -598,20 +655,31 @@ impl LayerSampler for HloSampler {
         })
     }
 
-    fn sample(
+    fn sample_cond(
         &mut self,
         params: &LayerParams,
         gm: &[f32],
         beta: f32,
         xt: &[f32],
+        ev: Option<(&[f32], &[f32])>,
         s0: Option<&[f32]>,
         k: usize,
     ) -> Result<Vec<f32>> {
         let n = self.exec.top.n_nodes();
-        let zeros_m = vec![0.0f32; n];
-        let zeros_v = vec![0.0f32; self.exec.batch() * n];
+        let (zeros_m, zeros_v);
+        // cmask/cval are ordinary program inputs: the AOT executable holds
+        // clamped nodes at cval inside every update, so conditioning costs
+        // no recompilation on this backend.
+        let (cmask, cval): (&[f32], &[f32]) = match ev {
+            Some((cm, cv)) => (cm, cv),
+            None => {
+                zeros_m = vec![0.0f32; n];
+                zeros_v = vec![0.0f32; self.exec.batch() * n];
+                (&zeros_m, &zeros_v)
+            }
+        };
         let (mut s, w, h, gm_t, xt_t, cmask_t, cval_t) =
-            self.tensors(params, gm, xt, &zeros_m, &zeros_v, s0);
+            self.tensors(params, gm, xt, cmask, cval, s0);
         for _ in 0..self.chunks_for(k) {
             let key = self.rng.next_key();
             let inp = LayerInputs {
@@ -802,6 +870,46 @@ mod tests {
         assert_eq!(auto, packed);
         assert!(auto.2.iter().all(|&x| x == 1.0 || x == -1.0));
         assert!(auto.0.iter().all(|x| x.is_finite() && x.abs() <= 1.0 + 1e-9));
+    }
+
+    #[test]
+    fn rust_sampler_sample_cond_holds_evidence_and_reuses_topos() {
+        let top = graph::build("t", 6, "G8", 9, 0).unwrap();
+        let n = top.n_nodes();
+        let params = LayerParams::init(&top, &mut Rng::new(6), 0.1);
+        let mut s = RustSampler::new(top.clone(), 3, 11);
+        let xt = vec![0.0f32; 3 * n];
+        let cmask = top.data_mask();
+        let mut cval = vec![0.0f32; 3 * n];
+        for bi in 0..3 {
+            for i in 0..n {
+                if cmask[i] > 0.5 {
+                    cval[bi * n + i] = if (bi + i) % 2 == 0 { 1.0 } else { -1.0 };
+                }
+            }
+        }
+        let gm = vec![0.0f32; n];
+        let out = s
+            .sample_cond(&params, &gm, 1.0, &xt, Some((&cmask, &cval)), None, 8)
+            .unwrap();
+        for bi in 0..3 {
+            for i in 0..n {
+                if cmask[i] > 0.5 {
+                    assert_eq!(out[bi * n + i], cval[bi * n + i], "evidence must hold");
+                } else {
+                    let v = out[bi * n + i];
+                    assert!(v == 1.0 || v == -1.0, "free node must stay a spin");
+                }
+            }
+        }
+        assert_eq!(s.topos.len(), 1);
+        // Alternating free and evidence calls sees two masks total; both
+        // compiled topologies are reused, not re-minted per request.
+        s.sample(&params, &gm, 1.0, &xt, None, 4).unwrap();
+        s.sample_cond(&params, &gm, 1.0, &xt, Some((&cmask, &cval)), None, 4)
+            .unwrap();
+        s.sample(&params, &gm, 1.0, &xt, None, 4).unwrap();
+        assert_eq!(s.topos.len(), 2, "per-request cmask must reuse cached topos");
     }
 
     #[test]

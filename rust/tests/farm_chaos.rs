@@ -16,7 +16,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use thermo_dtm::coordinator::batcher::BatcherConfig;
-use thermo_dtm::coordinator::{Farm, FarmConfig, FaultPlan, ServeError};
+use thermo_dtm::coordinator::{Farm, FarmConfig, FaultPlan, JobSpec, ServeError};
 use thermo_dtm::graph;
 use thermo_dtm::model::Dtm;
 use thermo_dtm::obs::Registry;
@@ -343,6 +343,77 @@ fn metrics_reconcile_exactly_with_request_outcomes() {
     assert_eq!(
         lat.count as usize, ok,
         "latency histogram records exactly the Ok outcomes"
+    );
+}
+
+#[test]
+fn mixed_inpaint_and_free_storm_reconciles_outcomes() {
+    // Conditional workloads ride the same fault machinery: a mixed
+    // inpaint/free stream under a transient fault storm (so success,
+    // retry-success — which must re-clamp the same evidence — and typed
+    // failure all race) resolves every submission exactly once, holds
+    // evidence verbatim on every Ok inpaint response, and the per-kind
+    // admission counters split exactly along the submitted mix.
+    let reg = Arc::new(Registry::new());
+    let plan = FaultPlan::parse("chip0=fail:0.5,all=spike:0.3:10").unwrap();
+    let mut cfg = base_cfg(2);
+    cfg.registry = Some(Arc::clone(&reg));
+    let farm = farm_with(cfg, plan);
+    let client = farm.client();
+    let mask: Vec<bool> = (0..ND).map(|j| j % 2 == 0).collect();
+    let vals: Vec<f32> = (0..ND).map(|j| if j % 4 == 0 { 1.0 } else { -1.0 }).collect();
+    let waiters: Vec<_> = (0..24)
+        .map(|i| {
+            if i % 3 == 0 {
+                let spec = JobSpec::inpaint(2, mask.clone(), &vals).unwrap();
+                client.submit_spec(spec, None, 1)
+            } else {
+                client.submit(2, None, 1)
+            }
+        })
+        .collect();
+    // Drain by hand so Ok inpaint responses can be checked for evidence.
+    let mut ok = 0usize;
+    let mut errs = 0usize;
+    for (i, w) in waiters.into_iter().enumerate() {
+        let res = w
+            .recv_timeout(HANG_CAP)
+            .unwrap_or_else(|_| panic!("request {i} HUNG: no resolution within {HANG_CAP:?}"));
+        match res {
+            Ok(resp) => {
+                ok += 1;
+                assert!(resp.images.iter().all(|&x| x == 1.0 || x == -1.0));
+                if i % 3 == 0 {
+                    for chunk in resp.images.chunks(ND) {
+                        for (j, &held) in mask.iter().enumerate() {
+                            if held {
+                                assert_eq!(chunk[j], vals[j], "request {i}: evidence pixel {j}");
+                            }
+                        }
+                    }
+                }
+            }
+            Err(_) => errs += 1,
+        }
+    }
+    assert_eq!(ok + errs, 24, "every submission resolves exactly once");
+    let stats = farm.shutdown();
+    assert_eq!(stats.jobs_inpaint, 8, "8 of 24 submissions were inpaint");
+    assert_eq!(stats.jobs_free, 16);
+    assert_eq!(
+        stats.serve.latencies_ms.len() + stats.serve.errors(),
+        24,
+        "supervisor accounting must cover the full mixed burst"
+    );
+    let snap = reg.snapshot();
+    let c = |name: &str| snap.counter(name).unwrap_or(0) as usize;
+    assert_eq!(c("serve.jobs.inpaint"), 8);
+    assert_eq!(c("serve.jobs.free"), 16);
+    let h = |name: &str| snap.hist(name).map(|d| d.count as usize).unwrap_or(0);
+    assert_eq!(
+        h("serve.latency_ms.free") + h("serve.latency_ms.inpaint"),
+        ok,
+        "per-kind latency histograms see exactly the Ok outcomes"
     );
 }
 
